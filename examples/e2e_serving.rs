@@ -1,0 +1,94 @@
+//! END-TO-END VALIDATION DRIVER (DESIGN.md §6, EXPERIMENTS.md §E2E).
+//!
+//! Loads the real compiled model artifacts and serves a batched stream
+//! of requests through the FULL system — offline partitioning on the
+//! measured block profile, threaded device/link/cloud pipeline over the
+//! PJRT runtime, semantic-cache warmup, per-task early-exit and
+//! adaptive UAQ precision — and reports latency and throughput, with an
+//! accuracy audit of early exits against the full fp32 model.
+//!
+//! Run: `cargo run --release --example e2e_serving [n_tasks]`
+
+use coach::coordinator::server::{serve, SchemePolicy, ServeCfg};
+use coach::model::{topology, CostModel, DeviceProfile};
+use coach::network::BandwidthModel;
+use coach::partition::{optimize, MeasuredAcc, PartitionConfig};
+use coach::runtime::{default_artifact_dir, Engine, Manifest, ModelRuntime};
+use coach::sim::Correlation;
+
+fn main() -> anyhow::Result<()> {
+    let n_tasks: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(240);
+    let manifest = Manifest::load(&default_artifact_dir())?;
+
+    for model in ["resnet_mini", "vgg_mini"] {
+        println!("=== {model} ===");
+
+        // ---- offline component: measured profile -> strategy ----------
+        let (cut, base_bits) = {
+            let engine = Engine::new(&manifest)?;
+            let rt = ModelRuntime::new(&engine, &manifest, model)?;
+            let secs = rt.profile_blocks(3)?;
+            let g = topology::from_manifest(rt.model, &secs);
+            let cost = CostModel::new(
+                DeviceProfile::mini_device(6.0),
+                DeviceProfile::mini_cloud(),
+            );
+            let cfg = PartitionConfig { bw_mbps: 20.0, ..Default::default() };
+            let acc = MeasuredAcc { table: &manifest.acc, model: model.into() };
+            let s = optimize(&g, &cost, &acc, &cfg)?;
+            // graph layer k = block k-1 (layer 0 is the input)
+            let n_dev = s.n_device_layers();
+            let cut = n_dev.saturating_sub(2).min(rt.model.n_cuts() - 1);
+            println!(
+                "offline: device blocks 0..={cut}, base bits {:?}, objective {:.2} ms",
+                s.cuts.iter().map(|c| c.bits).collect::<Vec<_>>(),
+                s.eval.objective() * 1e3
+            );
+            (cut, s.base_bits())
+        };
+        let _ = base_bits;
+
+        // ---- full online pipeline, batched request stream --------------
+        for (name, policy) in [
+            ("COACH", SchemePolicy::coach()),
+            ("NoAdjust", SchemePolicy::no_adjust()),
+        ] {
+            let cfg = ServeCfg {
+                model: model.to_string(),
+                cut,
+                policy,
+                device_scale: 6.0, // NX-like device:cloud ratio
+                bw: BandwidthModel::Static(20.0),
+                period: 0.012,
+                n_tasks,
+                correlation: Correlation::High,
+                eps: 0.005,
+                seed: 7,
+                audit_every: 4, // audit every 4th early exit vs fp32
+            };
+            let res = serve(&manifest, &cfg)?;
+            let r = &res.report;
+            println!(
+                "{name:>9}: lat {:6.2} ms (p99 {:6.2}) | {:5.1} it/s | exits {:4.1}% | wire {:6.1} Kb | acc(audited) {:.3}",
+                r.avg_latency_ms(),
+                r.p99_latency_ms(),
+                r.throughput(),
+                r.exit_ratio() * 100.0,
+                r.avg_wire_kb(),
+                r.accuracy()
+            );
+            println!(
+                "           stage util: device {:3.0}% link {:3.0}% cloud {:3.0}% | bubbles {:.2} s",
+                r.device.utilization() * 100.0,
+                r.link.utilization() * 100.0,
+                r.cloud.utilization() * 100.0,
+                r.total_bubbles()
+            );
+        }
+    }
+    println!("\ne2e_serving OK");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Quickstart: the five-minute tour of COACH's public API.
+//!
+//! 1. load the AOT artifacts (`make artifacts` first),
+//! 2. run one collaborative inference by hand (device prefix -> UAQ
+//!    transmission round trip -> cloud suffix),
+//! 3. let the offline component pick the partition + precision,
+//! 4. compare COACH against the four baselines on the paper-scale
+//!    ResNet101 cost model.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use coach::baselines::Scheme;
+use coach::model::{topology, CostModel, DeviceProfile};
+use coach::partition::{optimize, AnalyticAcc, MeasuredAcc, PartitionConfig};
+use coach::runtime::{default_artifact_dir, Engine, Manifest, ModelRuntime, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. artifacts -------------------------------------------------
+    let manifest = Manifest::load(&default_artifact_dir())?;
+    println!(
+        "loaded manifest: models {:?}, {} uaq codecs, {} gap extractors",
+        manifest.models.keys().collect::<Vec<_>>(),
+        manifest.uaq.len(),
+        manifest.gap.len()
+    );
+    let engine = Engine::new(&manifest)?;
+    let rt = ModelRuntime::new(&engine, &manifest, "resnet_mini")?;
+
+    // ---- 2. one collaborative inference, by hand ----------------------
+    let patterns = manifest.read_f32(&manifest.patterns.file)?;
+    let isz: usize = manifest.input_shape.iter().product();
+    let x = Tensor::new(manifest.input_shape.clone(), patterns[..isz].to_vec())?;
+
+    let full = rt.run_blocks(0, rt.model.blocks.len(), &x)?;
+    let cut = 2;
+    let act = rt.run_device(cut, &x)?; // end device: blocks 0..=2
+    let feat = rt.gap_feature(&act)?; // task feature for the cache
+    let wire = rt.uaq_roundtrip(&act, 4)?; // 4-bit UAQ codec
+    let logits = rt.run_cloud(cut, &wire)?; // cloud: remaining blocks
+    println!(
+        "single task: fp32 label {}, 4-bit collaborative label {} (feature dim {})",
+        full.argmax(),
+        logits.argmax(),
+        feat.elems()
+    );
+
+    // ---- 3. offline component on the measured mini model --------------
+    let secs = rt.profile_blocks(3)?;
+    let g = topology::from_manifest(rt.model, &secs);
+    // mini-model cost scale: CPU plays the cloud, device is 6x slower
+    let mini_cost = CostModel::new(
+        DeviceProfile::mini_device(6.0),
+        DeviceProfile::mini_cloud(),
+    );
+    let cfg = PartitionConfig { bw_mbps: 20.0, ..Default::default() };
+    let acc = MeasuredAcc { table: &manifest.acc, model: "resnet_mini".into() };
+    let strat = optimize(&g, &mini_cost, &acc, &cfg)?;
+    println!(
+        "offline strategy (measured profile): device layers {}/{}, cut bits {:?}, objective {:.2} ms",
+        strat.n_device_layers(),
+        g.n(),
+        strat.cuts.iter().map(|c| c.bits).collect::<Vec<_>>(),
+        strat.eval.objective() * 1e3
+    );
+
+    // ---- 4. COACH vs baselines on the paper-scale DAG -----------------
+    let big = topology::resnet101();
+    let cost =
+        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
+    println!("\nResNet101 @ 20 Mbps on Jetson NX (paper-scale cost model):");
+    for scheme in Scheme::ALL {
+        let s = scheme.plan(&big, &cost, &AnalyticAcc, &cfg)?;
+        println!(
+            "  {:>6}: latency {:6.2} ms | max stage {:6.2} ms | bubbles {:6.2} ms | Eq.6 objective {:6.2} ms",
+            scheme.name(),
+            s.eval.latency * 1e3,
+            s.eval.max_stage() * 1e3,
+            (s.eval.b_c + s.eval.b_t) * 1e3,
+            s.eval.objective() * 1e3
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,222 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO-text artifacts for rust (L3).
+
+Runs ONCE at build time (`make artifacts`); python is never on the
+request path. Emits into ``artifacts/``:
+
+- ``{model}_b{i}.hlo.txt``   — one executable per model block (any cut
+                               point is then runnable from rust),
+- ``uaq_{N}.hlo.txt``        — UAQ round-trip for each distinct cut
+                               activation size N (levels is a runtime
+                               input, so one artifact serves 2..8 bit),
+- ``gap_{C}x{H}x{W}.hlo.txt``— GAP feature extractor per cut shape,
+- ``manifest.json``          — the full artifact/shape index rust loads,
+- ``acc_table.json``         — measured precision->fidelity curves per
+                               (model, cut); the offline dichotomous
+                               search (paper Eq. 1) consumes these,
+- ``class_patterns.f32`` / ``calib_inputs.f32`` + labels — synthetic
+  class-conditional data shared with the rust workload generator and
+  semantic-cache warmup.
+
+Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import gap as kgap
+from .kernels import uaq as kuaq
+
+BITS_RANGE = range(2, 9)
+N_ACC_SAMPLES = 100  # fidelity-measurement samples per (model, cut, bits)
+N_CALIB_PER_CLASS = 3
+SIGMA = 0.35
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True; rust
+    unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides big weight
+    # literals as `constant({...})`, which the 0.5.1 text parser then
+    # silently reads back as ZEROS — the weights must be in the text.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_fn(fn, example_args, path: pathlib.Path) -> None:
+    lowered = jax.jit(fn).lower(*example_args)
+    path.write_text(to_hlo_text(lowered))
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_model_blocks(m: M.ModelDef, outdir: pathlib.Path):
+    entries = []
+    for i, blk in enumerate(m.blocks):
+        fname = f"{m.name}_b{i}.hlo.txt"
+        lower_fn(lambda x, f=blk.fn: (f(x),), [_spec(blk.in_shape)],
+                 outdir / fname)
+        entries.append({
+            "name": blk.name,
+            "kind": blk.kind,
+            "artifact": fname,
+            "in_shape": list(blk.in_shape),
+            "out_shape": list(blk.out_shape),
+        })
+        print(f"  lowered {m.name} block {i} ({blk.name}) "
+              f"{blk.in_shape} -> {blk.out_shape}")
+    return entries
+
+
+def lower_uaq(sizes, outdir: pathlib.Path):
+    out = {}
+    for n in sorted(sizes):
+        fname = f"uaq_{n}.hlo.txt"
+        lower_fn(
+            lambda x, lv: (kuaq.uaq_roundtrip(x, lv),),
+            [_spec((n,)), _spec((1,))],
+            outdir / fname,
+        )
+        out[str(n)] = fname
+        print(f"  lowered uaq_{n}")
+    return out
+
+
+def lower_gap(shapes, outdir: pathlib.Path):
+    out = {}
+    for shp in sorted(shapes):
+        key = "x".join(map(str, shp))
+        fname = f"gap_{key}.hlo.txt"
+        lower_fn(lambda x: (kgap.gap(x),), [_spec(shp)], outdir / fname)
+        out[key] = fname
+        print(f"  lowered gap_{key}")
+    return out
+
+
+def measure_acc_table(models, patterns, rng):
+    """Top-1 fidelity (agreement with the fp32 model) per (model, cut
+    position, bits). This is the measured monotone curve the offline
+    dichotomous search walks to satisfy |Acc - Acc(Q)| <= eps."""
+    table = {}
+    keys = jax.random.split(jax.random.PRNGKey(99), N_ACC_SAMPLES)
+    xs = []
+    for i, k in enumerate(keys):
+        a, b = rng.integers(0, M.N_CLASSES, 2)
+        if i % 2 == 0:
+            xs.append(M.sample(patterns, int(a), k, SIGMA))
+        else:
+            # boundary-stressed: between-class mixture. Real calibration
+            # sets contain hard near-boundary examples; these are what
+            # make the precision->accuracy curve bind (see DESIGN.md §3).
+            mix = 0.7 * patterns[int(a)] + 0.3 * patterns[int(b)]
+            noise = jax.random.normal(k, M.INPUT_SHAPE, jnp.float32)
+            xs.append(mix + SIGMA * noise)
+    xs = jnp.stack(xs)
+    for name, m in models.items():
+        fwd = jax.jit(jax.vmap(m.forward))
+        base = np.argmax(np.asarray(fwd(xs)), axis=1)
+        per_cut = {}
+        # cut after block i (last block excluded: nothing left to offload)
+        for cut in range(len(m.blocks) - 1):
+            fq = jax.jit(
+                jax.vmap(m.forward_quant_at, in_axes=(0, None, None)),
+                static_argnums=(1,),
+            )
+            per_bits = {}
+            for bits in BITS_RANGE:
+                levels = float(2 ** bits - 1)
+                pred = np.argmax(np.asarray(fq(xs, cut, levels)), axis=1)
+                per_bits[str(bits)] = float((pred == base).mean())
+            per_cut[str(cut)] = per_bits
+            print(f"  acc {name} cut={cut}: "
+                  + " ".join(f"{b}:{v:.2f}" for b, v in per_bits.items()))
+        table[name] = per_cut
+    return table
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-acc", action="store_true",
+                    help="skip the fidelity measurement (fast dev cycle)")
+    args = ap.parse_args()
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    models = {name: build() for name, build in M.MODELS.items()}
+
+    manifest = {
+        "n_classes": M.N_CLASSES,
+        "input_shape": list(M.INPUT_SHAPE),
+        "models": {},
+    }
+
+    uaq_sizes, gap_shapes = set(), set()
+    for name, m in models.items():
+        print(f"lowering {name} ({m.topology}, {len(m.blocks)} blocks)")
+        entries = lower_model_blocks(m, outdir)
+        manifest["models"][name] = {
+            "topology": m.topology,
+            "blocks": entries,
+        }
+        for blk in m.blocks[:-1]:  # every possible cut activation
+            shp = blk.out_shape
+            uaq_sizes.add(int(np.prod(shp)))
+            if len(shp) == 3:
+                gap_shapes.add(tuple(shp))
+
+    manifest["uaq"] = lower_uaq(uaq_sizes, outdir)
+    manifest["gap"] = lower_gap(gap_shapes, outdir)
+
+    # --- shared synthetic data -------------------------------------------
+    patterns = M.class_patterns()
+    np.asarray(patterns, np.float32).tofile(outdir / "class_patterns.f32")
+    manifest["patterns"] = {
+        "file": "class_patterns.f32",
+        "shape": [M.N_CLASSES] + list(M.INPUT_SHAPE),
+        "sigma": SIGMA,
+    }
+
+    rng = np.random.default_rng(M.SEED)
+    calib_labels = [c for c in range(M.N_CLASSES)
+                    for _ in range(N_CALIB_PER_CLASS)]
+    keys = jax.random.split(jax.random.PRNGKey(7), len(calib_labels))
+    calib = jnp.stack([
+        M.sample(patterns, l, k, SIGMA) for l, k in zip(calib_labels, keys)
+    ])
+    np.asarray(calib, np.float32).tofile(outdir / "calib_inputs.f32")
+    manifest["calib"] = {
+        "inputs": "calib_inputs.f32",
+        "labels": calib_labels,
+        "count": len(calib_labels),
+    }
+
+    # --- measured precision -> fidelity curves ---------------------------
+    if args.skip_acc:
+        acc = {}
+    else:
+        acc = measure_acc_table(models, patterns, rng)
+    (outdir / "acc_table.json").write_text(json.dumps(acc, indent=1))
+    manifest["acc_table"] = "acc_table.json"
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {outdir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

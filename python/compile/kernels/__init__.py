@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into L2 HLO).
+
+- ``uaq``   -- Uniform Affine Quantization transmission round trip
+- ``gap``   -- Global Average Pooling task-feature extractor
+- ``dense`` -- fused matmul+bias+ReLU classifier head
+- ``ref``   -- pure-jnp oracles for all of the above
+"""
+
+from . import dense, gap, ref, uaq  # noqa: F401

@@ -1,0 +1,52 @@
+"""Pallas Global Average Pooling kernel — Layer 1.
+
+GAP reduces the cut activation ``(C, H, W)`` to the task feature ``F`` of
+shape ``(C,)`` that the online component's semantic cache consumes (paper
+§III-C). It runs on the DEVICE side for every task, right before the
+early-exit / quantization-adjustment decision, so it sits on the hot path.
+
+TPU mapping: channel-major tiling — each grid step holds a ``(TC, H, W)``
+block in VMEM and reduces its spatial plane on the VPU, writing ``TC``
+feature lanes. One HBM pass, no re-reads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Channels per VMEM block. 8 channels x 32x32 f32 = 32 KiB — VPU-friendly
+# sublane count, comfortably VMEM-resident alongside double buffers.
+TILE_C = 8
+
+
+def _gap_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.mean(x_ref[...], axis=(1, 2))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_c",))
+def gap(x: jnp.ndarray, tile_c: int = TILE_C) -> jnp.ndarray:
+    """``(C, H, W) -> (C,)`` mean over the spatial plane.
+
+    Matches ``ref.gap``. C is zero-padded to a ``tile_c`` multiple for
+    the grid; padding channels are sliced off (zeros never leak into the
+    real channels' means because the reduction is per-channel).
+    """
+    c, h, w = x.shape
+    padded_c = ((c + tile_c - 1) // tile_c) * tile_c
+    if padded_c != c:
+        x = jnp.concatenate(
+            [x, jnp.zeros((padded_c - c, h, w), x.dtype)], axis=0
+        )
+    out = pl.pallas_call(
+        _gap_kernel,
+        grid=(padded_c // tile_c,),
+        in_specs=[pl.BlockSpec((tile_c, h, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((tile_c,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded_c,), x.dtype),
+        interpret=True,
+    )(x)
+    return out[:c]

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has a reference implementation here written
+with plain jax.numpy ops only. pytest (python/tests/) asserts
+`assert_allclose(kernel(x), ref(x))` over hypothesis-generated shapes and
+dtypes — this is the CORE correctness signal for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def uaq_quantize(x: jnp.ndarray, levels):
+    """Uniform Affine Quantization (UAQ, Krishnamoorthi 2018) forward.
+
+    Maps ``x`` onto ``levels + 1`` uniformly spaced codes spanning
+    ``[min(x), max(x)]``. Returns ``(codes, x_min, scale)`` where
+    ``codes`` are float-typed integers in ``[0, levels]``.
+
+    ``levels = 2**bits - 1`` is passed as data (not a static constant) so
+    a single lowered artifact serves every precision 2..8-bit at runtime.
+    """
+    x_min = jnp.min(x)
+    x_max = jnp.max(x)
+    # Guard degenerate (constant) tensors: scale must stay positive.
+    span = jnp.maximum(x_max - x_min, jnp.asarray(1e-8, x.dtype))
+    scale = span / levels
+    codes = jnp.clip(jnp.round((x - x_min) / scale), 0.0, levels)
+    return codes, x_min, scale
+
+
+def uaq_dequantize(codes: jnp.ndarray, x_min, scale):
+    """Inverse of :func:`uaq_quantize`."""
+    return codes * scale + x_min
+
+
+def uaq_roundtrip(x: jnp.ndarray, levels):
+    """Quantize-dequantize round trip — what the wire transmission does
+    to the activation. This is the transmission hot-spot the Pallas
+    kernel implements."""
+    codes, x_min, scale = uaq_quantize(x, levels)
+    return uaq_dequantize(codes, x_min, scale)
+
+
+def gap(x: jnp.ndarray) -> jnp.ndarray:
+    """Global Average Pooling: ``(C, H, W) -> (C,)`` (Lin et al. 2013).
+
+    Produces the task feature ``F`` consumed by the online component's
+    semantic cache (paper Eq. 7-10).
+    """
+    return jnp.mean(x, axis=(-2, -1))
+
+
+def dense_relu(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Fused ``relu(x @ w + b)`` — the classifier-head hot loop."""
+    return jnp.maximum(x @ w + b, 0.0)

@@ -1,0 +1,127 @@
+"""Pallas UAQ (Uniform Affine Quantization) transmission kernel — Layer 1.
+
+This is the paper's transmission hot-spot: every intermediate activation
+crossing the end->cloud cut is quantized to ``bits`` (2..8) before hitting
+the wire and dequantized on the server (paper §III-B, Eq. 1-2; §III-C,
+Eq. 11 picks ``bits`` online per task).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the activation is flattened
+and tiled into VMEM-resident blocks; pass 1 is a sequential-grid min/max
+reduction (the TPU grid is sequential, so accumulating into a single
+(1,1)-block output is the idiomatic two-level reduction); pass 2 streams
+each block HBM->VMEM once, applies the affine map on the VPU and streams
+it back — two HBM passes total, no gather/scatter. ``levels = 2**bits-1``
+rides along as a (1,)-shaped input so ONE lowered artifact serves every
+precision at runtime (the rust coordinator feeds it per-task).
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; numerics are validated through the interpret path against
+`ref.py` and real-TPU efficiency is estimated in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One VMEM block of the flattened activation. 2048 f32 = 8 KiB/block —
+# small enough that x-in + out + double-buffering stay well under the
+# ~16 MiB VMEM budget, large enough to keep the VPU lanes (8x128) full.
+TILE = 2048
+
+
+def _minmax_kernel(x_ref, min_ref, max_ref):
+    """Sequential-grid min/max reduction; all grid steps share the
+    (1,)-shaped output block (index_map pins it), so step i folds its
+    tile extrema into the running result."""
+    i = pl.program_id(0)
+    tile_min = jnp.min(x_ref[...])
+    tile_max = jnp.max(x_ref[...])
+
+    @pl.when(i == 0)
+    def _init():
+        min_ref[0] = tile_min
+        max_ref[0] = tile_max
+
+    @pl.when(i > 0)
+    def _fold():
+        min_ref[0] = jnp.minimum(min_ref[0], tile_min)
+        max_ref[0] = jnp.maximum(max_ref[0], tile_max)
+
+
+def _roundtrip_kernel(x_ref, min_ref, scale_ref, levels_ref, o_ref):
+    """Affine quantize-dequantize of one VMEM tile (pass 2)."""
+    x_min = min_ref[0]
+    scale = scale_ref[0]
+    levels = levels_ref[0]
+    codes = jnp.clip(jnp.round((x_ref[...] - x_min) / scale), 0.0, levels)
+    o_ref[...] = codes * scale + x_min
+
+
+def _pad_flat(x: jnp.ndarray, tile: int):
+    """Flatten and edge-pad to a tile multiple (edge value keeps the
+    min/max of the padded tensor identical to the original's)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    padded_n = ((n + tile - 1) // tile) * tile
+    if padded_n != n:
+        flat = jnp.concatenate(
+            [flat, jnp.broadcast_to(flat[-1], (padded_n - n,))]
+        )
+    return flat, n, padded_n
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def minmax(x: jnp.ndarray, tile: int = TILE):
+    """Per-tensor (min, max) via the tiled Pallas reduction (pass 1)."""
+    flat, _, padded_n = _pad_flat(x, tile)
+    grid = padded_n // tile
+    x_min, x_max = pl.pallas_call(
+        _minmax_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), flat.dtype),
+            jax.ShapeDtypeStruct((1,), flat.dtype),
+        ],
+        interpret=True,
+    )(flat)
+    return x_min[0], x_max[0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def uaq_roundtrip(x: jnp.ndarray, levels: jnp.ndarray, tile: int = TILE):
+    """Quantize-dequantize round trip of ``x`` at ``levels = 2**bits - 1``.
+
+    Exactly what the receiving server sees after UAQ transmission; shape
+    and dtype of ``x`` are preserved. Matches ``ref.uaq_roundtrip``.
+    """
+    levels = jnp.asarray(levels, x.dtype).reshape(-1)[:1]
+    x_min, x_max = minmax(x, tile=tile)
+    span = jnp.maximum(x_max - x_min, jnp.asarray(1e-8, x.dtype))
+    scale = (span / levels[0]).reshape(1)
+    x_min = x_min.reshape(1)
+
+    flat, n, padded_n = _pad_flat(x, tile)
+    grid = padded_n // tile
+    out = pl.pallas_call(
+        _roundtrip_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded_n,), flat.dtype),
+        interpret=True,
+    )(flat, x_min, scale, levels)
+    return out[:n].reshape(x.shape)

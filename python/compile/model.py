@@ -1,0 +1,315 @@
+"""Layer-2 JAX model definitions (build-time only).
+
+Two small-but-real CNNs with the topology *shapes* the paper evaluates —
+a chain model (``vgg_mini``, VGG16-style 3x3 conv stacks) and a DAG model
+(``resnet_mini``, residual blocks with skip branches) — on 32x32x3 inputs
+with ``N_CLASSES`` outputs. Weights are deterministic (fixed PRNG seed)
+and baked into the lowered HLO as constants, so the rust runtime needs no
+weight loading.
+
+Each model is expressed as an ordered list of BLOCKS (activation ->
+activation functions). ``aot.py`` lowers every block to its own HLO-text
+artifact; a partition cut after block *k* means the end device executes
+blocks ``0..=k`` and the cloud executes ``k+1..``, with the UAQ kernel
+applied to the cut activation. This gives the rust coordinator every cut
+point at runtime from a linear number of artifacts.
+
+Classifier heads call the Layer-1 Pallas kernels (``dense.dense_relu``,
+``gap.gap``) so they lower into the same HLO as the surrounding jnp ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import dense as kdense
+from .kernels import gap as kgap
+
+N_CLASSES = 20
+INPUT_SHAPE = (3, 32, 32)
+SEED = 20240710
+_PROTO_PER_CLASS = 3  # calibration samples per class for the prototype head
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+           stride: int = 1) -> jnp.ndarray:
+    """3x3 'SAME' conv over a single sample ``(C, H, W)``, NCHW/OIHW."""
+    y = lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    return y + b[:, None, None]
+
+
+def relu(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2/2 max pool over ``(C, H, W)``."""
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2), (1, 2, 2), "VALID"
+    )
+
+
+def _he(key, shape):
+    fan_in = 1
+    for d in shape[1:]:
+        fan_in *= d
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+class _Params:
+    """Deterministic parameter factory (split-per-call on a fixed seed)."""
+
+    def __init__(self, seed: int):
+        self._key = jax.random.PRNGKey(seed)
+
+    def conv(self, c_out: int, c_in: int, k: int = 3):
+        self._key, sub = jax.random.split(self._key)
+        w = _he(sub, (c_out, c_in, k, k))
+        b = jnp.zeros((c_out,), jnp.float32)
+        return w, b
+
+    def dense(self, d_in: int, d_out: int):
+        self._key, sub = jax.random.split(self._key)
+        w = _he(sub, (d_in, d_out)).reshape(d_in, d_out)
+        b = jnp.zeros((d_out,), jnp.float32)
+        return w, b
+
+
+# --------------------------------------------------------------------------
+# model/block definitions
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BlockDef:
+    """One pipeline-partitionable unit: ``fn`` maps the block's input
+    activation to its output activation. ``kind`` tags the topology role
+    ('chain' plain block, 'residual' DAG block with a skip branch,
+    'head' classifier)."""
+
+    name: str
+    fn: Callable[[jnp.ndarray], jnp.ndarray]
+    in_shape: Tuple[int, ...]
+    out_shape: Tuple[int, ...]
+    kind: str = "chain"
+
+
+@dataclasses.dataclass
+class ModelDef:
+    name: str
+    topology: str  # 'chain' | 'dag'
+    blocks: List[BlockDef]
+
+    def forward(self, x: jnp.ndarray) -> jnp.ndarray:
+        for b in self.blocks:
+            x = b.fn(x)
+        return x
+
+    def forward_quant_at(self, x: jnp.ndarray, cut: int,
+                         levels: float) -> jnp.ndarray:
+        """fp32 up to (and incl.) block ``cut``, UAQ round trip on the
+        cut activation, fp32 for the rest — the collaborative-inference
+        dataflow used to build the accuracy (fidelity) table."""
+        from .kernels import ref
+
+        for b in self.blocks[: cut + 1]:
+            x = b.fn(x)
+        x = ref.uaq_roundtrip(x, levels)
+        for b in self.blocks[cut + 1:]:
+            x = b.fn(x)
+        return x
+
+
+def _shape_after(fn, in_shape):
+    out = jax.eval_shape(fn, jax.ShapeDtypeStruct(in_shape, jnp.float32))
+    return tuple(out.shape)
+
+
+def _normalize(f: jnp.ndarray) -> jnp.ndarray:
+    """Feature standardization before the classifier (plays the role
+    batch-norm statistics play in a trained network: kills the large
+    data-independent mean component of random-weight features so the
+    data-dependent part drives the logits)."""
+    return (f - jnp.mean(f)) / (jnp.std(f) + 1e-5)
+
+
+def _prototype_head(feature_fn, feat_dim: int, n_classes: int, seed: int):
+    """Calibrated prototype classifier (one-pass linear probe).
+
+    Class weights are the normalized per-class mean features over a small
+    deterministic calibration set — a nearest-class-center classifier.
+    This gives the random-weight backbones *trained-like* behaviour:
+    predictions spread over all classes and margins sit at realistic
+    scales, so quantization at the cut measurably perturbs accuracy
+    (the regime the paper's Eq. 1 constraint lives in).
+    """
+    pats = class_patterns(n_classes)
+    protos = []
+    for c in range(n_classes):
+        keys = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(seed), c),
+            _PROTO_PER_CLASS,
+        )
+        fs = jnp.stack([
+            _normalize(feature_fn(sample(pats, c, k))) for k in keys
+        ])
+        mu = fs.mean(0)
+        protos.append(mu / (jnp.linalg.norm(mu) + 1e-9))
+    w = jnp.stack(protos, axis=1)  # (feat_dim, n_classes)
+    assert w.shape == (feat_dim, n_classes)
+    return w
+
+
+def _chain_block(name, fns, in_shape, kind="chain"):
+    def fn(x, _fns=tuple(fns)):
+        for f in _fns:
+            x = f(x)
+        return x
+
+    return BlockDef(name, fn, in_shape, _shape_after(fn, in_shape), kind)
+
+
+def build_vgg_mini(n_classes: int = N_CLASSES) -> ModelDef:
+    """Chain topology: three conv stages (2x conv3 + pool) + 2-layer head.
+
+    Mirrors VGG16's profile: compute mass concentrated early (big spatial
+    planes), activation size shrinking monotonically — the regime where
+    Neurosurgeon-style single-cut partitioning already works well.
+    """
+    p = _Params(SEED)
+    blocks: List[BlockDef] = []
+    shape = INPUT_SHAPE
+
+    widths = [(3, 32), (32, 64), (64, 128)]
+    for i, (c_in, c_out) in enumerate(widths):
+        w1, b1 = p.conv(c_out, c_in)
+        w2, b2 = p.conv(c_out, c_out)
+        blk = _chain_block(
+            f"stage{i}",
+            [
+                lambda x, w=w1, b=b1: relu(conv2d(x, w, b)),
+                lambda x, w=w2, b=b2: relu(conv2d(x, w, b)),
+                maxpool2,
+            ],
+            shape,
+        )
+        blocks.append(blk)
+        shape = blk.out_shape
+
+    flat_dim = shape[0] * shape[1] * shape[2]
+    wf, bf = p.dense(flat_dim, 128)
+
+    def head1(x, w=wf, b=bf):
+        return kdense.dense_relu(x.reshape(1, -1), w, b)[0]
+
+    blocks.append(BlockDef("fc_relu", head1, shape, (128,), "head"))
+
+    def feature_fn(x, _blocks=tuple(b.fn for b in blocks)):
+        for f in _blocks:
+            x = f(x)
+        return x
+
+    wo = _prototype_head(feature_fn, 128, n_classes, SEED + 3)
+
+    def head2(x, w=wo):
+        return _normalize(x) @ w * 10.0
+
+    blocks.append(BlockDef("logits", head2, (128,), (n_classes,), "head"))
+    return ModelDef("vgg_mini", "chain", blocks)
+
+
+def _residual_block(p: _Params, name, c_in, c_out, stride, in_shape):
+    w1, b1 = p.conv(c_out, c_in)
+    w2, b2 = p.conv(c_out, c_out)
+    if stride != 1 or c_in != c_out:
+        ws, bs = p.conv(c_out, c_in, k=1)
+    else:
+        ws = bs = None
+
+    def fn(x):
+        y = relu(conv2d(x, w1, b1, stride=stride))
+        y = conv2d(y, w2, b2)
+        skip = x if ws is None else conv2d(x, ws, bs, stride=stride)
+        return relu(y + skip)
+
+    return BlockDef(name, fn, in_shape, _shape_after(fn, in_shape),
+                    "residual")
+
+
+def build_resnet_mini(n_classes: int = N_CLASSES) -> ModelDef:
+    """DAG topology: stem + 5 residual blocks (skip branches) + GAP head.
+
+    Mirrors ResNet101's profile: a long tail of medium-cost blocks with
+    parallel (skip) data flows — the regime where the paper's virtual-
+    block divide-and-conquer matters.
+    """
+    p = _Params(SEED + 1)
+    blocks: List[BlockDef] = []
+    shape = INPUT_SHAPE
+
+    w0, b0 = p.conv(32, 3)
+    stem = _chain_block("stem", [lambda x, w=w0, b=b0: relu(conv2d(x, w, b))],
+                        shape)
+    blocks.append(stem)
+    shape = stem.out_shape
+
+    spec = [(32, 32, 1), (32, 64, 2), (64, 64, 1), (64, 128, 2),
+            (128, 128, 1)]
+    for i, (ci, co, st) in enumerate(spec):
+        blk = _residual_block(p, f"res{i}", ci, co, st, shape)
+        blocks.append(blk)
+        shape = blk.out_shape
+
+    def feature_fn(x, _blocks=tuple(b.fn for b in blocks)):
+        for f in _blocks:
+            x = f(x)
+        return kgap.gap(x)
+
+    wo = _prototype_head(feature_fn, shape[0], n_classes, SEED + 4)
+
+    def head(x, w=wo):
+        f = _normalize(kgap.gap(x))
+        return f @ w * 10.0
+
+    blocks.append(BlockDef("gap_logits", head, shape, (n_classes,), "head"))
+    return ModelDef("resnet_mini", "dag", blocks)
+
+
+MODELS = {
+    "vgg_mini": build_vgg_mini,
+    "resnet_mini": build_resnet_mini,
+}
+
+
+# --------------------------------------------------------------------------
+# synthetic class-conditional data (shared with the rust workload
+# generator via artifacts/class_patterns.f32 — see aot.py)
+# --------------------------------------------------------------------------
+
+def class_patterns(n_classes: int = N_CLASSES,
+                   seed: int = SEED + 7) -> jnp.ndarray:
+    """Per-class mean images, ``(n_classes, C, H, W)``. A sample of class
+    ``j`` is ``patterns[j] + sigma * noise`` — class-conditional Gaussians
+    whose GAP features cluster by label (the paper's Fig. 1 observation)."""
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, (n_classes,) + INPUT_SHAPE, jnp.float32)
+
+
+def sample(patterns: jnp.ndarray, label: int, key,
+           sigma: float = 0.35) -> jnp.ndarray:
+    noise = jax.random.normal(key, INPUT_SHAPE, jnp.float32)
+    return patterns[label] + sigma * noise

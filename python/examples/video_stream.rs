@@ -1,0 +1,15 @@
+use coach::runtime::{default_artifact_dir, Engine, Manifest, ModelRuntime, Tensor};
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&default_artifact_dir())?;
+    let engine = Engine::new(&manifest)?;
+    let patterns = manifest.read_f32(&manifest.patterns.file)?;
+    println!("patterns[0..5]={:?}", &patterns[0..5]);
+    let isz: usize = manifest.input_shape.iter().product();
+    let x = Tensor::new(manifest.input_shape.clone(), patterns[0..isz].to_vec())?;
+    let rt = ModelRuntime::new(&engine, &manifest, "vgg_mini")?;
+    let b0 = rt.run_blocks(0,1,&x)?;
+    println!("b0 shape={:?} first5={:?} sum={}", b0.shape, &b0.data[0..5], b0.data.iter().sum::<f32>());
+    let lg = rt.run_blocks(0, rt.model.blocks.len(), &x)?;
+    println!("logits={:?}", lg.data);
+    Ok(())
+}

@@ -1,0 +1,141 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes and value ranges; assert_allclose against the
+oracle is the core Layer-1 signal (interpret=True path — the same
+lowering the shipped artifacts use).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, gap, ref, uaq
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _arr(rng, shape, lo=-4.0, hi=4.0):
+    return jnp.asarray(
+        rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+# --------------------------------------------------------------------------
+# UAQ round trip
+# --------------------------------------------------------------------------
+
+@given(
+    n=st.integers(1, 5000),
+    bits=st.integers(2, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_uaq_matches_ref_flat(n, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (n,))
+    levels = float(2**bits - 1)
+    got = uaq.uaq_roundtrip(x, levels)
+    want = ref.uaq_roundtrip(x, levels)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@given(
+    c=st.integers(1, 16),
+    h=st.integers(1, 12),
+    w=st.integers(1, 12),
+    bits=st.integers(2, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_uaq_matches_ref_3d(c, h, w, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (c, h, w))
+    levels = float(2**bits - 1)
+    got = uaq.uaq_roundtrip(x, levels)
+    want = ref.uaq_roundtrip(x, levels)
+    assert got.shape == x.shape
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@given(bits=st.integers(2, 8), seed=st.integers(0, 2**16))
+def test_uaq_error_bounded_by_half_step(bits, seed):
+    """|x - roundtrip(x)| <= scale/2 everywhere — the UAQ invariant."""
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (777,))
+    levels = 2**bits - 1
+    scale = (float(x.max()) - float(x.min())) / levels
+    got = uaq.uaq_roundtrip(x, float(levels))
+    assert float(jnp.max(jnp.abs(got - x))) <= scale / 2 + 1e-6
+
+
+def test_uaq_constant_tensor_degenerate():
+    x = jnp.full((64,), 3.25, jnp.float32)
+    got = uaq.uaq_roundtrip(x, 255.0)
+    np.testing.assert_allclose(got, x, atol=1e-5)
+
+
+def test_uaq_monotone_error_in_bits():
+    rng = np.random.default_rng(0)
+    x = _arr(rng, (4096,))
+    errs = [
+        float(jnp.mean((uaq.uaq_roundtrip(x, float(2**b - 1)) - x) ** 2))
+        for b in range(2, 9)
+    ]
+    assert all(a >= b for a, b in zip(errs, errs[1:]))
+
+
+def test_minmax_matches_numpy():
+    rng = np.random.default_rng(1)
+    x = _arr(rng, (3000,))
+    mn, mx = uaq.minmax(x)
+    assert float(mn) == pytest.approx(float(x.min()))
+    assert float(mx) == pytest.approx(float(x.max()))
+
+
+# --------------------------------------------------------------------------
+# GAP
+# --------------------------------------------------------------------------
+
+@given(
+    c=st.integers(1, 40),
+    h=st.integers(1, 16),
+    w=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_gap_matches_ref(c, h, w, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (c, h, w))
+    got = gap.gap(x)
+    assert got.shape == (c,)
+    np.testing.assert_allclose(got, ref.gap(x), rtol=1e-5, atol=1e-6)
+
+
+def test_gap_constant_channels():
+    x = jnp.stack([jnp.full((8, 8), float(i)) for i in range(5)])
+    np.testing.assert_allclose(gap.gap(x), jnp.arange(5.0), atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# fused dense
+# --------------------------------------------------------------------------
+
+@given(
+    m=st.integers(1, 20),
+    k=st.integers(1, 96),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_relu_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (m, k), -1, 1)
+    w = _arr(rng, (k, n), -1, 1)
+    b = _arr(rng, (n,), -1, 1)
+    got = dense.dense_relu(x, w, b)
+    want = ref.dense_relu(x, w, b)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_dense_relu_nonnegative():
+    rng = np.random.default_rng(3)
+    x, w, b = _arr(rng, (4, 8)), _arr(rng, (8, 16)), _arr(rng, (16,))
+    assert float(jnp.min(dense.dense_relu(x, w, b))) >= 0.0

@@ -1,0 +1,111 @@
+"""L2 model sanity: topology, shapes, determinism, quant-at-cut dataflow."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {name: build() for name, build in M.MODELS.items()}
+
+
+@pytest.fixture(scope="module")
+def patterns():
+    return M.class_patterns()
+
+
+def test_model_registry(models):
+    assert set(models) == {"vgg_mini", "resnet_mini"}
+    assert models["vgg_mini"].topology == "chain"
+    assert models["resnet_mini"].topology == "dag"
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_block_shapes_chain_up(models, name):
+    m = models[name]
+    assert m.blocks[0].in_shape == M.INPUT_SHAPE
+    for a, b in zip(m.blocks, m.blocks[1:]):
+        assert a.out_shape == b.in_shape
+    assert m.blocks[-1].out_shape == (M.N_CLASSES,)
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_forward_runs_and_matches_blockwise(models, name):
+    m = models[name]
+    x = jax.random.normal(jax.random.PRNGKey(0), M.INPUT_SHAPE)
+    logits = m.forward(x)
+    assert logits.shape == (M.N_CLASSES,)
+    # block-by-block execution (what rust does) == whole forward
+    y = x
+    for blk in m.blocks:
+        assert y.shape == blk.in_shape
+        y = blk.fn(y)
+    np.testing.assert_allclose(y, logits, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_forward_deterministic(name):
+    m1, m2 = M.MODELS[name](), M.MODELS[name]()
+    x = jax.random.normal(jax.random.PRNGKey(1), M.INPUT_SHAPE)
+    np.testing.assert_allclose(m1.forward(x), m2.forward(x), atol=0)
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_quant_at_cut_high_bits_preserves_argmax(models, name):
+    m = models[name]
+    x = jax.random.normal(jax.random.PRNGKey(2), M.INPUT_SHAPE)
+    base = int(jnp.argmax(m.forward(x)))
+    for cut in range(len(m.blocks) - 1):
+        q = m.forward_quant_at(x, cut, float(2**8 - 1))
+        assert int(jnp.argmax(q)) == base, f"cut={cut}"
+
+
+def test_quant_low_bits_perturbs_more(models):
+    m = models["vgg_mini"]
+    x = jax.random.normal(jax.random.PRNGKey(3), M.INPUT_SHAPE)
+    base = m.forward(x)
+    e2 = float(jnp.mean((m.forward_quant_at(x, 0, 3.0) - base) ** 2))
+    e8 = float(jnp.mean((m.forward_quant_at(x, 0, 255.0) - base) ** 2))
+    assert e2 > e8
+
+
+def test_class_patterns_cluster_features(models, patterns):
+    """Fig. 1 observation: GAP features of same-class samples are closer
+    to their class center than to other centers (on average)."""
+    from compile.kernels import ref
+
+    m = models["resnet_mini"]
+    device_blocks = m.blocks[:-1]
+
+    def feat(x):
+        y = x
+        for blk in device_blocks:
+            y = blk.fn(y)
+        return ref.gap(y)
+
+    rng = jax.random.PRNGKey(4)
+    n_cls = 6
+    centers, samples = [], []
+    for c in range(n_cls):
+        keys = jax.random.split(jax.random.fold_in(rng, c), 4)
+        fs = jnp.stack([feat(M.sample(patterns, c, k)) for k in keys])
+        centers.append(fs.mean(0))
+        samples.append(fs)
+    centers = jnp.stack(centers)
+
+    def cos(a, b):
+        return float(jnp.dot(a, b) /
+                     (jnp.linalg.norm(a) * jnp.linalg.norm(b) + 1e-9))
+
+    correct = 0
+    total = 0
+    for c in range(n_cls):
+        for f in samples[c]:
+            sims = [cos(f, centers[j]) for j in range(n_cls)]
+            correct += int(np.argmax(sims) == c)
+            total += 1
+    assert correct / total > 0.8

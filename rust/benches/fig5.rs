@@ -1,0 +1,20 @@
+//! `cargo bench fig5` — regenerates paper Fig. 5 (adaptability under
+//! dynamic bandwidth): static vs dynamic throughput per phase of the
+//! 20->10->5 and 100->50->20 Mbps step traces.
+//! Expect: COACH's dynamic column stays within ~15% of its static
+//! column while fixed baselines collapse; COACH > JPS by 1.3-1.6x.
+
+use std::time::Instant;
+
+fn main() {
+    let n: usize = std::env::var("COACH_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let t0 = Instant::now();
+    for (name, table) in coach::bench::fig5::run(n).expect("fig5") {
+        println!("{name}  (throughput it/s, {n} tasks/phase)");
+        println!("{}", table.render());
+    }
+    println!("[bench wall time: {:.1?}]", t0.elapsed());
+}

@@ -1,0 +1,19 @@
+//! `cargo bench fig6` — regenerates paper Fig. 6 (average latency vs
+//! bandwidth, 1-100 Mbps, ResNet101/VGG16 x NX/TX2).
+//! Expect: COACH lowest at every bandwidth; gap vs NS largest at low
+//! bandwidth (~70%), vs JPS ~35-40%.
+
+use std::time::Instant;
+
+fn main() {
+    let n: usize = std::env::var("COACH_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let t0 = Instant::now();
+    println!("Fig 6: average latency (ms) vs bandwidth ({n} tasks/point)");
+    for (name, table) in coach::bench::fig67::fig6(n).expect("fig6") {
+        println!("[{name}]\n{}", table.render());
+    }
+    println!("[bench wall time: {:.1?}]", t0.elapsed());
+}

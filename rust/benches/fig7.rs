@@ -1,0 +1,19 @@
+//! `cargo bench fig7` — regenerates paper Fig. 7 (throughput vs
+//! bandwidth, saturated arrivals).
+//! Expect: COACH highest everywhere; multiples over NS largest at low
+//! bandwidth (transmission-bound), 1.4-1.8x over JPS.
+
+use std::time::Instant;
+
+fn main() {
+    let n: usize = std::env::var("COACH_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let t0 = Instant::now();
+    println!("Fig 7: throughput (it/s) vs bandwidth ({n} tasks/point)");
+    for (name, table) in coach::bench::fig67::fig7(n).expect("fig7") {
+        println!("[{name}]\n{}", table.render());
+    }
+    println!("[bench wall time: {:.1?}]", t0.elapsed());
+}

@@ -1,0 +1,110 @@
+//! `cargo bench micro` — microbenchmarks of the L3 hot paths (the §Perf
+//! baseline/after measurements in EXPERIMENTS.md):
+//!
+//! - offline partitioner (Algorithm 1) on the three analytic graphs,
+//! - single-task timeline evaluation (the inner loop of the search),
+//! - DES pipeline simulation throughput (simulated tasks/second),
+//! - semantic cache ops (separability evaluation + update),
+//! - UAQ quantize+pack codec throughput,
+//! - PJRT block execution latency (requires artifacts).
+
+use std::time::Instant;
+
+use coach::cache::SemanticCache;
+use coach::model::{topology, CostModel, DeviceProfile};
+use coach::network::BandwidthModel;
+use coach::partition::{evaluate, optimize, AnalyticAcc, PartitionConfig};
+use coach::pipeline::{run_pipeline, StageModel, StaticPolicy};
+use coach::quant::uaq;
+use coach::runtime::{default_artifact_dir, Engine, Manifest, ModelRuntime, Tensor};
+use coach::sim::{generate, Correlation};
+use coach::util::Rng;
+
+fn timeit<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(f());
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let (val, unit) = if per >= 1.0 {
+        (per, "s")
+    } else if per >= 1e-3 {
+        (per * 1e3, "ms")
+    } else if per >= 1e-6 {
+        (per * 1e6, "us")
+    } else {
+        (per * 1e9, "ns")
+    };
+    println!("{name:<48} {val:>9.2} {unit}/iter  ({iters} iters)");
+}
+
+fn main() {
+    let cost =
+        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
+    let cfg = PartitionConfig::default();
+
+    // --- offline component -------------------------------------------
+    for name in ["vgg16", "resnet101", "googlenet"] {
+        let g = topology::by_name(name).unwrap();
+        timeit(&format!("partition::optimize({name})"), 5, || {
+            optimize(&g, &cost, &AnalyticAcc, &cfg).unwrap()
+        });
+    }
+
+    let g = topology::resnet101();
+    let strat = optimize(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+    timeit("partition::evaluate (single-task timeline)", 200, || {
+        evaluate(&g, &cost, &strat.on_device, &strat.cuts, 20.0)
+    });
+
+    // --- DES pipeline ---------------------------------------------------
+    let sm = StageModel::from_strategy(&g, &cost, &strat, 20.0);
+    let tasks = generate(5000, 1e-4, Correlation::Medium, 100, 1);
+    let bw = BandwidthModel::Static(20.0);
+    timeit("pipeline::run_pipeline (5000 tasks)", 10, || {
+        let mut pol = StaticPolicy::no_exit(8);
+        run_pipeline(&g, &cost, &sm, &bw, &tasks, &mut pol, "bench")
+    });
+
+    // --- semantic cache --------------------------------------------------
+    let mut rng = Rng::new(2);
+    let mut cache = SemanticCache::new(100, 128);
+    for j in 0..100 {
+        cache.update(j, &rng.normal_vec(128));
+    }
+    let feat = rng.normal_vec(128);
+    timeit("cache::separability (100 labels x 128 dim)", 20_000, || {
+        cache.separability(&feat)
+    });
+    timeit("cache::update", 20_000, || cache.update(7, &feat));
+
+    // --- UAQ codec ---------------------------------------------------------
+    let x: Vec<f32> = (0..16384).map(|_| rng.normal() as f32).collect();
+    timeit("uaq::quantize+pack (16384 elems, 4b)", 2_000, || {
+        let (codes, p) = uaq::quantize(&x, 4);
+        (uaq::pack_codes(&codes, 4), p)
+    });
+
+    // --- PJRT runtime (needs artifacts) ----------------------------------
+    match Manifest::load(&default_artifact_dir()) {
+        Ok(manifest) => {
+            let engine = Engine::new(&manifest).unwrap();
+            let rt = ModelRuntime::new(&engine, &manifest, "resnet_mini").unwrap();
+            rt.preload_all().unwrap();
+            let x = Tensor::zeros(manifest.input_shape.clone());
+            timeit("runtime block exec (resnet_mini b0)", 50, || {
+                rt.run_blocks(0, 1, &x).unwrap()
+            });
+            let act = rt.run_device(2, &x).unwrap();
+            timeit("runtime uaq artifact (16384 elems)", 50, || {
+                rt.uaq_roundtrip(&act, 4).unwrap()
+            });
+            timeit("runtime gap artifact", 50, || {
+                rt.gap_feature(&act).unwrap()
+            });
+        }
+        Err(e) => println!("(runtime benches skipped: {e})"),
+    }
+}

@@ -1,0 +1,19 @@
+//! `cargo bench table1` — regenerates paper Table I (average inference
+//! latency, ms). The environment has no criterion crate; this harness
+//! prints the paper-style table plus wall time. Compare row/column
+//! ordering with the paper: COACH < JPS < SPINN < DADS < NS everywhere,
+//! larger wins on TX2 and ResNet101.
+
+use std::time::Instant;
+
+fn main() {
+    let n: usize = std::env::var("COACH_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let t0 = Instant::now();
+    let table = coach::bench::table1::run(n).expect("table1");
+    println!("Table I: average inference latency (ms), 2-100 Mbps band, {n} tasks/point");
+    println!("{}", table.render());
+    println!("[bench wall time: {:.1?}]", t0.elapsed());
+}

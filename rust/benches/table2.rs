@@ -1,0 +1,26 @@
+//! `cargo bench table2` — regenerates paper Table II (context-aware
+//! acceleration: early-exit ratio, latency, transmission cost across
+//! data-correlation levels) on the REAL compiled pipeline.
+//! Expect: Exit% and savings grow monotonically Low -> Medium -> High;
+//! NoAdjust transmits the most.
+
+use std::time::Instant;
+
+use coach::runtime::{default_artifact_dir, Manifest};
+
+fn main() {
+    let n: usize = std::env::var("COACH_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let manifest = Manifest::load(&default_artifact_dir()).expect(
+        "artifacts missing - run `make artifacts` first",
+    );
+    let t0 = Instant::now();
+    let table =
+        coach::bench::table2::run(&manifest, n, &["resnet_mini", "vgg_mini"])
+            .expect("table2");
+    println!("Table II: context-aware acceleration (real pipeline, {n} tasks/row)");
+    println!("{}", table.render());
+    println!("[bench wall time: {:.1?}]", t0.elapsed());
+}

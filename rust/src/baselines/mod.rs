@@ -1,0 +1,207 @@
+//! Baseline collaborative-inference schedulers (paper §IV-A):
+//!
+//! - **NS (Neurosurgeon)** — single chain cut minimizing per-task
+//!   latency; no quantization (raw f32 transmission).
+//! - **DADS** — single chain cut minimizing the maximum pipeline stage
+//!   (throughput under load); no quantization.
+//! - **SPINN** — latency-minimizing cut with *fixed* 8-bit quantization
+//!   and a conservative early-exit policy.
+//! - **JPS** — layer-level scheduling of the device + transmission
+//!   stages (minimizes max{T_e, T_t}, neglecting the cloud stage),
+//!   fixed 8-bit quantization.
+//!
+//! All baselines pick chain-level cuts only (virtual blocks atomic) —
+//! none of them opens DAG blocks for layer-parallel cuts, and none
+//! adjusts quantization online; those are COACH's contributions.
+
+use anyhow::Result;
+
+use crate::model::{CostModel, ModelGraph};
+use crate::partition::{
+    chain_of, evaluate, optimize, AccProvider, CutEdge, PartitionConfig,
+    Strategy,
+};
+
+/// Scheduling scheme identifier (COACH + the four baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    Ns,
+    Dads,
+    Spinn,
+    Jps,
+    Coach,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 5] =
+        [Scheme::Ns, Scheme::Dads, Scheme::Spinn, Scheme::Jps, Scheme::Coach];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Ns => "NS",
+            Scheme::Dads => "DADS",
+            Scheme::Spinn => "SPINN",
+            Scheme::Jps => "JPS",
+            Scheme::Coach => "COACH",
+        }
+    }
+
+    /// Wire precision this scheme uses for cut activations (None =
+    /// adaptive per the accuracy tables — COACH only).
+    pub fn fixed_bits(&self) -> Option<u8> {
+        match self {
+            Scheme::Ns | Scheme::Dads => Some(32), // raw f32
+            Scheme::Spinn | Scheme::Jps => Some(8),
+            Scheme::Coach => None,
+        }
+    }
+
+    /// Whether the scheme runs an early-exit policy online.
+    pub fn early_exit(&self) -> bool {
+        matches!(self, Scheme::Spinn | Scheme::Coach)
+    }
+
+    /// Whether the scheme adapts quantization per task online.
+    pub fn adaptive_quant(&self) -> bool {
+        matches!(self, Scheme::Coach)
+    }
+
+    /// Offline planning at a design-point bandwidth.
+    pub fn plan(
+        &self,
+        g: &ModelGraph,
+        cost: &CostModel,
+        acc: &dyn AccProvider,
+        cfg: &PartitionConfig,
+    ) -> Result<Strategy> {
+        match self {
+            Scheme::Coach => optimize(g, cost, acc, cfg),
+            _ => {
+                let objective = |s: &Strategy| -> f64 {
+                    match self {
+                        Scheme::Ns | Scheme::Spinn => s.eval.latency,
+                        Scheme::Dads => s.eval.max_stage(),
+                        Scheme::Jps => {
+                            // device+transmission stages only; the cloud
+                            // stage is invisible to JPS's scheduler.
+                            s.eval.t_e.max(s.eval.t_t) + 1e-3 * s.eval.latency
+                        }
+                        Scheme::Coach => unreachable!(),
+                    }
+                };
+                best_chain_cut(g, cost, cfg, self.fixed_bits().unwrap(), objective)
+            }
+        }
+    }
+}
+
+/// Enumerate chain-level cuts (virtual blocks atomic) at a fixed wire
+/// precision and return the candidate minimizing `objective`.
+pub fn best_chain_cut(
+    g: &ModelGraph,
+    cost: &CostModel,
+    cfg: &PartitionConfig,
+    bits: u8,
+    objective: impl Fn(&Strategy) -> f64,
+) -> Result<Strategy> {
+    let chain = chain_of(g)?;
+    let mut best: Option<(f64, Strategy)> = None;
+    for k in 0..=chain.len() {
+        let mut on_device = vec![false; g.n()];
+        for node in &chain[..k] {
+            for l in node.layers() {
+                on_device[l] = true;
+            }
+        }
+        let cuts: Vec<CutEdge> = g
+            .cut_edges(&on_device)
+            .expect("prefix cut")
+            .into_iter()
+            .map(|(from, to)| CutEdge {
+                from,
+                to,
+                bits,
+                elems: g.layers[from].out_elems,
+            })
+            .collect();
+        let eval = evaluate(g, cost, &on_device, &cuts, cfg.bw_mbps);
+        let s = Strategy { model: g.name.clone(), on_device, cuts, eval };
+        let obj = objective(&s);
+        if best.as_ref().map(|(b, _)| obj < *b).unwrap_or(true) {
+            best = Some((obj, s));
+        }
+    }
+    Ok(best.expect("at least one candidate").1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::topology::{resnet101, vgg16};
+    use crate::model::DeviceProfile;
+    use crate::partition::AnalyticAcc;
+
+    fn setup() -> (ModelGraph, CostModel, PartitionConfig) {
+        (
+            vgg16(),
+            CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000()),
+            PartitionConfig::default(),
+        )
+    }
+
+    #[test]
+    fn all_schemes_plan() {
+        let (g, cost, cfg) = setup();
+        for scheme in Scheme::ALL {
+            let s = scheme.plan(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+            assert!(g.cut_edges(&s.on_device).is_ok(), "{}", scheme.name());
+            assert!(s.eval.latency > 0.0);
+        }
+    }
+
+    #[test]
+    fn coach_objective_at_least_as_good() {
+        let (g, cost, cfg) = setup();
+        let coach = Scheme::Coach.plan(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+        for scheme in [Scheme::Ns, Scheme::Dads, Scheme::Spinn, Scheme::Jps] {
+            let s = scheme.plan(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+            assert!(
+                coach.eval.objective() <= s.eval.objective() + 1e-9,
+                "{} beat COACH on Eq.6: {} < {}",
+                scheme.name(),
+                s.eval.objective(),
+                coach.eval.objective()
+            );
+        }
+    }
+
+    #[test]
+    fn quantization_dominates_on_latency() {
+        let (g, cost, cfg) = setup();
+        let ns = Scheme::Ns.plan(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+        let spinn = Scheme::Spinn.plan(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+        // both minimize latency over the same cut set; SPINN's wire is
+        // 4x cheaper, so its optimum can only be as good or better.
+        assert!(spinn.eval.latency <= ns.eval.latency + 1e-9);
+    }
+
+    #[test]
+    fn dads_minimizes_max_stage() {
+        let (g, cost, cfg) = setup();
+        let ns = Scheme::Ns.plan(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+        let dads = Scheme::Dads.plan(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+        assert!(dads.eval.max_stage() <= ns.eval.max_stage() + 1e-9);
+    }
+
+    #[test]
+    fn schemes_work_on_dag() {
+        let g = resnet101();
+        let cost =
+            CostModel::new(DeviceProfile::jetson_tx2(), DeviceProfile::cloud_a6000());
+        let cfg = PartitionConfig::default();
+        for scheme in Scheme::ALL {
+            let s = scheme.plan(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+            assert!(s.eval.objective().is_finite(), "{}", scheme.name());
+        }
+    }
+}

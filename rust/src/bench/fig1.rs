@@ -1,0 +1,134 @@
+//! Fig. 1: the data-correlation observations, measured on the REAL
+//! mini model features.
+//!
+//! (a) temporal locality — mean cosine similarity of consecutive-frame
+//!     GAP features vs random pairs on a correlated stream;
+//! (b) spatial locality — per-task optimal precision (min bits keeping
+//!     the fp32 argmax) vs distance to the task's semantic center,
+//!     binned by distance quartile: closer tasks need fewer bits.
+
+use anyhow::Result;
+
+use crate::metrics::Table;
+use crate::runtime::{Engine, Manifest, ModelRuntime, Tensor};
+use crate::sim::{generate, Correlation};
+use crate::util::{cosine01, mean, Rng};
+
+pub struct Fig1Result {
+    pub temporal: Table,
+    pub spatial: Table,
+}
+
+pub fn run(manifest: &Manifest, model: &str, n_tasks: usize) -> Result<Fig1Result> {
+    let engine = Engine::new(manifest)?;
+    let rt = ModelRuntime::new(&engine, manifest, model)?;
+    rt.preload_all()?;
+    let cut = (rt.model.blocks.len() - 1) / 2;
+
+    let patterns = manifest.read_f32(&manifest.patterns.file)?;
+    let isz: usize = manifest.input_shape.iter().product();
+    let sigma = manifest.patterns.sigma;
+    let mut rng = Rng::new(0xF161);
+
+    let tasks = generate(n_tasks, 0.001, Correlation::High, manifest.n_classes, 5);
+    let mut feats: Vec<Vec<f32>> = Vec::with_capacity(tasks.len());
+    let mut labels: Vec<usize> = Vec::with_capacity(tasks.len());
+    let mut opt_bits: Vec<u8> = Vec::with_capacity(tasks.len());
+
+    for task in &tasks {
+        let mut ctx_rng = Rng::new(task.context);
+        let mut data =
+            patterns[task.label * isz..(task.label + 1) * isz].to_vec();
+        for v in data.iter_mut() {
+            *v += 2.2 * sigma * ctx_rng.normal() as f32
+                + sigma * rng.normal() as f32;
+        }
+        let x = Tensor::new(manifest.input_shape.clone(), data)?;
+        let act = rt.run_device(cut, &x)?;
+        let feat = rt.gap_feature(&act)?;
+        let base = rt.run_cloud(cut, &act)?.argmax();
+        // optimal precision: min bits preserving the fp32 argmax
+        let mut bits = 8u8;
+        for b in (2..=8u8).rev() {
+            let q = rt.uaq_roundtrip(&act, b)?;
+            if rt.run_cloud(cut, &q)?.argmax() == base {
+                bits = b;
+            } else {
+                break;
+            }
+        }
+        feats.push(feat.data);
+        labels.push(base);
+        opt_bits.push(bits);
+    }
+
+    // ---- (a) temporal locality ---------------------------------------
+    // center each feature (subtract its own mean): raw ReLU/GAP features
+    // are all-positive so uncentered cosine saturates near 1 for ANY
+    // pair; the data-dependent component is what t-SNE visualizes.
+    let centered: Vec<Vec<f32>> = feats
+        .iter()
+        .map(|f| {
+            let m = f.iter().sum::<f32>() / f.len() as f32;
+            f.iter().map(|v| v - m).collect()
+        })
+        .collect();
+    let consec: Vec<f64> = centered
+        .windows(2)
+        .map(|w| cosine01(&w[0], &w[1]))
+        .collect();
+    let mut rand_pairs = Vec::new();
+    for _ in 0..consec.len() {
+        let i = rng.below(centered.len());
+        let j = rng.below(centered.len());
+        rand_pairs.push(cosine01(&centered[i], &centered[j]));
+    }
+    let mut temporal = Table::new(&["pair type", "mean cosine sim"]);
+    temporal.row(vec!["consecutive frames".into(), format!("{:.4}", mean(&consec))]);
+    temporal.row(vec!["random pairs".into(), format!("{:.4}", mean(&rand_pairs))]);
+
+    // ---- (b) spatial locality ------------------------------------------
+    // distance to own-label semantic center (mean feature per label)
+    let dim = feats[0].len();
+    let mut centers: Vec<(Vec<f64>, usize)> =
+        vec![(vec![0.0; dim], 0); manifest.n_classes];
+    for (f, &l) in feats.iter().zip(&labels) {
+        for (c, v) in centers[l].0.iter_mut().zip(f) {
+            *c += *v as f64;
+        }
+        centers[l].1 += 1;
+    }
+    let mut dists: Vec<(f64, u8)> = Vec::new();
+    for (f, (&l, &b)) in feats.iter().zip(labels.iter().zip(&opt_bits)) {
+        let (c, n) = &centers[l];
+        if *n < 2 {
+            continue;
+        }
+        let d: f64 = f
+            .iter()
+            .zip(c)
+            .map(|(x, m)| {
+                let mm = m / *n as f64;
+                (*x as f64 - mm).powi(2)
+            })
+            .sum::<f64>()
+            .sqrt();
+        dists.push((d, b));
+    }
+    dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut spatial = Table::new(&["distance quartile", "mean optimal bits", "n"]);
+    let q = dists.len() / 4;
+    for k in 0..4 {
+        let lo = k * q;
+        let hi = if k == 3 { dists.len() } else { (k + 1) * q };
+        let seg = &dists[lo..hi];
+        let mb =
+            seg.iter().map(|(_, b)| *b as f64).sum::<f64>() / seg.len().max(1) as f64;
+        spatial.row(vec![
+            format!("Q{}", k + 1),
+            format!("{mb:.2}"),
+            format!("{}", seg.len()),
+        ]);
+    }
+    Ok(Fig1Result { temporal, spatial })
+}

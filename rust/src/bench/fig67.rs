@@ -1,0 +1,113 @@
+//! Fig. 6 (latency vs bandwidth) and Fig. 7 (throughput vs bandwidth):
+//! COACH and the four baselines across 1-100 Mbps on the UCF101-like
+//! stream, for ResNet101 and VGG16 on NX and TX2.
+
+use anyhow::Result;
+
+use crate::baselines::Scheme;
+use crate::bench::{des_thresholds, plan_cfg, BW_GRID, SPINN_EXIT_THRESHOLD};
+use crate::coordinator::online::{CoachOnline, CoachOnlineDes};
+use crate::metrics::{RunReport, Table};
+use crate::model::{topology, CostModel, DeviceProfile};
+use crate::network::BandwidthModel;
+use crate::partition::{AnalyticAcc, PartitionConfig};
+use crate::pipeline::des::run_pipeline_opts;
+use crate::pipeline::{StageModel, StaticPolicy};
+use crate::sim::{generate, Correlation};
+
+/// Run one (model, device, scheme, bandwidth) point.
+///
+/// `saturate`: true for throughput (arrivals faster than the pipeline,
+/// Fig. 7), false for latency (moderate load, Fig. 6).
+pub fn point(
+    model: &str,
+    device: DeviceProfile,
+    scheme: Scheme,
+    bw_mbps: f64,
+    n_tasks: usize,
+    saturate: bool,
+) -> Result<RunReport> {
+    let g = topology::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let cost = CostModel::new(device, DeviceProfile::cloud_a6000());
+    let cfg = plan_cfg(&g, &cost, bw_mbps, scheme)?;
+    let strat = scheme.plan(&g, &cost, &AnalyticAcc, &cfg)?;
+    let sm = StageModel::from_strategy(&g, &cost, &strat, bw_mbps);
+    let bw = BandwidthModel::Static(bw_mbps);
+    let (period, drop_after) = if saturate {
+        (1e-5, None) // capacity measurement: unbounded queue
+    } else {
+        // common continuous load across schemes (table1::common_period)
+        let p = crate::bench::table1::common_period(&g, &cost, bw_mbps)?;
+        (p, Some(6.0 * p))
+    };
+    let tasks = generate(n_tasks, period, Correlation::Medium, 100, 99);
+
+    let report = match scheme {
+        Scheme::Coach => {
+            let mut pol = CoachOnlineDes {
+                inner: CoachOnline::new(
+                    des_thresholds(),
+                    strat.base_bits(),
+                    sm.clone(),
+                    cost.clone(),
+                ),
+                graph: g.clone(),
+            };
+            run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, "COACH", drop_after)
+        }
+        Scheme::Spinn => {
+            let mut pol =
+                StaticPolicy { bits: 8, exit_threshold: SPINN_EXIT_THRESHOLD };
+            run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, "SPINN", drop_after)
+        }
+        _ => {
+            let mut pol =
+                StaticPolicy::no_exit(scheme.fixed_bits().unwrap_or(32));
+            run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, scheme.name(), drop_after)
+        }
+    };
+    Ok(report)
+}
+
+/// Fig. 6: one table per (model, device) subplot; rows = schemes,
+/// columns = bandwidths, cells = average latency (ms).
+pub fn fig6(n_tasks: usize) -> Result<Vec<(String, Table)>> {
+    sweep(n_tasks, false)
+}
+
+/// Fig. 7: same grid, cells = throughput (it/s).
+pub fn fig7(n_tasks: usize) -> Result<Vec<(String, Table)>> {
+    sweep(n_tasks, true)
+}
+
+fn sweep(n_tasks: usize, saturate: bool) -> Result<Vec<(String, Table)>> {
+    let mut out = Vec::new();
+    for (model, dev) in [
+        ("resnet101", DeviceProfile::jetson_nx()),
+        ("vgg16", DeviceProfile::jetson_nx()),
+        ("resnet101", DeviceProfile::jetson_tx2()),
+        ("vgg16", DeviceProfile::jetson_tx2()),
+    ] {
+        let mut header = vec!["scheme".to_string()];
+        header.extend(BW_GRID.iter().map(|b| format!("{b}Mbps")));
+        let mut t = Table {
+            header,
+            rows: Vec::new(),
+        };
+        for scheme in Scheme::ALL {
+            let mut row = vec![scheme.name().to_string()];
+            for &bw in &BW_GRID {
+                let r = point(model, dev.clone(), scheme, bw, n_tasks, saturate)?;
+                if saturate {
+                    row.push(format!("{:.1}", r.throughput()));
+                } else {
+                    row.push(format!("{:.2}", r.avg_latency_ms()));
+                }
+            }
+            t.row(row);
+        }
+        out.push((format!("{model}/{}", dev.name), t));
+    }
+    Ok(out)
+}

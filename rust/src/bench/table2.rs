@@ -1,0 +1,67 @@
+//! Table II: context-aware acceleration on the REAL pipeline (compiled
+//! artifacts, threaded server): early-exit ratio, latency (ms) and
+//! transmission cost (Kb) across data-correlation levels, per model.
+
+use anyhow::Result;
+
+use crate::coordinator::server::{serve, SchemePolicy, ServeCfg};
+use crate::metrics::Table;
+use crate::network::BandwidthModel;
+use crate::runtime::Manifest;
+use crate::sim::Correlation;
+
+/// Rows: NoAdjust, Low, Medium, High; columns per model:
+/// Exit. / Ltc.(ms) / Trans.(Kb).
+pub fn run(
+    manifest: &Manifest,
+    n_tasks: usize,
+    models: &[&str],
+) -> Result<Table> {
+    let mut header = vec!["corr".to_string()];
+    for m in models {
+        header.push(format!("{m} Exit%"));
+        header.push(format!("{m} Ltc(ms)"));
+        header.push(format!("{m} Trans(Kb)"));
+    }
+    let mut t = Table { header, rows: Vec::new() };
+
+    let rows: [(Correlation, SchemePolicy); 4] = [
+        (Correlation::High, SchemePolicy::no_adjust()), // NoAdjust baseline
+        (Correlation::Low, SchemePolicy::coach()),
+        (Correlation::Medium, SchemePolicy::coach()),
+        (Correlation::High, SchemePolicy::coach()),
+    ];
+
+    for (i, (corr, policy)) in rows.iter().enumerate() {
+        let name = if i == 0 { "NoAdjust" } else { corr.name() };
+        let mut row = vec![name.to_string()];
+        for model in models {
+            let m = manifest.model(model)?;
+            // offline cut: the measured partitioner lands on an early
+            // block boundary at 20 Mbps (see `coach partition`), which
+            // is also where GAP features are most cache-separable
+            // (EXPERIMENTS.md §TableII cut sweep).
+            let _ = m;
+            let cut = 1;
+            let cfg = ServeCfg {
+                model: model.to_string(),
+                cut,
+                policy: *policy,
+                device_scale: 6.0, // NX-like
+                bw: BandwidthModel::Static(20.0),
+                period: 0.012,
+                n_tasks,
+                correlation: *corr,
+                eps: 0.005,
+                seed: 1234 + i as u64,
+                audit_every: 0,
+            };
+            let res = serve(manifest, &cfg)?;
+            row.push(format!("{:.1}", res.report.exit_ratio() * 100.0));
+            row.push(format!("{:.2}", res.report.avg_latency_ms()));
+            row.push(format!("{:.1}", res.report.avg_wire_kb()));
+        }
+        t.row(row);
+    }
+    Ok(t)
+}

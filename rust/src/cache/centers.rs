@@ -1,0 +1,246 @@
+//! Label semantic centers with the running-mean update (Eq. 7),
+//! cosine similarity degrees (Eq. 8), task separability (Eq. 9) and the
+//! early-exit result (Eq. 10).
+
+/// Subtract a vector's own mean (see [`SemanticCache::similarities`]).
+fn center(v: &[f32]) -> Vec<f32> {
+    let m = v.iter().sum::<f32>() / v.len().max(1) as f32;
+    v.iter().map(|x| x - m).collect()
+}
+
+fn norm(v: &[f32]) -> f64 {
+    v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+}
+
+/// Task separability evaluation for one feature against the cache.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Separability {
+    /// S (Eq. 9); 0.0 when fewer than two centers exist
+    pub s: f64,
+    /// label with the highest similarity degree (Eq. 10's argmax)
+    pub best_label: usize,
+    /// highest similarity degree t_H
+    pub t_h: f64,
+    /// second-highest similarity degree t_SH
+    pub t_sh: f64,
+}
+
+/// One warm center with its derived (hot-path) representation.
+#[derive(Debug, Clone)]
+struct CenterEntry {
+    raw: Vec<f32>,
+    count: u64,
+    /// mean-centered copy + its L2 norm, precomputed at update time so
+    /// the per-task separability evaluation is a pure dot product
+    centered: Vec<f32>,
+    norm: f64,
+}
+
+/// Per-label semantic centers over GAP task features (paper Eq. 7-10).
+#[derive(Debug, Clone)]
+pub struct SemanticCache {
+    dim: usize,
+    centers: Vec<Option<CenterEntry>>,
+    /// cap on m_j so the running mean keeps adapting (stale-cache guard)
+    max_count: u64,
+}
+
+impl SemanticCache {
+    pub fn new(n_labels: usize, dim: usize) -> SemanticCache {
+        SemanticCache {
+            dim,
+            centers: vec![None; n_labels],
+            max_count: 4096,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn n_labels(&self) -> usize {
+        self.centers.len()
+    }
+
+    pub fn n_warm(&self) -> usize {
+        self.centers.iter().filter(|c| c.is_some()).count()
+    }
+
+    pub fn center(&self, label: usize) -> Option<&[f32]> {
+        self.centers
+            .get(label)
+            .and_then(|c| c.as_ref())
+            .map(|e| e.raw.as_slice())
+    }
+
+    /// Eq. 7: T_j^c <- (m_j T_j^c + F_j) / (m_j + 1).
+    pub fn update(&mut self, label: usize, feature: &[f32]) {
+        assert_eq!(feature.len(), self.dim, "feature dim mismatch");
+        match &mut self.centers[label] {
+            Some(e) => {
+                let mf = e.count.min(self.max_count) as f32;
+                for (ci, fi) in e.raw.iter_mut().zip(feature) {
+                    *ci = (mf * *ci + *fi) / (mf + 1.0);
+                }
+                e.count += 1;
+                e.centered = center(&e.raw);
+                e.norm = norm(&e.centered);
+            }
+            slot @ None => {
+                let raw = feature.to_vec();
+                let centered = center(&raw);
+                let n = norm(&centered);
+                *slot = Some(CenterEntry { raw, count: 1, centered, norm: n });
+            }
+        }
+    }
+
+    /// Similarity degrees T = {t_j} (Eq. 8) against every warm center.
+    ///
+    /// Features are centered (own mean subtracted) before the cosine:
+    /// ReLU/GAP features are all-positive, so uncentered cosines of ANY
+    /// two saturate near 1 and compress the separability signal; the
+    /// centered cosine compares the data-dependent component (what the
+    /// paper's t-SNE clusters reflect).
+    pub fn similarities(&self, feature: &[f32]) -> Vec<(usize, f64)> {
+        let fc = center(feature);
+        let fn_ = norm(&fc);
+        self.centers
+            .iter()
+            .enumerate()
+            .filter_map(|(j, c)| {
+                c.as_ref().map(|e| {
+                    if fn_ == 0.0 || e.norm == 0.0 {
+                        return (j, 0.0);
+                    }
+                    let dot: f64 = fc
+                        .iter()
+                        .zip(&e.centered)
+                        .map(|(a, b)| (*a as f64) * (*b as f64))
+                        .sum();
+                    let cos = dot / (fn_ * e.norm);
+                    (j, ((cos + 1.0) / 2.0).clamp(0.0, 1.0))
+                })
+            })
+            .collect()
+    }
+
+    /// Separability S (Eq. 9): ||T||_2 * (t_H - t_SH) * t_H / t_SH.
+    /// Single fused pass over the precomputed centered centers — this is
+    /// the per-task online hot path (§Perf).
+    pub fn separability(&self, feature: &[f32]) -> Separability {
+        let fc = center(feature);
+        let fnorm = norm(&fc);
+        let mut norm_sq = 0.0f64;
+        let (mut best, mut second) = ((0usize, -1.0f64), -1.0f64);
+        let mut any = false;
+        for (j, c) in self.centers.iter().enumerate() {
+            let Some(e) = c else { continue };
+            any = true;
+            let t = if fnorm == 0.0 || e.norm == 0.0 {
+                0.0
+            } else {
+                let dot: f64 = fc
+                    .iter()
+                    .zip(&e.centered)
+                    .map(|(a, b)| (*a as f64) * (*b as f64))
+                    .sum();
+                ((dot / (fnorm * e.norm) + 1.0) / 2.0).clamp(0.0, 1.0)
+            };
+            norm_sq += t * t;
+            if t > best.1 {
+                second = best.1;
+                best = (j, t);
+            } else if t > second {
+                second = t;
+            }
+        }
+        if !any {
+            return Separability { s: 0.0, best_label: 0, t_h: 0.0, t_sh: 0.0 };
+        }
+        let norm = norm_sq.sqrt();
+        if second <= 0.0 {
+            // single warm center: fully separable by definition, but we
+            // stay conservative and report 0 so early-exit never fires
+            // before at least two labels are cached.
+            return Separability {
+                s: 0.0,
+                best_label: best.0,
+                t_h: best.1,
+                t_sh: 0.0,
+            };
+        }
+        let s = norm * (best.1 - second) * (best.1 / second.max(1e-9));
+        Separability { s, best_label: best.0, t_h: best.1, t_sh: second }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(dim: usize, axis: usize) -> Vec<f32> {
+        let mut v = vec![0.0; dim];
+        v[axis] = 1.0;
+        v
+    }
+
+    #[test]
+    fn update_running_mean() {
+        let mut c = SemanticCache::new(2, 3);
+        c.update(0, &[1.0, 0.0, 0.0]);
+        c.update(0, &[0.0, 1.0, 0.0]);
+        let v = c.center(0).unwrap();
+        assert!((v[0] - 0.5).abs() < 1e-6);
+        assert!((v[1] - 0.5).abs() < 1e-6);
+        assert!(c.center(1).is_none());
+    }
+
+    #[test]
+    fn separability_zero_until_two_labels() {
+        let mut c = SemanticCache::new(3, 4);
+        assert_eq!(c.separability(&unit(4, 0)).s, 0.0);
+        c.update(0, &unit(4, 0));
+        assert_eq!(c.separability(&unit(4, 0)).s, 0.0);
+        c.update(1, &unit(4, 1));
+        let sep = c.separability(&unit(4, 0));
+        assert!(sep.s > 0.0);
+        assert_eq!(sep.best_label, 0);
+    }
+
+    #[test]
+    fn close_feature_more_separable_than_midpoint() {
+        let mut c = SemanticCache::new(2, 4);
+        c.update(0, &unit(4, 0));
+        c.update(1, &unit(4, 1));
+        let near = c.separability(&unit(4, 0));
+        let mid = c.separability(&[0.7, 0.7, 0.0, 0.0]);
+        assert!(near.s > mid.s, "near={} mid={}", near.s, mid.s);
+        assert!(mid.s < 0.2, "midpoint should be barely separable: {}", mid.s);
+    }
+
+    #[test]
+    fn best_label_tracks_argmax() {
+        let mut c = SemanticCache::new(3, 4);
+        c.update(0, &unit(4, 0));
+        c.update(1, &unit(4, 1));
+        c.update(2, &unit(4, 2));
+        assert_eq!(c.separability(&unit(4, 1)).best_label, 1);
+        assert_eq!(c.separability(&unit(4, 2)).best_label, 2);
+    }
+
+    #[test]
+    fn count_cap_keeps_adapting() {
+        let mut c = SemanticCache::new(1, 2);
+        c.max_count = 4;
+        for _ in 0..100 {
+            c.update(0, &[1.0, 0.0]);
+        }
+        // drift toward a new regime must still move the center
+        for _ in 0..20 {
+            c.update(0, &[0.0, 1.0]);
+        }
+        let v = c.center(0).unwrap();
+        assert!(v[1] > 0.5, "center failed to adapt: {v:?}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Online context-aware caching (paper §III-C): label semantic centers,
+//! similarity degrees, task separability, early-exit decisions, and
+//! threshold calibration.
+
+pub mod centers;
+pub mod thresholds;
+
+pub use centers::{SemanticCache, Separability};
+pub use thresholds::{calibrate, Thresholds};

@@ -1,0 +1,183 @@
+//! One-time threshold calibration (paper Alg. 1 L18-19): the early-exit
+//! threshold S_ext and the quantization-adjustment thresholds S_adj are
+//! chosen on the calibration set so accuracy loss stays below eps.
+
+use super::centers::SemanticCache;
+
+/// Calibrated online thresholds.
+#[derive(Debug, Clone)]
+pub struct Thresholds {
+    /// early-exit when S > s_ext (Eq. 10 precondition)
+    pub s_ext: f64,
+    /// separability cutoffs for precision requirements: tasks with
+    /// S > s_adj[k] may drop to `base_bits - (k+1)` bits. Sorted
+    /// ascending in aggressiveness (descending bits).
+    pub s_adj: Vec<f64>,
+}
+
+impl Thresholds {
+    /// Precision requirement Q_r for separability `s`, relative to the
+    /// offline base precision (paper §III-C: higher separability
+    /// tolerates more aggressive quantization).
+    pub fn required_bits(&self, s: f64, base_bits: u8) -> u8 {
+        let mut bits = base_bits;
+        for &cut in &self.s_adj {
+            if s > cut && bits > crate::quant::MIN_BITS {
+                bits -= 1;
+            }
+        }
+        bits
+    }
+
+    /// Conservative default when no calibration data exists: never
+    /// early-exit, never drop below base precision.
+    pub fn disabled() -> Thresholds {
+        Thresholds { s_ext: f64::INFINITY, s_adj: vec![] }
+    }
+}
+
+/// Calibrate thresholds from labeled calibration features.
+///
+/// - `s_ext`: the smallest S such that, among calibration tasks with
+///   separability above it, the cache's argmax label agrees with the
+///   model's label at rate >= 1 - eps. Found by scanning candidate
+///   quantiles from aggressive to conservative.
+/// - `s_adj`: separability quantiles (upper 40% / 70%) among *correctly
+///   cached* tasks — tasks this separable tolerate 1 / 2 fewer bits
+///   (validated against the measured acc tables by the caller choosing
+///   `base_bits` from them).
+pub fn calibrate(
+    cache: &SemanticCache,
+    features: &[(usize, Vec<f32>)], // (model label, feature)
+    eps: f64,
+) -> Thresholds {
+    let mut scored: Vec<(f64, bool)> = features
+        .iter()
+        .map(|(label, f)| {
+            let sep = cache.separability(f);
+            (sep.s, sep.best_label == *label)
+        })
+        .collect();
+    if scored.is_empty() {
+        return Thresholds::disabled();
+    }
+    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    // Scan thresholds from most aggressive (lowest S) upward; pick the
+    // lowest threshold whose above-threshold agreement >= 1 - eps.
+    let n = scored.len();
+    let mut s_ext = f64::INFINITY;
+    for i in 0..n {
+        let above = &scored[i..];
+        let agree = above.iter().filter(|(_, ok)| *ok).count() as f64
+            / above.len() as f64;
+        if agree >= 1.0 - eps {
+            s_ext = scored[i].0;
+            // require a margin: exit only strictly above this S
+            break;
+        }
+    }
+
+    // Quantization-adjustment cutoffs from the separability
+    // distribution of correctly-cached tasks.
+    let correct: Vec<f64> = scored
+        .iter()
+        .filter(|(_, ok)| *ok)
+        .map(|(s, _)| *s)
+        .collect();
+    let s_adj = if correct.len() >= 5 {
+        let q = |p: f64| {
+            let idx = ((correct.len() - 1) as f64 * p).round() as usize;
+            correct[idx]
+        };
+        vec![q(0.4), q(0.7)]
+    } else {
+        vec![]
+    };
+
+    Thresholds { s_ext, s_adj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn make_cache_and_features(
+        n_labels: usize,
+        dim: usize,
+        noise: f32,
+        n_feat: usize,
+    ) -> (SemanticCache, Vec<(usize, Vec<f32>)>) {
+        let mut rng = Rng::new(42);
+        let protos: Vec<Vec<f32>> =
+            (0..n_labels).map(|_| rng.normal_vec(dim)).collect();
+        let mut cache = SemanticCache::new(n_labels, dim);
+        for (j, p) in protos.iter().enumerate() {
+            cache.update(j, p);
+        }
+        let feats = (0..n_feat)
+            .map(|i| {
+                let j = i % n_labels;
+                let f: Vec<f32> = protos[j]
+                    .iter()
+                    .map(|v| v + noise * rng.normal() as f32)
+                    .collect();
+                (j, f)
+            })
+            .collect();
+        (cache, feats)
+    }
+
+    #[test]
+    fn calibrate_clean_features_allows_exits() {
+        let (cache, feats) = make_cache_and_features(5, 16, 0.1, 100);
+        let th = calibrate(&cache, &feats, 0.05);
+        assert!(th.s_ext.is_finite(), "clean features should enable exit");
+        // most features should clear the threshold
+        let n_above = feats
+            .iter()
+            .filter(|(_, f)| cache.separability(f).s > th.s_ext)
+            .count();
+        assert!(n_above > feats.len() / 2, "n_above={n_above}");
+    }
+
+    #[test]
+    fn calibrate_noisy_features_is_conservative() {
+        let (cache, feats) = make_cache_and_features(5, 16, 3.0, 100);
+        let th = calibrate(&cache, &feats, 0.005);
+        // agreement is poor at every threshold -> exit rarely/never
+        let n_above = feats
+            .iter()
+            .filter(|(_, f)| cache.separability(f).s > th.s_ext)
+            .count();
+        assert!(
+            (n_above as f64) < feats.len() as f64 * 0.3,
+            "noisy calibration must suppress exits, n_above={n_above}"
+        );
+    }
+
+    #[test]
+    fn required_bits_monotone_in_separability() {
+        let th = Thresholds { s_ext: 1.0, s_adj: vec![0.3, 0.6] };
+        assert_eq!(th.required_bits(0.1, 6), 6);
+        assert_eq!(th.required_bits(0.4, 6), 5);
+        assert_eq!(th.required_bits(0.9, 6), 4);
+        // never below MIN_BITS
+        assert_eq!(th.required_bits(0.9, 2), 2);
+    }
+
+    #[test]
+    fn disabled_never_exits() {
+        let th = Thresholds::disabled();
+        assert!(!(1e12 > th.s_ext));
+        assert_eq!(th.required_bits(1e12, 5), 5);
+    }
+
+    #[test]
+    fn empty_calibration_disabled() {
+        let cache = SemanticCache::new(3, 4);
+        let th = calibrate(&cache, &[], 0.005);
+        assert!(th.s_ext.is_infinite());
+    }
+}

@@ -1,0 +1,212 @@
+//! Deployment configuration: a minimal TOML-subset loader (sections +
+//! `key = value`) — the offline build has no `toml` crate. Covers what
+//! a deployment needs: model choice, device/cloud profiles, network,
+//! scheduler knobs, workload shape.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::DeviceProfile;
+use crate::network::{BandwidthModel, Trace};
+use crate::sim::Correlation;
+
+/// Parsed `[section] key = value` data.
+#[derive(Debug, Clone, Default)]
+pub struct RawConfig {
+    /// (section, key) -> value (bare string, quotes stripped)
+    pub entries: BTreeMap<(String, String), String>,
+}
+
+impl RawConfig {
+    pub fn parse(text: &str) -> Result<RawConfig> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value, got '{line}'", ln + 1);
+            };
+            let v = v.trim().trim_matches('"').to_string();
+            entries.insert((section.clone(), k.trim().to_string()), v);
+        }
+        Ok(RawConfig { entries })
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.entries
+            .get(&(section.to_string(), key.to_string()))
+            .map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
+        self.get(section, key)
+            .map(|v| v.parse::<f64>().with_context(|| format!("{section}.{key}")))
+            .transpose()
+    }
+}
+
+/// Full deployment configuration with defaults.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub model: String,
+    pub device: DeviceProfile,
+    pub cloud: DeviceProfile,
+    pub bandwidth: BandwidthModel,
+    pub eps: f64,
+    pub t_max: f64,
+    pub design_bw: f64,
+    pub period: f64,
+    pub n_tasks: usize,
+    pub correlation: Correlation,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            model: "resnet101".into(),
+            device: DeviceProfile::jetson_nx(),
+            cloud: DeviceProfile::cloud_a6000(),
+            bandwidth: BandwidthModel::Static(20.0),
+            eps: 0.005,
+            t_max: f64::INFINITY,
+            design_bw: 20.0,
+            period: 0.01,
+            n_tasks: 1000,
+            correlation: Correlation::Medium,
+            seed: 42,
+        }
+    }
+}
+
+impl Config {
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_str_toml(&text)
+    }
+
+    pub fn from_str_toml(text: &str) -> Result<Config> {
+        let raw = RawConfig::parse(text)?;
+        let mut cfg = Config::default();
+        if let Some(m) = raw.get("model", "name") {
+            cfg.model = m.to_string();
+        }
+        if let Some(d) = raw.get("device", "profile") {
+            cfg.device = DeviceProfile::by_name(d)
+                .with_context(|| format!("unknown device profile '{d}'"))?;
+        }
+        if let Some(g) = raw.get_f64("device", "gflops")? {
+            cfg.device.flops_per_sec = g * 1e9;
+        }
+        if let Some(g) = raw.get_f64("cloud", "gflops")? {
+            cfg.cloud.flops_per_sec = g * 1e9;
+        }
+        if let Some(b) = raw.get_f64("network", "mbps")? {
+            cfg.bandwidth = BandwidthModel::Static(b);
+            cfg.design_bw = b;
+        }
+        if let Some(tr) = raw.get("network", "trace") {
+            cfg.bandwidth = match tr {
+                "fig5a" => BandwidthModel::Stepped(Trace::fig5a(10.0, 20.0)),
+                "fig5b" => BandwidthModel::Stepped(Trace::fig5b(10.0, 20.0)),
+                other => bail!("unknown trace '{other}'"),
+            };
+        }
+        if let Some(a) = raw.get_f64("network", "jitter")? {
+            let base = cfg.design_bw;
+            cfg.bandwidth = BandwidthModel::Jittered {
+                trace: Trace::constant(base),
+                amplitude: a,
+                seed: cfg.seed,
+            };
+        }
+        if let Some(e) = raw.get_f64("scheduler", "eps")? {
+            cfg.eps = e;
+        }
+        if let Some(t) = raw.get_f64("scheduler", "t_max_ms")? {
+            cfg.t_max = t / 1e3;
+        }
+        if let Some(p) = raw.get_f64("workload", "period_ms")? {
+            cfg.period = p / 1e3;
+        }
+        if let Some(n) = raw.get_f64("workload", "n_tasks")? {
+            cfg.n_tasks = n as usize;
+        }
+        if let Some(c) = raw.get("workload", "correlation") {
+            cfg.correlation = match c {
+                "none" => Correlation::None,
+                "low" => Correlation::Low,
+                "medium" => Correlation::Medium,
+                "high" => Correlation::High,
+                other => bail!("unknown correlation '{other}'"),
+            };
+        }
+        if let Some(s) = raw.get_f64("workload", "seed")? {
+            cfg.seed = s as u64;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"
+# deployment
+[model]
+name = "vgg16"
+
+[device]
+profile = "tx2"
+
+[network]
+mbps = 50
+
+[scheduler]
+eps = 0.01
+t_max_ms = 40
+
+[workload]
+period_ms = 5
+n_tasks = 200
+correlation = "high"
+seed = 7
+"#;
+        let c = Config::from_str_toml(text).unwrap();
+        assert_eq!(c.model, "vgg16");
+        assert_eq!(c.device.name, "tx2");
+        assert_eq!(c.design_bw, 50.0);
+        assert!((c.eps - 0.01).abs() < 1e-12);
+        assert!((c.t_max - 0.04).abs() < 1e-12);
+        assert!((c.period - 0.005).abs() < 1e-12);
+        assert_eq!(c.n_tasks, 200);
+        assert_eq!(c.correlation, Correlation::High);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn defaults_without_file() {
+        let c = Config::from_str_toml("").unwrap();
+        assert_eq!(c.model, "resnet101");
+        assert_eq!(c.device.name, "nx");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::from_str_toml("[x]\nnot a kv").is_err());
+        assert!(Config::from_str_toml("[workload]\ncorrelation = \"x\"").is_err());
+    }
+}

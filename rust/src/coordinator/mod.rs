@@ -1,0 +1,9 @@
+//! Online inference scheduling (paper §III-C, Alg. 1 online component):
+//! the per-task early-exit + adaptive-quantization policy, and the real
+//! threaded serving pipeline over the PJRT runtime.
+
+pub mod online;
+pub mod server;
+
+pub use online::CoachOnline;
+pub use server::{serve, ServeCfg, ServeResult};

@@ -1,0 +1,453 @@
+//! Real-execution serving pipeline over the PJRT runtime (std::thread
+//! based; the offline environment has no tokio — see Cargo.toml note).
+//!
+//! Three pipeline workers mirror the paper's three stages:
+//!
+//! - **device thread** — owns its own PJRT `Engine`; runs the device
+//!   prefix blocks, extracts the GAP feature (L1 kernel artifact),
+//!   evaluates the semantic cache (Eq. 8-10), decides early-exit vs
+//!   transmit-at-Q_c (Eq. 11), and applies the UAQ round trip (L1
+//!   kernel artifact) before "transmission".
+//! - **link thread** — simulated WiFi: sleeps for
+//!   `wire_bytes / bw(t)` per task (DESIGN.md §3 substitution).
+//! - **cloud thread** — owns a second `Engine`; runs the suffix blocks
+//!   and returns the label, which the device uses to update the cache
+//!   (Eq. 7).
+//!
+//! Device-speed emulation: the paper's Jetson NX/TX2 are slower than
+//! this CPU relative to the A6000 cloud. The cloud thread runs at raw
+//! CPU speed (playing the A6000); the device thread pads each block
+//! with `(scale - 1) x` its measured duration so the device:cloud
+//! ratio matches the testbed (NX ~6x, TX2 ~10.5x slower than cloud).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cache::{calibrate, SemanticCache, Thresholds};
+use crate::metrics::{RunReport, StageUsage, TaskOutcome};
+use crate::model::CostModel;
+use crate::network::BandwidthModel;
+use crate::runtime::{Engine, Manifest, ModelRuntime, Tensor};
+use crate::sim::{generate, Correlation};
+use crate::util::Rng;
+
+/// Scheme behaviour knobs for the real pipeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchemePolicy {
+    /// None = raw f32 transmission
+    pub bits: Option<u8>,
+    pub early_exit: bool,
+    pub adaptive_quant: bool,
+}
+
+impl SchemePolicy {
+    pub fn coach() -> Self {
+        SchemePolicy { bits: Some(8), early_exit: true, adaptive_quant: true }
+    }
+
+    pub fn no_adjust() -> Self {
+        SchemePolicy { bits: Some(8), early_exit: false, adaptive_quant: false }
+    }
+}
+
+/// Real-serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    pub model: String,
+    /// cut after block `cut` (device runs blocks 0..=cut)
+    pub cut: usize,
+    pub policy: SchemePolicy,
+    /// device slowdown relative to the CPU-as-cloud (NX ~6, TX2 ~10.5)
+    pub device_scale: f64,
+    pub bw: BandwidthModel,
+    /// arrival period, seconds
+    pub period: f64,
+    pub n_tasks: usize,
+    pub correlation: Correlation,
+    pub eps: f64,
+    pub seed: u64,
+    /// audit every k-th early-exit against the full model (0 = off)
+    pub audit_every: usize,
+}
+
+/// Outcome of a serve run.
+pub struct ServeResult {
+    pub report: RunReport,
+    pub thresholds: Thresholds,
+    pub base_bits: u8,
+}
+
+struct WireMsg {
+    id: usize,
+    arrive: Instant,
+    tensor: Tensor, // already UAQ-roundtripped (codec applied)
+    wire_bytes: usize,
+    bits: u8,
+    label_hint: usize,
+    feature: Vec<f32>,
+}
+
+/// Run the real pipeline; blocks until all tasks complete.
+pub fn serve(manifest: &Manifest, cfg: &ServeCfg) -> Result<ServeResult> {
+    let model = manifest.model(&cfg.model)?.clone();
+    let n_blocks = model.blocks.len();
+    anyhow::ensure!(cfg.cut + 1 < n_blocks, "cut {} out of range", cfg.cut);
+
+    let base_bits = cfg
+        .policy
+        .bits
+        .map(|b| {
+            if cfg.policy.adaptive_quant {
+                manifest
+                    .acc
+                    .min_bits(&cfg.model, cfg.cut, cfg.eps)
+                    .unwrap_or(8)
+            } else {
+                b
+            }
+        })
+        .unwrap_or(32);
+
+    let tasks = generate(
+        cfg.n_tasks,
+        cfg.period,
+        cfg.correlation,
+        manifest.n_classes,
+        cfg.seed,
+    );
+
+    let (tx_link, rx_link) = mpsc::channel::<WireMsg>();
+    let (tx_cloud, rx_cloud) = mpsc::channel::<WireMsg>();
+    let (tx_result, rx_result) = mpsc::channel::<(usize, usize, Vec<f32>)>();
+    let (tx_out, rx_out) = mpsc::channel::<TaskOutcome>();
+
+    let dev_busy = Arc::new(AtomicU64::new(0));
+    let link_busy = Arc::new(AtomicU64::new(0));
+    let cloud_busy = Arc::new(AtomicU64::new(0));
+
+    let t0 = Instant::now();
+    let cost = CostModel::new(
+        crate::model::DeviceProfile::jetson_nx(),
+        crate::model::DeviceProfile::cloud_a6000(),
+    );
+
+    // ---------------- link thread (simulated WiFi) --------------------
+    let bw = cfg.bw.clone();
+    let link_busy2 = link_busy.clone();
+    let link_handle = thread::spawn(move || {
+        while let Ok(msg) = rx_link.recv() {
+            let now = t0.elapsed().as_secs_f64();
+            let secs = bw.transmit_time(msg.wire_bytes, now);
+            thread::sleep(Duration::from_secs_f64(secs));
+            link_busy2.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+            if tx_cloud.send(msg).is_err() {
+                break;
+            }
+        }
+    });
+
+    // ---------------- cloud thread (own engine) -----------------------
+    let manifest_cloud = manifest.clone();
+    let model_name = cfg.model.clone();
+    let cut = cfg.cut;
+    let cloud_busy2 = cloud_busy.clone();
+    let tx_out_cloud = tx_out.clone();
+    let cloud_handle = thread::spawn(move || -> Result<()> {
+        let engine = Engine::new(&manifest_cloud)?;
+        let rt = ModelRuntime::new(&engine, &manifest_cloud, &model_name)?;
+        // preload suffix blocks
+        for b in &rt.model.blocks[cut + 1..] {
+            engine.preload(&b.artifact)?;
+        }
+        while let Ok(msg) = rx_cloud.recv() {
+            let s = Instant::now();
+            let logits = rt.run_cloud(cut, &msg.tensor)?;
+            let dur = s.elapsed();
+            cloud_busy2.fetch_add(dur.as_nanos() as u64, Ordering::Relaxed);
+            let label = logits.argmax();
+            // result return to device (tiny payload, charged to latency
+            // via the result channel consumer)
+            let _ = tx_result.send((msg.id, label, msg.feature.clone()));
+            let finish = t0.elapsed().as_secs_f64();
+            let arrive = msg.arrive.duration_since(t0).as_secs_f64();
+            let _ = tx_out_cloud.send(TaskOutcome {
+                id: msg.id,
+                arrive,
+                finish,
+                latency: finish - arrive,
+                exited_early: false,
+                bits: msg.bits,
+                wire_bytes: msg.wire_bytes,
+                label,
+                correct: label == msg.label_hint,
+            });
+        }
+        Ok(())
+    });
+
+    // ---------------- device thread (own engine + cache) --------------
+    let manifest_dev = manifest.clone();
+    let cfg_dev = cfg.clone();
+    let dev_busy2 = dev_busy.clone();
+    let cost_dev = cost.clone();
+    let tx_out_dev = tx_out.clone();
+    let device_handle = thread::spawn(move || -> Result<ServeDeviceOut> {
+        let engine = Engine::new(&manifest_dev)?;
+        let rt = ModelRuntime::new(&engine, &manifest_dev, &cfg_dev.model)?;
+        rt.preload_all()?;
+
+        // ---- warmup: semantic cache + thresholds from calibration ----
+        let (cache, thresholds) =
+            warm_cache(&rt, &manifest_dev, cfg_dev.cut, cfg_dev.eps)?;
+        let mut cache = cache;
+
+        let patterns = manifest_dev.read_f32(&manifest_dev.patterns.file)?;
+        let isz: usize = manifest_dev.input_shape.iter().product();
+        let sigma = manifest_dev.patterns.sigma;
+        let mut rng = Rng::new(cfg_dev.seed ^ 0xD0D0);
+
+        let tasks = tasks; // move
+        let mut audit_full = 0usize;
+        let mut audit_agree = 0usize;
+
+        for task in &tasks {
+            // pace arrivals in real time
+            let target = task.arrive;
+            loop {
+                let now = t0.elapsed().as_secs_f64();
+                if now >= target {
+                    break;
+                }
+                thread::sleep(Duration::from_secs_f64(
+                    (target - now).min(0.002),
+                ));
+            }
+            let arrive_instant = Instant::now();
+
+            // synthesize the input: class pattern + per-video context
+            // offset (shared by all frames of a run — the temporal
+            // locality the cache exploits) + per-frame noise
+            let mut ctx_rng = Rng::new(task.context);
+            let mut data = patterns[task.label * isz..(task.label + 1) * isz]
+                .to_vec();
+            for v in data.iter_mut() {
+                *v += 2.2 * sigma * ctx_rng.normal() as f32
+                    + sigma * rng.normal() as f32;
+            }
+            let x = Tensor::new(manifest_dev.input_shape.clone(), data)?;
+
+            // ---- device stage: prefix blocks + feature ----------------
+            let s = Instant::now();
+            let act = rt.run_device(cfg_dev.cut, &x)?;
+            let feat = rt.gap_feature(&act)?;
+            let real = s.elapsed();
+            // pad to emulate the slower end device
+            if cfg_dev.device_scale > 1.0 {
+                thread::sleep(real.mul_f64(cfg_dev.device_scale - 1.0));
+            }
+            dev_busy2.fetch_add(
+                (real.as_nanos() as f64 * cfg_dev.device_scale) as u64,
+                Ordering::Relaxed,
+            );
+
+            // ---- online decision --------------------------------------
+            let sep = cache.separability(&feat.data);
+            if cfg_dev.policy.early_exit && sep.s > thresholds.s_ext {
+                // Eq. 10: cached result
+                let finish = t0.elapsed().as_secs_f64();
+                let arrive = arrive_instant.duration_since(t0).as_secs_f64()
+                    - 0.0;
+                let arrive = arrive.min(finish);
+                let correct = if cfg_dev.audit_every > 0
+                    && task.id % cfg_dev.audit_every == 0
+                {
+                    let full = rt.run_blocks(
+                        0,
+                        rt.model.blocks.len(),
+                        &x,
+                    )?;
+                    audit_full += 1;
+                    let ok = full.argmax() == sep.best_label;
+                    if ok {
+                        audit_agree += 1;
+                    }
+                    ok
+                } else {
+                    true
+                };
+                let _ = tx_out_dev.send(TaskOutcome {
+                    id: task.id,
+                    arrive,
+                    finish,
+                    latency: finish - arrive,
+                    exited_early: true,
+                    bits: 0,
+                    wire_bytes: 0,
+                    label: sep.best_label,
+                    correct,
+                });
+                continue;
+            }
+
+            // Eq. 11: adaptive precision under the live bandwidth
+            let bits = if let Some(fixed) = cfg_dev.policy.bits {
+                if cfg_dev.policy.adaptive_quant {
+                    let q_r = thresholds.required_bits(sep.s, base_bits);
+                    let bw_est =
+                        cfg_dev.bw.estimate_mbps(t0.elapsed().as_secs_f64());
+                    adjust_bits_real(
+                        &cost_dev, &rt, cfg_dev.cut, q_r, base_bits, bw_est,
+                        cfg_dev.device_scale,
+                    )
+                } else {
+                    fixed
+                }
+            } else {
+                32
+            };
+
+            // codec: UAQ round trip through the compiled kernel
+            let (sent, wire_bytes) = if bits < 32 {
+                let s2 = Instant::now();
+                let q = rt.uaq_roundtrip(&act, bits)?;
+                let d2 = s2.elapsed();
+                dev_busy2.fetch_add(
+                    (d2.as_nanos() as f64 * cfg_dev.device_scale) as u64,
+                    Ordering::Relaxed,
+                );
+                (q, cost_dev.wire_bytes(act.elems(), bits))
+            } else {
+                (act.clone(), cost_dev.wire_bytes(act.elems(), 32))
+            };
+
+            tx_link
+                .send(WireMsg {
+                    id: task.id,
+                    arrive: arrive_instant,
+                    tensor: sent,
+                    wire_bytes,
+                    bits,
+                    label_hint: task.label,
+                    feature: feat.data.clone(),
+                })
+                .context("link closed")?;
+
+            // ---- fold returned labels into the cache -------------------
+            while let Ok((_, label, feature)) = rx_result.try_recv() {
+                cache.update(label, &feature);
+            }
+        }
+        drop(tx_link);
+        Ok(ServeDeviceOut { thresholds, audit_full, audit_agree })
+    });
+
+    // ---------------- collect ------------------------------------------
+    drop(tx_out);
+    let mut outcomes: Vec<TaskOutcome> = rx_out.into_iter().collect();
+    outcomes.sort_by_key(|o| o.id);
+
+    let dev_out = device_handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("device thread panicked"))??;
+    link_handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("link thread panicked"))?;
+    cloud_handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("cloud thread panicked"))??;
+
+    let span = outcomes
+        .iter()
+        .map(|o| o.finish)
+        .fold(0.0f64, f64::max)
+        - outcomes.iter().map(|o| o.arrive).fold(f64::INFINITY, f64::min);
+    let ns = |a: &Arc<AtomicU64>| a.load(Ordering::Relaxed) as f64 / 1e9;
+    let report = RunReport {
+        dropped: 0,
+        scheme: "real".into(),
+        model: cfg.model.clone(),
+        tasks: outcomes,
+        device: StageUsage { busy: ns(&dev_busy), span },
+        link: StageUsage { busy: ns(&link_busy), span },
+        cloud: StageUsage { busy: ns(&cloud_busy), span },
+    };
+    let _ = (dev_out.audit_full, dev_out.audit_agree);
+    Ok(ServeResult { report, thresholds: dev_out.thresholds, base_bits })
+}
+
+struct ServeDeviceOut {
+    thresholds: Thresholds,
+    audit_full: usize,
+    audit_agree: usize,
+}
+
+/// Warm the semantic cache from the calibration set and calibrate the
+/// online thresholds (paper Alg. 1 L18-19) — labels come from the model
+/// itself (full forward on the device engine, one-time).
+fn warm_cache(
+    rt: &ModelRuntime,
+    manifest: &Manifest,
+    cut: usize,
+    eps: f64,
+) -> Result<(SemanticCache, Thresholds)> {
+    let inputs = manifest.read_f32(&manifest.calib.inputs_file)?;
+    let isz: usize = manifest.input_shape.iter().product();
+    let n = manifest.calib.labels.len();
+
+    let feat_dim: usize = {
+        let shape = rt.model.cut_shape(cut);
+        if shape.len() == 3 {
+            shape[0]
+        } else {
+            shape.iter().product()
+        }
+    };
+    let mut cache = SemanticCache::new(manifest.n_classes, feat_dim);
+    let mut feats: Vec<(usize, Vec<f32>)> = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = Tensor::new(
+            manifest.input_shape.clone(),
+            inputs[i * isz..(i + 1) * isz].to_vec(),
+        )?;
+        let act = rt.run_device(cut, &x)?;
+        let feat = rt.gap_feature(&act)?;
+        let logits = rt.run_cloud(cut, &act)?;
+        let label = logits.argmax();
+        cache.update(label, &feat.data);
+        feats.push((label, feat.data));
+    }
+    let thresholds = calibrate(&cache, &feats, eps.max(0.02));
+    Ok((cache, thresholds))
+}
+
+/// Real-pipeline Eq. 11: compare candidate transmission times against
+/// the measured device stage (cloud stage ~ device/scale).
+fn adjust_bits_real(
+    cost: &CostModel,
+    rt: &ModelRuntime,
+    cut: usize,
+    q_r: u8,
+    base: u8,
+    bw_mbps: f64,
+    device_scale: f64,
+) -> u8 {
+    let elems = rt.model.cut_elems(cut);
+    // rough stage estimate: use the engine's running average exec time
+    let (nanos, count) = rt.engine.exec_stats();
+    let per_exec = if count > 0 { nanos as f64 / count as f64 / 1e9 } else { 2e-3 };
+    let t_e = per_exec * (cut + 1) as f64 * device_scale;
+    let t_c = per_exec * (rt.model.blocks.len() - cut - 1) as f64;
+    let target = t_e.max(t_c);
+    let hi = base.max(q_r).min(8);
+    let mut best = q_r;
+    for bits in q_r..=hi {
+        if cost.t_transmit(elems, bits, bw_mbps) <= target {
+            best = bits;
+        }
+    }
+    best
+}

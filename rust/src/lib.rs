@@ -1,0 +1,33 @@
+//! # COACH — near bubble-free end-cloud collaborative inference
+//!
+//! Reproduction of *"Accelerating End-Cloud Collaborative Inference via
+//! Near Bubble-free Pipeline Optimization"* (CS.DC 2024) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! - **L1/L2 (build time)**: Pallas kernels (UAQ transmission
+//!   quantization, GAP feature extraction, fused dense) inside JAX block
+//!   functions, AOT-lowered to HLO text (`make artifacts`).
+//! - **L3 (this crate)**: the paper's system — offline partition +
+//!   quantization optimizer ([`partition`]), online context-aware
+//!   scheduler ([`cache`], [`coordinator`]), three-stage pipeline
+//!   ([`pipeline`]), network simulation ([`network`]), baselines
+//!   ([`baselines`]), and the PJRT [`runtime`] that executes the
+//!   artifacts on the request path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod baselines;
+pub mod bench;
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod model;
+pub mod network;
+pub mod partition;
+pub mod pipeline;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,318 @@
+//! COACH command-line launcher.
+//!
+//! Subcommands (hand-rolled parsing; the offline build has no clap):
+//!
+//! ```text
+//! coach partition  [--model M] [--device nx|tx2] [--bw MBPS] [--eps E]
+//! coach serve      [--model vgg_mini|resnet_mini] [--cut K] [--n N]
+//!                  [--bw MBPS] [--corr low|medium|high] [--scheme coach|noadjust]
+//!                  [--device-scale S]
+//! coach profile    [--reps R]       # per-block times -> profile.json
+//! coach bench-table1 [--n N]
+//! coach bench-table2 [--n N]
+//! coach bench-fig1   [--n N] [--model M]
+//! coach bench-fig5   [--n N]
+//! coach bench-fig6   [--n N]
+//! coach bench-fig7   [--n N]
+//! coach trace                        # Fig. 2 scheme walkthrough
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use coach::baselines::Scheme;
+use coach::bench;
+use coach::coordinator::server::{serve, SchemePolicy, ServeCfg};
+use coach::model::{topology, CostModel, DeviceProfile};
+use coach::network::BandwidthModel;
+use coach::partition::{optimize, AnalyticAcc, MeasuredAcc, PartitionConfig};
+use coach::runtime::{default_artifact_dir, Engine, Manifest, ModelRuntime};
+use coach::sim::Correlation;
+use coach::util::Json;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(name) = argv[i].strip_prefix("--") {
+                let val = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    argv[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(name.to_string(), val);
+            }
+            i += 1;
+        }
+        Args { flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        self.get(name)
+            .map(|v| v.parse::<f64>().with_context(|| format!("--{name}")))
+            .transpose()
+            .map(|o| o.unwrap_or(default))
+    }
+
+    fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.f64_or(name, default as f64)? as usize)
+    }
+}
+
+fn correlation_of(s: &str) -> Result<Correlation> {
+    Ok(match s {
+        "none" | "noadjust" => Correlation::None,
+        "low" => Correlation::Low,
+        "medium" => Correlation::Medium,
+        "high" => Correlation::High,
+        other => bail!("unknown correlation '{other}'"),
+    })
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+
+    match cmd.as_str() {
+        "partition" => cmd_partition(&args),
+        "serve" => cmd_serve(&args),
+        "profile" => cmd_profile(&args),
+        "bench-table1" => {
+            let n = args.usize_or("n", 400)?;
+            println!("Table I: average inference latency (ms), 2-100 Mbps band");
+            println!("{}", bench::table1::run(n)?.render());
+            Ok(())
+        }
+        "bench-table2" => {
+            let n = args.usize_or("n", 250)?;
+            let manifest = Manifest::load(&default_artifact_dir())?;
+            println!("Table II: context-aware acceleration (real pipeline)");
+            let t = bench::table2::run(&manifest, n, &["resnet_mini", "vgg_mini"])?;
+            println!("{}", t.render());
+            Ok(())
+        }
+        "bench-fig1" => {
+            let n = args.usize_or("n", 150)?;
+            let model = args.get("model").unwrap_or("resnet_mini");
+            let manifest = Manifest::load(&default_artifact_dir())?;
+            let r = bench::fig1::run(&manifest, model, n)?;
+            println!("Fig 1(a): temporal locality of GAP features ({model})");
+            println!("{}", r.temporal.render());
+            println!("Fig 1(b): optimal precision vs distance to center");
+            println!("{}", r.spatial.render());
+            Ok(())
+        }
+        "bench-fig5" => {
+            let n = args.usize_or("n", 400)?;
+            for (name, t) in bench::fig5::run(n)? {
+                println!("{name}\n{}", t.render());
+            }
+            Ok(())
+        }
+        "bench-fig6" => {
+            let n = args.usize_or("n", 300)?;
+            println!("Fig 6: average latency (ms) vs bandwidth");
+            for (name, t) in bench::fig67::fig6(n)? {
+                println!("[{name}]\n{}", t.render());
+            }
+            Ok(())
+        }
+        "bench-fig7" => {
+            let n = args.usize_or("n", 300)?;
+            println!("Fig 7: throughput (it/s) vs bandwidth");
+            for (name, t) in bench::fig67::fig7(n)? {
+                println!("[{name}]\n{}", t.render());
+            }
+            Ok(())
+        }
+        "trace" => cmd_trace(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `coach help`)"),
+    }
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("resnet101");
+    let device = args.get("device").unwrap_or("nx");
+    let bw = args.f64_or("bw", 20.0)?;
+    let eps = args.f64_or("eps", 0.005)?;
+    let dev = DeviceProfile::by_name(device)
+        .with_context(|| format!("unknown device '{device}'"))?;
+    let cost = CostModel::new(dev, DeviceProfile::cloud_a6000());
+    let cfg = PartitionConfig { eps, bw_mbps: bw, ..Default::default() };
+
+    if let Some(g) = topology::by_name(model) {
+        println!("offline partitioning {model} (analytic, {} layers)", g.n());
+        for scheme in Scheme::ALL {
+            let s = scheme.plan(&g, &cost, &AnalyticAcc, &cfg)?;
+            println!(
+                "{:>6}: device {}/{} layers, cuts {:?}, T_e={:.2}ms T_t={:.2}ms T_c={:.2}ms  B_c={:.2}ms B_t={:.2}ms  obj={:.2}ms  lat={:.2}ms",
+                scheme.name(),
+                s.n_device_layers(),
+                g.n(),
+                s.cuts.iter().map(|c| (c.from, c.bits)).collect::<Vec<_>>(),
+                s.eval.t_e * 1e3,
+                s.eval.t_t * 1e3,
+                s.eval.t_c * 1e3,
+                s.eval.b_c * 1e3,
+                s.eval.b_t * 1e3,
+                s.eval.objective() * 1e3,
+                s.eval.latency * 1e3
+            );
+        }
+    } else {
+        let manifest = Manifest::load(&default_artifact_dir())?;
+        let engine = Engine::new(&manifest)?;
+        let rt = ModelRuntime::new(&engine, &manifest, model)?;
+        let secs = rt.profile_blocks(3)?;
+        let g = topology::from_manifest(rt.model, &secs);
+        let acc = MeasuredAcc { table: &manifest.acc, model: model.to_string() };
+        // mini-model scale: the CPU plays the cloud; emulate the end
+        // device as scale-x slower (same padding the server applies).
+        let scale = if cost.device.name == "tx2" { 10.5 } else { 6.0 };
+        let mini_cost = CostModel::new(
+            DeviceProfile::mini_device(scale),
+            DeviceProfile::mini_cloud(),
+        );
+        let s = optimize(&g, &mini_cost, &acc, &cfg)?;
+        println!(
+            "offline strategy for {model}: device blocks 0..{}, bits {:?}, objective {:.2}ms",
+            s.n_device_layers().saturating_sub(1),
+            s.cuts.iter().map(|c| c.bits).collect::<Vec<_>>(),
+            s.eval.objective() * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("resnet_mini").to_string();
+    let manifest = Manifest::load(&default_artifact_dir())?;
+    let m = manifest.model(&model)?;
+    let cut = args.usize_or("cut", (m.blocks.len() - 1) / 2)?;
+    let n = args.usize_or("n", 200)?;
+    let bw = args.f64_or("bw", 20.0)?;
+    let corr = correlation_of(args.get("corr").unwrap_or("medium"))?;
+    let policy = match args.get("scheme").unwrap_or("coach") {
+        "coach" => SchemePolicy::coach(),
+        "noadjust" => SchemePolicy::no_adjust(),
+        other => bail!("unknown scheme '{other}'"),
+    };
+    let cfg = ServeCfg {
+        model: model.clone(),
+        cut,
+        policy,
+        device_scale: args.f64_or("device-scale", 6.0)?,
+        bw: BandwidthModel::Static(bw),
+        period: args.f64_or("period-ms", 12.0)? / 1e3,
+        n_tasks: n,
+        correlation: corr,
+        eps: args.f64_or("eps", 0.005)?,
+        seed: args.usize_or("seed", 42)? as u64,
+        audit_every: args.usize_or("audit-every", 0)?,
+    };
+    println!("serving {n} tasks of {model} (cut {cut}, {bw} Mbps, {corr:?})...");
+    let res = serve(&manifest, &cfg)?;
+    let r = &res.report;
+    println!(
+        "done: avg latency {:.2} ms | p99 {:.2} ms | throughput {:.1} it/s | exits {:.1}% | wire {:.1} Kb/task",
+        r.avg_latency_ms(),
+        r.p99_latency_ms(),
+        r.throughput(),
+        r.exit_ratio() * 100.0,
+        r.avg_wire_kb()
+    );
+    println!(
+        "stages: device util {:.0}% | link util {:.0}% | cloud util {:.0}% | bubbles {:.2} s",
+        r.device.utilization() * 100.0,
+        r.link.utilization() * 100.0,
+        r.cloud.utilization() * 100.0,
+        r.total_bubbles()
+    );
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&default_artifact_dir())?;
+    let reps = args.usize_or("reps", 5)?;
+    let engine = Engine::new(&manifest)?;
+    let mut obj = std::collections::BTreeMap::new();
+    for name in manifest.models.keys() {
+        let rt = ModelRuntime::new(&engine, &manifest, name)?;
+        let secs = rt.profile_blocks(reps)?;
+        println!(
+            "{name}: {:?} ms",
+            secs.iter().map(|s| (s * 1e5).round() / 1e2).collect::<Vec<_>>()
+        );
+        obj.insert(
+            name.clone(),
+            Json::Arr(secs.iter().map(|&s| Json::Num(s)).collect()),
+        );
+    }
+    let path = default_artifact_dir().join("profile.json");
+    std::fs::write(&path, Json::Obj(obj).to_string())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_trace() -> Result<()> {
+    println!("Fig. 2 scheme walkthrough (4 tasks, arrivals every 2 units):");
+    let schemes: [(&str, f64, f64, f64); 3] = [
+        ("Scheme 1 (latency-optimal cut)", 1.0, 4.0, 1.0),
+        ("Scheme 2 (bubble-aware cut)", 2.0, 3.0, 2.0),
+        ("Scheme 3 (+quant adjustment)", 2.0, 2.0, 2.0),
+    ];
+    for (name, te, tt, tc) in schemes {
+        let (mut d, mut l, mut c) = (0.0f64, 0.0f64, 0.0f64);
+        let mut finish = Vec::new();
+        for k in 0..4 {
+            let arrive = 2.0 * k as f64;
+            d = d.max(arrive) + te;
+            l = l.max(d) + tt;
+            c = c.max(l) + tc;
+            finish.push(c);
+        }
+        let makespan = finish.last().unwrap();
+        let period = tt.max(te).max(tc);
+        println!(
+            "  {name}: per-task latency {}  makespan {makespan}  steady period {period}",
+            te + tt + tc
+        );
+    }
+    println!("  Scheme 4 adds early exits, removing load entirely for cached tasks.");
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "COACH - near bubble-free end-cloud collaborative inference\n\
+         commands: partition | serve | profile | bench-table1 | bench-table2 |\n\
+         \x20         bench-fig1 | bench-fig5 | bench-fig6 | bench-fig7 | trace | help\n\
+         see rust/src/main.rs docs for flags"
+    );
+}

@@ -1,0 +1,222 @@
+//! Experiment metrics: per-task records, stage bubble accounting, and
+//! the paper's three reported quantities — inference latency (ms),
+//! transmission cost (Kb), system throughput (it/s).
+
+use crate::util::{mean, percentile};
+
+/// Per-task outcome from a pipeline run (simulated or real).
+#[derive(Debug, Clone)]
+pub struct TaskOutcome {
+    pub id: usize,
+    pub arrive: f64,
+    pub finish: f64,
+    pub latency: f64,
+    pub exited_early: bool,
+    pub bits: u8,
+    pub wire_bytes: usize,
+    /// predicted label (real runs) — usize::MAX when unknown
+    pub label: usize,
+    pub correct: bool,
+}
+
+/// Busy/idle accounting for one pipeline resource.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageUsage {
+    pub busy: f64,
+    pub span: f64,
+}
+
+impl StageUsage {
+    /// idle (bubble) time inside the active span
+    pub fn bubbles(&self) -> f64 {
+        (self.span - self.busy).max(0.0)
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.span <= 0.0 {
+            0.0
+        } else {
+            (self.busy / self.span).clamp(0.0, 1.0)
+        }
+    }
+}
+
+/// Aggregated result of one pipeline experiment.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub scheme: String,
+    pub model: String,
+    pub tasks: Vec<TaskOutcome>,
+    /// tasks shed by admission control (bounded real-time queue)
+    pub dropped: usize,
+    pub device: StageUsage,
+    pub link: StageUsage,
+    pub cloud: StageUsage,
+}
+
+impl RunReport {
+    pub fn latencies_ms(&self) -> Vec<f64> {
+        self.tasks.iter().map(|t| t.latency * 1e3).collect()
+    }
+
+    /// Average inference latency in ms (Table I metric).
+    pub fn avg_latency_ms(&self) -> f64 {
+        mean(&self.latencies_ms())
+    }
+
+    pub fn p99_latency_ms(&self) -> f64 {
+        percentile(&self.latencies_ms(), 99.0)
+    }
+
+    /// System throughput in it/s (Fig. 5/7 metric): completed tasks over
+    /// the span from first arrival to last finish.
+    pub fn throughput(&self) -> f64 {
+        if self.tasks.is_empty() {
+            return 0.0;
+        }
+        let start = self
+            .tasks
+            .iter()
+            .map(|t| t.arrive)
+            .fold(f64::INFINITY, f64::min);
+        let end = self.tasks.iter().map(|t| t.finish).fold(0.0, f64::max);
+        if end <= start {
+            0.0
+        } else {
+            self.tasks.len() as f64 / (end - start)
+        }
+    }
+
+    /// Early-exit ratio (Table II "Exit." column).
+    pub fn exit_ratio(&self) -> f64 {
+        if self.tasks.is_empty() {
+            return 0.0;
+        }
+        self.tasks.iter().filter(|t| t.exited_early).count() as f64
+            / self.tasks.len() as f64
+    }
+
+    /// Average transmission cost in Kb per task (Table II "Trans.").
+    pub fn avg_wire_kb(&self) -> f64 {
+        if self.tasks.is_empty() {
+            return 0.0;
+        }
+        let bits: f64 =
+            self.tasks.iter().map(|t| t.wire_bytes as f64 * 8.0).sum();
+        bits / 1e3 / self.tasks.len() as f64
+    }
+
+    /// Fraction of tasks whose final label matched the fp32 reference
+    /// (real runs only).
+    pub fn accuracy(&self) -> f64 {
+        let known: Vec<&TaskOutcome> =
+            self.tasks.iter().filter(|t| t.label != usize::MAX).collect();
+        if known.is_empty() {
+            return f64::NAN;
+        }
+        known.iter().filter(|t| t.correct).count() as f64 / known.len() as f64
+    }
+
+    /// Total pipeline bubbles across the three resources, seconds.
+    pub fn total_bubbles(&self) -> f64 {
+        self.device.bubbles() + self.link.bubbles() + self.cloud.bubbles()
+    }
+}
+
+/// Fixed-width table printer for bench output (the repo has no external
+/// table crates; benches print paper-style rows).
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                } else {
+                    widths.push(c.len());
+                }
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(latency: f64, exited: bool, bytes: usize) -> TaskOutcome {
+        TaskOutcome {
+            id: 0,
+            arrive: 0.0,
+            finish: latency,
+            latency,
+            exited_early: exited,
+            bits: 8,
+            wire_bytes: bytes,
+            label: usize::MAX,
+            correct: false,
+        }
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let mut r = RunReport::default();
+        r.tasks.push(outcome(0.010, false, 1000));
+        r.tasks.push(outcome(0.020, true, 0));
+        assert!((r.avg_latency_ms() - 15.0).abs() < 1e-9);
+        assert!((r.exit_ratio() - 0.5).abs() < 1e-9);
+        assert!((r.avg_wire_kb() - 4.0).abs() < 1e-9);
+        assert!((r.throughput() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stage_usage_bubbles() {
+        let u = StageUsage { busy: 3.0, span: 4.0 };
+        assert!((u.bubbles() - 1.0).abs() < 1e-12);
+        assert!((u.utilization() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("a"));
+        assert!(s.lines().count() == 3);
+    }
+}

@@ -1,0 +1,247 @@
+//! DAG model graph: the layer-level representation the offline
+//! partitioner works on (paper §III-B, Fig. 4).
+
+use anyhow::{bail, Result};
+
+/// What a layer does — only the cost-relevant role matters here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Pool,
+    Dense,
+    Act,
+    Add,
+    Concat,
+    Gap,
+    Input,
+}
+
+/// One DNN layer with its cost-model attributes.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub id: usize,
+    pub name: String,
+    pub kind: LayerKind,
+    /// forward FLOPs of this layer (multiply-accumulate counted as 2)
+    pub flops: f64,
+    /// elements of the output activation (what a cut here transmits)
+    pub out_elems: usize,
+}
+
+/// Directed acyclic layer graph. Layer ids are topologically ordered by
+/// construction (builders append in topo order; `validate` checks).
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// preds[i] = ids feeding layer i
+    pub preds: Vec<Vec<usize>>,
+    /// succs[i] = ids consuming layer i's output
+    pub succs: Vec<Vec<usize>>,
+}
+
+impl ModelGraph {
+    pub fn new(name: &str) -> ModelGraph {
+        ModelGraph {
+            name: name.to_string(),
+            layers: Vec::new(),
+            preds: Vec::new(),
+            succs: Vec::new(),
+        }
+    }
+
+    /// Append a layer fed by `preds`; returns its id.
+    pub fn add(
+        &mut self,
+        name: &str,
+        kind: LayerKind,
+        flops: f64,
+        out_elems: usize,
+        preds: &[usize],
+    ) -> usize {
+        let id = self.layers.len();
+        self.layers.push(Layer {
+            id,
+            name: name.to_string(),
+            kind,
+            flops,
+            out_elems,
+        });
+        self.preds.push(preds.to_vec());
+        self.succs.push(Vec::new());
+        for &p in preds {
+            self.succs[p].push(id);
+        }
+        id
+    }
+
+    pub fn n(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.layers.iter().map(|l| l.flops).sum()
+    }
+
+    /// Ids in topological order (== id order by construction invariant).
+    pub fn topo(&self) -> Vec<usize> {
+        (0..self.n()).collect()
+    }
+
+    /// True if every layer has at most one pred and one succ (chain).
+    pub fn is_chain(&self) -> bool {
+        self.preds.iter().all(|p| p.len() <= 1)
+            && self.succs.iter().all(|s| s.len() <= 1)
+    }
+
+    /// The single source (input) layer id.
+    pub fn source(&self) -> usize {
+        0
+    }
+
+    /// The single sink (output) layer id.
+    pub fn sink(&self) -> usize {
+        self.n() - 1
+    }
+
+    /// Check: ids topo-ordered, single source and sink, acyclic by
+    /// construction (preds always < id).
+    pub fn validate(&self) -> Result<()> {
+        if self.n() == 0 {
+            bail!("empty graph");
+        }
+        for (i, preds) in self.preds.iter().enumerate() {
+            for &p in preds {
+                if p >= i {
+                    bail!("layer {i} has non-topological pred {p}");
+                }
+            }
+            if i > 0 && preds.is_empty() {
+                bail!("layer {i} ({}) unreachable", self.layers[i].name);
+            }
+        }
+        let sinks = (0..self.n()).filter(|&i| self.succs[i].is_empty()).count();
+        if sinks != 1 {
+            bail!("expected exactly 1 sink, found {sinks}");
+        }
+        Ok(())
+    }
+
+    /// Cut edges induced by a device-layer assignment: edges from a
+    /// device layer to a cloud layer. `on_device[i]` must be a *closed
+    /// prefix*: every pred of a device layer is on the device.
+    pub fn cut_edges(&self, on_device: &[bool]) -> Result<Vec<(usize, usize)>> {
+        if on_device.len() != self.n() {
+            bail!("assignment length mismatch");
+        }
+        for i in 0..self.n() {
+            if on_device[i] {
+                for &p in &self.preds[i] {
+                    if !on_device[p] {
+                        bail!(
+                            "layer {i} on device but pred {p} on cloud (not a prefix cut)"
+                        );
+                    }
+                }
+            }
+        }
+        let mut cuts = Vec::new();
+        for i in 0..self.n() {
+            if on_device[i] {
+                for &s in &self.succs[i] {
+                    if !on_device[s] {
+                        cuts.push((i, s));
+                    }
+                }
+            }
+        }
+        // Deduplicate same-producer edges: one transmission serves all
+        // cloud consumers of that activation.
+        cuts.sort();
+        cuts.dedup_by_key(|e| e.0);
+        Ok(cuts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> ModelGraph {
+        // 0 -> {1, 2} -> 3
+        let mut g = ModelGraph::new("diamond");
+        let a = g.add("in", LayerKind::Input, 0.0, 100, &[]);
+        let b = g.add("l", LayerKind::Conv, 1e6, 50, &[a]);
+        let c = g.add("r", LayerKind::Conv, 2e6, 60, &[a]);
+        g.add("join", LayerKind::Add, 1e3, 50, &[b, c]);
+        g
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = diamond();
+        assert!(g.validate().is_ok());
+        assert!(!g.is_chain());
+        assert_eq!(g.sink(), 3);
+        assert_eq!(g.total_flops(), 3e6 + 1e3);
+    }
+
+    #[test]
+    fn chain_detection() {
+        let mut g = ModelGraph::new("chain");
+        let a = g.add("a", LayerKind::Input, 0.0, 10, &[]);
+        let b = g.add("b", LayerKind::Conv, 1e6, 10, &[a]);
+        g.add("c", LayerKind::Dense, 1e6, 5, &[b]);
+        assert!(g.is_chain());
+    }
+
+    #[test]
+    fn cut_edges_diamond() {
+        let g = diamond();
+        // device: {0, 1}; cloud: {2, 3} -> cuts 0->2 and 1->3
+        let cuts = g.cut_edges(&[true, true, false, false]).unwrap();
+        assert_eq!(cuts, vec![(0, 2), (1, 3)]);
+        // all device -> no cuts
+        assert!(g.cut_edges(&[true; 4]).unwrap().is_empty());
+        // all cloud -> no cuts (input transmission handled by caller)
+        assert!(g.cut_edges(&[false; 4]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn cut_rejects_non_prefix() {
+        let g = diamond();
+        // layer 3 on device but pred 2 on cloud
+        assert!(g.cut_edges(&[true, true, false, true]).is_err());
+    }
+
+    #[test]
+    fn one_transmission_per_producer() {
+        // 0 -> 1 -> {2, 3} -> 4: cutting after 1 transmits once
+        let mut g = ModelGraph::new("fan");
+        let a = g.add("in", LayerKind::Input, 0.0, 10, &[]);
+        let b = g.add("b", LayerKind::Conv, 1e6, 20, &[a]);
+        let c = g.add("c", LayerKind::Conv, 1e6, 10, &[b]);
+        let d = g.add("d", LayerKind::Conv, 1e6, 10, &[b]);
+        g.add("join", LayerKind::Add, 1e3, 10, &[c, d]);
+        let cuts = g.cut_edges(&[true, true, false, false, false]).unwrap();
+        assert_eq!(cuts.len(), 1);
+        assert_eq!(cuts[0].0, b);
+        let _ = (c, d);
+    }
+
+    #[test]
+    fn validate_rejects_orphan() {
+        let mut g = ModelGraph::new("bad");
+        g.add("in", LayerKind::Input, 0.0, 10, &[]);
+        g.layers.push(Layer {
+            id: 1,
+            name: "orphan".into(),
+            kind: LayerKind::Conv,
+            flops: 1.0,
+            out_elems: 1,
+        });
+        g.preds.push(vec![]);
+        g.succs.push(vec![]);
+        assert!(g.validate().is_err());
+    }
+}

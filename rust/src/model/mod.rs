@@ -1,0 +1,10 @@
+//! Model substrate: DAG layer graphs, paper-scale topologies
+//! (VGG16 / ResNet101 / GoogLeNet), runnable mini-model conversion, and
+//! device/cloud cost profiles.
+
+pub mod graph;
+pub mod profile;
+pub mod topology;
+
+pub use graph::{Layer, LayerKind, ModelGraph};
+pub use profile::{CostModel, DeviceProfile};

@@ -1,0 +1,354 @@
+//! Paper-scale analytic model graphs (VGG16, ResNet101, GoogLeNet) plus
+//! the conversion of the runnable mini models from the artifact
+//! manifest.
+//!
+//! The analytic graphs carry real per-layer FLOP counts and activation
+//! sizes for 224x224 inputs — the quantities the partitioner and the
+//! pipeline cost model consume (DESIGN.md §Substitutions: scheduling
+//! behaviour depends on the layer-cost profile, which these preserve).
+
+use super::graph::{LayerKind, ModelGraph};
+use crate::runtime::{Manifest, ModelInfo};
+
+fn conv_flops(k: usize, c_in: usize, c_out: usize, h: usize, w: usize) -> f64 {
+    2.0 * (k * k * c_in * c_out * h * w) as f64
+}
+
+/// VGG16 (Simonyan & Zisserman) on 224x224x3: 13 conv + 5 pool + 3 FC,
+/// strict chain topology.
+pub fn vgg16() -> ModelGraph {
+    let mut g = ModelGraph::new("vgg16");
+    let mut prev = g.add("input", LayerKind::Input, 0.0, 3 * 224 * 224, &[]);
+    let cfg: &[&[usize]] = &[
+        &[64, 64],
+        &[128, 128],
+        &[256, 256, 256],
+        &[512, 512, 512],
+        &[512, 512, 512],
+    ];
+    let mut c_in = 3;
+    let mut hw = 224;
+    for (si, stage) in cfg.iter().enumerate() {
+        for (ci, &c_out) in stage.iter().enumerate() {
+            prev = g.add(
+                &format!("conv{}_{}", si + 1, ci + 1),
+                LayerKind::Conv,
+                conv_flops(3, c_in, c_out, hw, hw),
+                c_out * hw * hw,
+                &[prev],
+            );
+            c_in = c_out;
+        }
+        hw /= 2;
+        prev = g.add(
+            &format!("pool{}", si + 1),
+            LayerKind::Pool,
+            (c_in * hw * hw) as f64,
+            c_in * hw * hw,
+            &[prev],
+        );
+    }
+    // 512 * 7 * 7 = 25088
+    let mut d_in = c_in * hw * hw;
+    for (i, d_out) in [4096usize, 4096, 1000].iter().enumerate() {
+        prev = g.add(
+            &format!("fc{}", i + 6),
+            LayerKind::Dense,
+            2.0 * (d_in * d_out) as f64,
+            *d_out,
+            &[prev],
+        );
+        d_in = *d_out;
+    }
+    g
+}
+
+/// ResNet101 (He et al.) on 224x224x3: stem + [3,4,23,3] bottleneck
+/// blocks with skip edges (DAG topology) + GAP + FC.
+pub fn resnet101() -> ModelGraph {
+    let mut g = ModelGraph::new("resnet101");
+    let input = g.add("input", LayerKind::Input, 0.0, 3 * 224 * 224, &[]);
+    let stem = g.add(
+        "conv1",
+        LayerKind::Conv,
+        conv_flops(7, 3, 64, 112, 112),
+        64 * 112 * 112,
+        &[input],
+    );
+    let mut prev = g.add(
+        "maxpool",
+        LayerKind::Pool,
+        (64 * 56 * 56) as f64,
+        64 * 56 * 56,
+        &[stem],
+    );
+
+    // (blocks, mid_channels, out_channels, spatial)
+    let stages: &[(usize, usize, usize, usize)] = &[
+        (3, 64, 256, 56),
+        (4, 128, 512, 28),
+        (23, 256, 1024, 14),
+        (3, 512, 2048, 7),
+    ];
+    let mut c_in = 64;
+    for (si, &(blocks, mid, c_out, hw)) in stages.iter().enumerate() {
+        for bi in 0..blocks {
+            let tag = format!("s{}b{}", si + 2, bi);
+            // main branch: 1x1 reduce -> 3x3 -> 1x1 expand
+            let a = g.add(
+                &format!("{tag}_c1"),
+                LayerKind::Conv,
+                conv_flops(1, c_in, mid, hw, hw),
+                mid * hw * hw,
+                &[prev],
+            );
+            let b = g.add(
+                &format!("{tag}_c2"),
+                LayerKind::Conv,
+                conv_flops(3, mid, mid, hw, hw),
+                mid * hw * hw,
+                &[a],
+            );
+            let c = g.add(
+                &format!("{tag}_c3"),
+                LayerKind::Conv,
+                conv_flops(1, mid, c_out, hw, hw),
+                c_out * hw * hw,
+                &[b],
+            );
+            // skip branch: projection conv on the first block of a stage
+            let skip = if bi == 0 {
+                g.add(
+                    &format!("{tag}_proj"),
+                    LayerKind::Conv,
+                    conv_flops(1, c_in, c_out, hw, hw),
+                    c_out * hw * hw,
+                    &[prev],
+                )
+            } else {
+                prev
+            };
+            prev = g.add(
+                &format!("{tag}_add"),
+                LayerKind::Add,
+                (c_out * hw * hw) as f64,
+                c_out * hw * hw,
+                &[c, skip],
+            );
+            c_in = c_out;
+        }
+    }
+    let gap = g.add("gap", LayerKind::Gap, (2048 * 49) as f64, 2048, &[prev]);
+    g.add("fc", LayerKind::Dense, 2.0 * 2048.0 * 1000.0, 1000, &[gap]);
+    g
+}
+
+/// GoogLeNet (v1) on 224x224x3: stem + 9 inception modules (4 parallel
+/// branches each) + GAP + FC — the widest DAG topology we evaluate.
+pub fn googlenet() -> ModelGraph {
+    let mut g = ModelGraph::new("googlenet");
+    let input = g.add("input", LayerKind::Input, 0.0, 3 * 224 * 224, &[]);
+    let c1 = g.add(
+        "conv1",
+        LayerKind::Conv,
+        conv_flops(7, 3, 64, 112, 112),
+        64 * 112 * 112,
+        &[input],
+    );
+    let p1 = g.add("pool1", LayerKind::Pool, (64 * 56 * 56) as f64, 64 * 56 * 56, &[c1]);
+    let c2 = g.add(
+        "conv2",
+        LayerKind::Conv,
+        conv_flops(3, 64, 192, 56, 56),
+        192 * 56 * 56,
+        &[p1],
+    );
+    let mut prev = g.add("pool2", LayerKind::Pool, (192 * 28 * 28) as f64, 192 * 28 * 28, &[c2]);
+    let mut c_in = 192;
+
+    // (name, 1x1, 3x3red, 3x3, 5x5red, 5x5, poolproj, spatial)
+    let modules: &[(&str, usize, usize, usize, usize, usize, usize, usize)] = &[
+        ("3a", 64, 96, 128, 16, 32, 32, 28),
+        ("3b", 128, 128, 192, 32, 96, 64, 28),
+        ("4a", 192, 96, 208, 16, 48, 64, 14),
+        ("4b", 160, 112, 224, 24, 64, 64, 14),
+        ("4c", 128, 128, 256, 24, 64, 64, 14),
+        ("4d", 112, 144, 288, 32, 64, 64, 14),
+        ("4e", 256, 160, 320, 32, 128, 128, 14),
+        ("5a", 256, 160, 320, 32, 128, 128, 7),
+        ("5b", 384, 192, 384, 48, 128, 128, 7),
+    ];
+    let mut prev_hw = 28;
+    for &(name, n1, r3, n3, r5, n5, np, hw) in modules {
+        if hw != prev_hw {
+            prev = g.add(
+                &format!("pool_before_{name}"),
+                LayerKind::Pool,
+                (c_in * hw * hw) as f64,
+                c_in * hw * hw,
+                &[prev],
+            );
+            prev_hw = hw;
+        }
+        // branch 1: 1x1
+        let b1 = g.add(
+            &format!("i{name}_1x1"),
+            LayerKind::Conv,
+            conv_flops(1, c_in, n1, hw, hw),
+            n1 * hw * hw,
+            &[prev],
+        );
+        // branch 2: 1x1 -> 3x3
+        let b2a = g.add(
+            &format!("i{name}_3x3r"),
+            LayerKind::Conv,
+            conv_flops(1, c_in, r3, hw, hw),
+            r3 * hw * hw,
+            &[prev],
+        );
+        let b2 = g.add(
+            &format!("i{name}_3x3"),
+            LayerKind::Conv,
+            conv_flops(3, r3, n3, hw, hw),
+            n3 * hw * hw,
+            &[b2a],
+        );
+        // branch 3: 1x1 -> 5x5
+        let b3a = g.add(
+            &format!("i{name}_5x5r"),
+            LayerKind::Conv,
+            conv_flops(1, c_in, r5, hw, hw),
+            r5 * hw * hw,
+            &[prev],
+        );
+        let b3 = g.add(
+            &format!("i{name}_5x5"),
+            LayerKind::Conv,
+            conv_flops(5, r5, n5, hw, hw),
+            n5 * hw * hw,
+            &[b3a],
+        );
+        // branch 4: pool -> 1x1
+        let b4a = g.add(
+            &format!("i{name}_pool"),
+            LayerKind::Pool,
+            (c_in * hw * hw) as f64,
+            c_in * hw * hw,
+            &[prev],
+        );
+        let b4 = g.add(
+            &format!("i{name}_poolproj"),
+            LayerKind::Conv,
+            conv_flops(1, c_in, np, hw, hw),
+            np * hw * hw,
+            &[b4a],
+        );
+        let c_out = n1 + n3 + n5 + np;
+        prev = g.add(
+            &format!("i{name}_concat"),
+            LayerKind::Concat,
+            0.0,
+            c_out * hw * hw,
+            &[b1, b2, b3, b4],
+        );
+        c_in = c_out;
+    }
+    let gap = g.add("gap", LayerKind::Gap, (c_in * 49) as f64, c_in, &[prev]);
+    g.add("fc", LayerKind::Dense, 2.0 * (c_in * 1000) as f64, 1000, &[gap]);
+    g
+}
+
+/// Convert a runnable mini model (artifact manifest blocks) into a layer
+/// graph for the partitioner. Blocks are the partitionable units, so
+/// each becomes one layer; measured per-block seconds (from
+/// `ModelRuntime::profile_blocks`) are carried as flops at a reference
+/// speed of 1 GFLOP/s so the same cost model applies.
+pub fn from_manifest(model: &ModelInfo, block_secs: &[f64]) -> ModelGraph {
+    assert_eq!(block_secs.len(), model.blocks.len());
+    let mut g = ModelGraph::new(&model.name);
+    let input_elems: usize = model.blocks[0].in_shape.iter().product();
+    let mut prev = g.add("input", LayerKind::Input, 0.0, input_elems, &[]);
+    for (b, &secs) in model.blocks.iter().zip(block_secs) {
+        let kind = match b.kind.as_str() {
+            "residual" => LayerKind::Add,
+            "head" => LayerKind::Dense,
+            _ => LayerKind::Conv,
+        };
+        prev = g.add(&b.name, kind, secs * 1e9, b.out_elems(), &[prev]);
+    }
+    g
+}
+
+/// All paper-scale graphs by name.
+pub fn by_name(name: &str) -> Option<ModelGraph> {
+    match name {
+        "vgg16" => Some(vgg16()),
+        "resnet101" => Some(resnet101()),
+        "googlenet" => Some(googlenet()),
+        _ => None,
+    }
+}
+
+/// Mini-model graph with uniform nominal block costs (useful in tests
+/// without a runtime).
+pub fn from_manifest_nominal(manifest: &Manifest, name: &str) -> Option<ModelGraph> {
+    let m = manifest.models.get(name)?;
+    let secs = vec![1e-3; m.blocks.len()];
+    Some(from_manifest(m, &secs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_shape() {
+        let g = vgg16();
+        g.validate().unwrap();
+        assert!(g.is_chain());
+        // 1 input + 13 conv + 5 pool + 3 fc = 22
+        assert_eq!(g.n(), 22);
+        // ~30.7 GFLOPs (2x MACs) within 10%
+        let gf = g.total_flops() / 1e9;
+        assert!((gf - 30.7).abs() < 3.0, "vgg16 gflops = {gf}");
+    }
+
+    #[test]
+    fn resnet101_shape() {
+        let g = resnet101();
+        g.validate().unwrap();
+        assert!(!g.is_chain());
+        // ~15.2 GFLOPs (2x MACs) within 15%
+        let gf = g.total_flops() / 1e9;
+        assert!((gf - 15.2).abs() < 2.5, "resnet101 gflops = {gf}");
+        // 33 bottlenecks -> 33 Add layers
+        let adds = g
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Add)
+            .count();
+        assert_eq!(adds, 33);
+    }
+
+    #[test]
+    fn googlenet_shape() {
+        let g = googlenet();
+        g.validate().unwrap();
+        assert!(!g.is_chain());
+        // ~3 GFLOPs (2x MACs), wide tolerance
+        let gf = g.total_flops() / 1e9;
+        assert!(gf > 2.0 && gf < 4.5, "googlenet gflops = {gf}");
+        // 9 inception modules -> 9 concat layers with 4 preds
+        let concats = g
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Concat)
+            .count();
+        assert_eq!(concats, 9);
+        for l in &g.layers {
+            if l.kind == LayerKind::Concat {
+                assert_eq!(g.preds[l.id].len(), 4);
+            }
+        }
+    }
+}

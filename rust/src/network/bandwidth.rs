@@ -1,0 +1,192 @@
+//! Bandwidth models: static, step traces (Fig. 5), and stochastic
+//! jitter around a base rate (the "dynamic network conditions" the
+//! online component reacts to).
+
+use crate::util::Rng;
+
+/// A piecewise-constant bandwidth trace: (start_time_s, mbps) steps.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// sorted by start time; first entry must start at 0.0
+    pub steps: Vec<(f64, f64)>,
+}
+
+impl Trace {
+    pub fn constant(mbps: f64) -> Trace {
+        Trace { steps: vec![(0.0, mbps)] }
+    }
+
+    /// Fig. 5(a): 20 -> 10 -> 5 Mbps, switching at the given times.
+    pub fn fig5a(t1: f64, t2: f64) -> Trace {
+        Trace { steps: vec![(0.0, 20.0), (t1, 10.0), (t2, 5.0)] }
+    }
+
+    /// Fig. 5(b): 100 -> 50 -> 20 Mbps.
+    pub fn fig5b(t1: f64, t2: f64) -> Trace {
+        Trace { steps: vec![(0.0, 100.0), (t1, 50.0), (t2, 20.0)] }
+    }
+
+    pub fn at(&self, t: f64) -> f64 {
+        let mut bw = self.steps[0].1;
+        for &(start, v) in &self.steps {
+            if t >= start {
+                bw = v;
+            } else {
+                break;
+            }
+        }
+        bw
+    }
+}
+
+/// The bandwidth the link actually delivers at time `t`, plus what the
+/// scheduler *believes* (its estimate lags and smooths, like a real
+/// EWMA bandwidth probe).
+#[derive(Debug, Clone)]
+pub enum BandwidthModel {
+    Static(f64),
+    Stepped(Trace),
+    /// base trace with multiplicative jitter: bw * (1 + amp * z_t),
+    /// z_t ~ AR(1) noise — models WiFi fading on top of the trace.
+    Jittered {
+        trace: Trace,
+        amplitude: f64,
+        seed: u64,
+    },
+}
+
+impl BandwidthModel {
+    /// Instantaneous true bandwidth (Mbps) at time t.
+    pub fn true_mbps(&self, t: f64) -> f64 {
+        match self {
+            BandwidthModel::Static(b) => *b,
+            BandwidthModel::Stepped(tr) => tr.at(t),
+            BandwidthModel::Jittered { trace, amplitude, seed } => {
+                // Deterministic jitter: hash the 100ms time bucket so
+                // the model is stateless and replayable.
+                let bucket = (t * 10.0).floor() as u64;
+                let mut rng = Rng::new(seed ^ bucket.wrapping_mul(0x9E3779B97F4A7C15));
+                let z = rng.normal().clamp(-2.5, 2.5);
+                (trace.at(t) * (1.0 + amplitude * z)).max(0.2)
+            }
+        }
+    }
+
+    /// Scheduler-visible estimate: EWMA over recent true samples (the
+    /// online component's real-time bandwidth probe, paper Alg. 1 L26).
+    pub fn estimate_mbps(&self, t: f64) -> f64 {
+        match self {
+            BandwidthModel::Static(b) => *b,
+            BandwidthModel::Stepped(tr) => tr.at((t - 0.05).max(0.0)),
+            BandwidthModel::Jittered { .. } => {
+                // average a few recent buckets
+                let mut acc = 0.0;
+                let k = 5;
+                for i in 0..k {
+                    acc += self.true_mbps((t - 0.1 * i as f64).max(0.0));
+                }
+                acc / k as f64
+            }
+        }
+    }
+
+    /// Seconds to move `bytes` starting at time `t` (piecewise
+    /// integration over trace steps).
+    pub fn transmit_time(&self, bytes: usize, start: f64) -> f64 {
+        let mut remaining_bits = bytes as f64 * 8.0;
+        let mut t = start;
+        let dt = 0.01; // 10ms integration step for fluctuating models
+        match self {
+            BandwidthModel::Static(b) => remaining_bits / (b * 1e6),
+            BandwidthModel::Stepped(tr) => {
+                // exact piecewise integration
+                let mut total = 0.0;
+                loop {
+                    let bw = tr.at(t) * 1e6;
+                    // next step boundary after t
+                    let next = tr
+                        .steps
+                        .iter()
+                        .map(|&(s, _)| s)
+                        .find(|&s| s > t)
+                        .unwrap_or(f64::INFINITY);
+                    let window = next - t;
+                    let can = bw * window;
+                    if can >= remaining_bits {
+                        return total + remaining_bits / bw;
+                    }
+                    remaining_bits -= can;
+                    total += window;
+                    t = next;
+                }
+            }
+            BandwidthModel::Jittered { .. } => {
+                let mut total = 0.0;
+                while remaining_bits > 0.0 {
+                    let bw = self.true_mbps(t) * 1e6;
+                    let can = bw * dt;
+                    if can >= remaining_bits {
+                        return total + remaining_bits / bw;
+                    }
+                    remaining_bits -= can;
+                    total += dt;
+                    t += dt;
+                }
+                total
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_lookup() {
+        let tr = Trace::fig5a(10.0, 20.0);
+        assert_eq!(tr.at(0.0), 20.0);
+        assert_eq!(tr.at(9.99), 20.0);
+        assert_eq!(tr.at(10.0), 10.0);
+        assert_eq!(tr.at(25.0), 5.0);
+    }
+
+    #[test]
+    fn static_transmit() {
+        let m = BandwidthModel::Static(8.0); // 8 Mbps = 1 MB/s
+        let t = m.transmit_time(1_000_000, 0.0);
+        assert!((t - 1.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn stepped_transmit_integrates_across_boundary() {
+        // 8 Mbps for 1s then 16 Mbps; 1.5 MB takes 1s + 0.5MB/2MBps = 1.25s
+        let m = BandwidthModel::Stepped(Trace {
+            steps: vec![(0.0, 8.0), (1.0, 16.0)],
+        });
+        let t = m.transmit_time(1_500_000, 0.0);
+        assert!((t - 1.25).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn jitter_deterministic_and_bounded() {
+        let m = BandwidthModel::Jittered {
+            trace: Trace::constant(20.0),
+            amplitude: 0.15,
+            seed: 7,
+        };
+        let a = m.true_mbps(3.14);
+        let b = m.true_mbps(3.14);
+        assert_eq!(a, b);
+        for i in 0..200 {
+            let bw = m.true_mbps(i as f64 * 0.1);
+            assert!(bw > 10.0 && bw < 30.0, "bw={bw}");
+        }
+    }
+
+    #[test]
+    fn estimate_tracks_truth_on_static() {
+        let m = BandwidthModel::Static(42.0);
+        assert_eq!(m.estimate_mbps(5.0), 42.0);
+    }
+}

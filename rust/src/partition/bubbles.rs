@@ -1,0 +1,274 @@
+//! Single-task timeline evaluation: executes a strategy's dataflow over
+//! the (device, link, cloud) resources and derives the paper's stage
+//! sums (Eq. 2), parallel-overlap times (Eq. 4) and bubble functions
+//! (Eq. 5). This is the objective the offline search minimizes, and the
+//! per-task model the pipeline simulator composes.
+//!
+//! Layer-parallel execution (paper Fig. 4): once a cut activation is
+//! produced, its transmission overlaps with the remaining device layers,
+//! and cloud layers start as soon as their inputs arrive — so
+//! transmissions V_0^1, V_0^2 and early cloud compute proceed in
+//! parallel with the device stage exactly as the paper illustrates.
+
+use crate::model::{CostModel, ModelGraph};
+
+use super::strategy::{CutEdge, TaskEval};
+
+/// Evaluate one task under an assignment at a fixed bandwidth.
+///
+/// `on_device` must be prefix-closed (every pred of a device layer on
+/// the device); `bits_for` gives the precision per cut edge.
+pub fn evaluate(
+    g: &ModelGraph,
+    cost: &CostModel,
+    on_device: &[bool],
+    cuts: &[CutEdge],
+    bw_mbps: f64,
+) -> TaskEval {
+    let n = g.n();
+    debug_assert_eq!(on_device.len(), n);
+
+    // --- device pass: sequential in topo order -------------------------
+    let mut dev_finish = vec![0.0f64; n];
+    let mut dev_clock = 0.0f64;
+    for i in 0..n {
+        if on_device[i] {
+            let ready = g.preds[i]
+                .iter()
+                .map(|&p| dev_finish[p])
+                .fold(0.0f64, f64::max);
+            dev_clock = dev_clock.max(ready) + cost.t_device(&g.layers[i]);
+            dev_finish[i] = dev_clock;
+        }
+    }
+    let t_e: f64 = cost.sum_device(g, on_device);
+
+    // --- link pass: FIFO in order of availability ----------------------
+    // If nothing runs on the device, the raw input is the transmission.
+    let mut sends: Vec<(f64, usize, f64)> = Vec::new(); // (avail, elems, tx_time)
+    let mut t_t = 0.0f64;
+    if on_device.iter().any(|&d| d) {
+        for c in cuts {
+            let tx = cost.t_transmit(c.elems, c.bits, bw_mbps);
+            sends.push((dev_finish[c.from], c.from, tx));
+            t_t += tx;
+        }
+    } else {
+        let elems = g.layers[g.source()].out_elems;
+        // raw input goes uncompressed (32-bit)
+        let tx = cost.t_transmit(elems, 32, bw_mbps);
+        sends.push((0.0, g.source(), tx));
+        t_t += tx;
+    }
+    sends.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut link_free = 0.0f64;
+    let mut arrival = vec![f64::INFINITY; n]; // per producing layer
+    let mut tx_windows: Vec<(f64, f64)> = Vec::new();
+    for (avail, producer, tx) in &sends {
+        let start = link_free.max(*avail);
+        let end = start + tx;
+        link_free = end;
+        arrival[*producer] = end;
+        tx_windows.push((start, end));
+    }
+
+    // --- cloud pass: sequential in topo order, gated by arrivals -------
+    let mut cloud_finish = vec![0.0f64; n];
+    let mut cloud_clock = 0.0f64;
+    let mut cloud_windows: Vec<(f64, f64)> = Vec::new();
+    let mut t_c = 0.0f64;
+    for i in 0..n {
+        if !on_device[i] {
+            let mut ready = 0.0f64;
+            if g.preds[i].is_empty() {
+                // cloud-executed input layer: gated on raw input arrival
+                ready = arrival[i].min(link_free).max(0.0);
+                if arrival[i].is_infinite() {
+                    ready = arrival[g.source()];
+                }
+            }
+            for &p in &g.preds[i] {
+                let r = if on_device[p] { arrival[p] } else { cloud_finish[p] };
+                ready = ready.max(r);
+            }
+            let dur = cost.t_cloud(&g.layers[i]);
+            let start = cloud_clock.max(ready);
+            cloud_clock = start + dur;
+            cloud_finish[i] = cloud_clock;
+            cloud_windows.push((start, cloud_clock));
+            t_c += dur;
+        }
+    }
+
+    // --- makespan + result return --------------------------------------
+    let sink = g.sink();
+    let compute_end = if on_device[sink] {
+        dev_finish[sink]
+    } else {
+        // result returns to the device: logits payload is tiny
+        cloud_finish[sink]
+            + cost.t_transmit(g.layers[sink].out_elems, 32, bw_mbps)
+    };
+    let latency = compute_end;
+
+    // --- overlap accounting (Eq. 4) -------------------------------------
+    // T_t^p: transmission time overlapped with device or cloud busy time.
+    let dev_busy: Vec<(f64, f64)> = busy_windows_device(g, on_device, &dev_finish, cost);
+    let t_t_par: f64 = tx_windows
+        .iter()
+        .map(|w| overlap(*w, &dev_busy) + overlap(*w, &cloud_windows))
+        .sum::<f64>()
+        .min(t_t);
+    // T_c^p: cloud compute overlapped with device compute or transmission.
+    let t_c_par: f64 = cloud_windows
+        .iter()
+        .map(|w| overlap(*w, &dev_busy) + overlap(*w, &tx_windows))
+        .sum::<f64>()
+        .min(t_c);
+
+    // --- bubbles (Eq. 5) -------------------------------------------------
+    // B_c as written: |T_e - T_c|.
+    // B_t: the paper's literal max{T_e, T_t - T_t^p, T_c - T_c^p} is
+    // self-referencing — when transmission dominates it degenerates to
+    // |T_t - T_t| = 0, scoring a link-saturated pipeline "bubble-free",
+    // which contradicts §II-C's maximum-stage story (Scheme 1->3 reduces
+    // the max stage 4->3->2 *because* unbalanced transmission idles the
+    // compute resources). We therefore compare the *unhidden*
+    // transmission time against the compute stages it must hide behind:
+    // B_t = max{0, (T_t - T_t^p) - max{T_e, T_c - T_c^p}}, which
+    // reproduces the paper's Fig. 2 accounting (Scheme 1: 4-1 = 3
+    // bubbles; Scheme 3: 0) and is zero exactly when transmission is
+    // fully hidden behind (or balanced with) the compute stages.
+    let b_c = (t_e - t_c).abs();
+    let b_t = ((t_t - t_t_par) - t_e.max(t_c - t_c_par)).max(0.0);
+
+    TaskEval { t_e, t_t, t_c, t_t_par, t_c_par, latency, b_c, b_t }
+}
+
+fn busy_windows_device(
+    g: &ModelGraph,
+    on_device: &[bool],
+    dev_finish: &[f64],
+    cost: &CostModel,
+) -> Vec<(f64, f64)> {
+    let mut w = Vec::new();
+    for i in 0..g.n() {
+        if on_device[i] {
+            let dur = cost.t_device(&g.layers[i]);
+            if dur > 0.0 {
+                w.push((dev_finish[i] - dur, dev_finish[i]));
+            }
+        }
+    }
+    w
+}
+
+/// Total overlap of window `a` with a set of (disjoint) windows.
+fn overlap(a: (f64, f64), windows: &[(f64, f64)]) -> f64 {
+    windows
+        .iter()
+        .map(|&(s, e)| (a.1.min(e) - a.0.max(s)).max(0.0))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{DeviceProfile, LayerKind, ModelGraph};
+
+    fn cm() -> CostModel {
+        let mut c = CostModel::new(
+            DeviceProfile::new("d", 1.0, 0.0), // 1 GFLOP/s
+            DeviceProfile::new("c", 10.0, 0.0), // 10 GFLOP/s
+        );
+        c.rtt_half = 0.0;
+        c.header_bytes = 0;
+        c
+    }
+
+    fn chain3() -> ModelGraph {
+        let mut g = ModelGraph::new("c3");
+        let a = g.add("in", LayerKind::Input, 0.0, 1000, &[]);
+        let b = g.add("l1", LayerKind::Conv, 1e9, 1000, &[a]); // 1s dev
+        let c = g.add("l2", LayerKind::Conv, 1e9, 500, &[b]); // 1s dev
+        g.add("l3", LayerKind::Dense, 1e9, 10, &[c]); // 0.1s cloud
+        g
+    }
+
+    #[test]
+    fn all_device_no_transmission() {
+        let g = chain3();
+        let e = evaluate(&g, &cm(), &[true; 4], &[], 10.0);
+        assert!((e.t_e - 3.0).abs() < 1e-9);
+        assert_eq!(e.t_t, 0.0);
+        assert_eq!(e.t_c, 0.0);
+        assert!((e.latency - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cut_after_l2_pipeline_shape() {
+        let g = chain3();
+        let cuts = [CutEdge { from: 2, to: 3, bits: 8, elems: 500 }];
+        // 500 bytes at 8 bits over 10 Mbps = 4000 bits / 1e7 = 0.4 ms
+        let e = evaluate(&g, &cm(), &[true, true, true, false], &cuts, 10.0);
+        assert!((e.t_e - 2.0).abs() < 1e-9);
+        assert!((e.t_c - 0.1).abs() < 1e-9);
+        assert!(e.t_t > 0.0003 && e.t_t < 0.002, "t_t={}", e.t_t);
+        // latency = 2.0 (device) + tx + 0.1 + result return
+        assert!(e.latency > 2.1 && e.latency < 2.2, "lat={}", e.latency);
+        // transmission cannot overlap anything here (device done)
+        assert!(e.t_t_par < 1e-9);
+    }
+
+    #[test]
+    fn parallel_branch_overlaps_transmission() {
+        // 0 -> {1, 2} -> 3, cut branch 1 to the cloud, keep branch 2 on
+        // the device: branch-1 transmission overlaps branch-2 compute.
+        let mut g = ModelGraph::new("par");
+        let a = g.add("in", LayerKind::Input, 0.0, 1_000_000, &[]);
+        let b = g.add("fast", LayerKind::Conv, 1e8, 1_000_000, &[a]); // 0.1s
+        let c = g.add("slow", LayerKind::Conv, 2e9, 1000, &[a]); // 2s device
+        g.add("join", LayerKind::Add, 1e9, 10, &[b, c]);
+        let cuts = [CutEdge { from: 1, to: 3, bits: 8, elems: 1_000_000 }];
+        // join needs both: b's activation via wire, c's via a cut too...
+        // here c stays on device so c->join is also a cut edge.
+        let cuts2 = [
+            cuts[0],
+            CutEdge { from: 2, to: 3, bits: 8, elems: 1000 },
+        ];
+        let e = evaluate(&g, &cm(), &[true, true, true, false], &cuts2, 10.0);
+        // 1 MB at 8 bits = 8e6 bits / 1e7 bps = 0.8s; device busy 2.1s
+        // after the first activation is ready -> full overlap expected.
+        assert!(e.t_t_par > 0.75, "t_t_par={}", e.t_t_par);
+        // b_t should be near zero: transmission fully hidden
+        assert!(e.b_t < 1.5, "b_t={}", e.b_t);
+    }
+
+    #[test]
+    fn all_cloud_transmits_raw_input() {
+        let g = chain3();
+        let e = evaluate(&g, &cm(), &[false; 4], &[], 10.0);
+        assert_eq!(e.t_e, 0.0);
+        // input 1000 elems * 32 bits = 32_000 bits -> 3.2ms at 10 Mbps
+        assert!(e.t_t > 0.003, "t_t={}", e.t_t);
+        assert!((e.t_c - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bubbles_zero_when_balanced() {
+        // Perfectly balanced two-layer chain: t_e == t_c, t_t matches.
+        let mut g = ModelGraph::new("bal");
+        let a = g.add("in", LayerKind::Input, 0.0, 100, &[]);
+        let b = g.add("d", LayerKind::Conv, 1e9, 12_500, &[a]); // dev 1s
+        g.add("c", LayerKind::Conv, 10e9, 10, &[b]); // cloud 1s
+        let cuts = [CutEdge { from: 1, to: 2, bits: 8, elems: 12_500 }];
+        // 12.5 KB at 8bits = 100_000 bits at 0.1 Mbps = 1.0 s
+        let e = evaluate(&g, &cm(), &[true, true, false], &cuts, 0.1);
+        // wire carries +8 bytes of min/scale metadata -> ~0.6ms skew
+        assert!((e.t_e - 1.0).abs() < 1e-3);
+        assert!((e.t_t - 1.0).abs() < 1e-3);
+        assert!((e.t_c - 1.0).abs() < 1e-3);
+        assert!(e.b_c < 1e-3, "b_c={}", e.b_c);
+        assert!(e.b_t < 1e-3, "b_t={}", e.b_t);
+    }
+}

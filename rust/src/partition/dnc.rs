@@ -1,0 +1,335 @@
+//! The offline component: recursive divide-and-conquer joint
+//! partitioning + quantization (paper Algorithm 1, lines 1-16).
+//!
+//! The DAG is collapsed into a chain flow of virtual blocks
+//! (`virtual_block::chain_of`); every chain-level cut is evaluated, and
+//! each virtual block straddling a candidate cut is recursively opened:
+//! its branches become chain flows whose internal cut positions are
+//! optimized by coordinate descent (the layer-parallel execution of
+//! Fig. 4 — e.g. one branch's transmission overlapping another branch's
+//! device compute). Per-cut precision comes from the dichotomous search
+//! over the accuracy curves (Eq. 1). The objective is Eq. 6:
+//! B_c + B_t + max{T_e, T_t, T_c}, subject to the latency SLO (Eq. 3).
+//!
+//! Complexity: O(c·n) candidate evaluations for n chain nodes and c
+//! layers per block, vs O(c^n) brute force (paper §III-B).
+
+use anyhow::{bail, Result};
+
+use crate::model::{CostModel, ModelGraph};
+
+use super::bubbles::evaluate;
+use super::quant_search::AccProvider;
+use super::strategy::{CutEdge, Strategy, TaskEval};
+use super::virtual_block::{chain_of, ChainNode};
+
+/// Offline search configuration.
+#[derive(Debug, Clone)]
+pub struct PartitionConfig {
+    /// accuracy loss budget eps (paper: 0.5%)
+    pub eps: f64,
+    /// latency SLO T_max (Eq. 3); INFINITY disables the constraint
+    pub t_max: f64,
+    /// design-point bandwidth for the offline decision, Mbps
+    pub bw_mbps: f64,
+}
+
+impl Default for PartitionConfig {
+    fn default() -> Self {
+        PartitionConfig { eps: 0.005, t_max: f64::INFINITY, bw_mbps: 20.0 }
+    }
+}
+
+/// A candidate assignment before evaluation.
+struct Candidate {
+    on_device: Vec<bool>,
+    /// description for tracing
+    desc: String,
+}
+
+/// The offline optimizer (paper Alg. 1 offline component).
+pub fn optimize(
+    g: &ModelGraph,
+    cost: &CostModel,
+    acc: &dyn AccProvider,
+    cfg: &PartitionConfig,
+) -> Result<Strategy> {
+    let chain = chain_of(g)?;
+    let depth = depth_fractions(g);
+
+    let mut best: Option<Strategy> = None;
+    let mut best_any: Option<Strategy> = None; // ignoring T_max, fallback
+
+    let mut consider = |cand: Candidate| -> Result<()> {
+        let Some((cuts, eval)) =
+            evaluate_candidate(g, cost, acc, cfg, &cand.on_device, &depth)?
+        else {
+            return Ok(()); // no feasible precision for some cut
+        };
+        let strat = Strategy {
+            model: g.name.clone(),
+            on_device: cand.on_device,
+            cuts,
+            eval,
+        };
+        let obj = strat.eval.objective();
+        let sum = strat.eval.t_e + strat.eval.t_t + strat.eval.t_c;
+        if sum <= cfg.t_max
+            && best
+                .as_ref()
+                .map(|b| obj < b.eval.objective())
+                .unwrap_or(true)
+        {
+            best = Some(strat.clone());
+        }
+        if best_any
+            .as_ref()
+            .map(|b| strat.eval.latency < b.eval.latency)
+            .unwrap_or(true)
+        {
+            best_any = Some(strat);
+        }
+        Ok(())
+    };
+
+    // --- chain-level cuts (incl. all-cloud k=0 and all-device k=last) --
+    for k in 0..chain.len() {
+        let mut on_device = vec![false; g.n()];
+        for node in &chain[..=k] {
+            for l in node.layers() {
+                on_device[l] = true;
+            }
+        }
+        consider(Candidate {
+            on_device,
+            desc: format!("chain-cut after node {k}"),
+        })?;
+    }
+    // all-cloud: only meaningful as "input transmitted raw"
+    consider(Candidate {
+        on_device: vec![false; g.n()],
+        desc: "all-cloud".into(),
+    })?;
+
+    // --- block-internal cuts (recursive divide & conquer, Fig. 4) ------
+    for k in 0..chain.len() {
+        if let ChainNode::Virtual { entry: _, exit, branches } = &chain[k] {
+            // device gets all nodes before this block; branches are
+            // opened and cut individually (layer-parallel execution).
+            let mut base = vec![false; g.n()];
+            for node in &chain[..k] {
+                for l in node.layers() {
+                    base[l] = true;
+                }
+            }
+            // coordinate descent over per-branch cut positions
+            let mut cut_pos: Vec<usize> = branches.iter().map(|_| 0).collect();
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 3 {
+                improved = false;
+                rounds += 1;
+                for (bi, branch) in branches.iter().enumerate() {
+                    let mut best_pos = cut_pos[bi];
+                    let mut best_obj = f64::INFINITY;
+                    for pos in 0..=branch.len() {
+                        cut_pos[bi] = pos;
+                        let od = assign_with_branch_cuts(
+                            &base, branches, &cut_pos,
+                        );
+                        if let Some((_, eval)) = evaluate_candidate(
+                            g, cost, acc, cfg, &od, &depth,
+                        )? {
+                            let obj = eval.objective();
+                            if obj < best_obj {
+                                best_obj = obj;
+                                best_pos = pos;
+                            }
+                        }
+                    }
+                    if cut_pos[bi] != best_pos {
+                        improved = true;
+                    }
+                    cut_pos[bi] = best_pos;
+                }
+            }
+            let od = assign_with_branch_cuts(&base, branches, &cut_pos);
+            consider(Candidate {
+                on_device: od,
+                desc: format!("block-cut in node {k} (exit {exit})"),
+            })?;
+        }
+    }
+
+    match best.or(best_any) {
+        Some(s) => Ok(s),
+        None => bail!("no feasible strategy for model {}", g.name),
+    }
+}
+
+/// device base + per-branch prefixes of `cut_pos[b]` layers.
+fn assign_with_branch_cuts(
+    base: &[bool],
+    branches: &[Vec<usize>],
+    cut_pos: &[usize],
+) -> Vec<bool> {
+    let mut od = base.to_vec();
+    for (branch, &pos) in branches.iter().zip(cut_pos) {
+        for &l in &branch[..pos] {
+            od[l] = true;
+        }
+    }
+    od
+}
+
+/// Cumulative-FLOP depth fraction of each layer (for the analytic
+/// accuracy curves).
+pub fn depth_fractions(g: &ModelGraph) -> Vec<f64> {
+    let total = g.total_flops().max(1.0);
+    let mut acc = 0.0;
+    g.layers
+        .iter()
+        .map(|l| {
+            acc += l.flops;
+            acc / total
+        })
+        .collect()
+}
+
+/// Build cut edges with precisions and evaluate. Returns None if the
+/// accuracy constraint is unsatisfiable for some cut.
+fn evaluate_candidate(
+    g: &ModelGraph,
+    cost: &CostModel,
+    acc: &dyn AccProvider,
+    cfg: &PartitionConfig,
+    on_device: &[bool],
+    depth: &[f64],
+) -> Result<Option<(Vec<CutEdge>, TaskEval)>> {
+    let raw_cuts = match g.cut_edges(on_device) {
+        Ok(c) => c,
+        Err(_) => return Ok(None), // non-prefix assignment
+    };
+    let mut cuts = Vec::with_capacity(raw_cuts.len());
+    // Number the cut by how many device layers precede it — this is the
+    // block index for manifest-backed (chain) models.
+    let n_dev_before = |layer: usize| -> usize {
+        (0..layer).filter(|&i| on_device[i] && g.layers[i].flops > 0.0).count()
+    };
+    for (from, to) in raw_cuts {
+        let Some(bits) = acc.min_bits(n_dev_before(from), depth[from], cfg.eps)
+        else {
+            return Ok(None);
+        };
+        cuts.push(CutEdge {
+            from,
+            to,
+            bits,
+            elems: g.layers[from].out_elems,
+        });
+    }
+    let eval = evaluate(g, cost, on_device, &cuts, cfg.bw_mbps);
+    Ok(Some((cuts, eval)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::topology::{googlenet, resnet101, vgg16};
+    use crate::model::DeviceProfile;
+    use crate::partition::quant_search::AnalyticAcc;
+
+    fn cost() -> CostModel {
+        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000())
+    }
+
+    #[test]
+    fn vgg16_partitions_sensibly() {
+        let g = vgg16();
+        let s = optimize(&g, &cost(), &AnalyticAcc, &PartitionConfig::default())
+            .unwrap();
+        // must beat the all-device and all-cloud extremes on objective
+        assert!(s.n_device_layers() > 0, "should not be all-cloud at 20Mbps");
+        assert!(
+            s.n_device_layers() < g.n(),
+            "should offload something to the 15x faster cloud"
+        );
+        assert!(s.eval.t_t > 0.0);
+        assert!(!s.cuts.is_empty());
+    }
+
+    #[test]
+    fn low_bandwidth_pushes_cut_deeper() {
+        let g = vgg16();
+        let lo = optimize(
+            &g,
+            &cost(),
+            &AnalyticAcc,
+            &PartitionConfig { bw_mbps: 2.0, ..Default::default() },
+        )
+        .unwrap();
+        let hi = optimize(
+            &g,
+            &cost(),
+            &AnalyticAcc,
+            &PartitionConfig { bw_mbps: 100.0, ..Default::default() },
+        )
+        .unwrap();
+        // At 2 Mbps transmission dominates: cut later (smaller payload).
+        // At 100 Mbps offload earlier to exploit the fast cloud.
+        assert!(
+            lo.cut_elems() <= hi.cut_elems(),
+            "lo={} hi={}",
+            lo.cut_elems(),
+            hi.cut_elems()
+        );
+        assert!(lo.n_device_layers() >= hi.n_device_layers());
+    }
+
+    #[test]
+    fn resnet101_dag_strategy_valid() {
+        let g = resnet101();
+        let s = optimize(&g, &cost(), &AnalyticAcc, &PartitionConfig::default())
+            .unwrap();
+        // assignment must be prefix-closed (cut_edges re-validates)
+        assert!(g.cut_edges(&s.on_device).is_ok());
+        for c in &s.cuts {
+            assert!((2..=8).contains(&c.bits));
+        }
+    }
+
+    #[test]
+    fn googlenet_dag_strategy_valid() {
+        let g = googlenet();
+        let s = optimize(&g, &cost(), &AnalyticAcc, &PartitionConfig::default())
+            .unwrap();
+        assert!(g.cut_edges(&s.on_device).is_ok());
+        assert!(s.eval.objective().is_finite());
+    }
+
+    #[test]
+    fn objective_beats_naive_extremes() {
+        let g = resnet101();
+        let cm = cost();
+        let cfg = PartitionConfig::default();
+        let s = optimize(&g, &cm, &AnalyticAcc, &cfg).unwrap();
+        let all_dev = evaluate(&g, &cm, &vec![true; g.n()], &[], cfg.bw_mbps);
+        let all_cloud = evaluate(&g, &cm, &vec![false; g.n()], &[], cfg.bw_mbps);
+        assert!(s.eval.objective() <= all_dev.objective() + 1e-9);
+        assert!(s.eval.objective() <= all_cloud.objective() + 1e-9);
+    }
+
+    #[test]
+    fn t_max_constraint_respected_when_feasible() {
+        let g = vgg16();
+        let cm = cost();
+        let unconstrained =
+            optimize(&g, &cm, &AnalyticAcc, &PartitionConfig::default()).unwrap();
+        let sum = unconstrained.eval.t_e
+            + unconstrained.eval.t_t
+            + unconstrained.eval.t_c;
+        let cfg = PartitionConfig { t_max: sum * 1.5, ..Default::default() };
+        let s = optimize(&g, &cm, &AnalyticAcc, &cfg).unwrap();
+        assert!(s.eval.t_e + s.eval.t_t + s.eval.t_c <= cfg.t_max + 1e-9);
+    }
+}

@@ -1,0 +1,15 @@
+//! Offline component (paper §III-B): joint model partitioning +
+//! transmission quantization via recursive divide-and-conquer over
+//! virtual blocks, minimizing pipeline bubbles (Eq. 5-6).
+
+pub mod bubbles;
+pub mod dnc;
+pub mod quant_search;
+pub mod strategy;
+pub mod virtual_block;
+
+pub use bubbles::evaluate;
+pub use dnc::{depth_fractions, optimize, PartitionConfig};
+pub use quant_search::{AccProvider, AnalyticAcc, MeasuredAcc};
+pub use strategy::{CutEdge, Strategy, TaskEval};
+pub use virtual_block::{chain_of, ChainNode};

@@ -1,0 +1,83 @@
+//! Per-cut quantization precision selection (paper Eq. 1): the
+//! dichotomous search over a monotone precision->accuracy curve.
+//!
+//! Two curve sources:
+//! - `MeasuredAcc` — the fidelity tables measured on the real compiled
+//!   mini models (`artifacts/acc_table.json`), for runnable models.
+//! - `AnalyticAcc` — a depth-calibrated curve for the paper-scale
+//!   analytic graphs (VGG16/ResNet101/GoogLeNet), matching the paper's
+//!   Fig. 1(b) observation that 3-5 bits suffice and deeper (more
+//!   semantic, lower-dimensional) activations tolerate lower precision.
+//!   Documented as a substitution in DESIGN.md §3.
+
+use crate::runtime::AccTable;
+
+/// Source of the accuracy constraint for a cut.
+pub trait AccProvider {
+    /// Minimum bits whose accuracy loss is within `eps` for a cut whose
+    /// producing layer sits at `depth_frac` (0..1 of total FLOPs done).
+    /// `cut_index` identifies the cut for measured tables (block index);
+    /// analytic providers use `depth_frac`. `None` = no feasible bits.
+    fn min_bits(&self, cut_index: usize, depth_frac: f64, eps: f64) -> Option<u8>;
+}
+
+/// Measured curves from acc_table.json for one model.
+pub struct MeasuredAcc<'a> {
+    pub table: &'a AccTable,
+    pub model: String,
+}
+
+impl<'a> AccProvider for MeasuredAcc<'a> {
+    fn min_bits(&self, cut_index: usize, _depth: f64, eps: f64) -> Option<u8> {
+        self.table.min_bits(&self.model, cut_index, eps)
+    }
+}
+
+/// Depth-calibrated analytic curve. The precision requirement falls
+/// roughly linearly with depth: early high-dimensional activations need
+/// ~7-8 bits to keep eps small; deep semantic activations tolerate 3-4
+/// (paper Fig. 1(b): optimal per-task precision clusters at 3-5 bits).
+pub struct AnalyticAcc;
+
+impl AccProvider for AnalyticAcc {
+    fn min_bits(&self, _cut: usize, depth_frac: f64, eps: f64) -> Option<u8> {
+        let d = depth_frac.clamp(0.0, 1.0);
+        // base requirement at eps = 0.5%
+        let base = (8.0 - 5.0 * d).round().clamp(3.0, 8.0) as i32;
+        // looser eps relaxes the requirement (dichotomous search would
+        // stop earlier on a shallower curve); each 4x eps ~ 1 bit.
+        let relax = if eps > 0.005 {
+            ((eps / 0.005).log2() / 2.0).floor() as i32
+        } else {
+            0
+        };
+        Some((base - relax).clamp(2, 8) as u8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_monotone_in_depth() {
+        let a = AnalyticAcc;
+        let mut prev = 9u8;
+        for k in 0..=10 {
+            let d = k as f64 / 10.0;
+            let b = a.min_bits(0, d, 0.005).unwrap();
+            assert!(b <= prev, "depth {d}: {b} > {prev}");
+            prev = b;
+        }
+        assert_eq!(a.min_bits(0, 0.0, 0.005), Some(8));
+        assert_eq!(a.min_bits(0, 1.0, 0.005), Some(3));
+    }
+
+    #[test]
+    fn analytic_relaxes_with_eps() {
+        let a = AnalyticAcc;
+        let tight = a.min_bits(0, 0.5, 0.005).unwrap();
+        let loose = a.min_bits(0, 0.5, 0.08).unwrap();
+        assert!(loose <= tight);
+    }
+}

@@ -1,0 +1,103 @@
+//! Partition + quantization strategy representation (the paper's V*).
+
+/// One cut edge: activation of `from` transmitted to feed `to`, at
+/// `bits` precision (paper's V_p with per-cut Q(v_i)).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CutEdge {
+    pub from: usize,
+    pub to: usize,
+    pub bits: u8,
+    /// elements transmitted (producer activation size)
+    pub elems: usize,
+}
+
+/// Single-task pipeline evaluation under a strategy (paper Eq. 2-6).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TaskEval {
+    /// stage sums (Eq. 2)
+    pub t_e: f64,
+    pub t_t: f64,
+    pub t_c: f64,
+    /// transmission / cloud time overlapped with other stages (Eq. 4)
+    pub t_t_par: f64,
+    pub t_c_par: f64,
+    /// end-to-end single-task latency (timeline makespan + result return)
+    pub latency: f64,
+    /// computation / transmission bubbles (Eq. 5)
+    pub b_c: f64,
+    pub b_t: f64,
+}
+
+impl TaskEval {
+    /// max{T_e, T_t, T_c} — the pipeline's steady-state period lower
+    /// bound (the "maximum stage" of §II-C).
+    pub fn max_stage(&self) -> f64 {
+        self.t_e.max(self.t_t).max(self.t_c)
+    }
+
+    /// Paper Eq. 6 objective: B_c + B_t + max stage.
+    pub fn objective(&self) -> f64 {
+        self.b_c + self.b_t + self.max_stage()
+    }
+}
+
+/// A complete offline decision: layer assignment + quantized cuts.
+#[derive(Debug, Clone)]
+pub struct Strategy {
+    pub model: String,
+    /// on_device[i] — prefix-closed device assignment
+    pub on_device: Vec<bool>,
+    pub cuts: Vec<CutEdge>,
+    pub eval: TaskEval,
+}
+
+impl Strategy {
+    pub fn n_device_layers(&self) -> usize {
+        self.on_device.iter().filter(|&&d| d).count()
+    }
+
+    /// Representative (min) cut precision — what the online component
+    /// treats as the offline base precision.
+    pub fn base_bits(&self) -> u8 {
+        self.cuts.iter().map(|c| c.bits).min().unwrap_or(8)
+    }
+
+    /// Total wire elements across cuts.
+    pub fn cut_elems(&self) -> usize {
+        self.cuts.iter().map(|c| c.elems).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_composition() {
+        let e = TaskEval {
+            t_e: 2.0,
+            t_t: 3.0,
+            t_c: 1.0,
+            b_c: 1.0,
+            b_t: 0.5,
+            ..Default::default()
+        };
+        assert_eq!(e.max_stage(), 3.0);
+        assert_eq!(e.objective(), 4.5);
+    }
+
+    #[test]
+    fn base_bits_is_min_cut() {
+        let s = Strategy {
+            model: "m".into(),
+            on_device: vec![true, false],
+            cuts: vec![
+                CutEdge { from: 0, to: 1, bits: 6, elems: 10 },
+                CutEdge { from: 0, to: 1, bits: 4, elems: 20 },
+            ],
+            eval: TaskEval::default(),
+        };
+        assert_eq!(s.base_bits(), 4);
+        assert_eq!(s.cut_elems(), 30);
+    }
+}

@@ -1,0 +1,229 @@
+//! Virtual-block clustering (paper §III-B, Fig. 4): collapse parallel
+//! branches of the DAG into virtual blocks so the partition search runs
+//! over a simple chain, recursing into blocks for layer-parallel cuts.
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelGraph;
+
+/// One node of the collapsed chain.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChainNode {
+    /// A single layer every path passes through.
+    Single(usize),
+    /// A virtual block: parallel branches between `entry` (exclusive)
+    /// and `exit` (the joining layer, inclusive). Each branch is a chain
+    /// of layer ids; an empty branch is a pass-through (identity skip).
+    Virtual {
+        entry: usize,
+        exit: usize,
+        branches: Vec<Vec<usize>>,
+    },
+}
+
+impl ChainNode {
+    /// The layer whose activation a cut *after this node* transmits.
+    pub fn out_layer(&self) -> usize {
+        match self {
+            ChainNode::Single(i) => *i,
+            ChainNode::Virtual { exit, .. } => *exit,
+        }
+    }
+
+    /// All layer ids covered by this node.
+    pub fn layers(&self) -> Vec<usize> {
+        match self {
+            ChainNode::Single(i) => vec![*i],
+            ChainNode::Virtual { exit, branches, .. } => {
+                let mut v: Vec<usize> =
+                    branches.iter().flatten().copied().collect();
+                v.push(*exit);
+                v
+            }
+        }
+    }
+}
+
+/// Decompose a single-source single-sink DAG into the chain flow B_g of
+/// paper Alg. 1 (line 3-4): articulation layers become Single nodes and
+/// the parallel regions between them become Virtual blocks.
+///
+/// Articulation points are found with an open-edge sweep: position i is
+/// an articulation iff every edge crossing it originates at layer i —
+/// i.e. the whole dataflow bottlenecks through i's output activation.
+pub fn chain_of(g: &ModelGraph) -> Result<Vec<ChainNode>> {
+    g.validate()?;
+    let n = g.n();
+    // open edges after position i: (a, b) with a <= i < b
+    let mut articulation = vec![false; n];
+    for i in 0..n {
+        let mut all_from_i = true;
+        for a in 0..=i {
+            for &b in &g.succs[a] {
+                if b > i && a != i {
+                    all_from_i = false;
+                }
+            }
+        }
+        articulation[i] = all_from_i;
+    }
+    // Source and sink are articulation by construction.
+    if !articulation[0] || !articulation[n - 1] {
+        bail!("graph lacks source/sink articulation");
+    }
+
+    let mut chain = Vec::new();
+    let mut prev = 0usize;
+    chain.push(ChainNode::Single(0));
+    for i in 1..n {
+        if !articulation[i] {
+            continue;
+        }
+        if i == prev + 1 {
+            chain.push(ChainNode::Single(i));
+        } else {
+            let branches = extract_branches(g, prev, i)?;
+            chain.push(ChainNode::Virtual { entry: prev, exit: i, branches });
+        }
+        prev = i;
+    }
+    Ok(chain)
+}
+
+/// Branches of the parallel region between articulation layers
+/// `entry` and `exit`. Each branch must be a simple chain (true for the
+/// residual/inception topologies we target); identity skips become
+/// empty branches.
+fn extract_branches(
+    g: &ModelGraph,
+    entry: usize,
+    exit: usize,
+) -> Result<Vec<Vec<usize>>> {
+    let mut branches = Vec::new();
+    for &start in &g.succs[entry] {
+        if start == exit {
+            branches.push(Vec::new()); // identity skip edge
+            continue;
+        }
+        let mut branch = Vec::new();
+        let mut cur = start;
+        loop {
+            if cur >= exit {
+                bail!("branch escaped block ({entry}..{exit}) at {cur}");
+            }
+            if g.preds[cur].len() != 1 {
+                bail!(
+                    "layer {cur} has {} preds inside virtual block — nested DAG branches are not supported",
+                    g.preds[cur].len()
+                );
+            }
+            branch.push(cur);
+            if g.succs[cur].len() != 1 {
+                bail!("layer {cur} forks inside a branch");
+            }
+            let next = g.succs[cur][0];
+            if next == exit {
+                break;
+            }
+            cur = next;
+        }
+        branches.push(branch);
+    }
+    // the exit layer joins the branches; sanity: all inner layers covered
+    let covered: usize =
+        branches.iter().map(|b| b.len()).sum::<usize>() + entry + 1;
+    let expected_inner = exit - entry - 1;
+    if covered - entry - 1 != expected_inner {
+        bail!(
+            "virtual block ({entry}..{exit}) covers {} inner layers, expected {expected_inner}",
+            covered - entry - 1
+        );
+    }
+    Ok(branches)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::topology::{googlenet, resnet101, vgg16};
+    use crate::model::{LayerKind, ModelGraph};
+
+    #[test]
+    fn chain_model_is_all_singles() {
+        let g = vgg16();
+        let chain = chain_of(&g).unwrap();
+        assert_eq!(chain.len(), g.n());
+        assert!(chain.iter().all(|n| matches!(n, ChainNode::Single(_))));
+    }
+
+    #[test]
+    fn diamond_becomes_one_virtual_block() {
+        let mut g = ModelGraph::new("d");
+        let a = g.add("in", LayerKind::Input, 0.0, 10, &[]);
+        let b = g.add("l", LayerKind::Conv, 1.0, 10, &[a]);
+        let c = g.add("r", LayerKind::Conv, 1.0, 10, &[a]);
+        let d = g.add("join", LayerKind::Add, 1.0, 10, &[b, c]);
+        let chain = chain_of(&g).unwrap();
+        assert_eq!(chain.len(), 2);
+        match &chain[1] {
+            ChainNode::Virtual { entry, exit, branches } => {
+                assert_eq!((*entry, *exit), (a, d));
+                assert_eq!(branches.len(), 2);
+                assert_eq!(branches[0], vec![b]);
+                assert_eq!(branches[1], vec![c]);
+            }
+            other => panic!("expected virtual block, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn identity_skip_is_empty_branch() {
+        let mut g = ModelGraph::new("skip");
+        let a = g.add("in", LayerKind::Input, 0.0, 10, &[]);
+        let b = g.add("conv", LayerKind::Conv, 1.0, 10, &[a]);
+        let c = g.add("conv2", LayerKind::Conv, 1.0, 10, &[b]);
+        g.add("add", LayerKind::Add, 1.0, 10, &[c, a]);
+        let chain = chain_of(&g).unwrap();
+        assert_eq!(chain.len(), 2);
+        match &chain[1] {
+            ChainNode::Virtual { branches, .. } => {
+                assert!(branches.iter().any(|b| b.is_empty()));
+                assert!(branches.iter().any(|b| b.len() == 2));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn resnet101_blocks() {
+        let g = resnet101();
+        let chain = chain_of(&g).unwrap();
+        // 33 bottlenecks -> 33 virtual blocks
+        let virtuals = chain
+            .iter()
+            .filter(|n| matches!(n, ChainNode::Virtual { .. }))
+            .count();
+        assert_eq!(virtuals, 33);
+        // every layer covered exactly once
+        let mut covered: Vec<usize> =
+            chain.iter().flat_map(|n| n.layers()).collect();
+        covered.sort();
+        covered.dedup();
+        assert_eq!(covered.len(), g.n());
+    }
+
+    #[test]
+    fn googlenet_blocks() {
+        let g = googlenet();
+        let chain = chain_of(&g).unwrap();
+        let virtuals: Vec<_> = chain
+            .iter()
+            .filter_map(|n| match n {
+                ChainNode::Virtual { branches, .. } => Some(branches.len()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(virtuals.len(), 9, "9 inception modules");
+        assert!(virtuals.iter().all(|&b| b == 4), "4 branches each");
+    }
+}

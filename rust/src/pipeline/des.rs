@@ -1,0 +1,308 @@
+//! Discrete-event simulation of the three-stage pipeline over a task
+//! stream — the engine behind the paper-scale benches (Tables/Figures).
+//!
+//! Resources: END DEVICE (sequential), LINK (FIFO), CLOUD (sequential).
+//! A task occupies the device for T_e; its transmission may start
+//! `first_send_offset` into the device stage (layer-parallel execution,
+//! Fig. 4); the cloud stage starts when the transmission lands, with
+//! `t_c_par` of it overlappable with the tail of the transmission.
+//! The online policy hook decides, per task at transmission time,
+//! whether to early-exit or at what precision to transmit (paper Alg. 1
+//! online component).
+
+use crate::metrics::{RunReport, StageUsage, TaskOutcome};
+use crate::model::{CostModel, ModelGraph};
+use crate::network::BandwidthModel;
+use crate::sim::SimTask;
+
+use super::stage_model::StageModel;
+
+/// Per-task decision of the online component.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// return the cached result immediately (paper Eq. 10)
+    Exit,
+    /// transmit at this precision (paper Eq. 11)
+    Transmit { bits: u8 },
+}
+
+/// Online scheduling hook. `bw_est` is the scheduler's bandwidth
+/// estimate at decision time (EWMA probe), not the true instantaneous
+/// rate.
+pub trait OnlinePolicy {
+    fn decide(&mut self, task: &SimTask, bw_est: f64) -> Decision;
+    /// called after the task completes (cache updates etc.)
+    fn observe(&mut self, _task: &SimTask, _exited: bool) {}
+}
+
+/// Fixed-precision policy (the baselines' behaviour).
+pub struct StaticPolicy {
+    pub bits: u8,
+    /// early-exit threshold on simulated separability; INFINITY = never
+    pub exit_threshold: f64,
+}
+
+impl StaticPolicy {
+    pub fn no_exit(bits: u8) -> StaticPolicy {
+        StaticPolicy { bits, exit_threshold: f64::INFINITY }
+    }
+}
+
+impl OnlinePolicy for StaticPolicy {
+    fn decide(&mut self, task: &SimTask, _bw: f64) -> Decision {
+        if task.separability > self.exit_threshold {
+            Decision::Exit
+        } else {
+            Decision::Transmit { bits: self.bits }
+        }
+    }
+}
+
+/// Pipeline run configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineCfg {
+    /// strategy is all-cloud (transmit raw input, no device compute)
+    pub all_cloud: bool,
+    /// close the run after this many tasks
+    pub n_tasks: usize,
+}
+
+/// Simulate `tasks` through the pipeline; returns the full report.
+/// Unbounded queue — see [`run_pipeline_opts`] for admission control.
+#[allow(clippy::too_many_arguments)]
+pub fn run_pipeline(
+    g: &ModelGraph,
+    cost: &CostModel,
+    sm: &StageModel,
+    bw: &BandwidthModel,
+    tasks: &[SimTask],
+    policy: &mut dyn OnlinePolicy,
+    scheme: &str,
+) -> RunReport {
+    run_pipeline_opts(g, cost, sm, bw, tasks, policy, scheme, None)
+}
+
+/// Like [`run_pipeline`], with optional admission control: a task whose
+/// device-queue wait would exceed `drop_after` seconds is dropped at
+/// arrival (real-time streams shed frames instead of queueing without
+/// bound — the paper's continuous-task regime). Dropped tasks are
+/// reported in `RunReport::dropped`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_pipeline_opts(
+    g: &ModelGraph,
+    cost: &CostModel,
+    sm: &StageModel,
+    bw: &BandwidthModel,
+    tasks: &[SimTask],
+    policy: &mut dyn OnlinePolicy,
+    scheme: &str,
+    drop_after: Option<f64>,
+) -> RunReport {
+    let mut dev_free = 0.0f64;
+    let mut link_free = 0.0f64;
+    let mut cloud_free = 0.0f64;
+    let mut dev_busy = 0.0f64;
+    let mut link_busy = 0.0f64;
+    let mut cloud_busy = 0.0f64;
+
+    let mut outcomes = Vec::with_capacity(tasks.len());
+    let mut last_finish = 0.0f64;
+    let mut dropped = 0usize;
+
+    for task in tasks {
+        // ---- admission control ----------------------------------------
+        if let Some(cap) = drop_after {
+            let wait = (dev_free - task.arrive)
+                .max(link_free - task.arrive - sm.t_e);
+            if wait > cap {
+                dropped += 1;
+                continue;
+            }
+        }
+        // ---- device stage -------------------------------------------
+        let d_start = dev_free.max(task.arrive);
+        let d_end = d_start + sm.t_e + sm.exit_check;
+        dev_free = d_end;
+        dev_busy += sm.t_e + sm.exit_check;
+
+        // ---- online decision at transmission time --------------------
+        let bw_est = bw.estimate_mbps(d_end);
+        let decision = policy.decide(task, bw_est);
+
+        // all-device strategy: no transmission, no cloud stage
+        let all_device = sm.cut_elems.is_empty() && sm.t_c == 0.0 && sm.t_e > 0.0;
+
+        let (finish, bits, wire, exited) = match decision {
+            Decision::Exit => {
+                policy.observe(task, true);
+                (d_end, 0u8, 0usize, true)
+            }
+            Decision::Transmit { .. } if all_device => {
+                policy.observe(task, false);
+                (d_end, 0u8, 0usize, false)
+            }
+            Decision::Transmit { bits } => {
+                // link occupies from first cut availability
+                let avail = d_start + sm.first_send_offset.min(sm.t_e);
+                let t_start = link_free.max(avail);
+                let wire_bytes = if sm.cut_elems.is_empty() {
+                    // true all-cloud (no cut edges): raw input on the wire
+                    cost.wire_bytes(g.layers[g.source()].out_elems, 32)
+                } else {
+                    sm.wire_bytes(cost, bits)
+                };
+                let tx = bw.transmit_time(wire_bytes, t_start) + cost.rtt_half;
+                // transmission of the *last* cut cannot complete before
+                // the device finishes producing it
+                let t_end = (t_start + tx).max(d_end);
+                link_free = t_end;
+                link_busy += tx;
+
+                // cloud stage: t_c_par of the cloud work overlaps the
+                // transmission tail; the rest is serial after arrival
+                let c_ready = t_end - sm.t_c_par.min(sm.t_c);
+                let c_start = cloud_free.max(c_ready);
+                let c_end = c_start.max(t_end - sm.t_c_par.min(sm.t_c))
+                    + sm.t_c;
+                let c_end = c_end.max(t_end); // result needs full input
+                cloud_free = c_end;
+                cloud_busy += sm.t_c;
+
+                // result return (tiny payload)
+                let ret =
+                    cost.t_transmit(sm.result_elems, 32, bw.true_mbps(c_end));
+                policy.observe(task, false);
+                (c_end + ret, bits, wire_bytes, false)
+            }
+        };
+
+        last_finish = last_finish.max(finish);
+        outcomes.push(TaskOutcome {
+            id: task.id,
+            arrive: task.arrive,
+            finish,
+            latency: finish - task.arrive,
+            exited_early: exited,
+            bits,
+            wire_bytes: wire,
+            label: task.label,
+            correct: !exited || task.exit_correct,
+        });
+    }
+
+    let span = last_finish
+        - tasks.first().map(|t| t.arrive).unwrap_or(0.0);
+    RunReport {
+        scheme: scheme.to_string(),
+        model: g.name.clone(),
+        tasks: outcomes,
+        dropped,
+        device: StageUsage { busy: dev_busy, span },
+        link: StageUsage { busy: link_busy, span },
+        cloud: StageUsage { busy: cloud_busy, span },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::topology::vgg16;
+    use crate::model::DeviceProfile;
+    use crate::network::BandwidthModel;
+    use crate::partition::{AnalyticAcc, PartitionConfig};
+    use crate::sim::{generate, Correlation};
+
+    fn setup() -> (crate::model::ModelGraph, CostModel, StageModel) {
+        let g = vgg16();
+        let cost = CostModel::new(
+            DeviceProfile::jetson_nx(),
+            DeviceProfile::cloud_a6000(),
+        );
+        let cfg = PartitionConfig::default();
+        let s =
+            crate::partition::optimize(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+        let sm = StageModel::from_strategy(&g, &cost, &s, cfg.bw_mbps);
+        (g, cost, sm)
+    }
+
+    #[test]
+    fn saturated_throughput_tracks_bottleneck() {
+        let (g, cost, sm) = setup();
+        let bw = BandwidthModel::Static(20.0);
+        // saturate: arrivals much faster than any stage
+        let tasks = generate(300, 1e-4, Correlation::Low, 20, 1);
+        let mut pol = StaticPolicy::no_exit(8);
+        let r = run_pipeline(&g, &cost, &sm, &bw, &tasks, &mut pol, "t");
+        let period = 1.0 / r.throughput();
+        let t_t8 = sm.t_transmit(&cost, &g, 8, 20.0, false);
+        let bottleneck = sm.t_e.max(t_t8).max(sm.t_c);
+        assert!(
+            (period - bottleneck).abs() / bottleneck < 0.25,
+            "period={period} bottleneck={bottleneck}"
+        );
+    }
+
+    #[test]
+    fn early_exit_raises_throughput() {
+        let (g, cost, sm) = setup();
+        let bw = BandwidthModel::Static(5.0);
+        let tasks = generate(400, 1e-4, Correlation::High, 20, 2);
+        let mut without = StaticPolicy::no_exit(8);
+        let r1 = run_pipeline(&g, &cost, &sm, &bw, &tasks, &mut without, "a");
+        let mut with = StaticPolicy { bits: 8, exit_threshold: 0.6 };
+        let r2 = run_pipeline(&g, &cost, &sm, &bw, &tasks, &mut with, "b");
+        assert!(r2.exit_ratio() > 0.2, "exit={}", r2.exit_ratio());
+        assert!(
+            r2.throughput() > r1.throughput(),
+            "{} !> {}",
+            r2.throughput(),
+            r1.throughput()
+        );
+    }
+
+    #[test]
+    fn lower_bits_cut_transmission_cost() {
+        let (g, cost, sm) = setup();
+        let bw = BandwidthModel::Static(10.0);
+        let tasks = generate(200, 1e-4, Correlation::Low, 20, 3);
+        let mut p8 = StaticPolicy::no_exit(8);
+        let mut p4 = StaticPolicy::no_exit(4);
+        let r8 = run_pipeline(&g, &cost, &sm, &bw, &tasks, &mut p8, "8");
+        let r4 = run_pipeline(&g, &cost, &sm, &bw, &tasks, &mut p4, "4");
+        assert!(r4.avg_wire_kb() < r8.avg_wire_kb() * 0.6);
+        assert!(r4.throughput() >= r8.throughput());
+    }
+
+    #[test]
+    fn unsaturated_latency_close_to_single_task() {
+        let (g, cost, sm) = setup();
+        let bw = BandwidthModel::Static(20.0);
+        // slow arrivals: no queueing
+        let tasks = generate(50, 1.0, Correlation::Low, 20, 4);
+        let mut pol = StaticPolicy::no_exit(8);
+        let r = run_pipeline(&g, &cost, &sm, &bw, &tasks, &mut pol, "t");
+        let single = sm.t_e
+            + sm.exit_check
+            + sm.t_transmit(&cost, &g, 8, 20.0, false)
+            + sm.t_c;
+        assert!(
+            r.avg_latency_ms() < (single * 1.4) * 1e3,
+            "avg={} single={}",
+            r.avg_latency_ms(),
+            single * 1e3
+        );
+    }
+
+    #[test]
+    fn bubbles_accumulate_when_unbalanced() {
+        let (g, cost, sm) = setup();
+        // very slow link: device+cloud idle a lot within the span
+        let bw = BandwidthModel::Static(0.5);
+        let tasks = generate(100, 1e-4, Correlation::Low, 20, 5);
+        let mut pol = StaticPolicy::no_exit(8);
+        let r = run_pipeline(&g, &cost, &sm, &bw, &tasks, &mut pol, "t");
+        assert!(r.device.utilization() < 0.5);
+        assert!(r.link.utilization() > 0.9);
+        assert!(r.total_bubbles() > 0.0);
+    }
+}

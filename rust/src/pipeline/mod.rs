@@ -1,0 +1,9 @@
+//! Three-stage pipeline execution (paper §II-C, Fig. 2): device
+//! compute -> transmission -> cloud compute over a continuous task
+//! stream, with bubble accounting per resource.
+
+pub mod des;
+pub mod stage_model;
+
+pub use des::{run_pipeline, Decision, OnlinePolicy, PipelineCfg, StaticPolicy};
+pub use stage_model::StageModel;

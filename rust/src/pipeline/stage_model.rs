@@ -1,0 +1,117 @@
+//! Per-task stage timing derived from a strategy — the bridge between
+//! the offline single-task evaluation and the multi-task pipeline
+//! simulation.
+
+use crate::model::{CostModel, ModelGraph};
+use crate::partition::{evaluate, Strategy};
+
+/// Timing profile of one strategy on one (device, cloud, link) triple.
+#[derive(Debug, Clone)]
+pub struct StageModel {
+    /// device stage busy time per task (T_e)
+    pub t_e: f64,
+    /// cloud stage busy time per task (T_c)
+    pub t_c: f64,
+    /// offset from device-stage start to first cut availability —
+    /// layer-parallel execution lets the link start this early
+    pub first_send_offset: f64,
+    /// cloud time overlappable with transmission (Eq. 4's T_c^p)
+    pub t_c_par: f64,
+    /// total cut elements per transmission group
+    pub cut_elems: Vec<usize>,
+    /// result-return payload elements
+    pub result_elems: usize,
+    /// per-layer overhead to evaluate the exit check (GAP + cosine)
+    pub exit_check: f64,
+}
+
+impl StageModel {
+    /// Derive the stage model by running the single-task timeline once
+    /// at the design bandwidth.
+    pub fn from_strategy(
+        g: &ModelGraph,
+        cost: &CostModel,
+        strat: &Strategy,
+        design_bw: f64,
+    ) -> StageModel {
+        let eval = evaluate(g, cost, &strat.on_device, &strat.cuts, design_bw);
+        // first cut availability: earliest device finish among cut
+        // producers, as a fraction of T_e. Recompute the device timeline.
+        let mut dev_clock = 0.0f64;
+        let mut first_avail = f64::INFINITY;
+        let cut_from: Vec<usize> = strat.cuts.iter().map(|c| c.from).collect();
+        for i in 0..g.n() {
+            if strat.on_device[i] {
+                dev_clock += cost.t_device(&g.layers[i]);
+                if cut_from.contains(&i) {
+                    first_avail = first_avail.min(dev_clock);
+                }
+            }
+        }
+        let first_send_offset = if first_avail.is_finite() {
+            first_avail
+        } else {
+            0.0
+        };
+        StageModel {
+            t_e: eval.t_e,
+            t_c: eval.t_c,
+            first_send_offset,
+            t_c_par: eval.t_c_par,
+            cut_elems: strat.cuts.iter().map(|c| c.elems).collect(),
+            result_elems: g.layers[g.sink()].out_elems,
+            exit_check: 60e-6,
+        }
+    }
+
+    /// Transmission busy time for this task at `bits` and `bw_mbps`
+    /// (sum over cut tensors; input transmission when there are no cuts
+    /// and no device work).
+    pub fn t_transmit(
+        &self,
+        cost: &CostModel,
+        g: &ModelGraph,
+        bits: u8,
+        bw_mbps: f64,
+        all_cloud: bool,
+    ) -> f64 {
+        if all_cloud {
+            return cost.t_transmit(g.layers[g.source()].out_elems, 32, bw_mbps);
+        }
+        self.cut_elems
+            .iter()
+            .map(|&e| cost.t_transmit(e, bits, bw_mbps))
+            .sum()
+    }
+
+    /// Wire bytes at `bits`.
+    pub fn wire_bytes(&self, cost: &CostModel, bits: u8) -> usize {
+        self.cut_elems.iter().map(|&e| cost.wire_bytes(e, bits)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::topology::vgg16;
+    use crate::model::DeviceProfile;
+    use crate::partition::{AnalyticAcc, PartitionConfig};
+
+    #[test]
+    fn stage_model_consistent_with_eval() {
+        let g = vgg16();
+        let cost = CostModel::new(
+            DeviceProfile::jetson_nx(),
+            DeviceProfile::cloud_a6000(),
+        );
+        let cfg = PartitionConfig::default();
+        let s = crate::partition::optimize(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+        let sm = StageModel::from_strategy(&g, &cost, &s, cfg.bw_mbps);
+        assert!((sm.t_e - s.eval.t_e).abs() < 1e-12);
+        assert!((sm.t_c - s.eval.t_c).abs() < 1e-12);
+        assert!(sm.first_send_offset <= sm.t_e + 1e-12);
+        let t8 = sm.t_transmit(&cost, &g, 8, 20.0, false);
+        let t4 = sm.t_transmit(&cost, &g, 4, 20.0, false);
+        assert!(t4 < t8);
+    }
+}

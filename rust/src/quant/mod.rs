@@ -1,0 +1,36 @@
+//! Quantization substrate: UAQ (rust mirror of the L1 Pallas kernel,
+//! used for wire packing and for tests that cross-check the compiled
+//! artifact), precision bookkeeping, and the measured accuracy curves.
+
+pub mod uaq;
+
+pub use uaq::{dequantize, pack_codes, quantize, unpack_codes, QuantParams};
+
+/// Valid transmission precisions (paper Fig. 1(b): 3-5 bit optimal per
+/// task; we allow the full 2..=8 range the acc tables cover).
+pub const MIN_BITS: u8 = 2;
+pub const MAX_BITS: u8 = 8;
+
+/// Clamp a precision into the supported range.
+pub fn clamp_bits(bits: u8) -> u8 {
+    bits.clamp(MIN_BITS, MAX_BITS)
+}
+
+/// levels = 2^bits - 1 (the value fed to the UAQ artifact).
+pub fn levels(bits: u8) -> f32 {
+    ((1u32 << bits) - 1) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_and_clamp() {
+        assert_eq!(levels(8), 255.0);
+        assert_eq!(levels(2), 3.0);
+        assert_eq!(clamp_bits(0), 2);
+        assert_eq!(clamp_bits(5), 5);
+        assert_eq!(clamp_bits(99), 8);
+    }
+}

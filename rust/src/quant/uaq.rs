@@ -1,0 +1,178 @@
+//! Uniform Affine Quantization in rust — the wire codec.
+//!
+//! The L1 Pallas kernel (and its AOT artifact) performs the
+//! quantize-dequantize *round trip* for the numerics of the cloud-side
+//! computation. This module is the actual transport representation:
+//! code packing into the bit-exact wire payload the network simulator
+//! charges for, plus a pure-rust mirror of the kernel math used in
+//! tests to cross-check the compiled artifact.
+
+/// Affine parameters for one transmitted activation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub min: f32,
+    pub scale: f32,
+    pub bits: u8,
+}
+
+/// Quantize to integer codes in [0, 2^bits - 1] (same math as
+/// `kernels/uaq.py` / `ref.py`).
+pub fn quantize(x: &[f32], bits: u8) -> (Vec<u32>, QuantParams) {
+    assert!((2..=16).contains(&bits));
+    let levels = ((1u32 << bits) - 1) as f32;
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    for &v in x {
+        mn = mn.min(v);
+        mx = mx.max(v);
+    }
+    if x.is_empty() {
+        mn = 0.0;
+        mx = 0.0;
+    }
+    let span = (mx - mn).max(1e-8);
+    let scale = span / levels;
+    let codes = x
+        .iter()
+        .map(|&v| (((v - mn) / scale).round().clamp(0.0, levels)) as u32)
+        .collect();
+    (codes, QuantParams { min: mn, scale, bits })
+}
+
+/// Inverse of [`quantize`].
+pub fn dequantize(codes: &[u32], p: QuantParams) -> Vec<f32> {
+    codes
+        .iter()
+        .map(|&c| c as f32 * p.scale + p.min)
+        .collect()
+}
+
+/// Pack `bits`-wide codes little-endian into bytes — the actual wire
+/// payload (`ceil(n*bits/8)` bytes). Word-accumulator packing: one
+/// shift+or per code instead of one branch per bit (§Perf).
+pub fn pack_codes(codes: &[u32], bits: u8) -> Vec<u8> {
+    let total_bits = codes.len() * bits as usize;
+    let mut out = Vec::with_capacity(total_bits.div_ceil(8));
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    for &c in codes {
+        acc |= (c as u64) << nbits;
+        nbits += bits as u32;
+        while nbits >= 8 {
+            out.push(acc as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push(acc as u8);
+    }
+    out
+}
+
+/// Inverse of [`pack_codes`].
+pub fn unpack_codes(bytes: &[u8], bits: u8, n: usize) -> Vec<u32> {
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let mut c = 0u32;
+        for k in 0..bits as usize {
+            let idx = bitpos + k;
+            if idx / 8 < bytes.len() && (bytes[idx / 8] >> (idx % 8)) & 1 == 1 {
+                c |= 1 << k;
+            }
+        }
+        out.push(c);
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Quantize-dequantize round trip (matches the artifact's output).
+pub fn roundtrip(x: &[f32], bits: u8) -> Vec<f32> {
+    let (codes, p) = quantize(x, bits);
+    dequantize(&codes, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Rng::new(1);
+        for bits in 2..=8u8 {
+            let x: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+            let (codes, p) = quantize(&x, bits);
+            let y = dequantize(&codes, p);
+            for (a, b) in x.iter().zip(&y) {
+                assert!(
+                    (a - b).abs() <= p.scale / 2.0 + 1e-6,
+                    "bits={bits} a={a} b={b} scale={}",
+                    p.scale
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn codes_within_levels() {
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..1000).map(|_| rng.range(-3.0, 3.0) as f32).collect();
+        for bits in 2..=8u8 {
+            let (codes, _) = quantize(&x, bits);
+            let max = (1u32 << bits) - 1;
+            assert!(codes.iter().all(|&c| c <= max));
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::new(3);
+        for bits in [2u8, 3, 5, 7, 8] {
+            let n = 777;
+            let max = (1u32 << bits) - 1;
+            let codes: Vec<u32> =
+                (0..n).map(|_| rng.below(max as usize + 1) as u32).collect();
+            let bytes = pack_codes(&codes, bits);
+            assert_eq!(bytes.len(), (n * bits as usize).div_ceil(8));
+            let back = unpack_codes(&bytes, bits, n);
+            assert_eq!(codes, back);
+        }
+    }
+
+    #[test]
+    fn constant_input_degenerate() {
+        let x = vec![2.5f32; 100];
+        let y = roundtrip(&x, 4);
+        for v in y {
+            assert!((v - 2.5).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn mse_monotone_in_bits() {
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..8192).map(|_| rng.normal() as f32).collect();
+        let mut prev = f64::INFINITY;
+        for bits in 2..=8u8 {
+            let y = roundtrip(&x, bits);
+            let mse: f64 = x
+                .iter()
+                .zip(&y)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / x.len() as f64;
+            assert!(mse <= prev + 1e-12, "bits={bits} mse={mse} prev={prev}");
+            prev = mse;
+        }
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let (codes, p) = quantize(&[], 4);
+        assert!(codes.is_empty());
+        assert!(dequantize(&codes, p).is_empty());
+    }
+}

@@ -1,0 +1,105 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once,
+//! executes them from the L3 hot path. Adapted from
+//! /opt/xla-example/load_hlo — HLO *text* is the interchange format
+//! (xla_extension 0.5.1 rejects jax>=0.5 serialized protos).
+//!
+//! `Engine` is deliberately NOT Send/Sync (the underlying xla crate types
+//! hold raw PJRT pointers without thread-safety markers); each pipeline
+//! worker thread constructs its own `Engine` at startup (see
+//! coordinator::server), which also gives device/cloud stages true compute
+//! concurrency without sharing a client.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::Tensor;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    /// artifact file name -> compiled executable (compile-once cache)
+    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// cumulative host<->device + execute time, for the perf report
+    exec_nanos: RefCell<u64>,
+    exec_count: RefCell<u64>,
+}
+
+impl Engine {
+    pub fn new(manifest: &Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        Ok(Engine {
+            client,
+            dir: manifest.dir.clone(),
+            exes: RefCell::new(HashMap::new()),
+            exec_nanos: RefCell::new(0),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    /// Compile an artifact (no-op if already compiled).
+    pub fn preload(&self, artifact: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(artifact) {
+            return Ok(());
+        }
+        let path = self.dir.join(artifact);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {artifact}"))?;
+        self.exes.borrow_mut().insert(artifact.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a single-output artifact: inputs are host tensors, output
+    /// is unwrapped from the 1-tuple (aot.py lowers with
+    /// return_tuple=True).
+    pub fn run1(&self, artifact: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+        self.preload(artifact)?;
+        let start = Instant::now();
+        let lits = inputs
+            .iter()
+            .map(|t| literal_from(t))
+            .collect::<Result<Vec<_>>>()?;
+        let exes = self.exes.borrow();
+        let exe = exes.get(artifact).expect("preloaded");
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {artifact}"))?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let shape = out
+            .array_shape()
+            .context("output array shape")?
+            .dims()
+            .iter()
+            .map(|&d| d as usize)
+            .collect::<Vec<_>>();
+        let data = out.to_vec::<f32>()?;
+        *self.exec_nanos.borrow_mut() += start.elapsed().as_nanos() as u64;
+        *self.exec_count.borrow_mut() += 1;
+        Tensor::new(shape, data)
+    }
+
+    /// (total execute nanos, execute count) since construction.
+    pub fn exec_stats(&self) -> (u64, u64) {
+        (*self.exec_nanos.borrow(), *self.exec_count.borrow())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+}
+
+fn literal_from(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}

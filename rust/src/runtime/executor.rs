@@ -1,0 +1,132 @@
+//! Model-level execution on top of the engine: run block ranges (the
+//! device-side prefix / cloud-side suffix of a partition), the UAQ
+//! transmission round trip, and the GAP feature extraction — all via the
+//! AOT-compiled artifacts, never via python.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::Engine;
+use super::manifest::{Manifest, ModelInfo};
+use super::tensor::Tensor;
+
+pub struct ModelRuntime<'a> {
+    pub engine: &'a Engine,
+    pub manifest: &'a Manifest,
+    pub model: &'a ModelInfo,
+}
+
+impl<'a> ModelRuntime<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        manifest: &'a Manifest,
+        model_name: &str,
+    ) -> Result<ModelRuntime<'a>> {
+        Ok(ModelRuntime {
+            engine,
+            manifest,
+            model: manifest.model(model_name)?,
+        })
+    }
+
+    /// Compile every artifact this model can touch (blocks + uaq + gap)
+    /// so no compilation happens on the request path.
+    pub fn preload_all(&self) -> Result<()> {
+        for b in &self.model.blocks {
+            self.engine.preload(&b.artifact)?;
+        }
+        for cut in 0..self.model.n_cuts() {
+            let elems = self.model.cut_elems(cut);
+            self.engine.preload(self.manifest.uaq_artifact(elems)?)?;
+            let shape = self.model.cut_shape(cut);
+            if shape.len() == 3 {
+                self.engine.preload(self.manifest.gap_artifact(shape)?)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run blocks `lo..hi` (half-open) on `x`.
+    pub fn run_blocks(&self, lo: usize, hi: usize, x: &Tensor) -> Result<Tensor> {
+        if hi > self.model.blocks.len() || lo > hi {
+            bail!("block range {lo}..{hi} out of bounds");
+        }
+        let mut cur = x.clone();
+        for b in &self.model.blocks[lo..hi] {
+            if cur.shape != b.in_shape {
+                bail!(
+                    "block {} expects {:?}, got {:?}",
+                    b.name,
+                    b.in_shape,
+                    cur.shape
+                );
+            }
+            cur = self
+                .engine
+                .run1(&b.artifact, &[&cur])
+                .with_context(|| format!("block {}", b.name))?;
+        }
+        Ok(cur)
+    }
+
+    /// Device-side prefix for a cut after block `cut` (inclusive).
+    pub fn run_device(&self, cut: usize, x: &Tensor) -> Result<Tensor> {
+        self.run_blocks(0, cut + 1, x)
+    }
+
+    /// Cloud-side suffix for a cut after block `cut`.
+    pub fn run_cloud(&self, cut: usize, x: &Tensor) -> Result<Tensor> {
+        self.run_blocks(cut + 1, self.model.blocks.len(), x)
+    }
+
+    /// UAQ transmission round trip at `bits` on an arbitrary activation
+    /// (flattened through the size-matched artifact; one artifact serves
+    /// every precision — levels is a runtime input).
+    pub fn uaq_roundtrip(&self, x: &Tensor, bits: u8) -> Result<Tensor> {
+        let artifact = self.manifest.uaq_artifact(x.elems())?;
+        let flat = x.clone().reshaped(vec![x.elems()])?;
+        let levels = Tensor::scalar1(((1u32 << bits) - 1) as f32);
+        let out = self.engine.run1(artifact, &[&flat, &levels])?;
+        out.reshaped(x.shape.clone())
+    }
+
+    /// GAP task feature of a (C,H,W) activation; 1-D activations are
+    /// already features and pass through unchanged.
+    pub fn gap_feature(&self, x: &Tensor) -> Result<Tensor> {
+        match x.shape.len() {
+            1 => Ok(x.clone()),
+            3 => {
+                let artifact = self.manifest.gap_artifact(&x.shape)?;
+                self.engine.run1(artifact, &[x])
+            }
+            _ => bail!("gap_feature: unsupported rank {:?}", x.shape),
+        }
+    }
+
+    /// Measure per-block execution time (median of `reps`), in seconds —
+    /// the real-compute cost profile the partitioner scales by device
+    /// factors (DESIGN.md §Substitutions).
+    pub fn profile_blocks(&self, reps: usize) -> Result<Vec<f64>> {
+        let mut times = Vec::with_capacity(self.model.blocks.len());
+        let mut x = Tensor::zeros(self.model.blocks[0].in_shape.clone());
+        // deterministic non-zero input
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i % 97) as f32) / 97.0 - 0.5;
+        }
+        for b in &self.model.blocks {
+            self.engine.preload(&b.artifact)?;
+            let mut samples = Vec::with_capacity(reps);
+            let mut out = None;
+            for _ in 0..reps.max(1) {
+                let t0 = Instant::now();
+                out = Some(self.engine.run1(&b.artifact, &[&x])?);
+                samples.push(t0.elapsed().as_secs_f64());
+            }
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            times.push(samples[samples.len() / 2]);
+            x = out.unwrap();
+        }
+        Ok(times)
+    }
+}

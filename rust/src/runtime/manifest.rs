@@ -1,0 +1,297 @@
+//! Artifact manifest: the index `python/compile/aot.py` writes alongside
+//! the HLO-text artifacts. This is the only contract between the python
+//! build path and the rust request path.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// One partitionable model block (activation -> activation executable).
+#[derive(Debug, Clone)]
+pub struct BlockInfo {
+    pub name: String,
+    /// 'chain' | 'residual' | 'head' — topology role (DAG blocks carry a
+    /// parallel skip branch; the partitioner treats them as virtual
+    /// blocks).
+    pub kind: String,
+    pub artifact: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+}
+
+impl BlockInfo {
+    pub fn out_elems(&self) -> usize {
+        self.out_shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub topology: String, // 'chain' | 'dag'
+    pub blocks: Vec<BlockInfo>,
+}
+
+impl ModelInfo {
+    /// Valid cut positions: after block i, for i in 0..blocks-1.
+    pub fn n_cuts(&self) -> usize {
+        self.blocks.len() - 1
+    }
+
+    pub fn cut_elems(&self, cut: usize) -> usize {
+        self.blocks[cut].out_elems()
+    }
+
+    pub fn cut_shape(&self, cut: usize) -> &[usize] {
+        &self.blocks[cut].out_shape
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CalibInfo {
+    pub inputs_file: String,
+    pub labels: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PatternsInfo {
+    pub file: String,
+    pub shape: Vec<usize>, // (n_classes, C, H, W)
+    pub sigma: f32,
+}
+
+/// Measured precision->fidelity curves: model -> cut -> bits -> fidelity.
+#[derive(Debug, Clone, Default)]
+pub struct AccTable {
+    pub table: BTreeMap<String, BTreeMap<usize, BTreeMap<u8, f64>>>,
+}
+
+impl AccTable {
+    pub fn fidelity(&self, model: &str, cut: usize, bits: u8) -> Option<f64> {
+        self.table.get(model)?.get(&cut)?.get(&bits).copied()
+    }
+
+    /// Best (ceiling) fidelity achievable at this cut — accuracy "loss"
+    /// is measured relative to this, mirroring the paper's
+    /// |Acc - Acc(Q)| <= eps against the unquantized accuracy.
+    pub fn ceiling(&self, model: &str, cut: usize) -> Option<f64> {
+        let bits = self.table.get(model)?.get(&cut)?;
+        bits.values().cloned().fold(None, |acc: Option<f64>, v| {
+            Some(acc.map_or(v, |a| a.max(v)))
+        })
+    }
+
+    /// Minimum bits meeting the accuracy constraint (paper Eq. 1) at
+    /// this cut, via dichotomous search over the monotone curve.
+    pub fn min_bits(&self, model: &str, cut: usize, eps: f64) -> Option<u8> {
+        let curve = self.table.get(model)?.get(&cut)?;
+        let ceiling = self.ceiling(model, cut)?;
+        let ok = |b: u8| {
+            curve
+                .get(&b)
+                .map(|f| ceiling - f <= eps + 1e-9)
+                .unwrap_or(false)
+        };
+        let (mut lo, mut hi) = (2u8, 8u8);
+        if !ok(hi) {
+            return None;
+        }
+        // Dichotomous search: find the lowest precision satisfying Eq. 1.
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if ok(mid) {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        Some(lo)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub n_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub models: BTreeMap<String, ModelInfo>,
+    /// flattened activation size -> uaq artifact file
+    pub uaq: BTreeMap<usize, String>,
+    /// "CxHxW" -> gap artifact file
+    pub gap: BTreeMap<String, String>,
+    pub calib: CalibInfo,
+    pub patterns: PatternsInfo,
+    pub acc: AccTable,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::from_file(&dir.join("manifest.json"))?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models")?.as_obj()? {
+            let blocks = m
+                .get("blocks")?
+                .as_arr()?
+                .iter()
+                .map(|b| {
+                    Ok(BlockInfo {
+                        name: b.get("name")?.as_str()?.to_string(),
+                        kind: b.get("kind")?.as_str()?.to_string(),
+                        artifact: b.get("artifact")?.as_str()?.to_string(),
+                        in_shape: b.get("in_shape")?.as_shape()?,
+                        out_shape: b.get("out_shape")?.as_shape()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            if blocks.is_empty() {
+                bail!("model {name} has no blocks");
+            }
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    topology: m.get("topology")?.as_str()?.to_string(),
+                    blocks,
+                },
+            );
+        }
+
+        let mut uaq = BTreeMap::new();
+        for (k, v) in j.get("uaq")?.as_obj()? {
+            uaq.insert(
+                k.parse::<usize>().context("uaq size key")?,
+                v.as_str()?.to_string(),
+            );
+        }
+        let mut gap = BTreeMap::new();
+        for (k, v) in j.get("gap")?.as_obj()? {
+            gap.insert(k.clone(), v.as_str()?.to_string());
+        }
+
+        let calib = CalibInfo {
+            inputs_file: j.get("calib")?.get("inputs")?.as_str()?.to_string(),
+            labels: j
+                .get("calib")?
+                .get("labels")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+        };
+        let patterns = PatternsInfo {
+            file: j.get("patterns")?.get("file")?.as_str()?.to_string(),
+            shape: j.get("patterns")?.get("shape")?.as_shape()?,
+            sigma: j.get("patterns")?.get("sigma")?.as_f64()? as f32,
+        };
+
+        let acc_file = j.get("acc_table")?.as_str()?.to_string();
+        let acc = load_acc_table(&dir.join(acc_file))?;
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            n_classes: j.get("n_classes")?.as_usize()?,
+            input_shape: j.get("input_shape")?.as_shape()?,
+            models,
+            uaq,
+            gap,
+            calib,
+            patterns,
+            acc,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .with_context(|| format!("unknown model '{name}'"))
+    }
+
+    pub fn uaq_artifact(&self, elems: usize) -> Result<&str> {
+        self.uaq
+            .get(&elems)
+            .map(|s| s.as_str())
+            .with_context(|| format!("no uaq artifact for {elems} elems"))
+    }
+
+    pub fn gap_artifact(&self, shape: &[usize]) -> Result<&str> {
+        let key = shape
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        self.gap
+            .get(&key)
+            .map(|s| s.as_str())
+            .with_context(|| format!("no gap artifact for shape {key}"))
+    }
+
+    /// Read a raw little-endian f32 binary blob from the artifact dir.
+    pub fn read_f32(&self, file: &str) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.dir.join(file))
+            .with_context(|| format!("reading {file}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{file}: length {} not a multiple of 4", bytes.len());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+fn load_acc_table(path: &Path) -> Result<AccTable> {
+    let j = Json::from_file(path)?;
+    let mut table = BTreeMap::new();
+    for (model, cuts) in j.as_obj()? {
+        let mut per_cut = BTreeMap::new();
+        for (cut, bits) in cuts.as_obj()? {
+            let mut per_bits = BTreeMap::new();
+            for (b, v) in bits.as_obj()? {
+                per_bits.insert(b.parse::<u8>()?, v.as_f64()?);
+            }
+            per_cut.insert(cut.parse::<usize>()?, per_bits);
+        }
+        table.insert(model.clone(), per_cut);
+    }
+    Ok(AccTable { table })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_acc() -> AccTable {
+        let mut t = AccTable::default();
+        let mut per_cut = BTreeMap::new();
+        let mut curve = BTreeMap::new();
+        for (b, f) in [(2, 0.70), (3, 0.90), (4, 0.97), (5, 0.995), (6, 1.0), (7, 1.0), (8, 1.0)] {
+            curve.insert(b as u8, f);
+        }
+        per_cut.insert(0usize, curve);
+        t.table.insert("m".into(), per_cut);
+        t
+    }
+
+    #[test]
+    fn min_bits_dichotomous() {
+        let t = toy_acc();
+        // ceiling 1.0; eps 0.005 -> needs fidelity >= 0.995 -> 5 bits
+        assert_eq!(t.min_bits("m", 0, 0.005), Some(5));
+        // eps 0.03 -> >= 0.97 -> 4 bits
+        assert_eq!(t.min_bits("m", 0, 0.03), Some(4));
+        // eps 0.5 -> >= 0.5 -> 2 bits
+        assert_eq!(t.min_bits("m", 0, 0.5), Some(2));
+        // unknown cut/model
+        assert_eq!(t.min_bits("m", 3, 0.005), None);
+        assert_eq!(t.min_bits("x", 0, 0.005), None);
+    }
+
+    #[test]
+    fn ceiling_is_max() {
+        let t = toy_acc();
+        assert_eq!(t.ceiling("m", 0), Some(1.0));
+    }
+}

@@ -1,0 +1,22 @@
+//! Layer-3 runtime: PJRT client wrapper that loads the AOT artifacts
+//! (`artifacts/*.hlo.txt` produced by `make artifacts`) and executes
+//! them on the request path. Python is never involved at runtime.
+
+pub mod engine;
+pub mod executor;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use executor::ModelRuntime;
+pub use manifest::{AccTable, BlockInfo, CalibInfo, Manifest, ModelInfo};
+pub use tensor::Tensor;
+
+use std::path::PathBuf;
+
+/// Default artifact directory: $COACH_ARTIFACTS or ./artifacts.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("COACH_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,7 @@
+//! Workload simulation: task streams with the paper's label
+//! distributions (ImageNet-100-like long tail) and temporal correlation
+//! levels (UCF101-like video streams, §IV-B Table II).
+
+pub mod workload;
+
+pub use workload::{generate, Correlation, SimTask};

@@ -1,0 +1,199 @@
+//! Synthetic task streams (DESIGN.md §3 substitution for UCF101 /
+//! ImageNet-100).
+//!
+//! Temporal correlation levels mirror Table II's construction:
+//! - `Low`    — random frames (iid labels)
+//! - `Medium` — continuous frames from random videos (short runs)
+//! - `High`   — continuous frames from sequential videos (long runs)
+//!
+//! Each task carries a *separability hint* in [0, ~1.2]: the simulated
+//! Eq.-9 separability its GAP feature would score against a warm cache.
+//! Tasks deep inside a run score high (the cache has just seen this
+//! label); run heads and the ~15% hard (near-boundary) tasks score low.
+//! The distribution parameters were chosen to match the separability
+//! histograms measured on the real mini models (see EXPERIMENTS.md
+//! §Fig1 / §TableII); the DES thresholds operate on the same scale.
+
+use crate::util::Rng;
+
+/// Temporal correlation level of the stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Correlation {
+    /// no caching possible at all (NoAdjust rows disable the cache
+    /// instead; None is an iid stream with no repeated-label structure)
+    None,
+    Low,
+    Medium,
+    High,
+}
+
+impl Correlation {
+    /// Expected run length of same-label frames.
+    fn run_len(&self) -> f64 {
+        match self {
+            Correlation::None => 1.0,
+            Correlation::Low => 1.5,
+            Correlation::Medium => 6.0,
+            Correlation::High => 24.0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Correlation::None => "NoAdjust",
+            Correlation::Low => "Low",
+            Correlation::Medium => "Medium",
+            Correlation::High => "High",
+        }
+    }
+}
+
+/// One simulated inference task.
+#[derive(Debug, Clone)]
+pub struct SimTask {
+    pub id: usize,
+    pub arrive: f64,
+    pub label: usize,
+    /// simulated Eq.-9 separability against a warm cache
+    pub separability: f64,
+    /// whether an early-exit (cache argmax) would match the model
+    pub exit_correct: bool,
+    /// per-run (per-"video") context id: frames of the same run share
+    /// it; the real server derives a context feature offset from it, so
+    /// a NEW context lands off the cached centers until the running
+    /// mean (Eq. 7) absorbs it — the temporal-locality effect of
+    /// Fig. 1(a) / Table II.
+    pub context: u64,
+}
+
+/// Generate `n` tasks arriving every `period` seconds with a long-tail
+/// (Zipf 1.1) label distribution and the given correlation level.
+pub fn generate(
+    n: usize,
+    period: f64,
+    corr: Correlation,
+    n_classes: usize,
+    seed: u64,
+) -> Vec<SimTask> {
+    let mut rng = Rng::new(seed);
+    let mut tasks = Vec::with_capacity(n);
+    let mut label = rng.zipf(n_classes, 1.1);
+    let mut run_left = 0usize;
+    let mut context = rng.next_u64();
+    // cache warmth per label: how many times seen recently
+    let mut warmth = vec![0.0f64; n_classes];
+
+    for id in 0..n {
+        if run_left == 0 {
+            label = rng.zipf(n_classes, 1.1);
+            context = rng.next_u64();
+            // geometric run length with the level's mean
+            let p = 1.0 / corr.run_len();
+            run_left = 1;
+            while rng.f64() > p && run_left < 200 {
+                run_left += 1;
+            }
+        }
+        run_left -= 1;
+
+        let hard = rng.f64() < 0.15; // near-boundary task
+        let w = warmth[label].min(1.0);
+        // separability: grows with cache warmth for this label,
+        // collapses for hard tasks; mild noise throughout.
+        let base = if hard {
+            0.08 + 0.10 * rng.f64()
+        } else {
+            0.15 + 0.75 * w + 0.15 * rng.f64()
+        };
+        let separability = (base + 0.05 * rng.normal()).max(0.0);
+        // calibration guarantees ~eps agreement above the exit
+        // threshold; sub-threshold exits would be wrong more often
+        let exit_correct = if hard {
+            rng.f64() < 0.55
+        } else {
+            rng.f64() < 0.995
+        };
+
+        tasks.push(SimTask {
+            id,
+            arrive: id as f64 * period,
+            label,
+            separability,
+            exit_correct,
+            context,
+        });
+
+        // decay all, boost current
+        for v in warmth.iter_mut() {
+            *v *= 0.97;
+        }
+        warmth[label] += 0.34;
+    }
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_sep(tasks: &[SimTask]) -> f64 {
+        tasks.iter().map(|t| t.separability).sum::<f64>() / tasks.len() as f64
+    }
+
+    #[test]
+    fn higher_correlation_higher_separability() {
+        let lo = generate(2000, 0.01, Correlation::Low, 20, 7);
+        let md = generate(2000, 0.01, Correlation::Medium, 20, 7);
+        let hi = generate(2000, 0.01, Correlation::High, 20, 7);
+        assert!(mean_sep(&lo) < mean_sep(&md));
+        assert!(mean_sep(&md) < mean_sep(&hi));
+    }
+
+    #[test]
+    fn long_tail_labels() {
+        let tasks = generate(5000, 0.01, Correlation::Low, 20, 9);
+        let mut counts = vec![0usize; 20];
+        for t in &tasks {
+            counts[t.label] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max > min * 3, "long tail expected: {counts:?}");
+    }
+
+    #[test]
+    fn arrivals_are_periodic() {
+        let tasks = generate(10, 0.5, Correlation::High, 20, 1);
+        for (i, t) in tasks.iter().enumerate() {
+            assert!((t.arrive - 0.5 * i as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn high_correlation_has_long_runs() {
+        let tasks = generate(3000, 0.01, Correlation::High, 20, 3);
+        let mut runs = Vec::new();
+        let mut cur = 1usize;
+        for w in tasks.windows(2) {
+            if w[0].label == w[1].label {
+                cur += 1;
+            } else {
+                runs.push(cur);
+                cur = 1;
+            }
+        }
+        runs.push(cur);
+        let mean_run = runs.iter().sum::<usize>() as f64 / runs.len() as f64;
+        assert!(mean_run > 5.0, "mean run {mean_run}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(100, 0.01, Correlation::Medium, 20, 42);
+        let b = generate(100, 0.01, Correlation::Medium, 20, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.separability, y.separability);
+        }
+    }
+}

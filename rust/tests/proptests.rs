@@ -1,0 +1,263 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! partitioning, quantization, caching). The offline environment has no
+//! proptest crate; cases are generated from the in-tree deterministic
+//! PRNG — every failure is reproducible from the printed seed.
+
+use coach::cache::SemanticCache;
+use coach::model::{CostModel, DeviceProfile, LayerKind, ModelGraph};
+use coach::network::{BandwidthModel, Trace};
+use coach::partition::{
+    chain_of, evaluate, optimize, AnalyticAcc, ChainNode, PartitionConfig,
+};
+use coach::pipeline::{run_pipeline, StageModel, StaticPolicy};
+use coach::quant::uaq;
+use coach::sim::{generate, Correlation};
+use coach::util::Rng;
+
+const CASES: usize = 60;
+
+/// Random layered DAG: layers in stages; each non-input layer draws
+/// preds from the previous stage (chain with random parallel branches
+/// joined by Add layers). Always single-source/single-sink.
+fn random_graph(rng: &mut Rng) -> ModelGraph {
+    let mut g = ModelGraph::new("prop");
+    let mut prev = g.add("in", LayerKind::Input, 0.0, 512 + rng.below(4096), &[]);
+    let stages = 2 + rng.below(6);
+    for s in 0..stages {
+        if rng.f64() < 0.4 {
+            // parallel block: 2-4 branches, each 0-3 layers
+            let n_br = 2 + rng.below(3);
+            let mut ends = Vec::new();
+            for b in 0..n_br {
+                let mut cur = prev;
+                for l in 0..rng.below(4) {
+                    cur = g.add(
+                        &format!("s{s}b{b}l{l}"),
+                        LayerKind::Conv,
+                        1e6 + rng.f64() * 5e8,
+                        64 + rng.below(8192),
+                        &[cur],
+                    );
+                }
+                ends.push(cur);
+            }
+            ends.sort();
+            ends.dedup();
+            if ends.len() == 1 {
+                // all branches empty: fold into a chain layer
+                prev = g.add(
+                    &format!("s{s}chain"),
+                    LayerKind::Conv,
+                    1e6 + rng.f64() * 5e8,
+                    64 + rng.below(8192),
+                    &[prev],
+                );
+            } else {
+                prev = g.add(
+                    &format!("s{s}join"),
+                    LayerKind::Add,
+                    1e5,
+                    64 + rng.below(8192),
+                    &ends,
+                );
+            }
+        } else {
+            prev = g.add(
+                &format!("s{s}"),
+                LayerKind::Conv,
+                1e6 + rng.f64() * 5e8,
+                64 + rng.below(8192),
+                &[prev],
+            );
+        }
+    }
+    g.add("out", LayerKind::Dense, 1e6, 10 + rng.below(100), &[prev]);
+    g
+}
+
+#[test]
+fn prop_chain_decomposition_covers_every_layer_once() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..CASES {
+        let g = random_graph(&mut rng);
+        let chain = chain_of(&g)
+            .unwrap_or_else(|e| panic!("case {case}: chain_of failed: {e}"));
+        let mut covered: Vec<usize> =
+            chain.iter().flat_map(|n| n.layers()).collect();
+        covered.sort();
+        let expected: Vec<usize> = (0..g.n()).collect();
+        assert_eq!(covered, expected, "case {case}: coverage mismatch");
+        // chain node outputs must be strictly increasing (topological)
+        let outs: Vec<usize> = chain.iter().map(|n| n.out_layer()).collect();
+        assert!(
+            outs.windows(2).all(|w| w[0] < w[1]),
+            "case {case}: non-monotone chain {outs:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_optimizer_returns_valid_prefix_strategy() {
+    let mut rng = Rng::new(0xBEEF);
+    let cost =
+        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
+    for case in 0..CASES {
+        let g = random_graph(&mut rng);
+        let bw = 1.0 + rng.f64() * 99.0;
+        let cfg = PartitionConfig { bw_mbps: bw, ..Default::default() };
+        let s = optimize(&g, &cost, &AnalyticAcc, &cfg)
+            .unwrap_or_else(|e| panic!("case {case}: optimize failed: {e}"));
+        // prefix-closed assignment, consistent cut edges
+        let cuts = g
+            .cut_edges(&s.on_device)
+            .unwrap_or_else(|e| panic!("case {case}: invalid assignment: {e}"));
+        assert_eq!(
+            cuts.len(),
+            s.cuts.len(),
+            "case {case}: cut count mismatch"
+        );
+        for c in &s.cuts {
+            assert!((2..=8).contains(&c.bits), "case {case}: bits {}", c.bits);
+            assert!(s.on_device[c.from] && !s.on_device[c.to]);
+        }
+        // the chosen objective must not exceed the trivial extremes
+        let all_dev = evaluate(&g, &cost, &vec![true; g.n()], &[], bw);
+        let all_cloud = evaluate(&g, &cost, &vec![false; g.n()], &[], bw);
+        assert!(
+            s.eval.objective()
+                <= all_dev.objective().min(all_cloud.objective()) + 1e-9,
+            "case {case}: objective {} worse than extremes {} / {}",
+            s.eval.objective(),
+            all_dev.objective(),
+            all_cloud.objective()
+        );
+    }
+}
+
+#[test]
+fn prop_task_eval_internally_consistent() {
+    let mut rng = Rng::new(0xFEED);
+    let cost =
+        CostModel::new(DeviceProfile::jetson_tx2(), DeviceProfile::cloud_a6000());
+    for case in 0..CASES {
+        let g = random_graph(&mut rng);
+        let cfg = PartitionConfig {
+            bw_mbps: 1.0 + rng.f64() * 80.0,
+            ..Default::default()
+        };
+        let s = optimize(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+        let e = s.eval;
+        assert!(e.t_e >= 0.0 && e.t_t >= 0.0 && e.t_c >= 0.0, "case {case}");
+        assert!(
+            e.t_t_par <= e.t_t + 1e-9,
+            "case {case}: overlap exceeds transmission"
+        );
+        assert!(
+            e.t_c_par <= e.t_c + 1e-9,
+            "case {case}: overlap exceeds cloud time"
+        );
+        // Eq. 4 constraint: overlapped work fits inside the max stage
+        // latency >= the longest single stage
+        assert!(
+            e.latency + 1e-9 >= e.t_e.max(e.t_c),
+            "case {case}: latency {} below compute {}",
+            e.latency,
+            e.t_e.max(e.t_c)
+        );
+        assert!(e.objective().is_finite(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_uaq_pack_roundtrip_random() {
+    let mut rng = Rng::new(0xAB);
+    for case in 0..200 {
+        let n = 1 + rng.below(5000);
+        let bits = 2 + rng.below(7) as u8;
+        let x: Vec<f32> = (0..n)
+            .map(|_| (rng.range(-100.0, 100.0)) as f32)
+            .collect();
+        let (codes, p) = uaq::quantize(&x, bits);
+        let packed = uaq::pack_codes(&codes, bits);
+        let unpacked = uaq::unpack_codes(&packed, bits, n);
+        assert_eq!(codes, unpacked, "case {case} pack/unpack mismatch");
+        let y = uaq::dequantize(&unpacked, p);
+        for (a, b) in x.iter().zip(&y) {
+            assert!(
+                (a - b).abs() <= p.scale / 2.0 + 1e-4,
+                "case {case}: error beyond half-step"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_cache_centers_bounded_by_observed_features() {
+    // running mean stays inside the convex hull bounds per dimension
+    let mut rng = Rng::new(0x5EED);
+    for _case in 0..50 {
+        let dim = 4 + rng.below(32);
+        let mut cache = SemanticCache::new(3, dim);
+        let mut lo = vec![f32::INFINITY; dim];
+        let mut hi = vec![f32::NEG_INFINITY; dim];
+        for _ in 0..40 {
+            let f = rng.normal_vec(dim);
+            for (i, v) in f.iter().enumerate() {
+                lo[i] = lo[i].min(*v);
+                hi[i] = hi[i].max(*v);
+            }
+            cache.update(1, &f);
+        }
+        let c = cache.center(1).unwrap();
+        for i in 0..dim {
+            assert!(
+                c[i] >= lo[i] - 1e-4 && c[i] <= hi[i] + 1e-4,
+                "center escaped hull at dim {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_pipeline_conservation_and_ordering() {
+    // every generated task produces exactly one outcome; finishes are
+    // causal (>= arrival); busy times fit in the span.
+    let mut rng = Rng::new(0x1234);
+    let cost =
+        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
+    for case in 0..30 {
+        let g = random_graph(&mut rng);
+        let cfg = PartitionConfig {
+            bw_mbps: 2.0 + rng.f64() * 50.0,
+            ..Default::default()
+        };
+        let strat = optimize(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+        let sm = StageModel::from_strategy(&g, &cost, &strat, cfg.bw_mbps);
+        let n = 50 + rng.below(200);
+        let tasks = generate(n, rng.f64() * 0.01, Correlation::Medium, 20, case);
+        let bw = if rng.f64() < 0.5 {
+            BandwidthModel::Static(cfg.bw_mbps)
+        } else {
+            BandwidthModel::Jittered {
+                trace: Trace::constant(cfg.bw_mbps),
+                amplitude: 0.2,
+                seed: case,
+            }
+        };
+        let mut pol = StaticPolicy { bits: 8, exit_threshold: 0.7 };
+        let r = run_pipeline(&g, &cost, &sm, &bw, &tasks, &mut pol, "prop");
+        assert_eq!(r.tasks.len(), n, "case {case}: task conservation");
+        for t in &r.tasks {
+            assert!(t.finish >= t.arrive - 1e-9, "case {case}: causality");
+            assert!(t.latency >= 0.0);
+        }
+        for usage in [&r.device, &r.link, &r.cloud] {
+            assert!(
+                usage.busy <= usage.span + 1e-6,
+                "case {case}: busy {} > span {}",
+                usage.busy,
+                usage.span
+            );
+        }
+    }
+}

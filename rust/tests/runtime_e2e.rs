@@ -1,0 +1,137 @@
+//! Runtime-backed integration: PJRT engine vs the rust UAQ mirror,
+//! blockwise-vs-split numerics, GAP vs a host-side reference.
+//! Requires `make artifacts`; every test skips cleanly if the artifact
+//! directory is missing (CI without the python toolchain).
+
+use coach::quant::uaq;
+use coach::runtime::{default_artifact_dir, Engine, Manifest, ModelRuntime, Tensor};
+use coach::util::Rng;
+
+fn load() -> Option<Manifest> {
+    Manifest::load(&default_artifact_dir()).ok()
+}
+
+fn input_from_pattern(m: &Manifest, class: usize) -> Tensor {
+    let patterns = m.read_f32(&m.patterns.file).unwrap();
+    let isz: usize = m.input_shape.iter().product();
+    Tensor::new(m.input_shape.clone(), patterns[class * isz..(class + 1) * isz].to_vec())
+        .unwrap()
+}
+
+#[test]
+fn split_inference_matches_full_forward() {
+    let Some(m) = load() else { return };
+    let engine = Engine::new(&m).unwrap();
+    for model in ["vgg_mini", "resnet_mini"] {
+        let rt = ModelRuntime::new(&engine, &m, model).unwrap();
+        let x = input_from_pattern(&m, 5);
+        let full = rt.run_blocks(0, rt.model.blocks.len(), &x).unwrap();
+        for cut in 0..rt.model.n_cuts() {
+            let act = rt.run_device(cut, &x).unwrap();
+            let out = rt.run_cloud(cut, &act).unwrap();
+            assert_eq!(out.shape, full.shape);
+            for (a, b) in out.data.iter().zip(&full.data) {
+                assert!(
+                    (a - b).abs() < 1e-3,
+                    "{model} cut {cut}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn uaq_artifact_matches_rust_mirror() {
+    let Some(m) = load() else { return };
+    let engine = Engine::new(&m).unwrap();
+    let rt = ModelRuntime::new(&engine, &m, "resnet_mini").unwrap();
+    let mut rng = Rng::new(77);
+    // use a real cut activation size so an artifact exists
+    let elems = rt.model.cut_elems(1);
+    let data: Vec<f32> = (0..elems).map(|_| rng.normal() as f32).collect();
+    let shape = rt.model.cut_shape(1).to_vec();
+    let x = Tensor::new(shape, data.clone()).unwrap();
+    for bits in [2u8, 4, 6, 8] {
+        let via_artifact = rt.uaq_roundtrip(&x, bits).unwrap();
+        let via_rust = uaq::roundtrip(&data, bits);
+        for (a, b) in via_artifact.data.iter().zip(&via_rust) {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "bits {bits}: artifact {a} vs rust {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gap_artifact_matches_host_mean() {
+    let Some(m) = load() else { return };
+    let engine = Engine::new(&m).unwrap();
+    let rt = ModelRuntime::new(&engine, &m, "resnet_mini").unwrap();
+    let x = input_from_pattern(&m, 2);
+    let act = rt.run_device(2, &x).unwrap();
+    let feat = rt.gap_feature(&act).unwrap();
+    let (c, h, w) = (act.shape[0], act.shape[1], act.shape[2]);
+    assert_eq!(feat.elems(), c);
+    for ch in 0..c {
+        let mean: f32 = act.data[ch * h * w..(ch + 1) * h * w]
+            .iter()
+            .sum::<f32>()
+            / (h * w) as f32;
+        assert!(
+            (feat.data[ch] - mean).abs() < 1e-4,
+            "channel {ch}: {} vs {}",
+            feat.data[ch],
+            mean
+        );
+    }
+}
+
+#[test]
+fn quantized_split_preserves_labels_at_high_bits() {
+    let Some(m) = load() else { return };
+    let engine = Engine::new(&m).unwrap();
+    for model in ["vgg_mini", "resnet_mini"] {
+        let rt = ModelRuntime::new(&engine, &m, model).unwrap();
+        let mut agree = 0;
+        let n = 6;
+        for class in 0..n {
+            let x = input_from_pattern(&m, class);
+            let full = rt.run_blocks(0, rt.model.blocks.len(), &x).unwrap();
+            let cut = rt.model.n_cuts() / 2;
+            let act = rt.run_device(cut, &x).unwrap();
+            let q = rt.uaq_roundtrip(&act, 8).unwrap();
+            let out = rt.run_cloud(cut, &q).unwrap();
+            if out.argmax() == full.argmax() {
+                agree += 1;
+            }
+        }
+        assert!(agree >= n - 1, "{model}: only {agree}/{n} agree at 8 bits");
+    }
+}
+
+#[test]
+fn acc_table_loaded_and_monotoneish() {
+    let Some(m) = load() else { return };
+    for (model, cuts) in &m.acc.table {
+        for (cut, curve) in cuts {
+            let lo = curve[&2];
+            let hi = curve[&8];
+            assert!(
+                hi >= lo - 0.05,
+                "{model} cut {cut}: 8-bit fidelity {hi} below 2-bit {lo}"
+            );
+            assert!(hi > 0.9, "{model} cut {cut}: 8-bit fidelity {hi} too low");
+        }
+    }
+}
+
+#[test]
+fn profile_blocks_returns_positive_times() {
+    let Some(m) = load() else { return };
+    let engine = Engine::new(&m).unwrap();
+    let rt = ModelRuntime::new(&engine, &m, "vgg_mini").unwrap();
+    let secs = rt.profile_blocks(2).unwrap();
+    assert_eq!(secs.len(), rt.model.blocks.len());
+    assert!(secs.iter().all(|&s| s > 0.0 && s < 1.0));
+}
