@@ -54,6 +54,7 @@ fn main() -> anyhow::Result<()> {
             eps: 0.005,
             seed: 33,
             audit_every: 0,
+            n_streams: 1,
         };
         let res = serve(&manifest, &cfg)?;
         let r = &res.report;

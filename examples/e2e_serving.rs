@@ -1,4 +1,4 @@
-//! END-TO-END VALIDATION DRIVER (DESIGN.md §6, EXPERIMENTS.md §E2E).
+//! END-TO-END VALIDATION DRIVER (ARCHITECTURE.md §Experiment index).
 //!
 //! Loads the real compiled model artifacts and serves a batched stream
 //! of requests through the FULL system — offline partitioning on the
@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
                 eps: 0.005,
                 seed: 7,
                 audit_every: 4, // audit every 4th early exit vs fp32
+                n_streams: 1,
             };
             let res = serve(&manifest, &cfg)?;
             let r = &res.report;
@@ -88,6 +89,35 @@ fn main() -> anyhow::Result<()> {
                 r.total_bubbles()
             );
         }
+
+        // ---- multi-stream: 4 concurrent users, one shared cloud engine --
+        let cfg = ServeCfg {
+            model: model.to_string(),
+            cut,
+            policy: SchemePolicy::coach(),
+            device_scale: 6.0,
+            bw: BandwidthModel::Static(20.0),
+            period: 0.012,
+            n_tasks: n_tasks / 2,
+            correlation: Correlation::High,
+            eps: 0.005,
+            seed: 7,
+            audit_every: 0,
+            n_streams: 4,
+        };
+        let res = serve(&manifest, &cfg)?;
+        for (i, r) in res.per_stream.iter().enumerate() {
+            println!(
+                "  stream {i}: lat {:6.2} ms | {:5.1} it/s | exits {:4.1}%",
+                r.avg_latency_ms(),
+                r.throughput(),
+                r.exit_ratio() * 100.0
+            );
+        }
+        println!(
+            "  4 streams: aggregate {:.1} it/s (one shared cloud engine)",
+            res.report.throughput()
+        );
     }
     println!("\ne2e_serving OK");
     Ok(())

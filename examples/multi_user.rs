@@ -1,0 +1,97 @@
+//! Multi-user serving scenario: N concurrent device streams (each a
+//! "user" with its own arrival process and policy state) share ONE
+//! cloud stage through the FIFO link — the contention regime of
+//! production end-cloud serving (PICO/CoEdge-style multi-device
+//! pipelines).
+//!
+//! Runs on the wall-clock driver with simulated compute, so it works on
+//! any machine — no compiled artifacts required. The same driver with
+//! PJRT stages backs `coach serve --streams N` (see
+//! coordinator::server).
+//!
+//! Run: `cargo run --release --example multi_user [n_streams]`
+
+use coach::metrics::Table;
+use coach::model::{CostModel, DeviceProfile};
+use coach::network::BandwidthModel;
+use coach::pipeline::driver::{run_real, RealCfg, SimCloud, SimDevice};
+use coach::pipeline::{StaticPolicy, WallClock};
+use coach::sim::{generate, Correlation, SimTask};
+
+fn main() -> anyhow::Result<()> {
+    let n_streams: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let n_tasks = 60;
+    let period = 0.008;
+
+    let mut table = Table::new(&[
+        "fleet",
+        "aggregate it/s",
+        "avg latency ms",
+        "p99 ms",
+        "cloud util %",
+    ]);
+
+    for fleet in [1, n_streams] {
+        let clock = WallClock::new();
+        let streams: Vec<(Vec<SimTask>, _)> = (0..fleet)
+            .map(|i| {
+                let tasks = generate(
+                    n_tasks,
+                    period,
+                    Correlation::Medium,
+                    20,
+                    99 + i as u64,
+                );
+                let bw = BandwidthModel::Static(40.0);
+                let cost = CostModel::new(
+                    DeviceProfile::jetson_nx(),
+                    DeviceProfile::cloud_a6000(),
+                );
+                let factory = move || -> anyhow::Result<SimDevice<StaticPolicy>> {
+                    Ok(SimDevice {
+                        policy: StaticPolicy { bits: 8, exit_threshold: 0.8 },
+                        t_e: 0.006,
+                        bw,
+                        clock,
+                        elems: 4096,
+                        cost,
+                    })
+                };
+                (tasks, factory)
+            })
+            .collect();
+        let multi = run_real::<SimDevice<StaticPolicy>, SimCloud, _, _>(
+            streams,
+            || Ok(SimCloud { t_c: 0.0012 }),
+            BandwidthModel::Static(40.0),
+            clock,
+            RealCfg { model: "sim".into(), ..Default::default() },
+        )?;
+        let agg = multi.aggregate();
+        table.row(vec![
+            format!("{fleet} stream(s)"),
+            format!("{:.1}", agg.throughput()),
+            format!("{:.2}", agg.avg_latency_ms()),
+            format!("{:.2}", agg.p99_latency_ms()),
+            format!("{:.0}", agg.cloud.utilization() * 100.0),
+        ]);
+        if fleet > 1 {
+            for (i, r) in multi.per_stream.iter().enumerate() {
+                println!(
+                    "  stream {i}: {:5.1} it/s | lat {:6.2} ms | exits {:4.1}%",
+                    r.throughput(),
+                    r.avg_latency_ms(),
+                    r.exit_ratio() * 100.0
+                );
+            }
+        }
+    }
+
+    println!("\n{n_streams}-user fleet vs single user (simulated compute):");
+    println!("{}", table.render());
+    println!("multi_user OK");
+    Ok(())
+}

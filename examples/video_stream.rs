@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
             eps: 0.005,
             seed: 21,
             audit_every: 0,
+            n_streams: 1,
         };
         let res = serve(&manifest, &cfg)?;
         let r = &res.report;

@@ -1,5 +1,5 @@
 //! `cargo bench micro` — microbenchmarks of the L3 hot paths (the §Perf
-//! baseline/after measurements in EXPERIMENTS.md):
+//! baseline/after measurements tracked via BENCH_*.json, see ARCHITECTURE.md §Bench output):
 //!
 //! - offline partitioner (Algorithm 1) on the three analytic graphs,
 //! - single-task timeline evaluation (the inner loop of the search),
@@ -87,10 +87,11 @@ fn main() {
         (uaq::pack_codes(&codes, 4), p)
     });
 
-    // --- PJRT runtime (needs artifacts) ----------------------------------
-    match Manifest::load(&default_artifact_dir()) {
-        Ok(manifest) => {
-            let engine = Engine::new(&manifest).unwrap();
+    // --- PJRT runtime (needs artifacts + the `pjrt` feature) -------------
+    match Manifest::load(&default_artifact_dir())
+        .and_then(|m| Engine::new(&m).map(|e| (m, e)))
+    {
+        Ok((manifest, engine)) => {
             let rt = ModelRuntime::new(&engine, &manifest, "resnet_mini").unwrap();
             rt.preload_all().unwrap();
             let x = Tensor::zeros(manifest.input_shape.clone());

@@ -1,0 +1,124 @@
+//! Machine-readable bench output: every driver in `bench::` writes a
+//! `BENCH_<name>.json` next to its printed table (throughput, p50/p99
+//! latency, bubble ratio per configuration row — the RunReport::to_json
+//! schema) so the perf trajectory can be tracked across PRs by diffing
+//! files instead of scraping stdout. Target directory: `$COACH_BENCH_DIR`
+//! or the current directory.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::{RunReport, Table};
+use crate::util::Json;
+
+/// Accumulates one bench run's machine-readable rows.
+pub struct BenchJson {
+    name: String,
+    rows: Vec<Json>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> BenchJson {
+        BenchJson { name: name.to_string(), rows: Vec::new() }
+    }
+
+    /// Record one pipeline run under `label`
+    /// (e.g. "resnet101/nx/COACH/10Mbps").
+    pub fn add(&mut self, label: &str, report: &RunReport) {
+        let mut row = match report.to_json() {
+            Json::Obj(o) => o,
+            other => {
+                let mut o = BTreeMap::new();
+                o.insert("report".to_string(), other);
+                o
+            }
+        };
+        row.insert("label".to_string(), Json::Str(label.to_string()));
+        self.rows.push(Json::Obj(row));
+    }
+
+    /// Record a rendered table verbatim (drivers whose rows are not
+    /// pipeline runs, e.g. fig1's locality statistics).
+    pub fn add_table(&mut self, label: &str, table: &Table) {
+        let mut o = BTreeMap::new();
+        o.insert("label".to_string(), Json::Str(label.to_string()));
+        o.insert(
+            "header".to_string(),
+            Json::Arr(table.header.iter().map(|h| Json::Str(h.clone())).collect()),
+        );
+        o.insert(
+            "rows".to_string(),
+            Json::Arr(
+                table
+                    .rows
+                    .iter()
+                    .map(|r| {
+                        Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect())
+                    })
+                    .collect(),
+            ),
+        );
+        self.rows.push(Json::Obj(o));
+    }
+
+    /// Write `BENCH_<name>.json` into `$COACH_BENCH_DIR` (or the current
+    /// directory) and return its path.
+    pub fn write(&self) -> Result<PathBuf> {
+        let dir = std::env::var_os("COACH_BENCH_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."));
+        self.write_to(&dir)
+    }
+
+    /// Write `BENCH_<name>.json` into `dir` and return its path.
+    pub fn write_to(&self, dir: &std::path::Path) -> Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".to_string(), Json::Str(self.name.clone()));
+        obj.insert("rows".to_string(), Json::Arr(self.rows.clone()));
+        std::fs::write(&path, Json::Obj(obj).to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("[bench] wrote {}", path.display());
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::TaskOutcome;
+
+    #[test]
+    fn bench_json_round_trips() {
+        let r = RunReport {
+            scheme: "COACH".into(),
+            model: "vgg16".into(),
+            tasks: vec![TaskOutcome {
+                id: 0,
+                arrive: 0.0,
+                finish: 0.01,
+                latency: 0.01,
+                exited_early: false,
+                bits: 8,
+                wire_bytes: 100,
+                label: 1,
+                correct: true,
+            }],
+            ..Default::default()
+        };
+        let dir = std::env::temp_dir().join("coach_bench_emit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut b = BenchJson::new("emit_selftest");
+        b.add("row0", &r);
+        let path = b.write_to(&dir).unwrap();
+        let j = Json::from_file(&path).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "emit_selftest");
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("label").unwrap().as_str().unwrap(), "row0");
+        assert!(rows[0].get("throughput_its").unwrap().as_f64().unwrap() > 0.0);
+        std::fs::remove_file(path).ok();
+    }
+}

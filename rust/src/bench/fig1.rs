@@ -9,6 +9,7 @@
 
 use anyhow::Result;
 
+use crate::bench::emit::BenchJson;
 use crate::metrics::Table;
 use crate::runtime::{Engine, Manifest, ModelRuntime, Tensor};
 use crate::sim::{generate, Correlation};
@@ -130,5 +131,9 @@ pub fn run(manifest: &Manifest, model: &str, n_tasks: usize) -> Result<Fig1Resul
             format!("{}", seg.len()),
         ]);
     }
+    let mut json = BenchJson::new("fig1");
+    json.add_table(&format!("{model}/temporal"), &temporal);
+    json.add_table(&format!("{model}/spatial"), &spatial);
+    json.write()?;
     Ok(Fig1Result { temporal, spatial })
 }

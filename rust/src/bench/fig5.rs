@@ -11,9 +11,10 @@
 use anyhow::Result;
 
 use crate::baselines::Scheme;
+use crate::bench::emit::BenchJson;
 use crate::bench::{des_thresholds, SPINN_EXIT_THRESHOLD};
-use crate::coordinator::online::{CoachOnline, CoachOnlineDes};
-use crate::metrics::Table;
+use crate::coordinator::online::coach_des;
+use crate::metrics::{RunReport, Table};
 use crate::model::{topology, CostModel, DeviceProfile};
 use crate::network::BandwidthModel;
 use crate::partition::{AnalyticAcc, PartitionConfig, Strategy};
@@ -27,21 +28,19 @@ fn run_phase(
     scheme: Scheme,
     bw_mbps: f64,
     n_tasks: usize,
-) -> f64 {
+) -> RunReport {
     let sm = StageModel::from_strategy(g, cost, strat, bw_mbps);
     let bw = BandwidthModel::Static(bw_mbps);
     let tasks = generate(n_tasks, 1e-5, Correlation::Medium, 100, 7);
-    let report = match scheme {
+    match scheme {
         Scheme::Coach => {
-            let mut pol = CoachOnlineDes {
-                inner: CoachOnline::new(
-                    des_thresholds(),
-                    strat.base_bits(),
-                    sm.clone(),
-                    cost.clone(),
-                ),
-                graph: g.clone(),
-            };
+            let mut pol = coach_des(
+                des_thresholds(),
+                strat.base_bits(),
+                sm.clone(),
+                cost.clone(),
+                g.clone(),
+            );
             run_pipeline(g, cost, &sm, &bw, &tasks, &mut pol, "COACH")
         }
         Scheme::Spinn => {
@@ -54,8 +53,7 @@ fn run_phase(
                 StaticPolicy::no_exit(scheme.fixed_bits().unwrap_or(32));
             run_pipeline(g, cost, &sm, &bw, &tasks, &mut pol, scheme.name())
         }
-    };
-    report.throughput()
+    }
 }
 
 /// One Fig. 5 subplot: phases of the step trace; for every scheme,
@@ -64,6 +62,7 @@ pub fn subplot(
     model: &str,
     phases: &[f64],
     n_tasks: usize,
+    json: &mut BenchJson,
 ) -> Result<Table> {
     let g = topology::by_name(model)
         .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
@@ -87,12 +86,21 @@ pub fn subplot(
             let fresh_cfg =
                 PartitionConfig { bw_mbps: bw, ..Default::default() };
             let fresh = scheme.plan(&g, &cost, &AnalyticAcc, &fresh_cfg)?;
-            let st = run_phase(&g, &cost, &fresh, scheme, bw, n_tasks);
-            let dy = run_phase(&g, &cost, &stale, scheme, bw, n_tasks);
+            let fresh_r = run_phase(&g, &cost, &fresh, scheme, bw, n_tasks);
+            let dyn_r = run_phase(&g, &cost, &stale, scheme, bw, n_tasks);
+            json.add(
+                &format!("{model}/{}/{bw}Mbps/static", scheme.name()),
+                &fresh_r,
+            );
+            json.add(
+                &format!("{model}/{}/{bw}Mbps/dynamic", scheme.name()),
+                &dyn_r,
+            );
+            let dy = dyn_r.throughput();
             // "static throughput as the optimal throughput" (paper
             // §IV-C): COACH's online adjustment can beat its own fresh
             // offline plan, so the optimum is the better of the two.
-            let st = st.max(dy);
+            let st = fresh_r.throughput().max(dy);
             row.push(format!("{st:.1}"));
             row.push(format!("{dy:.1}"));
         }
@@ -101,16 +109,20 @@ pub fn subplot(
     Ok(t)
 }
 
-/// Full Fig. 5: (a) 20->10->5 and (b) 100->50->20 on ResNet101.
+/// Full Fig. 5: (a) 20->10->5 and (b) 100->50->20 on ResNet101 (also
+/// writes BENCH_fig5.json).
 pub fn run(n_tasks: usize) -> Result<Vec<(String, Table)>> {
-    Ok(vec![
+    let mut json = BenchJson::new("fig5");
+    let out = vec![
         (
             "fig5a resnet101 20->10->5 Mbps".into(),
-            subplot("resnet101", &[20.0, 10.0, 5.0], n_tasks)?,
+            subplot("resnet101", &[20.0, 10.0, 5.0], n_tasks, &mut json)?,
         ),
         (
             "fig5b resnet101 100->50->20 Mbps".into(),
-            subplot("resnet101", &[100.0, 50.0, 20.0], n_tasks)?,
+            subplot("resnet101", &[100.0, 50.0, 20.0], n_tasks, &mut json)?,
         ),
-    ])
+    ];
+    json.write()?;
+    Ok(out)
 }

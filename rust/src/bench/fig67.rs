@@ -5,12 +5,13 @@
 use anyhow::Result;
 
 use crate::baselines::Scheme;
+use crate::bench::emit::BenchJson;
 use crate::bench::{des_thresholds, plan_cfg, BW_GRID, SPINN_EXIT_THRESHOLD};
-use crate::coordinator::online::{CoachOnline, CoachOnlineDes};
+use crate::coordinator::online::coach_des;
 use crate::metrics::{RunReport, Table};
 use crate::model::{topology, CostModel, DeviceProfile};
 use crate::network::BandwidthModel;
-use crate::partition::{AnalyticAcc, PartitionConfig};
+use crate::partition::AnalyticAcc;
 use crate::pipeline::des::run_pipeline_opts;
 use crate::pipeline::{StageModel, StaticPolicy};
 use crate::sim::{generate, Correlation};
@@ -45,15 +46,13 @@ pub fn point(
 
     let report = match scheme {
         Scheme::Coach => {
-            let mut pol = CoachOnlineDes {
-                inner: CoachOnline::new(
-                    des_thresholds(),
-                    strat.base_bits(),
-                    sm.clone(),
-                    cost.clone(),
-                ),
-                graph: g.clone(),
-            };
+            let mut pol = coach_des(
+                des_thresholds(),
+                strat.base_bits(),
+                sm.clone(),
+                cost.clone(),
+                g.clone(),
+            );
             run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, "COACH", drop_after)
         }
         Scheme::Spinn => {
@@ -83,6 +82,7 @@ pub fn fig7(n_tasks: usize) -> Result<Vec<(String, Table)>> {
 
 fn sweep(n_tasks: usize, saturate: bool) -> Result<Vec<(String, Table)>> {
     let mut out = Vec::new();
+    let mut json = BenchJson::new(if saturate { "fig7" } else { "fig6" });
     for (model, dev) in [
         ("resnet101", DeviceProfile::jetson_nx()),
         ("vgg16", DeviceProfile::jetson_nx()),
@@ -99,6 +99,10 @@ fn sweep(n_tasks: usize, saturate: bool) -> Result<Vec<(String, Table)>> {
             let mut row = vec![scheme.name().to_string()];
             for &bw in &BW_GRID {
                 let r = point(model, dev.clone(), scheme, bw, n_tasks, saturate)?;
+                json.add(
+                    &format!("{model}/{}/{}/{bw}Mbps", dev.name, scheme.name()),
+                    &r,
+                );
                 if saturate {
                     row.push(format!("{:.1}", r.throughput()));
                 } else {
@@ -109,5 +113,6 @@ fn sweep(n_tasks: usize, saturate: bool) -> Result<Vec<(String, Table)>> {
         }
         out.push((format!("{model}/{}", dev.name), t));
     }
+    json.write()?;
     Ok(out)
 }

@@ -1,8 +1,11 @@
-//! Experiment harness: one driver per paper table/figure (DESIGN.md §6
-//! experiment index). Each driver returns a [`crate::metrics::Table`]
-//! whose rows mirror the paper's, and is callable both from the CLI
-//! (`coach bench-table1` ...) and the `cargo bench` targets.
+//! Experiment harness: one driver per paper table/figure
+//! (ARCHITECTURE.md §Experiment index). Each driver returns a
+//! [`crate::metrics::Table`] whose rows mirror the paper's, is callable
+//! both from the CLI (`coach bench-table1` ...) and the `cargo bench`
+//! targets, and writes a machine-readable `BENCH_<name>.json` via
+//! [`emit::BenchJson`] for cross-PR perf tracking.
 
+pub mod emit;
 pub mod fig1;
 pub mod fig5;
 pub mod fig67;
@@ -14,7 +17,7 @@ use crate::cache::Thresholds;
 /// DES-scale COACH thresholds.
 ///
 /// The DES workload generator emits separability hints on the same
-/// scale as the real mini-model measurements (EXPERIMENTS.md §Table II:
+/// scale as the real mini-model measurements (ARCHITECTURE.md §Experiment index:
 /// exit-eligible tasks score ~0.7-1.1, boundary tasks < 0.25). These
 /// constants are the DES counterpart of the calibration the real server
 /// performs at startup (`cache::calibrate`).

@@ -5,9 +5,10 @@
 use anyhow::Result;
 
 use crate::baselines::Scheme;
+use crate::bench::emit::BenchJson;
 use crate::bench::{des_thresholds, plan_cfg, SPINN_EXIT_THRESHOLD};
-use crate::coordinator::online::{CoachOnline, CoachOnlineDes};
-use crate::metrics::Table;
+use crate::coordinator::online::coach_des;
+use crate::metrics::{RunReport, Table};
 use crate::model::{topology, CostModel, DeviceProfile};
 use crate::network::BandwidthModel;
 use crate::partition::{AnalyticAcc, PartitionConfig};
@@ -26,10 +27,21 @@ pub fn cell(
     scheme: Scheme,
     n_tasks: usize,
 ) -> Result<f64> {
+    Ok(cell_reports(model, device, scheme, n_tasks)?.0)
+}
+
+/// The cell average plus the per-bandwidth reports behind it.
+fn cell_reports(
+    model: &str,
+    device: DeviceProfile,
+    scheme: Scheme,
+    n_tasks: usize,
+) -> Result<(f64, Vec<(f64, RunReport)>)> {
     let g = topology::by_name(model)
         .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
     let cost = CostModel::new(device, DeviceProfile::cloud_a6000());
     let mut lat_sum = 0.0;
+    let mut reports = Vec::new();
     for (bi, &bw_mbps) in TABLE1_BWS.iter().enumerate() {
         let cfg = plan_cfg(&g, &cost, bw_mbps, scheme)?;
         let strat = scheme.plan(&g, &cost, &AnalyticAcc, &cfg)?;
@@ -51,15 +63,13 @@ pub fn cell(
         );
         let report = match scheme {
             Scheme::Coach => {
-                let mut pol = CoachOnlineDes {
-                    inner: CoachOnline::new(
-                        des_thresholds(),
-                        strat.base_bits(),
-                        sm.clone(),
-                        cost.clone(),
-                    ),
-                    graph: g.clone(),
-                };
+                let mut pol = coach_des(
+                    des_thresholds(),
+                    strat.base_bits(),
+                    sm.clone(),
+                    cost.clone(),
+                    g.clone(),
+                );
                 run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, "COACH", drop_after)
             }
             Scheme::Spinn => {
@@ -76,8 +86,9 @@ pub fn cell(
             }
         };
         lat_sum += report.avg_latency_ms();
+        reports.push((bw_mbps, report));
     }
-    Ok(lat_sum / TABLE1_BWS.len() as f64)
+    Ok((lat_sum / TABLE1_BWS.len() as f64, reports))
 }
 
 /// Arrival period every scheme is subjected to in a scenario: 1.1x the
@@ -101,7 +112,7 @@ pub fn common_period(
     Ok(sm.t_e.max(t_t).max(sm.t_c) * 1.1 + 1e-4)
 }
 
-/// Full Table I.
+/// Full Table I (also writes BENCH_table1.json).
 pub fn run(n_tasks: usize) -> Result<Table> {
     let mut t = Table::new(&[
         "",
@@ -110,6 +121,7 @@ pub fn run(n_tasks: usize) -> Result<Table> {
         "VGG16/NX",
         "VGG16/TX2",
     ]);
+    let mut json = BenchJson::new("table1");
     for scheme in Scheme::ALL {
         let mut row = vec![scheme.name().to_string()];
         for (model, dev) in [
@@ -118,10 +130,18 @@ pub fn run(n_tasks: usize) -> Result<Table> {
             ("vgg16", DeviceProfile::jetson_nx()),
             ("vgg16", DeviceProfile::jetson_tx2()),
         ] {
-            let ms = cell(model, dev, scheme, n_tasks)?;
+            let dev_name = dev.name.clone();
+            let (ms, reports) = cell_reports(model, dev, scheme, n_tasks)?;
+            for (bw, r) in &reports {
+                json.add(
+                    &format!("{model}/{dev_name}/{}/{bw}Mbps", scheme.name()),
+                    r,
+                );
+            }
             row.push(format!("{ms:.2}"));
         }
         t.row(row);
     }
+    json.write()?;
     Ok(t)
 }

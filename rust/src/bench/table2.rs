@@ -1,9 +1,11 @@
 //! Table II: context-aware acceleration on the REAL pipeline (compiled
-//! artifacts, threaded server): early-exit ratio, latency (ms) and
-//! transmission cost (Kb) across data-correlation levels, per model.
+//! artifacts, threaded multi-stream server): early-exit ratio, latency
+//! (ms) and transmission cost (Kb) across data-correlation levels, per
+//! model.
 
 use anyhow::Result;
 
+use crate::bench::emit::BenchJson;
 use crate::coordinator::server::{serve, SchemePolicy, ServeCfg};
 use crate::metrics::Table;
 use crate::network::BandwidthModel;
@@ -11,7 +13,7 @@ use crate::runtime::Manifest;
 use crate::sim::Correlation;
 
 /// Rows: NoAdjust, Low, Medium, High; columns per model:
-/// Exit. / Ltc.(ms) / Trans.(Kb).
+/// Exit. / Ltc.(ms) / Trans.(Kb). Also writes BENCH_table2.json.
 pub fn run(
     manifest: &Manifest,
     n_tasks: usize,
@@ -24,6 +26,7 @@ pub fn run(
         header.push(format!("{m} Trans(Kb)"));
     }
     let mut t = Table { header, rows: Vec::new() };
+    let mut json = BenchJson::new("table2");
 
     let rows: [(Correlation, SchemePolicy); 4] = [
         (Correlation::High, SchemePolicy::no_adjust()), // NoAdjust baseline
@@ -36,12 +39,10 @@ pub fn run(
         let name = if i == 0 { "NoAdjust" } else { corr.name() };
         let mut row = vec![name.to_string()];
         for model in models {
-            let m = manifest.model(model)?;
             // offline cut: the measured partitioner lands on an early
             // block boundary at 20 Mbps (see `coach partition`), which
             // is also where GAP features are most cache-separable
-            // (EXPERIMENTS.md §TableII cut sweep).
-            let _ = m;
+            // (ARCHITECTURE.md §Experiment index, cut sweep).
             let cut = 1;
             let cfg = ServeCfg {
                 model: model.to_string(),
@@ -55,13 +56,16 @@ pub fn run(
                 eps: 0.005,
                 seed: 1234 + i as u64,
                 audit_every: 0,
+                n_streams: 1,
             };
             let res = serve(manifest, &cfg)?;
+            json.add(&format!("{model}/{name}"), &res.report);
             row.push(format!("{:.1}", res.report.exit_ratio() * 100.0));
             row.push(format!("{:.2}", res.report.avg_latency_ms()));
             row.push(format!("{:.1}", res.report.avg_wire_kb()));
         }
         t.row(row);
     }
+    json.write()?;
     Ok(t)
 }

@@ -68,6 +68,10 @@ pub struct Config {
     pub n_tasks: usize,
     pub correlation: Correlation,
     pub seed: u64,
+    /// concurrent device streams sharing the cloud engine ([serve])
+    pub n_streams: usize,
+    /// device slowdown vs the CPU-as-cloud ([serve], NX ~6, TX2 ~10.5)
+    pub device_scale: f64,
 }
 
 impl Default for Config {
@@ -84,6 +88,8 @@ impl Default for Config {
             n_tasks: 1000,
             correlation: Correlation::Medium,
             seed: 42,
+            n_streams: 1,
+            device_scale: 6.0,
         }
     }
 }
@@ -154,6 +160,15 @@ impl Config {
         if let Some(s) = raw.get_f64("workload", "seed")? {
             cfg.seed = s as u64;
         }
+        if let Some(ns) = raw.get_f64("serve", "n_streams")? {
+            if ns < 1.0 {
+                bail!("serve.n_streams must be >= 1, got {ns}");
+            }
+            cfg.n_streams = ns as usize;
+        }
+        if let Some(ds) = raw.get_f64("serve", "device_scale")? {
+            cfg.device_scale = ds;
+        }
         Ok(cfg)
     }
 }
@@ -184,6 +199,10 @@ period_ms = 5
 n_tasks = 200
 correlation = "high"
 seed = 7
+
+[serve]
+n_streams = 4
+device_scale = 10.5
 "#;
         let c = Config::from_str_toml(text).unwrap();
         assert_eq!(c.model, "vgg16");
@@ -195,6 +214,8 @@ seed = 7
         assert_eq!(c.n_tasks, 200);
         assert_eq!(c.correlation, Correlation::High);
         assert_eq!(c.seed, 7);
+        assert_eq!(c.n_streams, 4);
+        assert!((c.device_scale - 10.5).abs() < 1e-12);
     }
 
     #[test]
@@ -208,5 +229,6 @@ seed = 7
     fn rejects_bad_lines() {
         assert!(Config::from_str_toml("[x]\nnot a kv").is_err());
         assert!(Config::from_str_toml("[workload]\ncorrelation = \"x\"").is_err());
+        assert!(Config::from_str_toml("[serve]\nn_streams = 0").is_err());
     }
 }

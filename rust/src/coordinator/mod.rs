@@ -1,9 +1,13 @@
 //! Online inference scheduling (paper §III-C, Alg. 1 online component):
-//! the per-task early-exit + adaptive-quantization policy, and the real
-//! threaded serving pipeline over the PJRT runtime.
+//! DES-side assembly of the shared pipeline policy ([`online`]) and the
+//! real threaded multi-stream serving pipeline over the PJRT runtime
+//! ([`server`]). The decision logic itself lives in pipeline::policy —
+//! one implementation for both paths.
 
 pub mod online;
 pub mod server;
 
-pub use online::CoachOnline;
-pub use server::{serve, ServeCfg, ServeResult};
+pub use online::{coach_des, CoachOnline};
+pub use server::{
+    serve, serve_streams, SchemePolicy, ServeCfg, ServeResult, StreamCfg,
+};

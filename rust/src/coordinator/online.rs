@@ -1,114 +1,46 @@
-//! COACH's online decision policy (paper Eq. 10-11).
+//! DES-side construction of COACH's online policy.
 //!
-//! Per task: evaluate separability S against the semantic cache; if
-//! S > S_ext return the cached label (early exit, Eq. 10); otherwise
-//! derive the precision *requirement* Q_r from the S_adj thresholds and
-//! pick the transmitted precision Q_c (Eq. 11) that keeps the pipeline
-//! balanced under the live bandwidth estimate.
-//!
-//! Eq. 11 interpretation: among Q_c in [Q_r, base], pick the largest
-//! precision whose transmission time stays at or below the pipeline's
-//! other-stage maximum (no transmission bubble, best fidelity); if even
-//! Q_r exceeds it (degraded network), fall to Q_r — the most aggressive
-//! precision the accuracy constraint allows.
+//! The decision logic itself (paper Eq. 10-11) lives in ONE place —
+//! [`crate::pipeline::policy`] — and is shared with the real-execution
+//! server (coordinator::server prices Eq. 11 with live measured stage
+//! times via `MeasuredTransmitCost`). This module only assembles the
+//! analytic flavour the DES and paper-scale benches use: the shared
+//! [`CoachPolicy`] over a [`ModelTransmitCost`], with the cold-cache
+//! warmup ramp enabled.
 
 use crate::cache::Thresholds;
 use crate::model::{CostModel, ModelGraph};
-use crate::pipeline::{Decision, OnlinePolicy, StageModel};
-use crate::quant::clamp_bits;
-use crate::sim::SimTask;
+use crate::pipeline::{Coach, CoachPolicy, ModelTransmitCost, StageModel};
 
-/// COACH online policy for the DES pipeline (simulated separability).
-/// The real-execution server re-implements the same decision over real
-/// GAP features (coordinator::server).
-pub struct CoachOnline {
-    pub thresholds: Thresholds,
-    /// offline base precision (per the measured accuracy tables)
-    pub base_bits: u8,
-    pub sm: StageModel,
-    pub cost: CostModel,
-    /// cache warmup ramp: separability is scaled by min(1, seen/warmup)
-    pub warmup: usize,
-    seen: usize,
-    /// cut elems snapshot for Eq. 11's T_t'
-    all_cloud: bool,
-}
+/// COACH online policy over the analytic stage model — the DES flavour.
+pub type CoachOnline = Coach<ModelTransmitCost>;
 
-impl CoachOnline {
-    pub fn new(
-        thresholds: Thresholds,
-        base_bits: u8,
-        sm: StageModel,
-        cost: CostModel,
-    ) -> CoachOnline {
-        CoachOnline {
-            thresholds,
-            base_bits,
-            all_cloud: sm.cut_elems.is_empty(),
-            sm,
-            cost,
-            warmup: 40,
-            seen: 0,
-        }
-    }
+/// Number of observed tasks over which the DES ramps separability from
+/// a cold cache (the real server instead calibrates at startup).
+pub const DES_WARMUP: usize = 40;
 
-    /// Eq. 11: pick Q_c >= Q_r minimizing the transmission bubble.
-    pub fn adjust_bits(&self, q_r: u8, bw_mbps: f64, g: &ModelGraph) -> u8 {
-        let q_r = clamp_bits(q_r);
-        let hi = clamp_bits(self.base_bits.max(q_r));
-        let target = self.sm.t_e.max(self.sm.t_c);
-        let mut best = q_r;
-        for bits in q_r..=hi {
-            let t_t =
-                self.sm
-                    .t_transmit(&self.cost, g, bits, bw_mbps, self.all_cloud);
-            if t_t <= target {
-                best = bits; // highest precision that stays hidden
-            }
-        }
-        best
-    }
-}
-
-/// DES adapter: the graph is threaded through a thread-local because
-/// `OnlinePolicy::decide` is graph-agnostic; we capture a clone instead.
-pub struct CoachOnlineDes {
-    pub inner: CoachOnline,
-    pub graph: ModelGraph,
-}
-
-impl OnlinePolicy for CoachOnlineDes {
-    fn decide(&mut self, task: &SimTask, bw_est: f64) -> Decision {
-        let ramp =
-            (self.inner.seen as f64 / self.inner.warmup.max(1) as f64).min(1.0);
-        let s = task.separability * ramp;
-        if s > self.inner.thresholds.s_ext {
-            return Decision::Exit;
-        }
-        let q_r = self.inner.thresholds.required_bits(s, self.inner.base_bits);
-        let bits = self.inner.adjust_bits(q_r, bw_est, &self.graph);
-        Decision::Transmit { bits }
-    }
-
-    fn observe(&mut self, _task: &SimTask, _exited: bool) {
-        self.inner.seen += 1;
-    }
-}
-
-// expose warmup counter for adapters
-impl CoachOnline {
-    pub fn warmup_seen(&self) -> usize {
-        self.seen
+/// Assemble the DES online policy: shared Eq. 10/11 state over the
+/// analytic transmission cost of `(sm, cost, graph)`.
+pub fn coach_des(
+    thresholds: Thresholds,
+    base_bits: u8,
+    sm: StageModel,
+    cost: CostModel,
+    graph: ModelGraph,
+) -> CoachOnline {
+    Coach {
+        policy: CoachPolicy::new(thresholds, base_bits).with_warmup(DES_WARMUP),
+        cost: ModelTransmitCost::new(sm, cost, graph),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cache::Thresholds;
     use crate::model::topology::vgg16;
     use crate::model::DeviceProfile;
     use crate::partition::{AnalyticAcc, PartitionConfig};
+    use crate::pipeline::{Decision, OnlinePolicy, TaskView};
 
     fn setup() -> (ModelGraph, CostModel, StageModel, u8) {
         let g = vgg16();
@@ -125,71 +57,49 @@ mod tests {
     }
 
     #[test]
-    fn degraded_network_drops_bits() {
-        let (g, cost, sm, base) = setup();
-        let th = Thresholds { s_ext: 10.0, s_adj: vec![0.3, 0.6] };
-        let pol = CoachOnline::new(th, base, sm, cost);
-        let fast = pol.adjust_bits(3, 100.0, &g);
-        let slow = pol.adjust_bits(3, 1.0, &g);
-        assert!(
-            slow <= fast,
-            "slow net must not raise precision: {slow} vs {fast}"
-        );
-        assert_eq!(slow, 3, "degraded net falls to Q_r");
-    }
-
-    #[test]
-    fn q_r_is_a_floor() {
-        let (g, cost, sm, base) = setup();
-        let th = Thresholds { s_ext: 10.0, s_adj: vec![] };
-        let pol = CoachOnline::new(th, base, sm, cost);
-        for q_r in 2..=8u8 {
-            let bits = pol.adjust_bits(q_r, 10.0, &g);
-            assert!(bits >= q_r);
-            assert!(bits <= base.max(q_r));
-        }
-    }
-
-    #[test]
-    fn des_adapter_exits_above_threshold() {
+    fn des_adapter_exits_above_threshold_once_warm() {
         let (g, cost, sm, base) = setup();
         let th = Thresholds { s_ext: 0.5, s_adj: vec![] };
-        let mut pol = CoachOnlineDes {
-            inner: CoachOnline::new(th, base, sm, cost),
-            graph: g,
-        };
-        pol.inner.warmup = 1;
-        pol.inner.seen = 10;
-        let hot = SimTask {
-            id: 0,
-            arrive: 0.0,
-            label: 1,
-            separability: 0.9,
-            exit_correct: true,
-            context: 0,
-        };
-        let cold = SimTask { separability: 0.1, ..hot.clone() };
-        assert_eq!(pol.decide(&hot, 20.0), Decision::Exit);
-        assert!(matches!(pol.decide(&cold, 20.0), Decision::Transmit { .. }));
+        let mut pol = coach_des(th, base, sm, cost, g);
+        // warm the ramp past its horizon
+        for _ in 0..2 * DES_WARMUP {
+            pol.observe(false);
+        }
+        let hot = TaskView { separability: 0.9, bw_est_mbps: 20.0 };
+        let cold = TaskView { separability: 0.1, bw_est_mbps: 20.0 };
+        assert_eq!(pol.decide(hot), Decision::Exit);
+        assert!(matches!(pol.decide(cold), Decision::Transmit { .. }));
     }
 
     #[test]
     fn warmup_suppresses_early_exits() {
         let (g, cost, sm, base) = setup();
         let th = Thresholds { s_ext: 0.5, s_adj: vec![] };
-        let mut pol = CoachOnlineDes {
-            inner: CoachOnline::new(th, base, sm, cost),
-            graph: g,
-        };
+        let mut pol = coach_des(th, base, sm, cost, g);
         // cache cold: even a hot task must not exit
-        let hot = SimTask {
-            id: 0,
-            arrive: 0.0,
-            label: 1,
-            separability: 0.9,
-            exit_correct: true,
-            context: 0,
+        let hot = TaskView { separability: 0.9, bw_est_mbps: 20.0 };
+        assert!(matches!(pol.decide(hot), Decision::Transmit { .. }));
+    }
+
+    #[test]
+    fn degraded_network_never_raises_bits() {
+        let (g, cost, sm, base) = setup();
+        let th = Thresholds { s_ext: 10.0, s_adj: vec![0.3, 0.6] };
+        let mut pol = coach_des(th, base, sm, cost, g);
+        for _ in 0..2 * DES_WARMUP {
+            pol.observe(false);
+        }
+        let at = |pol: &mut CoachOnline, bw: f64| match pol
+            .decide(TaskView { separability: 0.7, bw_est_mbps: bw })
+        {
+            Decision::Transmit { bits } => bits,
+            Decision::Exit => panic!("s_ext=10 must never exit"),
         };
-        assert!(matches!(pol.decide(&hot, 20.0), Decision::Transmit { .. }));
+        let fast = at(&mut pol, 100.0);
+        let slow = at(&mut pol, 1.0);
+        assert!(
+            slow <= fast,
+            "slow net must not raise precision: {slow} vs {fast}"
+        );
     }
 }

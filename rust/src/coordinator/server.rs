@@ -1,38 +1,50 @@
-//! Real-execution serving pipeline over the PJRT runtime (std::thread
-//! based; the offline environment has no tokio — see Cargo.toml note).
+//! Real-execution multi-stream serving over the PJRT runtime, built on
+//! the shared pipeline scheduler core (pipeline::driver::run_real,
+//! std::thread based; the offline environment has no tokio — see
+//! rust/Cargo.toml note).
 //!
-//! Three pipeline workers mirror the paper's three stages:
+//! N device streams — each with its own PJRT `Engine`, semantic cache,
+//! cut point, device-scale and policy state — feed ONE shared cloud
+//! `Engine` through a FIFO link stage:
 //!
-//! - **device thread** — owns its own PJRT `Engine`; runs the device
-//!   prefix blocks, extracts the GAP feature (L1 kernel artifact),
-//!   evaluates the semantic cache (Eq. 8-10), decides early-exit vs
-//!   transmit-at-Q_c (Eq. 11), and applies the UAQ round trip (L1
-//!   kernel artifact) before "transmission".
-//! - **link thread** — simulated WiFi: sleeps for
-//!   `wire_bytes / bw(t)` per task (DESIGN.md §3 substitution).
-//! - **cloud thread** — owns a second `Engine`; runs the suffix blocks
-//!   and returns the label, which the device uses to update the cache
-//!   (Eq. 7).
+//! - **device threads (xN)** — run the device prefix blocks, extract the
+//!   GAP feature (L1 kernel artifact), evaluate the semantic cache
+//!   (Eq. 8-10), consult the SHARED online policy
+//!   (pipeline::policy::CoachPolicy — the same Eq. 10/11 code the DES
+//!   runs) priced with live measured stage times, and apply the UAQ
+//!   round trip (L1 kernel artifact) before "transmission".
+//! - **link thread** — simulated WiFi shared by all streams: sleeps
+//!   `wire_bytes / bw(t)` per task, FIFO (ARCHITECTURE.md
+//!   §Substitutions).
+//! - **cloud thread** — owns the single shared `Engine`; runs each
+//!   stream's suffix blocks and returns the label, which the origin
+//!   stream folds into its cache (Eq. 7).
 //!
 //! Device-speed emulation: the paper's Jetson NX/TX2 are slower than
 //! this CPU relative to the A6000 cloud. The cloud thread runs at raw
-//! CPU speed (playing the A6000); the device thread pads each block
-//! with `(scale - 1) x` its measured duration so the device:cloud
+//! CPU speed (playing the A6000); each device thread pads its blocks
+//! with `(scale - 1) x` their measured duration so the device:cloud
 //! ratio matches the testbed (NX ~6x, TX2 ~10.5x slower than cloud).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::cache::{calibrate, SemanticCache, Thresholds};
-use crate::metrics::{RunReport, StageUsage, TaskOutcome};
-use crate::model::CostModel;
+use crate::metrics::RunReport;
+use crate::model::{CostModel, DeviceProfile};
 use crate::network::BandwidthModel;
+use crate::pipeline::driver::{run_real, RealCfg};
+use crate::pipeline::stage::{CloudStage, DeviceStage, DeviceVerdict};
+use crate::pipeline::{
+    Clock, CoachPolicy, Decision, MeasuredTransmitCost, OnlinePolicy,
+    StaticPolicy, TaskView, WallClock,
+};
 use crate::runtime::{Engine, Manifest, ModelRuntime, Tensor};
-use crate::sim::{generate, Correlation};
+use crate::sim::{generate, Correlation, SimTask};
 use crate::util::Rng;
 
 /// Scheme behaviour knobs for the real pipeline.
@@ -54,7 +66,8 @@ impl SchemePolicy {
     }
 }
 
-/// Real-serving configuration.
+/// Real-serving configuration (uniform across streams; see
+/// [`serve_streams`] for heterogeneous fleets).
 #[derive(Debug, Clone)]
 pub struct ServeCfg {
     pub model: String,
@@ -64,330 +77,419 @@ pub struct ServeCfg {
     /// device slowdown relative to the CPU-as-cloud (NX ~6, TX2 ~10.5)
     pub device_scale: f64,
     pub bw: BandwidthModel,
-    /// arrival period, seconds
+    /// arrival period per stream, seconds
     pub period: f64,
+    /// tasks per stream
     pub n_tasks: usize,
     pub correlation: Correlation,
     pub eps: f64,
     pub seed: u64,
     /// audit every k-th early-exit against the full model (0 = off)
     pub audit_every: usize,
+    /// concurrent device streams sharing the single cloud engine
+    pub n_streams: usize,
+}
+
+/// Per-stream overrides for a heterogeneous fleet.
+#[derive(Debug, Clone)]
+pub struct StreamCfg {
+    pub cut: usize,
+    pub device_scale: f64,
+    pub correlation: Correlation,
+    pub seed: u64,
+    /// arrival period of this stream, seconds
+    pub period: f64,
 }
 
 /// Outcome of a serve run.
 pub struct ServeResult {
+    /// cross-stream aggregate (identical to the stream's own report when
+    /// `n_streams == 1`)
     pub report: RunReport,
+    pub per_stream: Vec<RunReport>,
+    /// calibrated thresholds of stream 0's cut
     pub thresholds: Thresholds,
     pub base_bits: u8,
 }
 
-struct WireMsg {
-    id: usize,
-    arrive: Instant,
-    tensor: Tensor, // already UAQ-roundtripped (codec applied)
-    wire_bytes: usize,
-    bits: u8,
-    label_hint: usize,
+/// Wire payload of the PJRT pipeline: the (already UAQ-roundtripped)
+/// cut activation plus the GAP feature that rides along for the cache
+/// update on result return.
+pub struct WireMsg {
+    tensor: Tensor,
     feature: Vec<f32>,
+    cut: usize,
 }
 
-/// Run the real pipeline; blocks until all tasks complete.
-pub fn serve(manifest: &Manifest, cfg: &ServeCfg) -> Result<ServeResult> {
-    let model = manifest.model(&cfg.model)?.clone();
-    let n_blocks = model.blocks.len();
-    anyhow::ensure!(cfg.cut + 1 < n_blocks, "cut {} out of range", cfg.cut);
+/// Per-stream online policy: either the shared COACH implementation over
+/// live measured stage costs, or a fixed-precision baseline. Note there
+/// is no Q_c selection logic here — both arms delegate to
+/// pipeline::policy.
+enum StreamPolicy {
+    Static(StaticPolicy),
+    Coach { policy: CoachPolicy, cost: MeasuredTransmitCost },
+}
 
-    let base_bits = cfg
-        .policy
-        .bits
-        .map(|b| {
-            if cfg.policy.adaptive_quant {
-                manifest
-                    .acc
-                    .min_bits(&cfg.model, cfg.cut, cfg.eps)
-                    .unwrap_or(8)
-            } else {
-                b
+impl StreamPolicy {
+    fn decide(&mut self, separability: f64, bw_est_mbps: f64) -> Decision {
+        match self {
+            StreamPolicy::Static(p) => {
+                p.decide(TaskView { separability, bw_est_mbps })
             }
-        })
-        .unwrap_or(32);
-
-    let tasks = generate(
-        cfg.n_tasks,
-        cfg.period,
-        cfg.correlation,
-        manifest.n_classes,
-        cfg.seed,
-    );
-
-    let (tx_link, rx_link) = mpsc::channel::<WireMsg>();
-    let (tx_cloud, rx_cloud) = mpsc::channel::<WireMsg>();
-    let (tx_result, rx_result) = mpsc::channel::<(usize, usize, Vec<f32>)>();
-    let (tx_out, rx_out) = mpsc::channel::<TaskOutcome>();
-
-    let dev_busy = Arc::new(AtomicU64::new(0));
-    let link_busy = Arc::new(AtomicU64::new(0));
-    let cloud_busy = Arc::new(AtomicU64::new(0));
-
-    let t0 = Instant::now();
-    let cost = CostModel::new(
-        crate::model::DeviceProfile::jetson_nx(),
-        crate::model::DeviceProfile::cloud_a6000(),
-    );
-
-    // ---------------- link thread (simulated WiFi) --------------------
-    let bw = cfg.bw.clone();
-    let link_busy2 = link_busy.clone();
-    let link_handle = thread::spawn(move || {
-        while let Ok(msg) = rx_link.recv() {
-            let now = t0.elapsed().as_secs_f64();
-            let secs = bw.transmit_time(msg.wire_bytes, now);
-            thread::sleep(Duration::from_secs_f64(secs));
-            link_busy2.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
-            if tx_cloud.send(msg).is_err() {
-                break;
+            StreamPolicy::Coach { policy, cost } => {
+                policy.decide(separability, bw_est_mbps, cost)
             }
         }
-    });
+    }
 
-    // ---------------- cloud thread (own engine) -----------------------
-    let manifest_cloud = manifest.clone();
-    let model_name = cfg.model.clone();
-    let cut = cfg.cut;
-    let cloud_busy2 = cloud_busy.clone();
-    let tx_out_cloud = tx_out.clone();
-    let cloud_handle = thread::spawn(move || -> Result<()> {
-        let engine = Engine::new(&manifest_cloud)?;
-        let rt = ModelRuntime::new(&engine, &manifest_cloud, &model_name)?;
-        // preload suffix blocks
-        for b in &rt.model.blocks[cut + 1..] {
-            engine.preload(&b.artifact)?;
+    fn observe(&mut self, exited: bool) {
+        if let StreamPolicy::Coach { policy, .. } = self {
+            policy.observe(exited);
         }
-        while let Ok(msg) = rx_cloud.recv() {
-            let s = Instant::now();
-            let logits = rt.run_cloud(cut, &msg.tensor)?;
-            let dur = s.elapsed();
-            cloud_busy2.fetch_add(dur.as_nanos() as u64, Ordering::Relaxed);
-            let label = logits.argmax();
-            // result return to device (tiny payload, charged to latency
-            // via the result channel consumer)
-            let _ = tx_result.send((msg.id, label, msg.feature.clone()));
-            let finish = t0.elapsed().as_secs_f64();
-            let arrive = msg.arrive.duration_since(t0).as_secs_f64();
-            let _ = tx_out_cloud.send(TaskOutcome {
-                id: msg.id,
-                arrive,
-                finish,
-                latency: finish - arrive,
-                exited_early: false,
-                bits: msg.bits,
-                wire_bytes: msg.wire_bytes,
-                label,
-                correct: label == msg.label_hint,
-            });
+    }
+}
+
+/// Map the scheme knobs onto the shared policy for one stream.
+fn stream_policy(
+    scheme: &SchemePolicy,
+    calibrated: &Thresholds,
+    base_bits: u8,
+    elems: usize,
+    cost: CostModel,
+) -> StreamPolicy {
+    let s_ext = if scheme.early_exit {
+        calibrated.s_ext
+    } else {
+        f64::INFINITY
+    };
+    match scheme.bits {
+        // raw f32 transmission (optionally with threshold early-exit)
+        None => StreamPolicy::Static(StaticPolicy {
+            bits: 32,
+            exit_threshold: s_ext,
+        }),
+        // fixed precision passes through UNCLAMPED (e.g. Some(16) stays
+        // 16); only the adaptive Eq. 11 search is bounded to 2..=8
+        Some(b) if !scheme.adaptive_quant => {
+            StreamPolicy::Static(StaticPolicy { bits: b, exit_threshold: s_ext })
         }
-        Ok(())
-    });
-
-    // ---------------- device thread (own engine + cache) --------------
-    let manifest_dev = manifest.clone();
-    let cfg_dev = cfg.clone();
-    let dev_busy2 = dev_busy.clone();
-    let cost_dev = cost.clone();
-    let tx_out_dev = tx_out.clone();
-    let device_handle = thread::spawn(move || -> Result<ServeDeviceOut> {
-        let engine = Engine::new(&manifest_dev)?;
-        let rt = ModelRuntime::new(&engine, &manifest_dev, &cfg_dev.model)?;
-        rt.preload_all()?;
-
-        // ---- warmup: semantic cache + thresholds from calibration ----
-        let (cache, thresholds) =
-            warm_cache(&rt, &manifest_dev, cfg_dev.cut, cfg_dev.eps)?;
-        let mut cache = cache;
-
-        let patterns = manifest_dev.read_f32(&manifest_dev.patterns.file)?;
-        let isz: usize = manifest_dev.input_shape.iter().product();
-        let sigma = manifest_dev.patterns.sigma;
-        let mut rng = Rng::new(cfg_dev.seed ^ 0xD0D0);
-
-        let tasks = tasks; // move
-        let mut audit_full = 0usize;
-        let mut audit_agree = 0usize;
-
-        for task in &tasks {
-            // pace arrivals in real time
-            let target = task.arrive;
-            loop {
-                let now = t0.elapsed().as_secs_f64();
-                if now >= target {
-                    break;
-                }
-                thread::sleep(Duration::from_secs_f64(
-                    (target - now).min(0.002),
-                ));
+        Some(_) => {
+            let th = Thresholds { s_ext, s_adj: calibrated.s_adj.clone() };
+            StreamPolicy::Coach {
+                policy: CoachPolicy::new(th, base_bits),
+                // stage estimates refreshed from the engine's running
+                // average before each decision
+                cost: MeasuredTransmitCost { elems, cost, t_e: 2e-3, t_c: 2e-3 },
             }
-            let arrive_instant = Instant::now();
+        }
+    }
+}
 
-            // synthesize the input: class pattern + per-video context
-            // offset (shared by all frames of a run — the temporal
-            // locality the cache exploits) + per-frame noise
-            let mut ctx_rng = Rng::new(task.context);
-            let mut data = patterns[task.label * isz..(task.label + 1) * isz]
-                .to_vec();
-            for v in data.iter_mut() {
-                *v += 2.2 * sigma * ctx_rng.normal() as f32
-                    + sigma * rng.normal() as f32;
-            }
-            let x = Tensor::new(manifest_dev.input_shape.clone(), data)?;
+/// Device stage of one stream over its private PJRT engine.
+struct PjrtDevice {
+    engine: Engine,
+    manifest: Manifest,
+    model: String,
+    cut: usize,
+    n_blocks: usize,
+    device_scale: f64,
+    policy: StreamPolicy,
+    cache: SemanticCache,
+    bw: BandwidthModel,
+    clock: WallClock,
+    patterns: Arc<Vec<f32>>,
+    isz: usize,
+    sigma: f32,
+    rng: Rng,
+    audit_every: usize,
+    cost: CostModel,
+}
 
-            // ---- device stage: prefix blocks + feature ----------------
-            let s = Instant::now();
-            let act = rt.run_device(cfg_dev.cut, &x)?;
-            let feat = rt.gap_feature(&act)?;
-            let real = s.elapsed();
-            // pad to emulate the slower end device
-            if cfg_dev.device_scale > 1.0 {
-                thread::sleep(real.mul_f64(cfg_dev.device_scale - 1.0));
-            }
-            dev_busy2.fetch_add(
-                (real.as_nanos() as f64 * cfg_dev.device_scale) as u64,
-                Ordering::Relaxed,
-            );
+impl DeviceStage for PjrtDevice {
+    type Wire = WireMsg;
+    type Feedback = (usize, Vec<f32>);
 
-            // ---- online decision --------------------------------------
-            let sep = cache.separability(&feat.data);
-            if cfg_dev.policy.early_exit && sep.s > thresholds.s_ext {
-                // Eq. 10: cached result
-                let finish = t0.elapsed().as_secs_f64();
-                let arrive = arrive_instant.duration_since(t0).as_secs_f64()
-                    - 0.0;
-                let arrive = arrive.min(finish);
-                let correct = if cfg_dev.audit_every > 0
-                    && task.id % cfg_dev.audit_every == 0
+    fn process(
+        &mut self,
+        task: &SimTask,
+    ) -> Result<(DeviceVerdict<WireMsg>, f64)> {
+        let rt = ModelRuntime::new(&self.engine, &self.manifest, &self.model)?;
+
+        // synthesize the input: class pattern + per-video context offset
+        // (shared by all frames of a run — the temporal locality the
+        // cache exploits) + per-frame noise
+        let mut ctx_rng = Rng::new(task.context);
+        let mut data = self.patterns
+            [task.label * self.isz..(task.label + 1) * self.isz]
+            .to_vec();
+        for v in data.iter_mut() {
+            *v += 2.2 * self.sigma * ctx_rng.normal() as f32
+                + self.sigma * self.rng.normal() as f32;
+        }
+        let x = Tensor::new(self.manifest.input_shape.clone(), data)?;
+
+        // ---- device stage: prefix blocks + feature --------------------
+        let s = Instant::now();
+        let act = rt.run_device(self.cut, &x)?;
+        let feat = rt.gap_feature(&act)?;
+        let real = s.elapsed();
+        // pad to emulate the slower end device; only scaled compute is
+        // billed as device busy time (not synthesis or audits)
+        if self.device_scale > 1.0 {
+            thread::sleep(real.mul_f64(self.device_scale - 1.0));
+        }
+        let mut busy = real.as_secs_f64() * self.device_scale.max(1.0);
+
+        // ---- online decision (shared Eq. 10/11) -----------------------
+        let sep = self.cache.separability(&feat.data);
+        if let StreamPolicy::Coach { cost, .. } = &mut self.policy {
+            let per = self.engine.avg_exec_secs().unwrap_or(2e-3);
+            cost.t_e = per * (self.cut + 1) as f64 * self.device_scale;
+            cost.t_c = per * (self.n_blocks - self.cut - 1) as f64;
+        }
+        let bw_est = self.bw.estimate_mbps(self.clock.now());
+        let decision = self.policy.decide(sep.s, bw_est);
+        self.policy.observe(matches!(decision, Decision::Exit));
+
+        match decision {
+            Decision::Exit => {
+                // Eq. 10: cached result; optionally audited vs fp32
+                let correct = if self.audit_every > 0
+                    && task.id % self.audit_every == 0
                 {
-                    let full = rt.run_blocks(
-                        0,
-                        rt.model.blocks.len(),
-                        &x,
-                    )?;
-                    audit_full += 1;
-                    let ok = full.argmax() == sep.best_label;
-                    if ok {
-                        audit_agree += 1;
-                    }
-                    ok
+                    let full = rt.run_blocks(0, rt.model.blocks.len(), &x)?;
+                    full.argmax() == sep.best_label
                 } else {
                     true
                 };
-                let _ = tx_out_dev.send(TaskOutcome {
-                    id: task.id,
-                    arrive,
-                    finish,
-                    latency: finish - arrive,
-                    exited_early: true,
-                    bits: 0,
-                    wire_bytes: 0,
-                    label: sep.best_label,
-                    correct,
-                });
-                continue;
+                Ok((DeviceVerdict::Exit { label: sep.best_label, correct }, busy))
             }
-
-            // Eq. 11: adaptive precision under the live bandwidth
-            let bits = if let Some(fixed) = cfg_dev.policy.bits {
-                if cfg_dev.policy.adaptive_quant {
-                    let q_r = thresholds.required_bits(sep.s, base_bits);
-                    let bw_est =
-                        cfg_dev.bw.estimate_mbps(t0.elapsed().as_secs_f64());
-                    adjust_bits_real(
-                        &cost_dev, &rt, cfg_dev.cut, q_r, base_bits, bw_est,
-                        cfg_dev.device_scale,
-                    )
+            Decision::Transmit { bits } => {
+                // codec: UAQ round trip through the compiled kernel
+                let (sent, wire_bytes) = if bits < 32 {
+                    let s2 = Instant::now();
+                    let q = rt.uaq_roundtrip(&act, bits)?;
+                    let d2 = s2.elapsed();
+                    if self.device_scale > 1.0 {
+                        thread::sleep(d2.mul_f64(self.device_scale - 1.0));
+                    }
+                    busy += d2.as_secs_f64() * self.device_scale.max(1.0);
+                    (q, self.cost.wire_bytes(act.elems(), bits))
                 } else {
-                    fixed
-                }
-            } else {
-                32
-            };
-
-            // codec: UAQ round trip through the compiled kernel
-            let (sent, wire_bytes) = if bits < 32 {
-                let s2 = Instant::now();
-                let q = rt.uaq_roundtrip(&act, bits)?;
-                let d2 = s2.elapsed();
-                dev_busy2.fetch_add(
-                    (d2.as_nanos() as f64 * cfg_dev.device_scale) as u64,
-                    Ordering::Relaxed,
-                );
-                (q, cost_dev.wire_bytes(act.elems(), bits))
-            } else {
-                (act.clone(), cost_dev.wire_bytes(act.elems(), 32))
-            };
-
-            tx_link
-                .send(WireMsg {
-                    id: task.id,
-                    arrive: arrive_instant,
-                    tensor: sent,
-                    wire_bytes,
-                    bits,
-                    label_hint: task.label,
-                    feature: feat.data.clone(),
-                })
-                .context("link closed")?;
-
-            // ---- fold returned labels into the cache -------------------
-            while let Ok((_, label, feature)) = rx_result.try_recv() {
-                cache.update(label, &feature);
+                    (act.clone(), self.cost.wire_bytes(act.elems(), 32))
+                };
+                Ok((
+                    DeviceVerdict::Transmit {
+                        wire: WireMsg {
+                            tensor: sent,
+                            feature: feat.data,
+                            cut: self.cut,
+                        },
+                        bits,
+                        wire_bytes,
+                    },
+                    busy,
+                ))
             }
         }
-        drop(tx_link);
-        Ok(ServeDeviceOut { thresholds, audit_full, audit_agree })
-    });
+    }
 
-    // ---------------- collect ------------------------------------------
-    drop(tx_out);
-    let mut outcomes: Vec<TaskOutcome> = rx_out.into_iter().collect();
-    outcomes.sort_by_key(|o| o.id);
-
-    let dev_out = device_handle
-        .join()
-        .map_err(|_| anyhow::anyhow!("device thread panicked"))??;
-    link_handle
-        .join()
-        .map_err(|_| anyhow::anyhow!("link thread panicked"))?;
-    cloud_handle
-        .join()
-        .map_err(|_| anyhow::anyhow!("cloud thread panicked"))??;
-
-    let span = outcomes
-        .iter()
-        .map(|o| o.finish)
-        .fold(0.0f64, f64::max)
-        - outcomes.iter().map(|o| o.arrive).fold(f64::INFINITY, f64::min);
-    let ns = |a: &Arc<AtomicU64>| a.load(Ordering::Relaxed) as f64 / 1e9;
-    let report = RunReport {
-        dropped: 0,
-        scheme: "real".into(),
-        model: cfg.model.clone(),
-        tasks: outcomes,
-        device: StageUsage { busy: ns(&dev_busy), span },
-        link: StageUsage { busy: ns(&link_busy), span },
-        cloud: StageUsage { busy: ns(&cloud_busy), span },
-    };
-    let _ = (dev_out.audit_full, dev_out.audit_agree);
-    Ok(ServeResult { report, thresholds: dev_out.thresholds, base_bits })
+    /// Fold a returned label into the cache (Eq. 7).
+    fn absorb(&mut self, (label, feature): (usize, Vec<f32>)) {
+        self.cache.update(label, &feature);
+    }
 }
 
-struct ServeDeviceOut {
-    thresholds: Thresholds,
-    audit_full: usize,
-    audit_agree: usize,
+/// Cloud stage shared by every stream: one engine, one thread.
+struct PjrtCloud {
+    engine: Engine,
+    manifest: Manifest,
+    model: String,
+}
+
+impl CloudStage for PjrtCloud {
+    type Wire = WireMsg;
+    type Feedback = (usize, Vec<f32>);
+
+    fn process(&mut self, msg: WireMsg) -> Result<(usize, (usize, Vec<f32>))> {
+        let rt = ModelRuntime::new(&self.engine, &self.manifest, &self.model)?;
+        let logits = rt.run_cloud(msg.cut, &msg.tensor)?;
+        let label = logits.argmax();
+        Ok((label, (label, msg.feature)))
+    }
+}
+
+/// Run the real pipeline with `cfg.n_streams` identical streams; blocks
+/// until all tasks complete.
+pub fn serve(manifest: &Manifest, cfg: &ServeCfg) -> Result<ServeResult> {
+    let n = cfg.n_streams.max(1);
+    let streams: Vec<StreamCfg> = (0..n)
+        .map(|i| StreamCfg {
+            cut: cfg.cut,
+            device_scale: cfg.device_scale,
+            correlation: cfg.correlation,
+            seed: cfg.seed.wrapping_add(101 * i as u64),
+            period: cfg.period,
+        })
+        .collect();
+    serve_streams(manifest, cfg, &streams)
+}
+
+/// Run the real pipeline with an explicit (possibly heterogeneous)
+/// stream fleet sharing one cloud engine.
+pub fn serve_streams(
+    manifest: &Manifest,
+    cfg: &ServeCfg,
+    streams: &[StreamCfg],
+) -> Result<ServeResult> {
+    anyhow::ensure!(!streams.is_empty(), "need at least one stream");
+    let model = manifest.model(&cfg.model)?.clone();
+    let n_blocks = model.blocks.len();
+    for st in streams {
+        anyhow::ensure!(st.cut + 1 < n_blocks, "cut {} out of range", st.cut);
+    }
+
+    // ---- one-time calibration per distinct cut (temporary engine) -----
+    let mut calib: BTreeMap<usize, (SemanticCache, Thresholds)> = BTreeMap::new();
+    {
+        let engine = Engine::new(manifest)?;
+        let rt = ModelRuntime::new(&engine, manifest, &cfg.model)?;
+        for st in streams {
+            if let std::collections::btree_map::Entry::Vacant(e) =
+                calib.entry(st.cut)
+            {
+                e.insert(warm_cache(&rt, manifest, st.cut, cfg.eps)?);
+            }
+        }
+    }
+
+    let base_bits_for = |cut: usize| -> u8 {
+        cfg.policy
+            .bits
+            .map(|b| {
+                if cfg.policy.adaptive_quant {
+                    manifest
+                        .acc
+                        .min_bits(&cfg.model, cut, cfg.eps)
+                        .unwrap_or(8)
+                } else {
+                    b
+                }
+            })
+            .unwrap_or(32)
+    };
+
+    let patterns = Arc::new(manifest.read_f32(&manifest.patterns.file)?);
+    let isz: usize = manifest.input_shape.iter().product();
+    let cost = CostModel::new(
+        DeviceProfile::jetson_nx(),
+        DeviceProfile::cloud_a6000(),
+    );
+    let clock = WallClock::new();
+
+    // ---- device stream factories --------------------------------------
+    let mut specs = Vec::with_capacity(streams.len());
+    for st in streams {
+        let tasks = generate(
+            cfg.n_tasks,
+            st.period,
+            st.correlation,
+            manifest.n_classes,
+            st.seed,
+        );
+        let (cache, thresholds) = calib[&st.cut].clone();
+        let policy = stream_policy(
+            &cfg.policy,
+            &thresholds,
+            base_bits_for(st.cut),
+            model.cut_elems(st.cut),
+            cost.clone(),
+        );
+        let manifest_c = manifest.clone();
+        let model_name = cfg.model.clone();
+        let patterns_c = patterns.clone();
+        let bw_c = cfg.bw.clone();
+        let cost_c = cost.clone();
+        let (cut, scale, seed) = (st.cut, st.device_scale, st.seed);
+        let (audit_every, sigma) = (cfg.audit_every, manifest.patterns.sigma);
+        let factory = move || -> Result<PjrtDevice> {
+            let engine = Engine::new(&manifest_c)?;
+            {
+                let rt = ModelRuntime::new(&engine, &manifest_c, &model_name)?;
+                rt.preload_all()?;
+            }
+            Ok(PjrtDevice {
+                engine,
+                manifest: manifest_c,
+                model: model_name,
+                cut,
+                n_blocks,
+                device_scale: scale,
+                policy,
+                cache,
+                bw: bw_c,
+                clock,
+                patterns: patterns_c,
+                isz,
+                sigma,
+                rng: Rng::new(seed ^ 0xD0D0),
+                audit_every,
+                cost: cost_c,
+            })
+        };
+        specs.push((tasks, factory));
+    }
+
+    // ---- shared cloud factory ------------------------------------------
+    let manifest_cloud = manifest.clone();
+    let model_cloud = cfg.model.clone();
+    let cuts: Vec<usize> = calib.keys().cloned().collect();
+    let cloud_factory = move || -> Result<PjrtCloud> {
+        let engine = Engine::new(&manifest_cloud)?;
+        {
+            let rt = ModelRuntime::new(&engine, &manifest_cloud, &model_cloud)?;
+            // preload every suffix the fleet can route here
+            for &cut in &cuts {
+                for b in &rt.model.blocks[cut + 1..] {
+                    engine.preload(&b.artifact)?;
+                }
+            }
+        }
+        Ok(PjrtCloud {
+            engine,
+            manifest: manifest_cloud,
+            model: model_cloud,
+        })
+    };
+
+    let multi = run_real(
+        specs,
+        cloud_factory,
+        cfg.bw.clone(),
+        clock,
+        RealCfg {
+            queue_cap: 8,
+            drop_after: None,
+            scheme: "real".into(),
+            model: cfg.model.clone(),
+        },
+    )?;
+
+    let report = multi.aggregate();
+    let thresholds = calib[&streams[0].cut].1.clone();
+    Ok(ServeResult {
+        report,
+        per_stream: multi.per_stream,
+        thresholds,
+        base_bits: base_bits_for(streams[0].cut),
+    })
 }
 
 /// Warm the semantic cache from the calibration set and calibrate the
 /// online thresholds (paper Alg. 1 L18-19) — labels come from the model
-/// itself (full forward on the device engine, one-time).
+/// itself (full forward on the calibration engine, one-time; every
+/// stream of the fleet starts from a clone and diverges with its own
+/// traffic).
 fn warm_cache(
     rt: &ModelRuntime,
     manifest: &Manifest,
@@ -422,32 +524,4 @@ fn warm_cache(
     }
     let thresholds = calibrate(&cache, &feats, eps.max(0.02));
     Ok((cache, thresholds))
-}
-
-/// Real-pipeline Eq. 11: compare candidate transmission times against
-/// the measured device stage (cloud stage ~ device/scale).
-fn adjust_bits_real(
-    cost: &CostModel,
-    rt: &ModelRuntime,
-    cut: usize,
-    q_r: u8,
-    base: u8,
-    bw_mbps: f64,
-    device_scale: f64,
-) -> u8 {
-    let elems = rt.model.cut_elems(cut);
-    // rough stage estimate: use the engine's running average exec time
-    let (nanos, count) = rt.engine.exec_stats();
-    let per_exec = if count > 0 { nanos as f64 / count as f64 / 1e9 } else { 2e-3 };
-    let t_e = per_exec * (cut + 1) as f64 * device_scale;
-    let t_c = per_exec * (rt.model.blocks.len() - cut - 1) as f64;
-    let target = t_e.max(t_c);
-    let hi = base.max(q_r).min(8);
-    let mut best = q_r;
-    for bits in q_r..=hi {
-        if cost.t_transmit(elems, bits, bw_mbps) <= target {
-            best = bits;
-        }
-    }
-    best
 }

@@ -14,8 +14,9 @@
 //!   ([`baselines`]), and the PJRT [`runtime`] that executes the
 //!   artifacts on the request path.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! See ARCHITECTURE.md for the system inventory, the shared pipeline
+//! scheduler core (one Eq. 10-11 policy + one driver family behind both
+//! the DES and the multi-stream server), and the experiment index.
 
 pub mod baselines;
 pub mod bench;

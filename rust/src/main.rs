@@ -6,7 +6,7 @@
 //! coach partition  [--model M] [--device nx|tx2] [--bw MBPS] [--eps E]
 //! coach serve      [--model vgg_mini|resnet_mini] [--cut K] [--n N]
 //!                  [--bw MBPS] [--corr low|medium|high] [--scheme coach|noadjust]
-//!                  [--device-scale S]
+//!                  [--device-scale S] [--streams N] [--config deploy.toml]
 //! coach profile    [--reps R]       # per-block times -> profile.json
 //! coach bench-table1 [--n N]
 //! coach bench-table2 [--n N]
@@ -23,6 +23,7 @@ use anyhow::{bail, Context, Result};
 
 use coach::baselines::Scheme;
 use coach::bench;
+use coach::config::Config;
 use coach::coordinator::server::{serve, SchemePolicy, ServeCfg};
 use coach::model::{topology, CostModel, DeviceProfile};
 use coach::network::BandwidthModel;
@@ -211,36 +212,72 @@ fn cmd_partition(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let model = args.get("model").unwrap_or("resnet_mini").to_string();
+    // `--config deploy.toml` supplies the defaults ([network], [workload],
+    // [serve] sections); CLI flags override them.
+    let file_cfg = args
+        .get("config")
+        .map(|p| Config::from_file(std::path::Path::new(p)))
+        .transpose()?;
+    let has_cfg = file_cfg.is_some();
+    let base = file_cfg.unwrap_or_default();
+    let model = args
+        .get("model")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| "resnet_mini".to_string());
     let manifest = Manifest::load(&default_artifact_dir())?;
     let m = manifest.model(&model)?;
     let cut = args.usize_or("cut", (m.blocks.len() - 1) / 2)?;
-    let n = args.usize_or("n", 200)?;
-    let bw = args.f64_or("bw", 20.0)?;
-    let corr = correlation_of(args.get("corr").unwrap_or("medium"))?;
+    let n = args.usize_or("n", if has_cfg { base.n_tasks } else { 200 })?;
+    let bw = match args.get("bw") {
+        Some(v) => BandwidthModel::Static(v.parse::<f64>().context("--bw")?),
+        None => base.bandwidth.clone(),
+    };
+    let corr = match args.get("corr") {
+        Some(c) => correlation_of(c)?,
+        None => base.correlation,
+    };
     let policy = match args.get("scheme").unwrap_or("coach") {
         "coach" => SchemePolicy::coach(),
         "noadjust" => SchemePolicy::no_adjust(),
         other => bail!("unknown scheme '{other}'"),
     };
+    let n_streams = args.usize_or("streams", base.n_streams)?.max(1);
     let cfg = ServeCfg {
         model: model.clone(),
         cut,
         policy,
-        device_scale: args.f64_or("device-scale", 6.0)?,
-        bw: BandwidthModel::Static(bw),
-        period: args.f64_or("period-ms", 12.0)? / 1e3,
+        device_scale: args.f64_or("device-scale", base.device_scale)?,
+        bw,
+        period: args.f64_or(
+            "period-ms",
+            if has_cfg { base.period * 1e3 } else { 12.0 },
+        )? / 1e3,
         n_tasks: n,
         correlation: corr,
-        eps: args.f64_or("eps", 0.005)?,
-        seed: args.usize_or("seed", 42)? as u64,
+        eps: args.f64_or("eps", base.eps)?,
+        seed: args.usize_or("seed", base.seed as usize)? as u64,
         audit_every: args.usize_or("audit-every", 0)?,
+        n_streams,
     };
-    println!("serving {n} tasks of {model} (cut {cut}, {bw} Mbps, {corr:?})...");
+    println!(
+        "serving {n} tasks x {n_streams} stream(s) of {model} (cut {cut}, {:?}, {corr:?})...",
+        cfg.bw
+    );
     let res = serve(&manifest, &cfg)?;
+    if n_streams > 1 {
+        for (i, r) in res.per_stream.iter().enumerate() {
+            println!(
+                "stream {i}: avg latency {:.2} ms | p99 {:.2} ms | {:.1} it/s | exits {:.1}%",
+                r.avg_latency_ms(),
+                r.p99_latency_ms(),
+                r.throughput(),
+                r.exit_ratio() * 100.0
+            );
+        }
+    }
     let r = &res.report;
     println!(
-        "done: avg latency {:.2} ms | p99 {:.2} ms | throughput {:.1} it/s | exits {:.1}% | wire {:.1} Kb/task",
+        "done: avg latency {:.2} ms | p99 {:.2} ms | aggregate throughput {:.1} it/s | exits {:.1}% | wire {:.1} Kb/task",
         r.avg_latency_ms(),
         r.p99_latency_ms(),
         r.throughput(),

@@ -1,8 +1,11 @@
-//! Experiment metrics: per-task records, stage bubble accounting, and
-//! the paper's three reported quantities — inference latency (ms),
-//! transmission cost (Kb), system throughput (it/s).
+//! Experiment metrics: per-task records, stage bubble accounting, the
+//! paper's three reported quantities — inference latency (ms),
+//! transmission cost (Kb), system throughput (it/s) — and the
+//! per-stream breakdown of multi-stream runs ([`MultiReport`]).
 
-use crate::util::{mean, percentile};
+use std::collections::BTreeMap;
+
+use crate::util::{mean, percentile, Json};
 
 /// Per-task outcome from a pipeline run (simulated or real).
 #[derive(Debug, Clone)]
@@ -64,6 +67,10 @@ impl RunReport {
         mean(&self.latencies_ms())
     }
 
+    pub fn p50_latency_ms(&self) -> f64 {
+        percentile(&self.latencies_ms(), 50.0)
+    }
+
     pub fn p99_latency_ms(&self) -> f64 {
         percentile(&self.latencies_ms(), 99.0)
     }
@@ -120,6 +127,101 @@ impl RunReport {
     /// Total pipeline bubbles across the three resources, seconds.
     pub fn total_bubbles(&self) -> f64 {
         self.device.bubbles() + self.link.bubbles() + self.cloud.bubbles()
+    }
+
+    /// Idle fraction of the three pipeline resources over the active
+    /// span (0 = perfectly bubble-free, the paper's target regime).
+    pub fn bubble_ratio(&self) -> f64 {
+        let span3 = 3.0 * self.device.span.max(self.link.span).max(self.cloud.span);
+        if span3 <= 0.0 {
+            0.0
+        } else {
+            (self.total_bubbles() / span3).clamp(0.0, 1.0)
+        }
+    }
+
+    /// Machine-readable summary row (the BENCH_*.json schema — see
+    /// bench::emit).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            o.insert(k.to_string(), v);
+        };
+        put("scheme", Json::Str(self.scheme.clone()));
+        put("model", Json::Str(self.model.clone()));
+        put("n_tasks", Json::Num(self.tasks.len() as f64));
+        put("dropped", Json::Num(self.dropped as f64));
+        put("throughput_its", Json::Num(self.throughput()));
+        put("avg_latency_ms", Json::Num(self.avg_latency_ms()));
+        put("p50_latency_ms", Json::Num(self.p50_latency_ms()));
+        put("p99_latency_ms", Json::Num(self.p99_latency_ms()));
+        put("exit_ratio", Json::Num(self.exit_ratio()));
+        put("avg_wire_kb", Json::Num(self.avg_wire_kb()));
+        put("bubble_ratio", Json::Num(self.bubble_ratio()));
+        put("device_util", Json::Num(self.device.utilization()));
+        put("link_util", Json::Num(self.link.utilization()));
+        put("cloud_util", Json::Num(self.cloud.utilization()));
+        Json::Obj(o)
+    }
+}
+
+/// Result of one multi-stream pipeline run: one [`RunReport`] per device
+/// stream plus the cross-stream aggregate. The link and cloud busy times
+/// in each per-stream report are that stream's share of the SHARED
+/// resources; summing them across streams reconstructs the resource
+/// totals. The aggregate's device usage sums N independent device
+/// resources, so its utilization is a fleet total (divide by the stream
+/// count for the per-device average).
+#[derive(Debug, Clone, Default)]
+pub struct MultiReport {
+    pub per_stream: Vec<RunReport>,
+}
+
+impl MultiReport {
+    /// Completed tasks per second across all streams (global span).
+    pub fn aggregate_throughput(&self) -> f64 {
+        self.aggregate().throughput()
+    }
+
+    /// Fold the streams into one cross-stream report.
+    pub fn aggregate(&self) -> RunReport {
+        let mut tasks = Vec::new();
+        let mut dropped = 0;
+        let (mut dev, mut link, mut cloud) =
+            (StageUsage::default(), StageUsage::default(), StageUsage::default());
+        for r in &self.per_stream {
+            tasks.extend(r.tasks.iter().cloned());
+            dropped += r.dropped;
+            dev.busy += r.device.busy;
+            link.busy += r.link.busy;
+            cloud.busy += r.cloud.busy;
+        }
+        let start = tasks.iter().map(|t| t.arrive).fold(f64::INFINITY, f64::min);
+        let end = tasks.iter().map(|t| t.finish).fold(0.0f64, f64::max);
+        let span = if tasks.is_empty() { 0.0 } else { (end - start).max(0.0) };
+        dev.span = span;
+        link.span = span;
+        cloud.span = span;
+        tasks.sort_by(|a, b| {
+            a.arrive.partial_cmp(&b.arrive).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        RunReport {
+            scheme: self
+                .per_stream
+                .first()
+                .map(|r| r.scheme.clone())
+                .unwrap_or_default(),
+            model: self
+                .per_stream
+                .first()
+                .map(|r| r.model.clone())
+                .unwrap_or_default(),
+            tasks,
+            dropped,
+            device: dev,
+            link,
+            cloud,
+        }
     }
 }
 
@@ -209,6 +311,44 @@ mod tests {
         let u = StageUsage { busy: 3.0, span: 4.0 };
         assert!((u.bubbles() - 1.0).abs() < 1e-12);
         assert!((u.utilization() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_report_aggregates_streams() {
+        let a = RunReport {
+            tasks: vec![outcome(0.010, false, 1000)],
+            device: StageUsage { busy: 0.004, span: 0.010 },
+            ..Default::default()
+        };
+        let b = RunReport {
+            tasks: vec![outcome(0.020, true, 0)],
+            device: StageUsage { busy: 0.006, span: 0.020 },
+            dropped: 2,
+            ..Default::default()
+        };
+        let multi = MultiReport { per_stream: vec![a, b] };
+        let agg = multi.aggregate();
+        assert_eq!(agg.tasks.len(), 2);
+        assert_eq!(agg.dropped, 2);
+        assert!((agg.device.busy - 0.010).abs() < 1e-12);
+        assert!((agg.device.span - 0.020).abs() < 1e-12);
+        assert!((multi.aggregate_throughput() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bubble_ratio_and_json_summary() {
+        let r = RunReport {
+            tasks: vec![outcome(0.010, false, 1000)],
+            device: StageUsage { busy: 1.0, span: 2.0 },
+            link: StageUsage { busy: 2.0, span: 2.0 },
+            cloud: StageUsage { busy: 0.0, span: 2.0 },
+            ..Default::default()
+        };
+        // bubbles = 1 + 0 + 2 = 3 over 3*2 span
+        assert!((r.bubble_ratio() - 0.5).abs() < 1e-12);
+        let j = r.to_json();
+        assert!(j.get("throughput_its").is_ok());
+        assert!((j.get("bubble_ratio").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
     }
 
     #[test]

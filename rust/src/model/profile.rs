@@ -1,6 +1,6 @@
 //! Device/cloud cost profiles and the per-layer cost model.
 //!
-//! Substitution (DESIGN.md §3): the paper measures per-layer times on
+//! Substitution (ARCHITECTURE.md §Substitutions): the paper measures per-layer times on
 //! Jetson NX / TX2 and an A6000 server. We derive per-layer times from
 //! the analytic FLOP counts at calibrated effective throughputs whose
 //! *ratios* match the paper's testbed; for the runnable mini models the

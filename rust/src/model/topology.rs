@@ -4,8 +4,9 @@
 //!
 //! The analytic graphs carry real per-layer FLOP counts and activation
 //! sizes for 224x224 inputs — the quantities the partitioner and the
-//! pipeline cost model consume (DESIGN.md §Substitutions: scheduling
-//! behaviour depends on the layer-cost profile, which these preserve).
+//! pipeline cost model consume (ARCHITECTURE.md §Substitutions:
+//! scheduling behaviour depends on the layer-cost profile, which these
+//! preserve).
 
 use super::graph::{LayerKind, ModelGraph};
 use crate::runtime::{Manifest, ModelInfo};

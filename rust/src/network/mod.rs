@@ -1,6 +1,6 @@
 //! Network substrate: bandwidth models and traces.
 //!
-//! Substitution (DESIGN.md §3): the paper uses a 5 GHz WiFi router with
+//! Substitution (ARCHITECTURE.md §Substitutions): the paper uses a 5 GHz WiFi router with
 //! controlled bandwidths 1-100 Mbps and step-down fluctuation
 //! experiments. Transmission latency is a deterministic function of
 //! payload size and instantaneous bandwidth, so a trace-driven model

@@ -8,7 +8,7 @@
 //!   analytic graphs (VGG16/ResNet101/GoogLeNet), matching the paper's
 //!   Fig. 1(b) observation that 3-5 bits suffice and deeper (more
 //!   semantic, lower-dimensional) activations tolerate lower precision.
-//!   Documented as a substitution in DESIGN.md §3.
+//!   Documented as a substitution in ARCHITECTURE.md §Substitutions.
 
 use crate::runtime::AccTable;
 

@@ -1,71 +1,25 @@
 //! Discrete-event simulation of the three-stage pipeline over a task
 //! stream — the engine behind the paper-scale benches (Tables/Figures).
 //!
-//! Resources: END DEVICE (sequential), LINK (FIFO), CLOUD (sequential).
-//! A task occupies the device for T_e; its transmission may start
-//! `first_send_offset` into the device stage (layer-parallel execution,
-//! Fig. 4); the cloud stage starts when the transmission lands, with
-//! `t_c_par` of it overlappable with the tail of the transmission.
-//! The online policy hook decides, per task at transmission time,
-//! whether to early-exit or at what precision to transmit (paper Alg. 1
-//! online component).
+//! The simulation itself lives in the shared scheduler core: this module
+//! is the single-stream veneer over [`pipeline::driver::run_virtual`]
+//! (virtual clock, analytic stage occupancies), kept as the stable API
+//! the benches and tests drive. Multi-stream simulation (N device
+//! streams sharing one FIFO link and one cloud) is
+//! [`pipeline::driver::run_virtual_streams`]; the wall-clock counterpart
+//! serving real work is `pipeline::driver::run_real`.
+//!
+//! [`pipeline::driver::run_virtual`]: super::driver::run_virtual
+//! [`pipeline::driver::run_virtual_streams`]: super::driver::run_virtual_streams
 
-use crate::metrics::{RunReport, StageUsage, TaskOutcome};
+use crate::metrics::RunReport;
 use crate::model::{CostModel, ModelGraph};
 use crate::network::BandwidthModel;
 use crate::sim::SimTask;
 
+use super::driver;
+use super::policy::OnlinePolicy;
 use super::stage_model::StageModel;
-
-/// Per-task decision of the online component.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum Decision {
-    /// return the cached result immediately (paper Eq. 10)
-    Exit,
-    /// transmit at this precision (paper Eq. 11)
-    Transmit { bits: u8 },
-}
-
-/// Online scheduling hook. `bw_est` is the scheduler's bandwidth
-/// estimate at decision time (EWMA probe), not the true instantaneous
-/// rate.
-pub trait OnlinePolicy {
-    fn decide(&mut self, task: &SimTask, bw_est: f64) -> Decision;
-    /// called after the task completes (cache updates etc.)
-    fn observe(&mut self, _task: &SimTask, _exited: bool) {}
-}
-
-/// Fixed-precision policy (the baselines' behaviour).
-pub struct StaticPolicy {
-    pub bits: u8,
-    /// early-exit threshold on simulated separability; INFINITY = never
-    pub exit_threshold: f64,
-}
-
-impl StaticPolicy {
-    pub fn no_exit(bits: u8) -> StaticPolicy {
-        StaticPolicy { bits, exit_threshold: f64::INFINITY }
-    }
-}
-
-impl OnlinePolicy for StaticPolicy {
-    fn decide(&mut self, task: &SimTask, _bw: f64) -> Decision {
-        if task.separability > self.exit_threshold {
-            Decision::Exit
-        } else {
-            Decision::Transmit { bits: self.bits }
-        }
-    }
-}
-
-/// Pipeline run configuration.
-#[derive(Debug, Clone)]
-pub struct PipelineCfg {
-    /// strategy is all-cloud (transmit raw input, no device compute)
-    pub all_cloud: bool,
-    /// close the run after this many tasks
-    pub n_tasks: usize,
-}
 
 /// Simulate `tasks` through the pipeline; returns the full report.
 /// Unbounded queue — see [`run_pipeline_opts`] for admission control.
@@ -79,14 +33,12 @@ pub fn run_pipeline(
     policy: &mut dyn OnlinePolicy,
     scheme: &str,
 ) -> RunReport {
-    run_pipeline_opts(g, cost, sm, bw, tasks, policy, scheme, None)
+    driver::run_virtual(g, cost, sm, bw, tasks, policy, scheme, None)
 }
 
 /// Like [`run_pipeline`], with optional admission control: a task whose
 /// device-queue wait would exceed `drop_after` seconds is dropped at
-/// arrival (real-time streams shed frames instead of queueing without
-/// bound — the paper's continuous-task regime). Dropped tasks are
-/// reported in `RunReport::dropped`.
+/// arrival. Dropped tasks are reported in `RunReport::dropped`.
 #[allow(clippy::too_many_arguments)]
 pub fn run_pipeline_opts(
     g: &ModelGraph,
@@ -98,109 +50,7 @@ pub fn run_pipeline_opts(
     scheme: &str,
     drop_after: Option<f64>,
 ) -> RunReport {
-    let mut dev_free = 0.0f64;
-    let mut link_free = 0.0f64;
-    let mut cloud_free = 0.0f64;
-    let mut dev_busy = 0.0f64;
-    let mut link_busy = 0.0f64;
-    let mut cloud_busy = 0.0f64;
-
-    let mut outcomes = Vec::with_capacity(tasks.len());
-    let mut last_finish = 0.0f64;
-    let mut dropped = 0usize;
-
-    for task in tasks {
-        // ---- admission control ----------------------------------------
-        if let Some(cap) = drop_after {
-            let wait = (dev_free - task.arrive)
-                .max(link_free - task.arrive - sm.t_e);
-            if wait > cap {
-                dropped += 1;
-                continue;
-            }
-        }
-        // ---- device stage -------------------------------------------
-        let d_start = dev_free.max(task.arrive);
-        let d_end = d_start + sm.t_e + sm.exit_check;
-        dev_free = d_end;
-        dev_busy += sm.t_e + sm.exit_check;
-
-        // ---- online decision at transmission time --------------------
-        let bw_est = bw.estimate_mbps(d_end);
-        let decision = policy.decide(task, bw_est);
-
-        // all-device strategy: no transmission, no cloud stage
-        let all_device = sm.cut_elems.is_empty() && sm.t_c == 0.0 && sm.t_e > 0.0;
-
-        let (finish, bits, wire, exited) = match decision {
-            Decision::Exit => {
-                policy.observe(task, true);
-                (d_end, 0u8, 0usize, true)
-            }
-            Decision::Transmit { .. } if all_device => {
-                policy.observe(task, false);
-                (d_end, 0u8, 0usize, false)
-            }
-            Decision::Transmit { bits } => {
-                // link occupies from first cut availability
-                let avail = d_start + sm.first_send_offset.min(sm.t_e);
-                let t_start = link_free.max(avail);
-                let wire_bytes = if sm.cut_elems.is_empty() {
-                    // true all-cloud (no cut edges): raw input on the wire
-                    cost.wire_bytes(g.layers[g.source()].out_elems, 32)
-                } else {
-                    sm.wire_bytes(cost, bits)
-                };
-                let tx = bw.transmit_time(wire_bytes, t_start) + cost.rtt_half;
-                // transmission of the *last* cut cannot complete before
-                // the device finishes producing it
-                let t_end = (t_start + tx).max(d_end);
-                link_free = t_end;
-                link_busy += tx;
-
-                // cloud stage: t_c_par of the cloud work overlaps the
-                // transmission tail; the rest is serial after arrival
-                let c_ready = t_end - sm.t_c_par.min(sm.t_c);
-                let c_start = cloud_free.max(c_ready);
-                let c_end = c_start.max(t_end - sm.t_c_par.min(sm.t_c))
-                    + sm.t_c;
-                let c_end = c_end.max(t_end); // result needs full input
-                cloud_free = c_end;
-                cloud_busy += sm.t_c;
-
-                // result return (tiny payload)
-                let ret =
-                    cost.t_transmit(sm.result_elems, 32, bw.true_mbps(c_end));
-                policy.observe(task, false);
-                (c_end + ret, bits, wire_bytes, false)
-            }
-        };
-
-        last_finish = last_finish.max(finish);
-        outcomes.push(TaskOutcome {
-            id: task.id,
-            arrive: task.arrive,
-            finish,
-            latency: finish - task.arrive,
-            exited_early: exited,
-            bits,
-            wire_bytes: wire,
-            label: task.label,
-            correct: !exited || task.exit_correct,
-        });
-    }
-
-    let span = last_finish
-        - tasks.first().map(|t| t.arrive).unwrap_or(0.0);
-    RunReport {
-        scheme: scheme.to_string(),
-        model: g.name.clone(),
-        tasks: outcomes,
-        dropped,
-        device: StageUsage { busy: dev_busy, span },
-        link: StageUsage { busy: link_busy, span },
-        cloud: StageUsage { busy: cloud_busy, span },
-    }
+    driver::run_virtual(g, cost, sm, bw, tasks, policy, scheme, drop_after)
 }
 
 #[cfg(test)]
@@ -208,8 +58,8 @@ mod tests {
     use super::*;
     use crate::model::topology::vgg16;
     use crate::model::DeviceProfile;
-    use crate::network::BandwidthModel;
     use crate::partition::{AnalyticAcc, PartitionConfig};
+    use crate::pipeline::StaticPolicy;
     use crate::sim::{generate, Correlation};
 
     fn setup() -> (crate::model::ModelGraph, CostModel, StageModel) {

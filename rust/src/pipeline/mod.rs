@@ -1,9 +1,31 @@
 //! Three-stage pipeline execution (paper §II-C, Fig. 2): device
 //! compute -> transmission -> cloud compute over a continuous task
 //! stream, with bubble accounting per resource.
+//!
+//! The scheduler core is shared by every execution path
+//! (ARCHITECTURE.md §Pipeline core):
+//!
+//! - [`policy`] — the ONE implementation of the online decision
+//!   (Eq. 10-11), consumed by the DES and the real server alike;
+//! - [`stage`] — clock abstraction, bounded hand-off queues, busy
+//!   meters, and the stage traits of the wall-clock driver;
+//! - [`driver`] — the virtual-time drivers (single- and multi-stream
+//!   DES) and the wall-clock multi-stream driver (real threads, shared
+//!   FIFO link + shared cloud);
+//! - [`des`] — the stable single-stream DES API over the core;
+//! - [`stage_model`] — analytic per-task stage timings from a strategy.
 
 pub mod des;
+pub mod driver;
+pub mod policy;
+pub mod stage;
 pub mod stage_model;
 
-pub use des::{run_pipeline, Decision, OnlinePolicy, PipelineCfg, StaticPolicy};
+pub use des::{run_pipeline, run_pipeline_opts};
+pub use driver::{run_real, run_virtual, run_virtual_streams, RealCfg, VirtualStream};
+pub use policy::{
+    Coach, CoachPolicy, Decision, MeasuredTransmitCost, ModelTransmitCost,
+    OnlinePolicy, StaticPolicy, TaskView, TransmitCost,
+};
+pub use stage::{Clock, CloudStage, DeviceStage, DeviceVerdict, VirtualClock, WallClock};
 pub use stage_model::StageModel;

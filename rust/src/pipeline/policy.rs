@@ -1,0 +1,329 @@
+//! The ONE implementation of COACH's online decision (paper Eq. 10-11),
+//! consumed by every execution path: the DES (pipeline::driver virtual
+//! drivers, via [`Coach`]) and the real multi-stream server
+//! (coordinator::server, via [`CoachPolicy::decide`] directly). No other
+//! module may reimplement the Q_c selection loop — see ARCHITECTURE.md
+//! §Online policy.
+//!
+//! Per task: evaluate separability S against the semantic cache; if
+//! S > S_ext return the cached label (early exit, Eq. 10); otherwise
+//! derive the precision *requirement* Q_r from the S_adj thresholds and
+//! pick the transmitted precision Q_c (Eq. 11) that keeps the pipeline
+//! balanced under the live bandwidth estimate.
+//!
+//! Eq. 11 interpretation: among Q_c in [Q_r, base], pick the largest
+//! precision whose transmission time stays at or below the pipeline's
+//! other-stage maximum (no transmission bubble, best fidelity); if even
+//! Q_r exceeds it (degraded network), fall to Q_r — the most aggressive
+//! precision the accuracy constraint allows.
+
+use crate::cache::Thresholds;
+use crate::model::{CostModel, ModelGraph};
+use crate::quant::clamp_bits;
+
+use super::stage_model::StageModel;
+
+/// Per-task decision of the online component.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// return the cached result immediately (paper Eq. 10)
+    Exit,
+    /// transmit at this precision (paper Eq. 11)
+    Transmit { bits: u8 },
+}
+
+/// Everything the online policy sees about one task at decision time —
+/// produced by the DES (simulated separability hint) or by the real
+/// device stage (measured GAP separability against the stream's cache).
+/// `bw_est_mbps` is the scheduler's bandwidth estimate (EWMA probe), not
+/// the true instantaneous rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskView {
+    pub separability: f64,
+    pub bw_est_mbps: f64,
+}
+
+/// Online scheduling hook of the pipeline drivers.
+pub trait OnlinePolicy {
+    fn decide(&mut self, view: TaskView) -> Decision;
+    /// called after the task's device stage completes (cache updates etc.)
+    fn observe(&mut self, _exited: bool) {}
+}
+
+/// Fixed-precision policy (the baselines' behaviour).
+pub struct StaticPolicy {
+    pub bits: u8,
+    /// early-exit threshold on separability; INFINITY = never
+    pub exit_threshold: f64,
+}
+
+impl StaticPolicy {
+    pub fn no_exit(bits: u8) -> StaticPolicy {
+        StaticPolicy { bits, exit_threshold: f64::INFINITY }
+    }
+}
+
+impl OnlinePolicy for StaticPolicy {
+    fn decide(&mut self, view: TaskView) -> Decision {
+        if view.separability > self.exit_threshold {
+            Decision::Exit
+        } else {
+            Decision::Transmit { bits: self.bits }
+        }
+    }
+}
+
+/// How a deployment prices one transmission and what stage time the
+/// precision search must stay under — the only knobs Eq. 11 needs.
+pub trait TransmitCost {
+    /// transmission busy time at `bits` under `bw_mbps`
+    fn t_transmit(&self, bits: u8, bw_mbps: f64) -> f64;
+    /// max of the other pipeline stages (device, cloud) — Eq. 11's
+    /// no-bubble target T_t' must not exceed this
+    fn stage_target(&self) -> f64;
+}
+
+/// Eq. 11's Q_c selection: the highest precision in
+/// `[clamp(q_r), clamp(max(base_bits, q_r))]` whose transmission time
+/// stays at or below `target`; `q_r` when none does.
+pub fn select_precision(
+    q_r: u8,
+    base_bits: u8,
+    target: f64,
+    t_transmit: impl Fn(u8) -> f64,
+) -> u8 {
+    let q_r = clamp_bits(q_r);
+    let hi = clamp_bits(base_bits.max(q_r));
+    let mut best = q_r;
+    for bits in q_r..=hi {
+        if t_transmit(bits) <= target {
+            best = bits; // highest precision that stays hidden
+        }
+    }
+    best
+}
+
+/// COACH's online policy state (paper Alg. 1 online component): the
+/// calibrated thresholds, the offline base precision, and the cache
+/// warmup ramp. Pure Eq. 10/11 — the execution substrate (simulated vs
+/// measured separability, analytic vs measured stage times) is supplied
+/// by the caller per decision.
+#[derive(Debug, Clone)]
+pub struct CoachPolicy {
+    pub thresholds: Thresholds,
+    /// offline base precision (per the measured accuracy tables)
+    pub base_bits: u8,
+    /// cache warmup ramp: separability is scaled by min(1, seen/warmup);
+    /// 0 disables the ramp (pre-warmed cache, as in the real server)
+    pub warmup: usize,
+    seen: usize,
+}
+
+impl CoachPolicy {
+    pub fn new(thresholds: Thresholds, base_bits: u8) -> CoachPolicy {
+        CoachPolicy { thresholds, base_bits, warmup: 0, seen: 0 }
+    }
+
+    /// Builder: enable the cold-cache warmup ramp (DES streams start
+    /// with an empty cache; the real server calibrates at startup).
+    pub fn with_warmup(mut self, warmup: usize) -> CoachPolicy {
+        self.warmup = warmup;
+        self
+    }
+
+    pub fn warmup_seen(&self) -> usize {
+        self.seen
+    }
+
+    /// Eq. 10 + Eq. 11 for one task.
+    pub fn decide(
+        &mut self,
+        separability: f64,
+        bw_est_mbps: f64,
+        cost: &dyn TransmitCost,
+    ) -> Decision {
+        let ramp = if self.warmup == 0 {
+            1.0
+        } else {
+            (self.seen as f64 / self.warmup as f64).min(1.0)
+        };
+        let s = separability * ramp;
+        if s > self.thresholds.s_ext {
+            return Decision::Exit;
+        }
+        let q_r = self.thresholds.required_bits(s, self.base_bits);
+        let bits = select_precision(q_r, self.base_bits, cost.stage_target(), |b| {
+            cost.t_transmit(b, bw_est_mbps)
+        });
+        Decision::Transmit { bits }
+    }
+
+    /// Advance the warmup counter (one call per completed task).
+    pub fn observe(&mut self, _exited: bool) {
+        self.seen += 1;
+    }
+}
+
+/// Analytic transmission cost over a [`StageModel`] — what the DES and
+/// the paper-scale benches price Eq. 11 with.
+#[derive(Debug, Clone)]
+pub struct ModelTransmitCost {
+    pub sm: StageModel,
+    pub cost: CostModel,
+    pub graph: ModelGraph,
+    all_cloud: bool,
+}
+
+impl ModelTransmitCost {
+    pub fn new(sm: StageModel, cost: CostModel, graph: ModelGraph) -> Self {
+        ModelTransmitCost { all_cloud: sm.cut_elems.is_empty(), sm, cost, graph }
+    }
+}
+
+impl TransmitCost for ModelTransmitCost {
+    fn t_transmit(&self, bits: u8, bw_mbps: f64) -> f64 {
+        self.sm
+            .t_transmit(&self.cost, &self.graph, bits, bw_mbps, self.all_cloud)
+    }
+
+    fn stage_target(&self) -> f64 {
+        self.sm.t_e.max(self.sm.t_c)
+    }
+}
+
+/// Measured transmission cost of one real serving stream: raw cut-tensor
+/// size priced by the cost model, targeted at the live (profiled) device
+/// and cloud stage times. The server refreshes `t_e`/`t_c` from the
+/// engine's running execution average before each decision.
+#[derive(Debug, Clone)]
+pub struct MeasuredTransmitCost {
+    /// elements of the cut activation on the wire
+    pub elems: usize,
+    pub cost: CostModel,
+    /// measured device stage time (already device-scale padded)
+    pub t_e: f64,
+    /// measured cloud stage time
+    pub t_c: f64,
+}
+
+impl TransmitCost for MeasuredTransmitCost {
+    fn t_transmit(&self, bits: u8, bw_mbps: f64) -> f64 {
+        self.cost.t_transmit(self.elems, bits, bw_mbps)
+    }
+
+    fn stage_target(&self) -> f64 {
+        self.t_e.max(self.t_c)
+    }
+}
+
+/// The shared policy bundled with a transmit-cost model: the form both
+/// virtual drivers consume through the [`OnlinePolicy`] hook.
+pub struct Coach<C: TransmitCost> {
+    pub policy: CoachPolicy,
+    pub cost: C,
+}
+
+impl<C: TransmitCost> OnlinePolicy for Coach<C> {
+    fn decide(&mut self, view: TaskView) -> Decision {
+        self.policy.decide(view.separability, view.bw_est_mbps, &self.cost)
+    }
+
+    fn observe(&mut self, exited: bool) {
+        self.policy.observe(exited);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::topology::vgg16;
+    use crate::model::DeviceProfile;
+    use crate::partition::{AnalyticAcc, PartitionConfig};
+
+    fn setup() -> (ModelTransmitCost, u8) {
+        let g = vgg16();
+        let cost = CostModel::new(
+            DeviceProfile::jetson_nx(),
+            DeviceProfile::cloud_a6000(),
+        );
+        let cfg = PartitionConfig::default();
+        let s =
+            crate::partition::optimize(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+        let base = s.base_bits();
+        let sm = StageModel::from_strategy(&g, &cost, &s, cfg.bw_mbps);
+        (ModelTransmitCost::new(sm, cost, g), base)
+    }
+
+    #[test]
+    fn degraded_network_drops_bits() {
+        let (tc, _base) = setup();
+        let fast = select_precision(3, 8, tc.stage_target(), |b| {
+            tc.t_transmit(b, 100.0)
+        });
+        let slow = select_precision(3, 8, tc.stage_target(), |b| {
+            tc.t_transmit(b, 1.0)
+        });
+        assert!(
+            slow <= fast,
+            "slow net must not raise precision: {slow} vs {fast}"
+        );
+        assert_eq!(slow, 3, "degraded net falls to Q_r");
+    }
+
+    #[test]
+    fn q_r_is_a_floor_and_base_a_ceiling() {
+        let (tc, base) = setup();
+        for q_r in 2..=8u8 {
+            let bits = select_precision(q_r, base, tc.stage_target(), |b| {
+                tc.t_transmit(b, 10.0)
+            });
+            assert!(bits >= q_r);
+            assert!(bits <= base.max(q_r));
+        }
+    }
+
+    #[test]
+    fn policy_exits_above_threshold() {
+        let (tc, base) = setup();
+        let th = Thresholds { s_ext: 0.5, s_adj: vec![] };
+        let mut pol = Coach { policy: CoachPolicy::new(th, base), cost: tc };
+        let hot = TaskView { separability: 0.9, bw_est_mbps: 20.0 };
+        let cold = TaskView { separability: 0.1, bw_est_mbps: 20.0 };
+        assert_eq!(pol.decide(hot), Decision::Exit);
+        assert!(matches!(pol.decide(cold), Decision::Transmit { .. }));
+    }
+
+    #[test]
+    fn warmup_suppresses_early_exits() {
+        let (tc, base) = setup();
+        let th = Thresholds { s_ext: 0.5, s_adj: vec![] };
+        let mut pol = Coach {
+            policy: CoachPolicy::new(th, base).with_warmup(40),
+            cost: tc,
+        };
+        // cache cold: even a hot task must not exit
+        let hot = TaskView { separability: 0.9, bw_est_mbps: 20.0 };
+        assert!(matches!(pol.decide(hot), Decision::Transmit { .. }));
+        // after the ramp the same task exits
+        for _ in 0..80 {
+            pol.observe(false);
+        }
+        assert_eq!(pol.policy.warmup_seen(), 80);
+        assert_eq!(pol.decide(hot), Decision::Exit);
+    }
+
+    #[test]
+    fn measured_cost_targets_max_stage() {
+        let cost = CostModel::new(
+            DeviceProfile::jetson_nx(),
+            DeviceProfile::cloud_a6000(),
+        );
+        let mc = MeasuredTransmitCost { elems: 4096, cost, t_e: 0.004, t_c: 0.009 };
+        assert!((mc.stage_target() - 0.009).abs() < 1e-12);
+        // ample bandwidth: full base precision fits under the target
+        let bits = select_precision(2, 8, mc.stage_target(), |b| {
+            mc.t_transmit(b, 100.0)
+        });
+        assert_eq!(bits, 8);
+    }
+}

@@ -1,0 +1,355 @@
+//! Pipeline scheduler primitives shared by the DES and the real-time
+//! driver: the clock abstraction, bounded hand-off queues (the
+//! stage-to-stage backpressure of the three-stage pipeline), busy-time
+//! meters, and the stage execution traits the wall-clock driver is
+//! generic over. See ARCHITECTURE.md §Pipeline core.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::sim::SimTask;
+
+// ---------------------------------------------------------------------
+// Clocks
+// ---------------------------------------------------------------------
+
+/// Pipeline time source, seconds since the run epoch. The DES advances a
+/// virtual clock by jumping; the real driver reads wall time and waits
+/// by sleeping.
+pub trait Clock {
+    fn now(&self) -> f64;
+    /// Block (wall) or jump (virtual) until at least `t`; returns the
+    /// clock reading afterwards, which may overshoot under wall time.
+    fn wait_until(&self, t: f64) -> f64;
+}
+
+/// Virtual time for discrete-event simulation: `wait_until` jumps, and
+/// time never runs backwards.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    now: Cell<f64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { now: Cell::new(0.0) }
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.now.get()
+    }
+
+    fn wait_until(&self, t: f64) -> f64 {
+        if t > self.now.get() {
+            self.now.set(t);
+        }
+        self.now.get()
+    }
+}
+
+/// Wall time anchored at construction; `wait_until` sleeps in small
+/// slices (the serving arrival pacer). Cheap to clone — every stage
+/// thread of one run shares the same epoch.
+#[derive(Debug, Clone, Copy)]
+pub struct WallClock {
+    t0: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { t0: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn wait_until(&self, t: f64) -> f64 {
+        loop {
+            let now = self.now();
+            if now >= t {
+                return now;
+            }
+            std::thread::sleep(Duration::from_secs_f64((t - now).min(0.002)));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bounded hand-off queues
+// ---------------------------------------------------------------------
+
+struct QueueInner<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    senders: usize,
+    receiver_alive: bool,
+}
+
+struct QueueShared<T> {
+    inner: Mutex<QueueInner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+/// Producer half of a bounded MPSC queue; `send` blocks when the queue
+/// is full (stage backpressure rather than unbounded buffering).
+pub struct BoundedSender<T> {
+    shared: Arc<QueueShared<T>>,
+}
+
+/// Consumer half; `recv` blocks until an item arrives or every sender
+/// is dropped.
+pub struct BoundedReceiver<T> {
+    shared: Arc<QueueShared<T>>,
+}
+
+/// A bounded MPSC channel with `cap` in-flight items.
+pub fn bounded<T>(cap: usize) -> (BoundedSender<T>, BoundedReceiver<T>) {
+    let shared = Arc::new(QueueShared {
+        inner: Mutex::new(QueueInner {
+            buf: VecDeque::with_capacity(cap.max(1)),
+            cap: cap.max(1),
+            senders: 1,
+            receiver_alive: true,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+    });
+    (
+        BoundedSender { shared: shared.clone() },
+        BoundedReceiver { shared },
+    )
+}
+
+impl<T> Clone for BoundedSender<T> {
+    fn clone(&self) -> Self {
+        self.shared.inner.lock().unwrap().senders += 1;
+        BoundedSender { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for BoundedSender<T> {
+    fn drop(&mut self) {
+        let mut g = self.shared.inner.lock().unwrap();
+        g.senders -= 1;
+        if g.senders == 0 {
+            drop(g);
+            self.shared.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for BoundedReceiver<T> {
+    fn drop(&mut self) {
+        self.shared.inner.lock().unwrap().receiver_alive = false;
+        self.shared.not_full.notify_all();
+    }
+}
+
+impl<T> BoundedSender<T> {
+    /// Blocks while the queue is full. Returns the item back if the
+    /// receiver is gone (downstream stage terminated).
+    pub fn send(&self, item: T) -> std::result::Result<(), T> {
+        let mut g = self.shared.inner.lock().unwrap();
+        loop {
+            if !g.receiver_alive {
+                return Err(item);
+            }
+            if g.buf.len() < g.cap {
+                g.buf.push_back(item);
+                drop(g);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.shared.not_full.wait(g).unwrap();
+        }
+    }
+}
+
+impl<T> BoundedReceiver<T> {
+    /// Blocks until an item arrives; `None` once every sender has
+    /// dropped and the queue drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut g = self.shared.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.buf.pop_front() {
+                drop(g);
+                self.shared.not_full.notify_one();
+                return Some(item);
+            }
+            if g.senders == 0 {
+                return None;
+            }
+            g = self.shared.not_empty.wait(g).unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Busy-time meters
+// ---------------------------------------------------------------------
+
+/// Lock-free busy-seconds accumulator shared across stage threads
+/// (per-stream, per-resource bubble accounting).
+#[derive(Debug, Clone, Default)]
+pub struct BusyMeter(Arc<AtomicU64>);
+
+impl BusyMeter {
+    pub fn new() -> BusyMeter {
+        BusyMeter::default()
+    }
+
+    pub fn add_secs(&self, secs: f64) {
+        self.0.fetch_add((secs.max(0.0) * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stage execution traits (wall-clock driver)
+// ---------------------------------------------------------------------
+
+/// Outcome of the device stage for one task.
+pub enum DeviceVerdict<W> {
+    /// task completed on-device via the semantic cache (early exit,
+    /// Eq. 10) — counted in `RunReport::exit_ratio`
+    Exit { label: usize, correct: bool },
+    /// transmit at Q_c (Eq. 11): hand `wire` to the link stage
+    Transmit { wire: W, bits: u8, wire_bytes: usize },
+}
+
+/// Device-side work of one stream: synthesize/compute the task, consult
+/// the shared online policy (pipeline::policy), and either finish
+/// locally or emit a wire item. Implementations own per-stream state
+/// (engine, semantic cache, policy) and are constructed *inside* their
+/// stage thread, so they need not be `Send`.
+pub trait DeviceStage {
+    /// payload crossing the link to the cloud stage
+    type Wire: Send + 'static;
+    /// payload routed back from the cloud for cache updates (Eq. 7)
+    type Feedback: Send + 'static;
+
+    /// Process one task. The returned `f64` is the device-resource busy
+    /// time to charge (seconds) — the stage reports it so that harness
+    /// overheads (input synthesis, accuracy audits) are NOT billed as
+    /// pipeline busy time.
+    fn process(
+        &mut self,
+        task: &SimTask,
+    ) -> Result<(DeviceVerdict<Self::Wire>, f64)>;
+
+    /// Fold a completed task's result back into stream state.
+    fn absorb(&mut self, _feedback: Self::Feedback) {}
+}
+
+/// Cloud-side completion shared by every stream (one instance, one
+/// thread, one engine). Returns the predicted label plus the feedback
+/// payload for the originating stream.
+pub trait CloudStage {
+    type Wire: Send + 'static;
+    type Feedback: Send + 'static;
+
+    fn process(&mut self, wire: Self::Wire) -> Result<(usize, Self::Feedback)>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn virtual_clock_jumps_monotonically() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        assert_eq!(c.wait_until(2.5), 2.5);
+        // never backwards
+        assert_eq!(c.wait_until(1.0), 2.5);
+        assert_eq!(c.now(), 2.5);
+    }
+
+    #[test]
+    fn wall_clock_waits() {
+        let c = WallClock::new();
+        let t = c.now();
+        let after = c.wait_until(t + 0.02);
+        assert!(after >= t + 0.02);
+    }
+
+    #[test]
+    fn bounded_queue_passes_items_in_order() {
+        let (tx, rx) = bounded::<usize>(2);
+        let h = thread::spawn(move || {
+            for i in 0..100 {
+                tx.send(i).unwrap();
+            }
+        });
+        let mut got = Vec::new();
+        while let Some(v) = rx.recv() {
+            got.push(v);
+        }
+        h.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bounded_queue_blocks_at_capacity() {
+        let (tx, rx) = bounded::<usize>(1);
+        tx.send(0).unwrap();
+        let t0 = Instant::now();
+        let h = thread::spawn(move || {
+            tx.send(1).unwrap(); // must block until the recv below
+            Instant::now()
+        });
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(rx.recv(), Some(0));
+        let sent_at = h.join().unwrap();
+        assert!(sent_at.duration_since(t0) >= Duration::from_millis(25));
+        assert_eq!(rx.recv(), Some(1));
+    }
+
+    #[test]
+    fn send_fails_when_receiver_dropped() {
+        let (tx, rx) = bounded::<usize>(4);
+        drop(rx);
+        assert_eq!(tx.send(7), Err(7));
+    }
+
+    #[test]
+    fn recv_none_when_senders_dropped() {
+        let (tx, rx) = bounded::<usize>(4);
+        let tx2 = tx.clone();
+        tx2.send(1).unwrap();
+        drop(tx);
+        drop(tx2);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn busy_meter_accumulates_across_clones() {
+        let m = BusyMeter::new();
+        let m2 = m.clone();
+        m.add_secs(0.5);
+        m2.add_secs(0.25);
+        assert!((m.secs() - 0.75).abs() < 1e-6);
+    }
+}

@@ -5,101 +5,168 @@
 //!
 //! `Engine` is deliberately NOT Send/Sync (the underlying xla crate types
 //! hold raw PJRT pointers without thread-safety markers); each pipeline
-//! worker thread constructs its own `Engine` at startup (see
-//! coordinator::server), which also gives device/cloud stages true compute
-//! concurrency without sharing a client.
+//! worker thread constructs its own `Engine` at startup. In the
+//! multi-stream server (coordinator::server) every device stream owns a
+//! private engine while ALL streams share one cloud engine, which lives
+//! on the single cloud-stage thread — sharing happens by funnelling work
+//! through the FIFO link stage, not by sharing the client across
+//! threads. See ARCHITECTURE.md §Runtime.
+//!
+//! The PJRT backend is feature-gated (`pjrt`): the offline build image
+//! has no `xla` crate, so without the feature `Engine::new` returns an
+//! error and every artifact-backed path skips cleanly.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::PathBuf;
-use std::time::Instant;
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+    use std::time::Instant;
 
-use anyhow::{Context, Result};
+    use anyhow::{Context, Result};
 
-use super::manifest::Manifest;
-use super::tensor::Tensor;
+    use crate::runtime::manifest::Manifest;
+    use crate::runtime::tensor::Tensor;
 
-pub struct Engine {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    /// artifact file name -> compiled executable (compile-once cache)
-    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-    /// cumulative host<->device + execute time, for the perf report
-    exec_nanos: RefCell<u64>,
-    exec_count: RefCell<u64>,
+    pub struct Engine {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        /// artifact file name -> compiled executable (compile-once cache)
+        exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+        /// cumulative host<->device + execute time, for the perf report
+        exec_nanos: RefCell<u64>,
+        exec_count: RefCell<u64>,
+    }
+
+    impl Engine {
+        pub fn new(manifest: &Manifest) -> Result<Engine> {
+            let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+            Ok(Engine {
+                client,
+                dir: manifest.dir.clone(),
+                exes: RefCell::new(HashMap::new()),
+                exec_nanos: RefCell::new(0),
+                exec_count: RefCell::new(0),
+            })
+        }
+
+        /// Compile an artifact (no-op if already compiled).
+        pub fn preload(&self, artifact: &str) -> Result<()> {
+            if self.exes.borrow().contains_key(artifact) {
+                return Ok(());
+            }
+            let path = self.dir.join(artifact);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("loading HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {artifact}"))?;
+            self.exes.borrow_mut().insert(artifact.to_string(), exe);
+            Ok(())
+        }
+
+        /// Execute a single-output artifact: inputs are host tensors, output
+        /// is unwrapped from the 1-tuple (aot.py lowers with
+        /// return_tuple=True).
+        pub fn run1(&self, artifact: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+            self.preload(artifact)?;
+            let start = Instant::now();
+            let lits = inputs
+                .iter()
+                .map(|t| literal_from(t))
+                .collect::<Result<Vec<_>>>()?;
+            let exes = self.exes.borrow();
+            let exe = exes.get(artifact).expect("preloaded");
+            let result = exe
+                .execute::<xla::Literal>(&lits)
+                .with_context(|| format!("executing {artifact}"))?[0][0]
+                .to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            let shape = out
+                .array_shape()
+                .context("output array shape")?
+                .dims()
+                .iter()
+                .map(|&d| d as usize)
+                .collect::<Vec<_>>();
+            let data = out.to_vec::<f32>()?;
+            *self.exec_nanos.borrow_mut() += start.elapsed().as_nanos() as u64;
+            *self.exec_count.borrow_mut() += 1;
+            Tensor::new(shape, data)
+        }
+
+        /// (total execute nanos, execute count) since construction.
+        pub fn exec_stats(&self) -> (u64, u64) {
+            (*self.exec_nanos.borrow(), *self.exec_count.borrow())
+        }
+
+        pub fn compiled_count(&self) -> usize {
+            self.exes.borrow().len()
+        }
+    }
+
+    fn literal_from(t: &Tensor) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&t.data);
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use anyhow::{bail, Result};
+
+    use crate::runtime::manifest::Manifest;
+    use crate::runtime::tensor::Tensor;
+
+    /// Stub engine for builds without the `pjrt` feature: construction
+    /// fails, so callers that gate on `Manifest::load(..)` + `Engine::new`
+    /// skip artifact-backed paths (the driver's simulated stages cover the
+    /// multi-stream scheduling behaviour without PJRT).
+    pub struct Engine {
+        _priv: (),
+    }
+
+    impl Engine {
+        pub fn new(_manifest: &Manifest) -> Result<Engine> {
+            bail!(
+                "built without the `pjrt` feature: the PJRT backend needs \
+                 the `xla` crate (see rust/Cargo.toml [features])"
+            );
+        }
+
+        pub fn preload(&self, _artifact: &str) -> Result<()> {
+            unreachable!("stub Engine cannot be constructed")
+        }
+
+        pub fn run1(&self, _artifact: &str, _inputs: &[&Tensor]) -> Result<Tensor> {
+            unreachable!("stub Engine cannot be constructed")
+        }
+
+        pub fn exec_stats(&self) -> (u64, u64) {
+            (0, 0)
+        }
+
+        pub fn compiled_count(&self) -> usize {
+            0
+        }
+    }
+}
+
+pub use backend::Engine;
 
 impl Engine {
-    pub fn new(manifest: &Manifest) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
-        Ok(Engine {
-            client,
-            dir: manifest.dir.clone(),
-            exes: RefCell::new(HashMap::new()),
-            exec_nanos: RefCell::new(0),
-            exec_count: RefCell::new(0),
-        })
-    }
-
-    /// Compile an artifact (no-op if already compiled).
-    pub fn preload(&self, artifact: &str) -> Result<()> {
-        if self.exes.borrow().contains_key(artifact) {
-            return Ok(());
+    /// Running average of one artifact execution, seconds — the live
+    /// stage-time estimate the serving policy's Eq. 11 target is built
+    /// from (pipeline::policy::MeasuredTransmitCost).
+    pub fn avg_exec_secs(&self) -> Option<f64> {
+        let (nanos, count) = self.exec_stats();
+        if count == 0 {
+            None
+        } else {
+            Some(nanos as f64 / count as f64 / 1e9)
         }
-        let path = self.dir.join(artifact);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("loading HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {artifact}"))?;
-        self.exes.borrow_mut().insert(artifact.to_string(), exe);
-        Ok(())
     }
-
-    /// Execute a single-output artifact: inputs are host tensors, output
-    /// is unwrapped from the 1-tuple (aot.py lowers with
-    /// return_tuple=True).
-    pub fn run1(&self, artifact: &str, inputs: &[&Tensor]) -> Result<Tensor> {
-        self.preload(artifact)?;
-        let start = Instant::now();
-        let lits = inputs
-            .iter()
-            .map(|t| literal_from(t))
-            .collect::<Result<Vec<_>>>()?;
-        let exes = self.exes.borrow();
-        let exe = exes.get(artifact).expect("preloaded");
-        let result = exe
-            .execute::<xla::Literal>(&lits)
-            .with_context(|| format!("executing {artifact}"))?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        let shape = out
-            .array_shape()
-            .context("output array shape")?
-            .dims()
-            .iter()
-            .map(|&d| d as usize)
-            .collect::<Vec<_>>();
-        let data = out.to_vec::<f32>()?;
-        *self.exec_nanos.borrow_mut() += start.elapsed().as_nanos() as u64;
-        *self.exec_count.borrow_mut() += 1;
-        Tensor::new(shape, data)
-    }
-
-    /// (total execute nanos, execute count) since construction.
-    pub fn exec_stats(&self) -> (u64, u64) {
-        (*self.exec_nanos.borrow(), *self.exec_count.borrow())
-    }
-
-    pub fn compiled_count(&self) -> usize {
-        self.exes.borrow().len()
-    }
-}
-
-fn literal_from(t: &Tensor) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(&t.data);
-    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims)?)
 }

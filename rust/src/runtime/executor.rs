@@ -106,7 +106,7 @@ impl<'a> ModelRuntime<'a> {
 
     /// Measure per-block execution time (median of `reps`), in seconds —
     /// the real-compute cost profile the partitioner scales by device
-    /// factors (DESIGN.md §Substitutions).
+    /// factors (ARCHITECTURE.md §Substitutions).
     pub fn profile_blocks(&self, reps: usize) -> Result<Vec<f64>> {
         let mut times = Vec::with_capacity(self.model.blocks.len());
         let mut x = Tensor::zeros(self.model.blocks[0].in_shape.clone());

@@ -1,5 +1,5 @@
-//! Synthetic task streams (DESIGN.md §3 substitution for UCF101 /
-//! ImageNet-100).
+//! Synthetic task streams (ARCHITECTURE.md §Substitutions — stands in
+//! for UCF101 / ImageNet-100).
 //!
 //! Temporal correlation levels mirror Table II's construction:
 //! - `Low`    — random frames (iid labels)
@@ -11,8 +11,8 @@
 //! Tasks deep inside a run score high (the cache has just seen this
 //! label); run heads and the ~15% hard (near-boundary) tasks score low.
 //! The distribution parameters were chosen to match the separability
-//! histograms measured on the real mini models (see EXPERIMENTS.md
-//! §Fig1 / §TableII); the DES thresholds operate on the same scale.
+//! histograms measured on the real mini models (see ARCHITECTURE.md
+//! §Experiment index); the DES thresholds operate on the same scale.
 
 use crate::util::Rng;
 

@@ -5,7 +5,7 @@
 
 use coach::baselines::Scheme;
 use coach::bench::des_thresholds;
-use coach::coordinator::online::{CoachOnline, CoachOnlineDes};
+use coach::coordinator::online::coach_des;
 use coach::model::{topology, CostModel, DeviceProfile};
 use coach::network::{BandwidthModel, Trace};
 use coach::partition::{optimize, AnalyticAcc, PartitionConfig};
@@ -81,15 +81,13 @@ fn dynamic_bandwidth_coach_degrades_least() {
         let sm = StageModel::from_strategy(&g, &cm, &strat, 20.0);
         let report = match scheme {
             Scheme::Coach => {
-                let mut pol = CoachOnlineDes {
-                    inner: CoachOnline::new(
-                        des_thresholds(),
-                        strat.base_bits(),
-                        sm.clone(),
-                        cm.clone(),
-                    ),
-                    graph: g.clone(),
-                };
+                let mut pol = coach_des(
+                    des_thresholds(),
+                    strat.base_bits(),
+                    sm.clone(),
+                    cm.clone(),
+                    g.clone(),
+                );
                 run_pipeline(&g, &cm, &sm, &bw, &tasks, &mut pol, "c")
             }
             _ => {
@@ -174,15 +172,13 @@ fn early_exit_ratio_tracks_correlation_in_des() {
     let mut ratios = Vec::new();
     for corr in [Correlation::Low, Correlation::Medium, Correlation::High] {
         let tasks = generate(800, 1e-4, corr, 100, 11);
-        let mut pol = CoachOnlineDes {
-            inner: CoachOnline::new(
-                des_thresholds(),
-                strat.base_bits(),
-                sm.clone(),
-                cm.clone(),
-            ),
-            graph: g.clone(),
-        };
+        let mut pol = coach_des(
+            des_thresholds(),
+            strat.base_bits(),
+            sm.clone(),
+            cm.clone(),
+            g.clone(),
+        );
         let r = run_pipeline(&g, &cm, &sm, &bw, &tasks, &mut pol, "t");
         ratios.push(r.exit_ratio());
     }

@@ -1,0 +1,125 @@
+//! Multi-stream serving e2e: N concurrent device streams feeding ONE
+//! shared cloud stage through the FIFO link, driven by the wall-clock
+//! driver (pipeline::driver::run_real) — the scheduling surface of the
+//! multi-stream server.
+//!
+//! The first test uses the driver's simulated-compute stages so it runs
+//! on any machine (no artifacts, no PJRT); the second exercises the full
+//! PJRT server (`coordinator::server::serve` with `n_streams = 4`,
+//! one shared cloud engine) and skips cleanly when artifacts are absent.
+
+use coach::coordinator::server::{serve, SchemePolicy, ServeCfg};
+use coach::metrics::MultiReport;
+use coach::model::{CostModel, DeviceProfile};
+use coach::network::BandwidthModel;
+use coach::pipeline::driver::{run_real, RealCfg, SimCloud, SimDevice};
+use coach::pipeline::{StaticPolicy, WallClock};
+use coach::runtime::{default_artifact_dir, Engine, Manifest};
+use coach::sim::{generate, Correlation, SimTask};
+
+const N_TASKS: usize = 40;
+const PERIOD: f64 = 0.007;
+const T_E: f64 = 0.006;
+const T_C: f64 = 0.001;
+
+fn run_sim_streams(n_streams: usize) -> MultiReport {
+    let clock = WallClock::new();
+    let streams: Vec<(Vec<SimTask>, _)> = (0..n_streams)
+        .map(|i| {
+            let tasks = generate(
+                N_TASKS,
+                PERIOD,
+                Correlation::Medium,
+                10,
+                77 + i as u64,
+            );
+            let bw = BandwidthModel::Static(50.0);
+            let cost = CostModel::new(
+                DeviceProfile::jetson_nx(),
+                DeviceProfile::cloud_a6000(),
+            );
+            let factory = move || -> anyhow::Result<SimDevice<StaticPolicy>> {
+                Ok(SimDevice {
+                    policy: StaticPolicy::no_exit(8),
+                    t_e: T_E,
+                    bw,
+                    clock,
+                    elems: 2048,
+                    cost,
+                })
+            };
+            (tasks, factory)
+        })
+        .collect();
+    run_real::<SimDevice<StaticPolicy>, SimCloud, _, _>(
+        streams,
+        || Ok(SimCloud { t_c: T_C }),
+        BandwidthModel::Static(50.0),
+        clock,
+        RealCfg { model: "sim".into(), ..Default::default() },
+    )
+    .unwrap()
+}
+
+#[test]
+fn four_streams_share_one_cloud_and_beat_single_stream_throughput() {
+    let single = run_sim_streams(1);
+    assert_eq!(single.per_stream.len(), 1);
+    let single_tp = single.aggregate_throughput();
+
+    let multi = run_sim_streams(4);
+    assert_eq!(multi.per_stream.len(), 4, "per-stream reports");
+    for r in &multi.per_stream {
+        assert_eq!(r.tasks.len(), N_TASKS, "stream completed all tasks");
+        assert!(r.throughput() > 0.0);
+    }
+    let agg = multi.aggregate();
+    // all non-exited tasks of every stream crossed the one shared cloud
+    assert!(
+        agg.cloud.busy > 3.0 * N_TASKS as f64 * T_C * 0.8,
+        "shared cloud busy {:.3}s too small for 4 streams",
+        agg.cloud.busy
+    );
+    let agg_tp = multi.aggregate_throughput();
+    assert!(
+        agg_tp > single_tp * 2.0,
+        "4-stream aggregate {agg_tp:.1} it/s must exceed single-stream \
+         {single_tp:.1} it/s"
+    );
+}
+
+#[test]
+fn pjrt_server_serves_four_streams_on_one_cloud_engine() {
+    let Ok(m) = Manifest::load(&default_artifact_dir()) else { return };
+    // the PJRT backend is feature-gated; skip on stub-engine builds
+    if Engine::new(&m).is_err() {
+        return;
+    }
+    let cfg = |n_streams: usize| ServeCfg {
+        model: "resnet_mini".to_string(),
+        cut: 1,
+        policy: SchemePolicy::coach(),
+        device_scale: 4.0,
+        bw: BandwidthModel::Static(20.0),
+        period: 0.012,
+        n_tasks: 40,
+        correlation: Correlation::High,
+        eps: 0.005,
+        seed: 23,
+        audit_every: 0,
+        n_streams,
+    };
+    let single = serve(&m, &cfg(1)).unwrap();
+    assert_eq!(single.per_stream.len(), 1);
+    let multi = serve(&m, &cfg(4)).unwrap();
+    assert_eq!(multi.per_stream.len(), 4);
+    for r in &multi.per_stream {
+        assert_eq!(r.tasks.len(), 40);
+    }
+    assert!(
+        multi.report.throughput() > single.report.throughput(),
+        "4-stream aggregate {:.1} it/s must exceed single-stream {:.1} it/s",
+        multi.report.throughput(),
+        single.report.throughput()
+    );
+}

@@ -7,8 +7,16 @@
 
 use coach::coordinator::server::{serve, SchemePolicy, ServeCfg};
 use coach::network::{BandwidthModel, Trace};
-use coach::runtime::{default_artifact_dir, Manifest};
+use coach::runtime::{default_artifact_dir, Engine, Manifest};
 use coach::sim::Correlation;
+
+/// Artifacts AND a working engine (the PJRT backend is feature-gated;
+/// the default build's stub Engine errors, so these tests skip).
+fn load() -> Option<Manifest> {
+    let m = Manifest::load(&default_artifact_dir()).ok()?;
+    Engine::new(&m).ok()?;
+    Some(m)
+}
 
 fn base_cfg(model: &str, m: &Manifest) -> ServeCfg {
     let blocks = m.models[model].blocks.len();
@@ -24,12 +32,13 @@ fn base_cfg(model: &str, m: &Manifest) -> ServeCfg {
         eps: 0.005,
         seed: 17,
         audit_every: 3,
+        n_streams: 1,
     }
 }
 
 #[test]
 fn exit_ratio_monotone_in_correlation_real_pipeline() {
-    let Ok(m) = Manifest::load(&default_artifact_dir()) else { return };
+    let Some(m) = load() else { return };
     let mut ratios = Vec::new();
     for corr in [Correlation::Low, Correlation::High] {
         let cfg = ServeCfg { correlation: corr, ..base_cfg("resnet_mini", &m) };
@@ -46,7 +55,7 @@ fn exit_ratio_monotone_in_correlation_real_pipeline() {
 
 #[test]
 fn coach_transmits_less_than_noadjust() {
-    let Ok(m) = Manifest::load(&default_artifact_dir()) else { return };
+    let Some(m) = load() else { return };
     let coach = serve(&m, &base_cfg("vgg_mini", &m)).unwrap();
     let cfg = ServeCfg {
         policy: SchemePolicy::no_adjust(),
@@ -64,7 +73,7 @@ fn coach_transmits_less_than_noadjust() {
 
 #[test]
 fn early_exits_pass_accuracy_audit() {
-    let Ok(m) = Manifest::load(&default_artifact_dir()) else { return };
+    let Some(m) = load() else { return };
     let mut cfg = base_cfg("resnet_mini", &m);
     cfg.audit_every = 1; // audit every exit
     cfg.n_tasks = 80;
@@ -83,7 +92,7 @@ fn early_exits_pass_accuracy_audit() {
 
 #[test]
 fn bandwidth_drop_lowers_transmitted_bits() {
-    let Ok(m) = Manifest::load(&default_artifact_dir()) else { return };
+    let Some(m) = load() else { return };
     let mut cfg = base_cfg("vgg_mini", &m);
     cfg.policy = SchemePolicy { early_exit: false, ..SchemePolicy::coach() };
     cfg.n_tasks = 120;
@@ -114,7 +123,7 @@ fn bandwidth_drop_lowers_transmitted_bits() {
 
 #[test]
 fn serve_rejects_out_of_range_cut() {
-    let Ok(m) = Manifest::load(&default_artifact_dir()) else { return };
+    let Some(m) = load() else { return };
     let mut cfg = base_cfg("vgg_mini", &m);
     cfg.cut = 99;
     assert!(serve(&m, &cfg).is_err());

@@ -3,14 +3,17 @@
 //! proptest crate; cases are generated from the in-tree deterministic
 //! PRNG — every failure is reproducible from the printed seed.
 
-use coach::cache::SemanticCache;
+use coach::cache::{SemanticCache, Thresholds};
+use coach::coordinator::online::coach_des;
 use coach::model::{CostModel, DeviceProfile, LayerKind, ModelGraph};
 use coach::network::{BandwidthModel, Trace};
 use coach::partition::{
     chain_of, evaluate, optimize, AnalyticAcc, ChainNode, PartitionConfig,
 };
-use coach::pipeline::{run_pipeline, StageModel, StaticPolicy};
-use coach::quant::uaq;
+use coach::pipeline::{
+    run_pipeline, Decision, OnlinePolicy, StageModel, StaticPolicy, TaskView,
+};
+use coach::quant::{clamp_bits, uaq};
 use coach::sim::{generate, Correlation};
 use coach::util::Rng;
 
@@ -214,6 +217,63 @@ fn prop_cache_centers_bounded_by_observed_features() {
                 c[i] >= lo[i] - 1e-4 && c[i] <= hi[i] + 1e-4,
                 "center escaped hull at dim {i}"
             );
+        }
+    }
+}
+
+#[test]
+fn prop_unified_policy_precision_monotone_in_bandwidth() {
+    // Eq. 11 through the SHARED OnlinePolicy (the exact object both the
+    // DES and the server consume — not a private reimplementation): the
+    // chosen precision Q_c is monotone non-increasing as bandwidth
+    // drops, and always stays within [Q_r, max(base, Q_r)] clamped to
+    // the supported range.
+    let mut rng = Rng::new(0x0E11);
+    let cost =
+        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
+    for case in 0..CASES {
+        let g = random_graph(&mut rng);
+        let cfg = PartitionConfig {
+            bw_mbps: 1.0 + rng.f64() * 80.0,
+            ..Default::default()
+        };
+        let strat = optimize(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+        let base = strat.base_bits();
+        let sm = StageModel::from_strategy(&g, &cost, &strat, cfg.bw_mbps);
+        let th = Thresholds {
+            s_ext: f64::INFINITY, // isolate Eq. 11 (never exit)
+            s_adj: vec![0.25, 0.55],
+        };
+        let mut pol = coach_des(th, base, sm, cost.clone(), g.clone());
+        for _ in 0..100 {
+            pol.observe(false); // past the warmup ramp
+        }
+        let s = rng.f64() * 1.2;
+        let q_r = clamp_bits(pol.policy.thresholds.required_bits(s, base));
+        let hi = clamp_bits(base.max(q_r));
+
+        let mut bws: Vec<f64> = (0..8).map(|_| 0.5 + rng.f64() * 99.5).collect();
+        bws.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending
+        let mut prev: Option<u8> = None;
+        for &bw in &bws {
+            let bits = match pol.decide(TaskView {
+                separability: s,
+                bw_est_mbps: bw,
+            }) {
+                Decision::Transmit { bits } => bits,
+                Decision::Exit => panic!("case {case}: s_ext=inf must not exit"),
+            };
+            assert!(
+                (q_r..=hi).contains(&bits),
+                "case {case}: Q_c {bits} outside [{q_r}, {hi}] at {bw} Mbps"
+            );
+            if let Some(p) = prev {
+                assert!(
+                    bits <= p,
+                    "case {case}: Q_c rose {p} -> {bits} as bandwidth dropped"
+                );
+            }
+            prev = Some(bits);
         }
     }
 }

@@ -8,7 +8,11 @@ use coach::runtime::{default_artifact_dir, Engine, Manifest, ModelRuntime, Tenso
 use coach::util::Rng;
 
 fn load() -> Option<Manifest> {
-    Manifest::load(&default_artifact_dir()).ok()
+    let m = Manifest::load(&default_artifact_dir()).ok()?;
+    // the PJRT backend is feature-gated (`pjrt`); without it Engine::new
+    // errors and these tests skip even when artifacts exist
+    Engine::new(&m).ok()?;
+    Some(m)
 }
 
 fn input_from_pattern(m: &Manifest, class: usize) -> Tensor {

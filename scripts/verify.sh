@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# CI / local verification: formatting, lints, tests.
+# Usage: scripts/verify.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
+else
+    echo "(rustfmt unavailable; skipping)"
+fi
+
+echo "== cargo clippy -D warnings =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --workspace --all-targets -- -D warnings
+else
+    echo "(clippy unavailable; skipping)"
+fi
+
+echo "== cargo test =="
+cargo test -q
+
+echo "verify OK"
