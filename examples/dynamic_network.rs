@@ -4,15 +4,15 @@
 //!
 //! Runs the REAL compiled pipeline against a 20 -> 10 -> 5 Mbps step
 //! trace and prints per-phase latency for COACH vs the NoAdjust
-//! configuration.
+//! configuration — one `Scenario` description per policy, executed by
+//! `Scenario::serve`.
 //!
 //! Run: `cargo run --release --example dynamic_network [n_tasks]`
 
-use coach::coordinator::server::{serve, SchemePolicy, ServeCfg};
 use coach::metrics::Table;
 use coach::network::{BandwidthModel, Trace};
 use coach::runtime::{default_artifact_dir, Manifest};
-use coach::sim::Correlation;
+use coach::scenario::Scenario;
 
 fn main() -> anyhow::Result<()> {
     let n_tasks: usize = std::env::args()
@@ -21,8 +21,6 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(300);
     let manifest = Manifest::load(&default_artifact_dir())?;
     let model = "vgg_mini";
-    let m = manifest.model(model)?;
-    let cut = (m.blocks.len() - 1) / 2;
 
     // step the bandwidth down at 1/3 and 2/3 of the run
     let span = n_tasks as f64 * 0.012;
@@ -38,25 +36,20 @@ fn main() -> anyhow::Result<()> {
         "wire Kb/task",
         "exit %",
     ]);
-    for (name, policy) in [
-        ("COACH (adaptive)", SchemePolicy::coach()),
-        ("NoAdjust (fixed 8-bit)", SchemePolicy::no_adjust()),
-    ] {
-        let cfg = ServeCfg {
-            model: model.to_string(),
-            cut,
-            policy,
-            device_scale: 6.0,
-            bw: BandwidthModel::Stepped(trace.clone()),
-            period: 0.012,
-            n_tasks,
-            correlation: Correlation::Medium,
-            eps: 0.005,
-            seed: 33,
-            audit_every: 0,
-            n_streams: 1,
-        };
-        let res = serve(&manifest, &cfg)?;
+    for (name, adaptive) in
+        [("COACH (adaptive)", true), ("NoAdjust (fixed 8-bit)", false)]
+    {
+        let mut sc = Scenario::new(model)
+            .named("dynamic-network")
+            .device_scale(6.0)
+            .bandwidth(BandwidthModel::Stepped(trace.clone()))
+            .period(0.012)
+            .tasks(n_tasks)
+            .seed(33);
+        if !adaptive {
+            sc = sc.policy_static(8, f64::INFINITY);
+        }
+        let res = sc.serve(&manifest)?;
         let r = &res.report;
         table.row(vec![
             name.to_string(),

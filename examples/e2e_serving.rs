@@ -5,15 +5,16 @@
 //! measured block profile, threaded device/link/cloud pipeline over the
 //! PJRT runtime, semantic-cache warmup, per-task early-exit and
 //! adaptive UAQ precision — and reports latency and throughput, with an
-//! accuracy audit of early exits against the full fp32 model.
+//! accuracy audit of early exits against the full fp32 model. Each
+//! configuration is ONE `Scenario` description executed by
+//! `Scenario::serve`.
 //!
 //! Run: `cargo run --release --example e2e_serving [n_tasks]`
 
-use coach::coordinator::server::{serve, SchemePolicy, ServeCfg};
 use coach::model::{topology, CostModel, DeviceProfile};
-use coach::network::BandwidthModel;
 use coach::partition::{optimize, MeasuredAcc, PartitionConfig};
 use coach::runtime::{default_artifact_dir, Engine, Manifest, ModelRuntime};
+use coach::scenario::Scenario;
 use coach::sim::Correlation;
 
 fn main() -> anyhow::Result<()> {
@@ -27,7 +28,7 @@ fn main() -> anyhow::Result<()> {
         println!("=== {model} ===");
 
         // ---- offline component: measured profile -> strategy ----------
-        let (cut, base_bits) = {
+        let cut = {
             let engine = Engine::new(&manifest)?;
             let rt = ModelRuntime::new(&engine, &manifest, model)?;
             let secs = rt.profile_blocks(3)?;
@@ -47,30 +48,30 @@ fn main() -> anyhow::Result<()> {
                 s.cuts.iter().map(|c| c.bits).collect::<Vec<_>>(),
                 s.eval.objective() * 1e3
             );
-            (cut, s.base_bits())
+            cut
         };
-        let _ = base_bits;
+
+        // the common description: everything below varies policy/fleet
+        let base = || {
+            Scenario::new(model)
+                .named("e2e-serving")
+                .cut(cut)
+                .device_scale(6.0) // NX-like device:cloud ratio
+                .bandwidth_mbps(20.0)
+                .period(0.012)
+                .correlation(Correlation::High)
+                .seed(7)
+        };
 
         // ---- full online pipeline, batched request stream --------------
-        for (name, policy) in [
-            ("COACH", SchemePolicy::coach()),
-            ("NoAdjust", SchemePolicy::no_adjust()),
-        ] {
-            let cfg = ServeCfg {
-                model: model.to_string(),
-                cut,
-                policy,
-                device_scale: 6.0, // NX-like device:cloud ratio
-                bw: BandwidthModel::Static(20.0),
-                period: 0.012,
-                n_tasks,
-                correlation: Correlation::High,
-                eps: 0.005,
-                seed: 7,
-                audit_every: 4, // audit every 4th early exit vs fp32
-                n_streams: 1,
-            };
-            let res = serve(&manifest, &cfg)?;
+        for (name, adaptive) in [("COACH", true), ("NoAdjust", false)] {
+            let mut sc = base()
+                .tasks(n_tasks)
+                .audit_every(4); // audit every 4th early exit vs fp32
+            if !adaptive {
+                sc = sc.policy_static(8, f64::INFINITY);
+            }
+            let res = sc.serve(&manifest)?;
             let r = &res.report;
             println!(
                 "{name:>9}: lat {:6.2} ms (p99 {:6.2}) | {:5.1} it/s | exits {:4.1}% | wire {:6.1} Kb | acc(audited) {:.3}",
@@ -91,21 +92,7 @@ fn main() -> anyhow::Result<()> {
         }
 
         // ---- multi-stream: 4 concurrent users, one shared cloud engine --
-        let cfg = ServeCfg {
-            model: model.to_string(),
-            cut,
-            policy: SchemePolicy::coach(),
-            device_scale: 6.0,
-            bw: BandwidthModel::Static(20.0),
-            period: 0.012,
-            n_tasks: n_tasks / 2,
-            correlation: Correlation::High,
-            eps: 0.005,
-            seed: 7,
-            audit_every: 0,
-            n_streams: 4,
-        };
-        let res = serve(&manifest, &cfg)?;
+        let res = base().tasks(n_tasks / 2).fleet(4).serve(&manifest)?;
         for (i, r) in res.per_stream.iter().enumerate() {
             println!(
                 "  stream {i}: lat {:6.2} ms | {:5.1} it/s | exits {:4.1}%",

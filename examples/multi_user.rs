@@ -4,30 +4,37 @@
 //! production end-cloud serving (PICO/CoEdge-style multi-device
 //! pipelines).
 //!
-//! Runs on the wall-clock driver with simulated compute, so it works on
-//! any machine — no compiled artifacts required. The same driver with
-//! PJRT stages backs `coach serve --streams N` (see
-//! coordinator::server).
+//! ONE scenario description drives BOTH substrates here: the
+//! multi-stream DES (virtual time, instant) and the wall-clock threaded
+//! driver with simulated compute (real threads, no compiled artifacts
+//! required). The same driver with PJRT stages backs
+//! `coach serve --streams N` and `coach run --real`.
 //!
 //! Run: `cargo run --release --example multi_user [n_streams]`
 
 use coach::metrics::Table;
-use coach::model::{CostModel, DeviceProfile};
-use coach::network::BandwidthModel;
-use coach::pipeline::driver::{run_real, RealCfg, SimCloud, SimDevice};
-use coach::pipeline::{StaticPolicy, WallClock};
-use coach::sim::{generate, Correlation, SimTask};
+use coach::scenario::Scenario;
 
 fn main() -> anyhow::Result<()> {
     let n_streams: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(4);
-    let n_tasks = 60;
-    let period = 0.008;
+
+    let scenario = |fleet: usize| {
+        Scenario::new("vgg16")
+            .named("multi-user")
+            .bandwidth_mbps(40.0)
+            .tasks(40)
+            .period(0.008)
+            .n_classes(20)
+            .seed(99)
+            .fleet(fleet)
+    };
 
     let mut table = Table::new(&[
         "fleet",
+        "driver",
         "aggregate it/s",
         "avg latency ms",
         "p99 ms",
@@ -35,53 +42,26 @@ fn main() -> anyhow::Result<()> {
     ]);
 
     for fleet in [1, n_streams] {
-        let clock = WallClock::new();
-        let streams: Vec<(Vec<SimTask>, _)> = (0..fleet)
-            .map(|i| {
-                let tasks = generate(
-                    n_tasks,
-                    period,
-                    Correlation::Medium,
-                    20,
-                    99 + i as u64,
-                );
-                let bw = BandwidthModel::Static(40.0);
-                let cost = CostModel::new(
-                    DeviceProfile::jetson_nx(),
-                    DeviceProfile::cloud_a6000(),
-                );
-                let factory = move || -> anyhow::Result<SimDevice<StaticPolicy>> {
-                    Ok(SimDevice {
-                        policy: StaticPolicy { bits: 8, exit_threshold: 0.8 },
-                        t_e: 0.006,
-                        bw,
-                        clock,
-                        elems: 4096,
-                        cost,
-                    })
-                };
-                (tasks, factory)
-            })
-            .collect();
-        let multi = run_real::<SimDevice<StaticPolicy>, SimCloud, _, _>(
-            streams,
-            || Ok(SimCloud { t_c: 0.0012 }),
-            BandwidthModel::Static(40.0),
-            clock,
-            RealCfg { model: "sim".into(), ..Default::default() },
-        )?;
-        let agg = multi.aggregate();
-        table.row(vec![
-            format!("{fleet} stream(s)"),
-            format!("{:.1}", agg.throughput()),
-            format!("{:.2}", agg.avg_latency_ms()),
-            format!("{:.2}", agg.p99_latency_ms()),
-            format!("{:.0}", agg.cloud.utilization() * 100.0),
-        ]);
+        // virtual time first: the DES predicts the contention …
+        let des = scenario(fleet).simulate_fleet()?.aggregate();
+        // … and the SAME description then runs on real threads with
+        // busy-sleep stages priced from the same analytic plan.
+        let wall = scenario(fleet).serve_sim()?;
+        let wall_agg = wall.aggregate();
+        for (driver, agg) in [("DES", &des), ("wall-clock", &wall_agg)] {
+            table.row(vec![
+                format!("{fleet} stream(s)"),
+                driver.to_string(),
+                format!("{:.1}", agg.throughput()),
+                format!("{:.2}", agg.avg_latency_ms()),
+                format!("{:.2}", agg.p99_latency_ms()),
+                format!("{:.0}", agg.cloud.utilization() * 100.0),
+            ]);
+        }
         if fleet > 1 {
-            for (i, r) in multi.per_stream.iter().enumerate() {
+            for (i, r) in wall.per_stream.iter().enumerate() {
                 println!(
-                    "  stream {i}: {:5.1} it/s | lat {:6.2} ms | exits {:4.1}%",
+                    "  stream {i} (wall): {:5.1} it/s | lat {:6.2} ms | exits {:4.1}%",
                     r.throughput(),
                     r.avg_latency_ms(),
                     r.exit_ratio() * 100.0
@@ -90,7 +70,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    println!("\n{n_streams}-user fleet vs single user (simulated compute):");
+    println!("\n{n_streams}-user fleet vs single user, one description, two drivers:");
     println!("{}", table.render());
     println!("multi_user OK");
     Ok(())

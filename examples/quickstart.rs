@@ -4,15 +4,16 @@
 //! 2. run one collaborative inference by hand (device prefix -> UAQ
 //!    transmission round trip -> cloud suffix),
 //! 3. let the offline component pick the partition + precision,
-//! 4. compare COACH against the four baselines on the paper-scale
-//!    ResNet101 cost model.
+//! 4. describe a paper-scale experiment ONCE as a `Scenario` and race
+//!    COACH against the four baselines through the DES.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use coach::baselines::Scheme;
 use coach::model::{topology, CostModel, DeviceProfile};
-use coach::partition::{optimize, AnalyticAcc, MeasuredAcc, PartitionConfig};
+use coach::partition::{optimize, MeasuredAcc, PartitionConfig};
 use coach::runtime::{default_artifact_dir, Engine, Manifest, ModelRuntime, Tensor};
+use coach::scenario::Scenario;
 
 fn main() -> anyhow::Result<()> {
     // ---- 1. artifacts -------------------------------------------------
@@ -63,20 +64,28 @@ fn main() -> anyhow::Result<()> {
         strat.eval.objective() * 1e3
     );
 
-    // ---- 4. COACH vs baselines on the paper-scale DAG -----------------
-    let big = topology::resnet101();
-    let cost =
-        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
-    println!("\nResNet101 @ 20 Mbps on Jetson NX (paper-scale cost model):");
+    // ---- 4. one Scenario, five schemes, through the DES ----------------
+    // A Scenario is the single front door: model + device + network +
+    // workload described once, then simulated (or served — see
+    // `coach run scenarios/table1_cell.toml`).
+    println!("\nResNet101 @ 20 Mbps on Jetson NX, 300 tasks under common load:");
     for scheme in Scheme::ALL {
-        let s = scheme.plan(&big, &cost, &AnalyticAcc, &cfg)?;
+        let plan = Scenario::new("resnet101")
+            .scheme(scheme)
+            .bandwidth_mbps(20.0)
+            .tasks(300)
+            .sustainable_load()
+            .drop_after_periods(6.0)
+            .compile()?; // plan once; run() reuses the compiled plan
+        let r = plan.run();
         println!(
-            "  {:>6}: latency {:6.2} ms | max stage {:6.2} ms | bubbles {:6.2} ms | Eq.6 objective {:6.2} ms",
+            "  {:>6}: plan obj {:6.2} ms | lat {:7.2} ms | {:5.1} it/s | exits {:4.1}% | bubbles {:5.2} s",
             scheme.name(),
-            s.eval.latency * 1e3,
-            s.eval.max_stage() * 1e3,
-            (s.eval.b_c + s.eval.b_t) * 1e3,
-            s.eval.objective() * 1e3
+            plan.strategy.eval.objective() * 1e3,
+            r.avg_latency_ms(),
+            r.throughput(),
+            r.exit_ratio() * 100.0,
+            r.total_bubbles()
         );
     }
     println!("\nquickstart OK");

@@ -2,15 +2,15 @@
 //! produces temporally-correlated frames; COACH's context-aware cache
 //! converts that correlation into early exits and cheaper transmissions.
 //!
-//! Serves the same stream at all three correlation levels and prints a
-//! Table II-style comparison on the REAL compiled pipeline.
+//! Serves the same `Scenario` description at all three correlation
+//! levels and prints a Table II-style comparison on the REAL compiled
+//! pipeline (`Scenario::serve` -> coordinator::server).
 //!
 //! Run: `cargo run --release --example video_stream [n_tasks]`
 
-use coach::coordinator::server::{serve, SchemePolicy, ServeCfg};
 use coach::metrics::Table;
-use coach::network::BandwidthModel;
 use coach::runtime::{default_artifact_dir, Manifest};
+use coach::scenario::Scenario;
 use coach::sim::Correlation;
 
 fn main() -> anyhow::Result<()> {
@@ -20,8 +20,6 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(200);
     let manifest = Manifest::load(&default_artifact_dir())?;
     let model = "resnet_mini";
-    let m = manifest.model(model)?;
-    let cut = (m.blocks.len() - 1) / 2;
 
     let mut table = Table::new(&[
         "stream",
@@ -31,27 +29,24 @@ fn main() -> anyhow::Result<()> {
         "throughput it/s",
     ]);
 
-    for (label, corr, policy) in [
-        ("no-adjust", Correlation::High, SchemePolicy::no_adjust()),
-        ("low corr (random frames)", Correlation::Low, SchemePolicy::coach()),
-        ("medium corr (random videos)", Correlation::Medium, SchemePolicy::coach()),
-        ("high corr (sequential video)", Correlation::High, SchemePolicy::coach()),
+    for (label, corr, adaptive) in [
+        ("no-adjust", Correlation::High, false),
+        ("low corr (random frames)", Correlation::Low, true),
+        ("medium corr (random videos)", Correlation::Medium, true),
+        ("high corr (sequential video)", Correlation::High, true),
     ] {
-        let cfg = ServeCfg {
-            model: model.to_string(),
-            cut,
-            policy,
-            device_scale: 6.0,
-            bw: BandwidthModel::Static(20.0),
-            period: 0.012,
-            n_tasks,
-            correlation: corr,
-            eps: 0.005,
-            seed: 21,
-            audit_every: 0,
-            n_streams: 1,
-        };
-        let res = serve(&manifest, &cfg)?;
+        let mut sc = Scenario::new(model)
+            .named("video-stream")
+            .device_scale(6.0)
+            .bandwidth_mbps(20.0)
+            .period(0.012)
+            .tasks(n_tasks)
+            .correlation(corr)
+            .seed(21);
+        if !adaptive {
+            sc = sc.policy_static(8, f64::INFINITY);
+        }
+        let res = sc.serve(&manifest)?;
         let r = &res.report;
         table.row(vec![
             label.to_string(),

@@ -12,12 +12,10 @@ use std::time::Instant;
 
 use coach::cache::SemanticCache;
 use coach::model::{topology, CostModel, DeviceProfile};
-use coach::network::BandwidthModel;
 use coach::partition::{evaluate, optimize, AnalyticAcc, PartitionConfig};
-use coach::pipeline::{run_pipeline, StageModel, StaticPolicy};
 use coach::quant::uaq;
 use coach::runtime::{default_artifact_dir, Engine, Manifest, ModelRuntime, Tensor};
-use coach::sim::{generate, Correlation};
+use coach::scenario::Scenario;
 use coach::util::Rng;
 
 fn timeit<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) {
@@ -59,14 +57,17 @@ fn main() {
         evaluate(&g, &cost, &strat.on_device, &strat.cuts, 20.0)
     });
 
-    // --- DES pipeline ---------------------------------------------------
-    let sm = StageModel::from_strategy(&g, &cost, &strat, 20.0);
-    let tasks = generate(5000, 1e-4, Correlation::Medium, 100, 1);
-    let bw = BandwidthModel::Static(20.0);
-    timeit("pipeline::run_pipeline (5000 tasks)", 10, || {
-        let mut pol = StaticPolicy::no_exit(8);
-        run_pipeline(&g, &cost, &sm, &bw, &tasks, &mut pol, "bench")
-    });
+    // --- DES pipeline (compiled scenario: plan once, simulate per iter)
+    let plan = Scenario::new("resnet101")
+        .slo_unbounded()
+        .policy_static(8, f64::INFINITY)
+        .bandwidth_mbps(20.0)
+        .tasks(5000)
+        .period(1e-4)
+        .seed(1)
+        .compile()
+        .expect("compile scenario");
+    timeit("scenario DES simulate (5000 tasks)", 10, || plan.run());
 
     // --- semantic cache --------------------------------------------------
     let mut rng = Rng::new(2);

@@ -116,7 +116,8 @@ pub fn run(manifest: &Manifest, model: &str, n_tasks: usize) -> Result<Fig1Resul
             .sqrt();
         dists.push((d, b));
     }
-    dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // total_cmp: measured features can degenerate to NaN distances
+    dists.sort_by(|a, b| a.0.total_cmp(&b.0));
     let mut spatial = Table::new(&["distance quartile", "mean optimal bits", "n"]);
     let q = dists.len() / 4;
     for k in 0..4 {

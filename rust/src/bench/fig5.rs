@@ -7,53 +7,39 @@
 //! (COACH's per-task quantization adjustment + early exit, SPINN's
 //! exit) can compensate. The paper's headline: COACH loses only
 //! ~12-15% vs static while baselines collapse.
+//!
+//! A stale-plan phase is one [`Scenario`] with `plan_bw` pinned to the
+//! pre-change bandwidth — the same description
+//! `scenarios/fig5_stale_plan.toml` ships.
 
 use anyhow::Result;
 
 use crate::baselines::Scheme;
 use crate::bench::emit::BenchJson;
-use crate::bench::{des_thresholds, SPINN_EXIT_THRESHOLD};
-use crate::coordinator::online::coach_des;
-use crate::metrics::{RunReport, Table};
-use crate::model::{topology, CostModel, DeviceProfile};
-use crate::network::BandwidthModel;
-use crate::partition::{AnalyticAcc, PartitionConfig, Strategy};
-use crate::pipeline::{run_pipeline, StageModel, StaticPolicy};
-use crate::sim::{generate, Correlation};
+use crate::metrics::Table;
+use crate::scenario::Scenario;
 
-fn run_phase(
-    g: &crate::model::ModelGraph,
-    cost: &CostModel,
-    strat: &Strategy,
+/// The Fig. 5 scenario of one phase: saturated arrivals, plan made at
+/// `plan_bw` (stale when the trace has stepped away from it), stage
+/// model priced at the live phase bandwidth, no SLO (the schemes plan
+/// with their own unconstrained objectives here, as in the paper's
+/// §IV-C setup).
+pub fn phase_scenario(
+    model: &str,
     scheme: Scheme,
-    bw_mbps: f64,
+    plan_bw: f64,
+    live_bw: f64,
     n_tasks: usize,
-) -> RunReport {
-    let sm = StageModel::from_strategy(g, cost, strat, bw_mbps);
-    let bw = BandwidthModel::Static(bw_mbps);
-    let tasks = generate(n_tasks, 1e-5, Correlation::Medium, 100, 7);
-    match scheme {
-        Scheme::Coach => {
-            let mut pol = coach_des(
-                des_thresholds(),
-                strat.base_bits(),
-                sm.clone(),
-                cost.clone(),
-                g.clone(),
-            );
-            run_pipeline(g, cost, &sm, &bw, &tasks, &mut pol, "COACH")
-        }
-        Scheme::Spinn => {
-            let mut pol =
-                StaticPolicy { bits: 8, exit_threshold: SPINN_EXIT_THRESHOLD };
-            run_pipeline(g, cost, &sm, &bw, &tasks, &mut pol, "SPINN")
-        }
-        _ => {
-            let mut pol =
-                StaticPolicy::no_exit(scheme.fixed_bits().unwrap_or(32));
-            run_pipeline(g, cost, &sm, &bw, &tasks, &mut pol, scheme.name())
-        }
-    }
+) -> Scenario {
+    Scenario::new(model)
+        .scheme(scheme)
+        .slo_unbounded()
+        .plan_bw(plan_bw)
+        .stage_bw(live_bw)
+        .bandwidth_mbps(live_bw)
+        .tasks(n_tasks)
+        .period(1e-5)
+        .seed(7)
 }
 
 /// One Fig. 5 subplot: phases of the step trace; for every scheme,
@@ -64,11 +50,6 @@ pub fn subplot(
     n_tasks: usize,
     json: &mut BenchJson,
 ) -> Result<Table> {
-    let g = topology::by_name(model)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
-    let cost =
-        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
-
     let mut header = vec!["scheme".to_string()];
     for &bw in phases {
         header.push(format!("{bw}Mbps static"));
@@ -78,16 +59,13 @@ pub fn subplot(
 
     for scheme in Scheme::ALL {
         let mut row = vec![scheme.name().to_string()];
-        // dynamic plan: made once at the initial bandwidth
-        let stale_cfg =
-            PartitionConfig { bw_mbps: phases[0], ..Default::default() };
-        let stale = scheme.plan(&g, &cost, &AnalyticAcc, &stale_cfg)?;
         for &bw in phases {
-            let fresh_cfg =
-                PartitionConfig { bw_mbps: bw, ..Default::default() };
-            let fresh = scheme.plan(&g, &cost, &AnalyticAcc, &fresh_cfg)?;
-            let fresh_r = run_phase(&g, &cost, &fresh, scheme, bw, n_tasks);
-            let dyn_r = run_phase(&g, &cost, &stale, scheme, bw, n_tasks);
+            // static plan: re-made offline for the live bandwidth
+            let fresh_r =
+                phase_scenario(model, scheme, bw, bw, n_tasks).simulate()?;
+            // dynamic plan: made once at the initial bandwidth
+            let dyn_r = phase_scenario(model, scheme, phases[0], bw, n_tasks)
+                .simulate()?;
             json.add(
                 &format!("{model}/{}/{bw}Mbps/static", scheme.name()),
                 &fresh_r,

@@ -6,20 +6,39 @@ use anyhow::Result;
 
 use crate::baselines::Scheme;
 use crate::bench::emit::BenchJson;
-use crate::bench::{des_thresholds, plan_cfg, BW_GRID, SPINN_EXIT_THRESHOLD};
-use crate::coordinator::online::coach_des;
+use crate::bench::BW_GRID;
 use crate::metrics::{RunReport, Table};
-use crate::model::{topology, CostModel, DeviceProfile};
-use crate::network::BandwidthModel;
-use crate::partition::AnalyticAcc;
-use crate::pipeline::des::run_pipeline_opts;
-use crate::pipeline::{StageModel, StaticPolicy};
-use crate::sim::{generate, Correlation};
+use crate::model::DeviceProfile;
+use crate::scenario::Scenario;
 
-/// Run one (model, device, scheme, bandwidth) point.
+/// The sweep scenario of one (model, device, scheme, bandwidth) point.
 ///
 /// `saturate`: true for throughput (arrivals faster than the pipeline,
-/// Fig. 7), false for latency (moderate load, Fig. 6).
+/// Fig. 7 — capacity measurement on an unbounded queue), false for
+/// latency (the common continuous load with a bounded real-time queue,
+/// Fig. 6 / Table I regime).
+pub fn point_scenario(
+    model: &str,
+    device: DeviceProfile,
+    scheme: Scheme,
+    bw_mbps: f64,
+    n_tasks: usize,
+    saturate: bool,
+) -> Scenario {
+    let sc = Scenario::new(model)
+        .device(device)
+        .scheme(scheme)
+        .bandwidth_mbps(bw_mbps)
+        .tasks(n_tasks)
+        .seed(99);
+    if saturate {
+        sc.period(1e-5)
+    } else {
+        sc.sustainable_load().drop_after_periods(6.0)
+    }
+}
+
+/// Run one (model, device, scheme, bandwidth) point.
 pub fn point(
     model: &str,
     device: DeviceProfile,
@@ -28,45 +47,8 @@ pub fn point(
     n_tasks: usize,
     saturate: bool,
 ) -> Result<RunReport> {
-    let g = topology::by_name(model)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
-    let cost = CostModel::new(device, DeviceProfile::cloud_a6000());
-    let cfg = plan_cfg(&g, &cost, bw_mbps, scheme)?;
-    let strat = scheme.plan(&g, &cost, &AnalyticAcc, &cfg)?;
-    let sm = StageModel::from_strategy(&g, &cost, &strat, bw_mbps);
-    let bw = BandwidthModel::Static(bw_mbps);
-    let (period, drop_after) = if saturate {
-        (1e-5, None) // capacity measurement: unbounded queue
-    } else {
-        // common continuous load across schemes (table1::common_period)
-        let p = crate::bench::table1::common_period(&g, &cost, bw_mbps)?;
-        (p, Some(6.0 * p))
-    };
-    let tasks = generate(n_tasks, period, Correlation::Medium, 100, 99);
-
-    let report = match scheme {
-        Scheme::Coach => {
-            let mut pol = coach_des(
-                des_thresholds(),
-                strat.base_bits(),
-                sm.clone(),
-                cost.clone(),
-                g.clone(),
-            );
-            run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, "COACH", drop_after)
-        }
-        Scheme::Spinn => {
-            let mut pol =
-                StaticPolicy { bits: 8, exit_threshold: SPINN_EXIT_THRESHOLD };
-            run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, "SPINN", drop_after)
-        }
-        _ => {
-            let mut pol =
-                StaticPolicy::no_exit(scheme.fixed_bits().unwrap_or(32));
-            run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, scheme.name(), drop_after)
-        }
-    };
-    Ok(report)
+    point_scenario(model, device, scheme, bw_mbps, n_tasks, saturate)
+        .simulate()
 }
 
 /// Fig. 6: one table per (model, device) subplot; rows = schemes,

@@ -1,9 +1,12 @@
 //! Experiment harness: one driver per paper table/figure
-//! (ARCHITECTURE.md §Experiment index). Each driver returns a
-//! [`crate::metrics::Table`] whose rows mirror the paper's, is callable
-//! both from the CLI (`coach bench-table1` ...) and the `cargo bench`
-//! targets, and writes a machine-readable `BENCH_<name>.json` via
-//! [`emit::BenchJson`] for cross-PR perf tracking.
+//! (ARCHITECTURE.md §Experiment index). Each driver describes its grid
+//! of configurations as [`crate::scenario::Scenario`]s — the same
+//! descriptions the `scenarios/` presets and `coach run` use — returns
+//! a [`crate::metrics::Table`] whose rows mirror the paper's, is
+//! callable both from the CLI (`coach bench-table1` ...) and the
+//! `cargo bench` targets, and writes a machine-readable
+//! `BENCH_<name>.json` via [`emit::BenchJson`] for cross-PR perf
+//! tracking.
 
 pub mod emit;
 pub mod fig1;
@@ -12,46 +15,10 @@ pub mod fig67;
 pub mod table1;
 pub mod table2;
 
-use crate::cache::Thresholds;
-
-/// DES-scale COACH thresholds.
-///
-/// The DES workload generator emits separability hints on the same
-/// scale as the real mini-model measurements (ARCHITECTURE.md §Experiment index:
-/// exit-eligible tasks score ~0.7-1.1, boundary tasks < 0.25). These
-/// constants are the DES counterpart of the calibration the real server
-/// performs at startup (`cache::calibrate`).
-pub fn des_thresholds() -> Thresholds {
-    Thresholds { s_ext: 0.60, s_adj: vec![0.35, 0.55] }
-}
-
-/// SPINN's conservative early-exit threshold on the same scale (its
-/// intermediate classifiers exit less often than semantic caching).
-pub const SPINN_EXIT_THRESHOLD: f64 = 0.85;
+// The DES-scale thresholds and per-scheme planning rules moved to the
+// scenario layer (the single front door); re-exported here for old
+// call sites.
+pub use crate::scenario::{des_thresholds, plan_cfg, SPINN_EXIT_THRESHOLD};
 
 /// Default bandwidth grid for the sweep figures (Mbps).
 pub const BW_GRID: [f64; 8] = [1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 70.0, 100.0];
-
-use crate::baselines::Scheme;
-use crate::model::{CostModel, ModelGraph};
-use crate::partition::{AnalyticAcc, PartitionConfig};
-
-/// Planning configuration per scheme at a design bandwidth. COACH plans
-/// under the paper's Eq. 3 latency SLO: T_max = 1.6x the stage sum of
-/// the latency-optimal quantized plan (the "latency tolerance of
-/// individual inference tasks" the paper's evaluation enforces);
-/// baselines plan with their own objectives unconstrained.
-pub fn plan_cfg(
-    g: &ModelGraph,
-    cost: &CostModel,
-    bw_mbps: f64,
-    scheme: Scheme,
-) -> anyhow::Result<PartitionConfig> {
-    let base = PartitionConfig { bw_mbps, ..Default::default() };
-    if scheme != Scheme::Coach {
-        return Ok(base);
-    }
-    let lat_min = Scheme::Spinn.plan(g, cost, &AnalyticAcc, &base)?;
-    let sum = lat_min.eval.t_e + lat_min.eval.t_t + lat_min.eval.t_c;
-    Ok(PartitionConfig { t_max: sum * 1.6, ..base })
-}

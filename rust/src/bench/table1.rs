@@ -1,23 +1,48 @@
 //! Table I: average inference latency (ms) for {ResNet101, VGG16} x
 //! {NX, TX2} x {NS, DADS, SPINN, JPS, COACH}, averaged over the 2-100
 //! Mbps band on an ImageNet-100-like long-tail stream.
+//!
+//! Each cell is a grid of [`Scenario`]s — the same description
+//! `scenarios/table1_cell.toml` ships one point of, runnable via
+//! `coach run`.
 
 use anyhow::Result;
 
 use crate::baselines::Scheme;
 use crate::bench::emit::BenchJson;
-use crate::bench::{des_thresholds, plan_cfg, SPINN_EXIT_THRESHOLD};
-use crate::coordinator::online::coach_des;
 use crate::metrics::{RunReport, Table};
-use crate::model::{topology, CostModel, DeviceProfile};
-use crate::network::BandwidthModel;
-use crate::partition::{AnalyticAcc, PartitionConfig};
-use crate::pipeline::des::run_pipeline_opts;
-use crate::pipeline::{StageModel, StaticPolicy};
-use crate::sim::{generate, Correlation};
+use crate::model::DeviceProfile;
+use crate::scenario::Scenario;
+
+// re-exported for old call sites; the implementation lives in the
+// scenario layer now
+pub use crate::scenario::common_period;
 
 /// Bandwidths averaged for the Table I cell values.
 pub const TABLE1_BWS: [f64; 5] = [2.0, 5.0, 10.0, 50.0, 100.0];
+
+/// The Table I scenario of one (model, device, scheme, bandwidth)
+/// point: the COMMON continuous load for every scheme (the paper feeds
+/// the same task stream to all systems) — arrivals at 1.1x the best
+/// scheme's (COACH's) sustainable period, so schemes with larger
+/// maximum stages accumulate queueing delay (§II-C's bubbles) — and a
+/// bounded real-time queue shedding tasks that wait > 6 periods.
+pub fn cell_scenario(
+    model: &str,
+    device: DeviceProfile,
+    scheme: Scheme,
+    n_tasks: usize,
+    bw_index: usize,
+) -> Scenario {
+    Scenario::new(model)
+        .device(device)
+        .scheme(scheme)
+        .bandwidth_mbps(TABLE1_BWS[bw_index])
+        .tasks(n_tasks)
+        .sustainable_load()
+        .drop_after_periods(6.0)
+        .seed(42 + bw_index as u64)
+}
 
 /// One cell: average latency (ms) of `scheme` for (model, device) over
 /// the bandwidth band.
@@ -37,79 +62,16 @@ fn cell_reports(
     scheme: Scheme,
     n_tasks: usize,
 ) -> Result<(f64, Vec<(f64, RunReport)>)> {
-    let g = topology::by_name(model)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
-    let cost = CostModel::new(device, DeviceProfile::cloud_a6000());
     let mut lat_sum = 0.0;
     let mut reports = Vec::new();
     for (bi, &bw_mbps) in TABLE1_BWS.iter().enumerate() {
-        let cfg = plan_cfg(&g, &cost, bw_mbps, scheme)?;
-        let strat = scheme.plan(&g, &cost, &AnalyticAcc, &cfg)?;
-        let sm = StageModel::from_strategy(&g, &cost, &strat, bw_mbps);
-        let bw = BandwidthModel::Static(bw_mbps);
-        // COMMON continuous load for every scheme (the paper feeds the
-        // same task stream to all systems): arrivals at 1.1x the best
-        // scheme's (COACH's) sustainable period, so schemes with larger
-        // maximum stages accumulate queueing delay — §II-C's bubbles.
-        let period = common_period(&g, &cost, bw_mbps)?;
-        // bounded real-time queue: shed tasks waiting > 6 periods
-        let drop_after = Some(6.0 * period);
-        let tasks = generate(
-            n_tasks,
-            period,
-            Correlation::Medium,
-            100,
-            42 + bi as u64,
-        );
-        let report = match scheme {
-            Scheme::Coach => {
-                let mut pol = coach_des(
-                    des_thresholds(),
-                    strat.base_bits(),
-                    sm.clone(),
-                    cost.clone(),
-                    g.clone(),
-                );
-                run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, "COACH", drop_after)
-            }
-            Scheme::Spinn => {
-                let mut pol = StaticPolicy {
-                    bits: 8,
-                    exit_threshold: SPINN_EXIT_THRESHOLD,
-                };
-                run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, "SPINN", drop_after)
-            }
-            _ => {
-                let mut pol =
-                    StaticPolicy::no_exit(scheme.fixed_bits().unwrap_or(32));
-                run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, scheme.name(), drop_after)
-            }
-        };
+        let report =
+            cell_scenario(model, device.clone(), scheme, n_tasks, bi)
+                .simulate()?;
         lat_sum += report.avg_latency_ms();
         reports.push((bw_mbps, report));
     }
     Ok((lat_sum / TABLE1_BWS.len() as f64, reports))
-}
-
-/// Arrival period every scheme is subjected to in a scenario: 1.1x the
-/// COACH plan's bottleneck stage (the workload the best system can just
-/// sustain).
-pub fn common_period(
-    g: &crate::model::ModelGraph,
-    cost: &CostModel,
-    bw_mbps: f64,
-) -> Result<f64> {
-    let cfg = PartitionConfig { bw_mbps, ..Default::default() };
-    let coach = Scheme::Coach.plan(g, cost, &AnalyticAcc, &cfg)?;
-    let sm = StageModel::from_strategy(g, cost, &coach, bw_mbps);
-    let t_t = sm.t_transmit(
-        cost,
-        g,
-        coach.base_bits(),
-        bw_mbps,
-        coach.cuts.is_empty(),
-    );
-    Ok(sm.t_e.max(t_t).max(sm.t_c) * 1.1 + 1e-4)
 }
 
 /// Full Table I (also writes BENCH_table1.json).

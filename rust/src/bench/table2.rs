@@ -6,11 +6,37 @@
 use anyhow::Result;
 
 use crate::bench::emit::BenchJson;
-use crate::coordinator::server::{serve, SchemePolicy, ServeCfg};
 use crate::metrics::Table;
-use crate::network::BandwidthModel;
 use crate::runtime::Manifest;
+use crate::scenario::Scenario;
 use crate::sim::Correlation;
+
+/// The Table II scenario of one (model, correlation) row cell: the
+/// real pipeline at 20 Mbps on an NX-like device, cut after block 1 —
+/// the measured partitioner's block boundary at 20 Mbps (see
+/// `coach partition`), which is also where GAP features are most
+/// cache-separable (ARCHITECTURE.md §Experiment index, cut sweep).
+pub fn row_scenario(
+    model: &str,
+    corr: Correlation,
+    adaptive: bool,
+    n_tasks: usize,
+    seed: u64,
+) -> Scenario {
+    let sc = Scenario::new(model)
+        .cut(1)
+        .device_scale(6.0)
+        .bandwidth_mbps(20.0)
+        .period(0.012)
+        .tasks(n_tasks)
+        .correlation(corr)
+        .seed(seed);
+    if adaptive {
+        sc // COACH: early exit + adaptive UAQ (the scheme default)
+    } else {
+        sc.policy_static(8, f64::INFINITY).label("NoAdjust")
+    }
+}
 
 /// Rows: NoAdjust, Low, Medium, High; columns per model:
 /// Exit. / Ltc.(ms) / Trans.(Kb). Also writes BENCH_table2.json.
@@ -28,37 +54,20 @@ pub fn run(
     let mut t = Table { header, rows: Vec::new() };
     let mut json = BenchJson::new("table2");
 
-    let rows: [(Correlation, SchemePolicy); 4] = [
-        (Correlation::High, SchemePolicy::no_adjust()), // NoAdjust baseline
-        (Correlation::Low, SchemePolicy::coach()),
-        (Correlation::Medium, SchemePolicy::coach()),
-        (Correlation::High, SchemePolicy::coach()),
+    let rows: [(Correlation, bool); 4] = [
+        (Correlation::High, false), // NoAdjust baseline
+        (Correlation::Low, true),
+        (Correlation::Medium, true),
+        (Correlation::High, true),
     ];
 
-    for (i, (corr, policy)) in rows.iter().enumerate() {
+    for (i, (corr, adaptive)) in rows.iter().enumerate() {
         let name = if i == 0 { "NoAdjust" } else { corr.name() };
         let mut row = vec![name.to_string()];
         for model in models {
-            // offline cut: the measured partitioner lands on an early
-            // block boundary at 20 Mbps (see `coach partition`), which
-            // is also where GAP features are most cache-separable
-            // (ARCHITECTURE.md §Experiment index, cut sweep).
-            let cut = 1;
-            let cfg = ServeCfg {
-                model: model.to_string(),
-                cut,
-                policy: *policy,
-                device_scale: 6.0, // NX-like
-                bw: BandwidthModel::Static(20.0),
-                period: 0.012,
-                n_tasks,
-                correlation: *corr,
-                eps: 0.005,
-                seed: 1234 + i as u64,
-                audit_every: 0,
-                n_streams: 1,
-            };
-            let res = serve(manifest, &cfg)?;
+            let res =
+                row_scenario(model, *corr, *adaptive, n_tasks, 1234 + i as u64)
+                    .serve(manifest)?;
             json.add(&format!("{model}/{name}"), &res.report);
             row.push(format!("{:.1}", res.report.exit_ratio() * 100.0));
             row.push(format!("{:.2}", res.report.avg_latency_ms()));

@@ -61,7 +61,15 @@ pub fn calibrate(
     if scored.is_empty() {
         return Thresholds::disabled();
     }
-    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // separability can be NaN for degenerate features (zero vectors,
+    // NaN activations): drop those — they carry no ordering information
+    // and must never become a threshold — then sort with the NaN-safe
+    // total order (the old partial_cmp().unwrap() panicked here).
+    scored.retain(|(s, _)| !s.is_nan());
+    if scored.is_empty() {
+        return Thresholds::disabled();
+    }
+    scored.sort_by(|a, b| a.0.total_cmp(&b.0));
 
     // Scan thresholds from most aggressive (lowest S) upward; pick the
     // lowest threshold whose above-threshold agreement >= 1 - eps.
@@ -179,5 +187,37 @@ mod tests {
         let cache = SemanticCache::new(3, 4);
         let th = calibrate(&cache, &[], 0.005);
         assert!(th.s_ext.is_infinite());
+    }
+
+    #[test]
+    fn nan_poisoned_center_does_not_panic_and_disables_exits() {
+        // regression: a NaN feature folded into a center (Eq. 7)
+        // poisons its centered norm, making EVERY subsequent
+        // separability NaN (the t of the poisoned center enters the
+        // ||T|| factor). The calibration sort used
+        // partial_cmp().unwrap() and panicked on the first comparison;
+        // NaN scores must instead fall out of calibration entirely.
+        let (mut cache, feats) = make_cache_and_features(5, 16, 0.1, 60);
+        cache.update(0, &[f32::NAN; 16]);
+        let s = cache.separability(&feats[0].1).s;
+        assert!(s.is_nan(), "precondition: poisoned cache scores NaN");
+        let th = calibrate(&cache, &feats, 0.05);
+        assert!(th.s_ext.is_infinite(), "all-NaN scores must disable exits");
+        assert!(th.s_adj.is_empty());
+    }
+
+    #[test]
+    fn nan_features_score_zero_and_calibration_stays_clean() {
+        // feature-side NaNs score s = 0.0 (never best/second), so they
+        // cannot poison the thresholds either way
+        let (cache, mut feats) = make_cache_and_features(5, 16, 0.1, 60);
+        feats.push((0, vec![f32::NAN; 16]));
+        feats.push((1, vec![f32::NAN; 16]));
+        let th = calibrate(&cache, &feats, 0.05);
+        assert!(!th.s_ext.is_nan(), "NaN must not become a threshold");
+        for s in &th.s_adj {
+            assert!(!s.is_nan());
+        }
+        assert!(th.s_ext.is_finite(), "clean features still enable exits");
     }
 }

@@ -3,7 +3,7 @@
 //! a deployment needs: model choice, device/cloud profiles, network,
 //! scheduler knobs, workload shape.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -17,11 +17,15 @@ use crate::sim::Correlation;
 pub struct RawConfig {
     /// (section, key) -> value (bare string, quotes stripped)
     pub entries: BTreeMap<(String, String), String>,
+    /// every `[section]` header seen, even when empty — consumers
+    /// validate these against their schema ([`RawConfig::ensure_known`])
+    pub sections: BTreeSet<String>,
 }
 
 impl RawConfig {
     pub fn parse(text: &str) -> Result<RawConfig> {
         let mut entries = BTreeMap::new();
+        let mut sections = BTreeSet::new();
         let mut section = String::new();
         for (ln, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
@@ -30,6 +34,7 @@ impl RawConfig {
             }
             if line.starts_with('[') && line.ends_with(']') {
                 section = line[1..line.len() - 1].trim().to_string();
+                sections.insert(section.clone());
                 continue;
             }
             let Some((k, v)) = line.split_once('=') else {
@@ -38,7 +43,7 @@ impl RawConfig {
             let v = v.trim().trim_matches('"').to_string();
             entries.insert((section.clone(), k.trim().to_string()), v);
         }
-        Ok(RawConfig { entries })
+        Ok(RawConfig { entries, sections })
     }
 
     pub fn get(&self, section: &str, key: &str) -> Option<&str> {
@@ -51,6 +56,41 @@ impl RawConfig {
         self.get(section, key)
             .map(|v| v.parse::<f64>().with_context(|| format!("{section}.{key}")))
             .transpose()
+    }
+
+    /// Reject any `(section, key)` the schema predicate does not know,
+    /// naming the offending `section.key` — typos fail loudly instead
+    /// of silently running defaults.
+    pub fn ensure_known(
+        &self,
+        is_known: impl Fn(&str, &str) -> bool,
+    ) -> Result<()> {
+        for (section, key) in self.entries.keys() {
+            if !is_known(section, key) {
+                bail!("unknown config key '{section}.{key}'");
+            }
+        }
+        Ok(())
+    }
+
+    /// Reject any `[section]` header the schema predicate does not know
+    /// — including empty sections, which leave no entries behind for
+    /// [`RawConfig::ensure_known`] to see. `known` is listed in the
+    /// error to point the user at the schema.
+    pub fn ensure_known_sections(
+        &self,
+        is_known: impl Fn(&str) -> bool,
+        known: &[&str],
+    ) -> Result<()> {
+        for section in &self.sections {
+            if !is_known(section) {
+                bail!(
+                    "unknown config section [{section}] (known: {})",
+                    known.join(", ")
+                );
+            }
+        }
+        Ok(())
     }
 }
 
@@ -101,8 +141,30 @@ impl Config {
         Self::from_str_toml(&text)
     }
 
+    /// Known `(section, keys)` of the deployment schema.
+    const KNOWN: &'static [(&'static str, &'static [&'static str])] = &[
+        ("model", &["name"]),
+        ("device", &["profile", "gflops"]),
+        ("cloud", &["gflops"]),
+        ("network", &["mbps", "trace", "jitter"]),
+        ("scheduler", &["eps", "t_max_ms"]),
+        ("workload", &["period_ms", "n_tasks", "correlation", "seed"]),
+        ("serve", &["n_streams", "device_scale"]),
+    ];
+
     pub fn from_str_toml(text: &str) -> Result<Config> {
         let raw = RawConfig::parse(text)?;
+        raw.ensure_known(|section, key| {
+            Self::KNOWN
+                .iter()
+                .any(|(s, keys)| *s == section && keys.contains(&key))
+        })?;
+        let section_names: Vec<&str> =
+            Self::KNOWN.iter().map(|(s, _)| *s).collect();
+        raw.ensure_known_sections(
+            |section| Self::KNOWN.iter().any(|(s, _)| *s == section),
+            &section_names,
+        )?;
         let mut cfg = Config::default();
         if let Some(m) = raw.get("model", "name") {
             cfg.model = m.to_string();
@@ -116,6 +178,11 @@ impl Config {
         }
         if let Some(g) = raw.get_f64("cloud", "gflops")? {
             cfg.cloud.flops_per_sec = g * 1e9;
+        }
+        // workload seed first: the jittered bandwidth model below is
+        // seeded with it
+        if let Some(s) = raw.get_f64("workload", "seed")? {
+            cfg.seed = s as u64;
         }
         if let Some(b) = raw.get_f64("network", "mbps")? {
             cfg.bandwidth = BandwidthModel::Static(b);
@@ -149,16 +216,7 @@ impl Config {
             cfg.n_tasks = n as usize;
         }
         if let Some(c) = raw.get("workload", "correlation") {
-            cfg.correlation = match c {
-                "none" => Correlation::None,
-                "low" => Correlation::Low,
-                "medium" => Correlation::Medium,
-                "high" => Correlation::High,
-                other => bail!("unknown correlation '{other}'"),
-            };
-        }
-        if let Some(s) = raw.get_f64("workload", "seed")? {
-            cfg.seed = s as u64;
+            cfg.correlation = Correlation::parse(c)?;
         }
         if let Some(ns) = raw.get_f64("serve", "n_streams")? {
             if ns < 1.0 {
@@ -230,5 +288,47 @@ device_scale = 10.5
         assert!(Config::from_str_toml("[x]\nnot a kv").is_err());
         assert!(Config::from_str_toml("[workload]\ncorrelation = \"x\"").is_err());
         assert!(Config::from_str_toml("[serve]\nn_streams = 0").is_err());
+    }
+
+    #[test]
+    fn jitter_model_uses_workload_seed_regardless_of_section_order() {
+        // regression: the jittered model was seeded before [workload]
+        // seed was parsed, silently ignoring the user's seed
+        let c = Config::from_str_toml(
+            "[network]\nmbps = 40\njitter = 0.2\n\n[workload]\nseed = 7\n",
+        )
+        .unwrap();
+        match c.bandwidth {
+            BandwidthModel::Jittered { seed, .. } => assert_eq!(seed, 7),
+            other => panic!("expected jittered model, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_key_naming_offender() {
+        // the classic typo: n_stream instead of n_streams
+        let err = Config::from_str_toml("[serve]\nn_stream = 4\n").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("serve.n_stream"), "got: {msg}");
+        let err =
+            Config::from_str_toml("[network]\nmpbs = 20\n").unwrap_err();
+        assert!(format!("{err:#}").contains("network.mpbs"));
+    }
+
+    #[test]
+    fn rejects_unknown_section_even_when_empty() {
+        let err = Config::from_str_toml("[serv]\n").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("[serv]"), "got: {msg}");
+    }
+
+    #[test]
+    fn ensure_known_accepts_schema_keys() {
+        let raw = RawConfig::parse("[a]\nx = 1\n[b]\ny = 2\n").unwrap();
+        assert!(raw
+            .ensure_known(|s, k| (s, k) == ("a", "x") || (s, k) == ("b", "y"))
+            .is_ok());
+        assert!(raw.ensure_known(|s, _| s == "a").is_err());
+        assert_eq!(raw.sections.len(), 2);
     }
 }

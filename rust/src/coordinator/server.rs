@@ -88,6 +88,9 @@ pub struct ServeCfg {
     pub audit_every: usize,
     /// concurrent device streams sharing the single cloud engine
     pub n_streams: usize,
+    /// admission control: shed a task whose admission falls this many
+    /// seconds behind its arrival (None = queue without bound)
+    pub drop_after: Option<f64>,
 }
 
 /// Per-stream overrides for a heterogeneous fleet.
@@ -469,7 +472,7 @@ pub fn serve_streams(
         clock,
         RealCfg {
             queue_cap: 8,
-            drop_after: None,
+            drop_after: cfg.drop_after,
             scheme: "real".into(),
             model: cfg.model.clone(),
         },

@@ -14,6 +14,12 @@
 //!   ([`baselines`]), and the PJRT [`runtime`] that executes the
 //!   artifacts on the request path.
 //!
+//! The single front door to the pipeline core is the [`scenario`]
+//! layer: describe an experiment once (`Scenario` builder or a
+//! `scenarios/*.toml` file) and run it on any driver — DES,
+//! multi-stream DES, wall-clock simulated serving, or the real PJRT
+//! server (`coach run <scenario.toml> [--real]`).
+//!
 //! See ARCHITECTURE.md for the system inventory, the shared pipeline
 //! scheduler core (one Eq. 10-11 policy + one driver family behind both
 //! the DES and the multi-stream server), and the experiment index.
@@ -30,5 +36,6 @@ pub mod partition;
 pub mod pipeline;
 pub mod quant;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod util;

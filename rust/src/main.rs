@@ -3,6 +3,11 @@
 //! Subcommands (hand-rolled parsing; the offline build has no clap):
 //!
 //! ```text
+//! coach run <scenario.toml> [--real] [--wall] [--n N]
+//!                                    # one description, any driver:
+//!                                    # DES (default; fleet-aware),
+//!                                    # --wall = wall-clock sim-compute,
+//!                                    # --real = PJRT server
 //! coach partition  [--model M] [--device nx|tx2] [--bw MBPS] [--eps E]
 //! coach serve      [--model vgg_mini|resnet_mini] [--cut K] [--n N]
 //!                  [--bw MBPS] [--corr low|medium|high] [--scheme coach|noadjust]
@@ -27,8 +32,10 @@ use coach::config::Config;
 use coach::coordinator::server::{serve, SchemePolicy, ServeCfg};
 use coach::model::{topology, CostModel, DeviceProfile};
 use coach::network::BandwidthModel;
+use coach::metrics::RunReport;
 use coach::partition::{optimize, AnalyticAcc, MeasuredAcc, PartitionConfig};
 use coach::runtime::{default_artifact_dir, Engine, Manifest, ModelRuntime};
+use coach::scenario::Scenario;
 use coach::sim::Correlation;
 use coach::util::Json;
 
@@ -41,11 +48,15 @@ fn main() {
 
 struct Args {
     flags: HashMap<String, String>,
+    /// operands that were not consumed as a flag's value, in order
+    /// (e.g. the scenario path of `coach run <file>`)
+    positional: Vec<String>,
 }
 
 impl Args {
     fn parse(argv: &[String]) -> Args {
         let mut flags = HashMap::new();
+        let mut positional = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             if let Some(name) = argv[i].strip_prefix("--") {
@@ -56,10 +67,12 @@ impl Args {
                     "true".to_string()
                 };
                 flags.insert(name.to_string(), val);
+            } else {
+                positional.push(argv[i].clone());
             }
             i += 1;
         }
-        Args { flags }
+        Args { flags, positional }
     }
 
     fn get(&self, name: &str) -> Option<&str> {
@@ -79,13 +92,11 @@ impl Args {
 }
 
 fn correlation_of(s: &str) -> Result<Correlation> {
-    Ok(match s {
-        "none" | "noadjust" => Correlation::None,
-        "low" => Correlation::Low,
-        "medium" => Correlation::Medium,
-        "high" => Correlation::High,
-        other => bail!("unknown correlation '{other}'"),
-    })
+    // CLI-only alias on top of the shared vocabulary
+    if s == "noadjust" {
+        return Ok(Correlation::None);
+    }
+    Correlation::parse(s)
 }
 
 fn run() -> Result<()> {
@@ -97,6 +108,7 @@ fn run() -> Result<()> {
     let args = Args::parse(&argv[1..]);
 
     match cmd.as_str() {
+        "run" => cmd_run(&args),
         "partition" => cmd_partition(&args),
         "serve" => cmd_serve(&args),
         "profile" => cmd_profile(&args),
@@ -155,6 +167,88 @@ fn run() -> Result<()> {
         }
         other => bail!("unknown command '{other}' (try `coach help`)"),
     }
+}
+
+fn report_summary(r: &RunReport) -> String {
+    format!(
+        "lat {:.2} ms (p99 {:.2}) | {:.1} it/s | exits {:.1}% | \
+         wire {:.1} Kb | dropped {} | util d/l/c {:.0}/{:.0}/{:.0}% | \
+         bubbles {:.2} s",
+        r.avg_latency_ms(),
+        r.p99_latency_ms(),
+        r.throughput(),
+        r.exit_ratio() * 100.0,
+        r.avg_wire_kb(),
+        r.dropped,
+        r.device.utilization() * 100.0,
+        r.link.utilization() * 100.0,
+        r.cloud.utilization() * 100.0,
+        r.total_bubbles()
+    )
+}
+
+/// `coach run <scenario.toml> [--real] [--wall] [--n N]` — load one
+/// scenario description and execute it on the requested driver.
+fn cmd_run(args: &Args) -> Result<()> {
+    // the scenario file is the first positional operand; rescue
+    // `coach run --real x.toml`, where the flag parser consumed the
+    // path as the boolean flag's value
+    let path = args.positional.first().cloned().or_else(|| {
+        ["real", "wall"].iter().find_map(|f| {
+            args.get(f).filter(|v| *v != "true").map(str::to_string)
+        })
+    });
+    let Some(path) = path else {
+        bail!("usage: coach run <scenario.toml> [--real] [--wall] [--n N]");
+    };
+    let mut sc = Scenario::from_file(std::path::Path::new(&path))?;
+    if let Some(n) = args.get("n") {
+        sc.workload.n_tasks = n.parse().context("--n")?;
+    }
+    let fleet = sc.is_fleet();
+    println!(
+        "scenario '{}': model {}, scheme {}, {} stream(s), {:?}",
+        sc.name,
+        sc.model,
+        sc.scheme.name(),
+        sc.stream_specs().len(),
+        sc.bandwidth
+    );
+
+    if args.get("real").is_some() {
+        let manifest = Manifest::load(&default_artifact_dir())?;
+        let res = sc.serve(&manifest)?;
+        for (i, r) in res.per_stream.iter().enumerate() {
+            println!("stream {i}: {}", report_summary(r));
+        }
+        println!("aggregate [real pjrt]: {}", report_summary(&res.report));
+        return Ok(());
+    }
+    if args.get("wall").is_some() {
+        let multi = sc.serve_sim()?;
+        for (i, r) in multi.per_stream.iter().enumerate() {
+            println!("stream {i}: {}", report_summary(r));
+        }
+        println!(
+            "aggregate [wall-clock sim-compute]: {}",
+            report_summary(&multi.aggregate())
+        );
+        return Ok(());
+    }
+    if fleet {
+        let multi = sc.simulate_fleet()?;
+        for (i, r) in multi.per_stream.iter().enumerate() {
+            println!("stream {i}: {}", report_summary(r));
+        }
+        println!(
+            "aggregate [multi-stream DES]: {}",
+            report_summary(&multi.aggregate())
+        );
+    } else {
+        let r = sc.simulate()?;
+        println!("result [DES]: {}", report_summary(&r));
+    }
+    Ok(())
 }
 
 fn cmd_partition(args: &Args) -> Result<()> {
@@ -258,6 +352,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: args.usize_or("seed", base.seed as usize)? as u64,
         audit_every: args.usize_or("audit-every", 0)?,
         n_streams,
+        drop_after: None,
     };
     println!(
         "serving {n} tasks x {n_streams} stream(s) of {model} (cut {cut}, {:?}, {corr:?})...",
@@ -348,8 +443,10 @@ fn cmd_trace() -> Result<()> {
 fn print_help() {
     println!(
         "COACH - near bubble-free end-cloud collaborative inference\n\
-         commands: partition | serve | profile | bench-table1 | bench-table2 |\n\
+         commands: run | partition | serve | profile | bench-table1 | bench-table2 |\n\
          \x20         bench-fig1 | bench-fig5 | bench-fig6 | bench-fig7 | trace | help\n\
-         see rust/src/main.rs docs for flags"
+         `coach run scenarios/<name>.toml [--real|--wall]` runs one scenario\n\
+         description on the DES / wall-clock / PJRT driver; see scenarios/\n\
+         for presets and rust/src/main.rs docs for flags"
     );
 }

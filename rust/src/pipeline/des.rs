@@ -1,16 +1,15 @@
-//! Discrete-event simulation of the three-stage pipeline over a task
-//! stream — the engine behind the paper-scale benches (Tables/Figures).
+//! DEPRECATED single-stream DES veneer.
 //!
-//! The simulation itself lives in the shared scheduler core: this module
-//! is the single-stream veneer over [`pipeline::driver::run_virtual`]
-//! (virtual clock, analytic stage occupancies), kept as the stable API
-//! the benches and tests drive. Multi-stream simulation (N device
-//! streams sharing one FIFO link and one cloud) is
-//! [`pipeline::driver::run_virtual_streams`]; the wall-clock counterpart
-//! serving real work is `pipeline::driver::run_real`.
+//! The simulation lives in the shared scheduler core
+//! ([`pipeline::driver::run_virtual`]); experiments are described and
+//! launched through the scenario layer (`crate::scenario::Scenario`,
+//! ARCHITECTURE.md §Scenario layer), which is the only supported
+//! front door. These free functions remain as a thin veneer for old
+//! callers and for the scenario golden tests
+//! (tests/scenario_e2e.rs) that pin the Scenario DES path to the
+//! pre-redesign outputs bit-for-bit.
 //!
 //! [`pipeline::driver::run_virtual`]: super::driver::run_virtual
-//! [`pipeline::driver::run_virtual_streams`]: super::driver::run_virtual_streams
 
 use crate::metrics::RunReport;
 use crate::model::{CostModel, ModelGraph};
@@ -23,6 +22,11 @@ use super::stage_model::StageModel;
 
 /// Simulate `tasks` through the pipeline; returns the full report.
 /// Unbounded queue — see [`run_pipeline_opts`] for admission control.
+#[deprecated(
+    since = "0.1.0",
+    note = "describe the experiment as a scenario::Scenario and call \
+            .simulate() instead"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn run_pipeline(
     g: &ModelGraph,
@@ -39,6 +43,11 @@ pub fn run_pipeline(
 /// Like [`run_pipeline`], with optional admission control: a task whose
 /// device-queue wait would exceed `drop_after` seconds is dropped at
 /// arrival. Dropped tasks are reported in `RunReport::dropped`.
+#[deprecated(
+    since = "0.1.0",
+    note = "describe the experiment as a scenario::Scenario (admission \
+            control via .drop_after()) and call .simulate() instead"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn run_pipeline_opts(
     g: &ModelGraph,
@@ -54,6 +63,7 @@ pub fn run_pipeline_opts(
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::model::topology::vgg16;

@@ -276,6 +276,10 @@ pub struct VirtualStream<'a> {
     pub cost: &'a CostModel,
     pub policy: &'a mut dyn OnlinePolicy,
     pub scheme: String,
+    /// per-stream admission threshold (heterogeneous fleets pace their
+    /// streams differently); `None` falls back to the run-level
+    /// `drop_after` argument of [`run_virtual_streams`]
+    pub drop_after: Option<f64>,
 }
 
 /// A transmitting task queued for the shared link+cloud pass.
@@ -300,9 +304,10 @@ struct WireJob {
 /// arrival (FIFO) order against the shared link/cloud resources — the
 /// contention model of the multi-stream server, at DES cost.
 ///
-/// Admission control (`drop_after`) sheds on the *device* queue only:
-/// unlike [`run_virtual`], a stream cannot see the shared link backlog
-/// at arrival time.
+/// Admission control sheds on the *device* queue only: unlike
+/// [`run_virtual`], a stream cannot see the shared link backlog at
+/// arrival time. Each stream's own `drop_after` takes precedence over
+/// the run-level `drop_after` argument.
 pub fn run_virtual_streams(
     streams: &mut [VirtualStream<'_>],
     bw: &BandwidthModel,
@@ -319,9 +324,10 @@ pub fn run_virtual_streams(
     // ---- phase 1: per-stream device timelines + decisions -------------
     for (si, st) in streams.iter_mut().enumerate() {
         let sm = st.sm;
+        let cap_opt = st.drop_after.or(drop_after);
         let mut dev_free = 0.0f64;
         for task in st.tasks {
-            if let Some(cap) = drop_after {
+            if let Some(cap) = cap_opt {
                 if dev_free - task.arrive > cap {
                     dropped[si] += 1;
                     continue;
@@ -758,6 +764,7 @@ mod tests {
                 cost: &cost,
                 policy: &mut p2,
                 scheme: "x".into(),
+                drop_after: None,
             }],
             &bw,
             None,
@@ -807,6 +814,7 @@ mod tests {
                 cost: &cost,
                 policy: &mut p,
                 scheme: "1".into(),
+                drop_after: None,
             }],
             &bw,
             None,
@@ -826,6 +834,7 @@ mod tests {
                 cost: &cost,
                 policy: pol,
                 scheme: "4".into(),
+                drop_after: None,
             })
             .collect();
         let multi = run_virtual_streams(&mut streams, &bw, None);

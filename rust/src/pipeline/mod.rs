@@ -12,7 +12,8 @@
 //! - [`driver`] — the virtual-time drivers (single- and multi-stream
 //!   DES) and the wall-clock multi-stream driver (real threads, shared
 //!   FIFO link + shared cloud);
-//! - [`des`] — the stable single-stream DES API over the core;
+//! - [`des`] — DEPRECATED single-stream veneer over the core (the
+//!   supported front door is `crate::scenario::Scenario`);
 //! - [`stage_model`] — analytic per-task stage timings from a strategy.
 
 pub mod des;
@@ -21,6 +22,7 @@ pub mod policy;
 pub mod stage;
 pub mod stage_model;
 
+#[allow(deprecated)]
 pub use des::{run_pipeline, run_pipeline_opts};
 pub use driver::{run_real, run_virtual, run_virtual_streams, RealCfg, VirtualStream};
 pub use policy::{

@@ -50,6 +50,18 @@ pub trait OnlinePolicy {
     fn observe(&mut self, _exited: bool) {}
 }
 
+/// Boxed policies pass through the hook unchanged — the scenario layer
+/// assembles policies dynamically and hands them to any driver.
+impl OnlinePolicy for Box<dyn OnlinePolicy + Send> {
+    fn decide(&mut self, view: TaskView) -> Decision {
+        (**self).decide(view)
+    }
+
+    fn observe(&mut self, exited: bool) {
+        (**self).observe(exited);
+    }
+}
+
 /// Fixed-precision policy (the baselines' behaviour).
 pub struct StaticPolicy {
     pub bits: u8,

@@ -1,0 +1,639 @@
+//! Scenario executors: one compilation path from the declarative
+//! [`Scenario`] to each driver of the shared pipeline core
+//! (ARCHITECTURE.md §Scenario layer).
+//!
+//! The DES path is kept *bit-identical* to the pre-Scenario bench
+//! drivers (see tests/scenario_e2e.rs golden tests): the same
+//! `plan_cfg` SLO rule, the same `common_period` load rule, the same
+//! policy assembly, the same `run_virtual` call.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::baselines::Scheme;
+use crate::cache::Thresholds;
+use crate::coordinator::online::coach_des;
+use crate::coordinator::server::{
+    serve_streams, SchemePolicy, ServeCfg, ServeResult, StreamCfg,
+};
+use crate::metrics::{MultiReport, RunReport};
+use crate::model::{topology, CostModel, ModelGraph};
+use crate::partition::{AnalyticAcc, PartitionConfig, Strategy};
+use crate::pipeline::driver::{
+    run_real, run_virtual, run_virtual_streams, RealCfg, SimCloud, SimDevice,
+    VirtualStream,
+};
+use crate::pipeline::{OnlinePolicy, StageModel, StaticPolicy, WallClock};
+use crate::runtime::Manifest;
+use crate::sim::{generate, SimTask};
+
+use super::{PeriodSpec, PolicySpec, Scenario, StreamSpec};
+
+/// DES-scale COACH thresholds.
+///
+/// The DES workload generator emits separability hints on the same
+/// scale as the real mini-model measurements (ARCHITECTURE.md
+/// §Experiment index: exit-eligible tasks score ~0.7-1.1, boundary
+/// tasks < 0.25). These constants are the DES counterpart of the
+/// calibration the real server performs at startup (`cache::calibrate`).
+pub fn des_thresholds() -> Thresholds {
+    Thresholds { s_ext: 0.60, s_adj: vec![0.35, 0.55] }
+}
+
+/// SPINN's conservative early-exit threshold on the same scale (its
+/// intermediate classifiers exit less often than semantic caching).
+pub const SPINN_EXIT_THRESHOLD: f64 = 0.85;
+
+/// Planning configuration per scheme at a design bandwidth. COACH plans
+/// under the paper's Eq. 3 latency SLO: T_max = 1.6x the stage sum of
+/// the latency-optimal quantized plan (the "latency tolerance of
+/// individual inference tasks" the paper's evaluation enforces);
+/// baselines plan with their own objectives unconstrained.
+pub fn plan_cfg(
+    g: &ModelGraph,
+    cost: &CostModel,
+    bw_mbps: f64,
+    scheme: Scheme,
+) -> Result<PartitionConfig> {
+    let base = PartitionConfig { bw_mbps, ..Default::default() };
+    if scheme != Scheme::Coach {
+        return Ok(base);
+    }
+    paper_slo(g, cost, base)
+}
+
+/// The Eq. 3 rule itself: T_max = 1.6x the stage sum of the
+/// latency-optimal quantized (SPINN) plan under the same base config —
+/// the ONE implementation behind both [`plan_cfg`] and the scenario
+/// `Slo::Paper` mode.
+fn paper_slo(
+    g: &ModelGraph,
+    cost: &CostModel,
+    base: PartitionConfig,
+) -> Result<PartitionConfig> {
+    let lat_min = Scheme::Spinn.plan(g, cost, &AnalyticAcc, &base)?;
+    let sum = lat_min.eval.t_e + lat_min.eval.t_t + lat_min.eval.t_c;
+    Ok(PartitionConfig { t_max: sum * 1.6, ..base })
+}
+
+/// The COACH plan's bottleneck stage time at `bw_mbps` — the basis of
+/// the common-load arrival periods.
+fn bottleneck_period(
+    g: &ModelGraph,
+    cost: &CostModel,
+    bw_mbps: f64,
+) -> Result<f64> {
+    let cfg = PartitionConfig { bw_mbps, ..Default::default() };
+    let coach = Scheme::Coach.plan(g, cost, &AnalyticAcc, &cfg)?;
+    let sm = StageModel::from_strategy(g, cost, &coach, bw_mbps);
+    let t_t = sm.t_transmit(
+        cost,
+        g,
+        coach.base_bits(),
+        bw_mbps,
+        coach.cuts.is_empty(),
+    );
+    Ok(sm.t_e.max(t_t).max(sm.t_c))
+}
+
+/// Arrival period every scheme is subjected to in a scenario: 1.1x the
+/// COACH plan's bottleneck stage (the workload the best system can just
+/// sustain).
+pub fn common_period(
+    g: &ModelGraph,
+    cost: &CostModel,
+    bw_mbps: f64,
+) -> Result<f64> {
+    Ok(bottleneck_period(g, cost, bw_mbps)? * 1.1 + 1e-4)
+}
+
+/// A scenario compiled for the single-stream DES: the offline plan and
+/// task stream, reusable across runs (each [`SimPlan::run`] builds a
+/// fresh policy, so repeated runs are independent and identical).
+pub struct SimPlan {
+    scenario: Scenario,
+    pub graph: ModelGraph,
+    pub cost: CostModel,
+    pub strategy: Strategy,
+    pub stage_model: StageModel,
+    pub tasks: Vec<SimTask>,
+    pub period: f64,
+    pub drop_after: Option<f64>,
+}
+
+/// One compiled stream of a fleet scenario (simulate_fleet/serve_sim).
+struct FleetStream {
+    sm: StageModel,
+    cost: CostModel,
+    tasks: Vec<SimTask>,
+    policy: Box<dyn OnlinePolicy + Send>,
+    /// admission threshold resolved against this stream's own period
+    drop_after: Option<f64>,
+}
+
+impl SimPlan {
+    /// Execute the compiled scenario once on the virtual-time driver.
+    pub fn run(&self) -> RunReport {
+        let mut policy = self.scenario.make_policy(
+            &self.strategy,
+            &self.stage_model,
+            &self.cost,
+            &self.graph,
+        );
+        run_virtual(
+            &self.graph,
+            &self.cost,
+            &self.stage_model,
+            &self.scenario.bandwidth,
+            &self.tasks,
+            policy.as_mut(),
+            &self.scenario.report_label(),
+            self.drop_after,
+        )
+    }
+}
+
+impl Scenario {
+    /// Resolve the analytic topology this scenario simulates.
+    pub fn resolve_graph(&self) -> Result<ModelGraph> {
+        if let Some(g) = &self.graph {
+            return Ok(g.clone());
+        }
+        topology::by_name(&self.model).ok_or_else(|| {
+            anyhow!(
+                "unknown analytic model '{}' (vgg16 | resnet101 | googlenet); \
+                 runtime-only models can only be served",
+                self.model
+            )
+        })
+    }
+
+    /// Bandwidth the offline component plans at: the explicit override,
+    /// or the (un-jittered) bandwidth model at t=0.
+    pub fn plan_bandwidth(&self) -> f64 {
+        use crate::network::BandwidthModel;
+        self.plan_bw.unwrap_or_else(|| match &self.bandwidth {
+            BandwidthModel::Static(b) => *b,
+            BandwidthModel::Stepped(tr) => tr.at(0.0),
+            BandwidthModel::Jittered { trace, .. } => trace.at(0.0),
+        })
+    }
+
+    fn stage_bandwidth(&self) -> f64 {
+        self.stage_bw.unwrap_or_else(|| self.plan_bandwidth())
+    }
+
+    /// Cost model of one stream: the scenario device slowed by `scale`.
+    fn cost_model(&self, scale: f64) -> CostModel {
+        let mut dev = self.device.clone();
+        if scale != 1.0 {
+            dev.flops_per_sec /= scale;
+            dev.layer_overhead *= scale;
+            dev.name = format!("{}x{:.2}", dev.name, scale);
+        }
+        CostModel::new(dev, self.cloud.clone())
+    }
+
+    fn partition_cfg(
+        &self,
+        g: &ModelGraph,
+        cost: &CostModel,
+        bw_mbps: f64,
+    ) -> Result<PartitionConfig> {
+        let base =
+            PartitionConfig { bw_mbps, eps: self.eps, ..Default::default() };
+        Ok(match self.slo {
+            super::Slo::Unbounded => base,
+            super::Slo::Secs(t_max) => PartitionConfig { t_max, ..base },
+            super::Slo::Paper => {
+                if self.scheme != Scheme::Coach {
+                    base
+                } else {
+                    paper_slo(g, cost, base)?
+                }
+            }
+        })
+    }
+
+    /// The offline strategy this scenario plans (base device profile).
+    pub fn plan(&self) -> Result<Strategy> {
+        let g = self.resolve_graph()?;
+        let cost = self.cost_model(1.0);
+        let bw = self.plan_bandwidth();
+        let cfg = self.partition_cfg(&g, &cost, bw)?;
+        self.scheme.plan(&g, &cost, &AnalyticAcc, &cfg)
+    }
+
+    fn resolve_period(
+        &self,
+        g: &ModelGraph,
+        cost: &CostModel,
+        bw_mbps: f64,
+    ) -> Result<f64> {
+        match self.workload.period {
+            PeriodSpec::Secs(p) => Ok(p),
+            PeriodSpec::Saturated => Ok(1e-5),
+            PeriodSpec::OfBottleneck(factor) => {
+                Ok(bottleneck_period(g, cost, bw_mbps)? * factor + 1e-4)
+            }
+        }
+    }
+
+    /// Assemble the online policy the scenario's scheme prescribes.
+    pub(crate) fn make_policy(
+        &self,
+        strat: &Strategy,
+        sm: &StageModel,
+        cost: &CostModel,
+        g: &ModelGraph,
+    ) -> Box<dyn OnlinePolicy + Send> {
+        match self.policy {
+            PolicySpec::Static { bits, exit_threshold } => {
+                Box::new(StaticPolicy { bits, exit_threshold })
+            }
+            PolicySpec::Scheme => match self.scheme {
+                Scheme::Coach => Box::new(coach_des(
+                    self.thresholds.clone(),
+                    strat.base_bits(),
+                    sm.clone(),
+                    cost.clone(),
+                    g.clone(),
+                )),
+                Scheme::Spinn => Box::new(StaticPolicy {
+                    bits: 8,
+                    exit_threshold: SPINN_EXIT_THRESHOLD,
+                }),
+                s => Box::new(StaticPolicy::no_exit(
+                    s.fixed_bits().unwrap_or(32),
+                )),
+            },
+        }
+    }
+
+    /// Compile the scenario for the single-stream DES (plan once, run
+    /// many times — see [`SimPlan`]).
+    pub fn compile(&self) -> Result<SimPlan> {
+        let g = self.resolve_graph()?;
+        let cost = self.cost_model(1.0);
+        let plan_bw = self.plan_bandwidth();
+        let cfg = self.partition_cfg(&g, &cost, plan_bw)?;
+        let strategy = self.scheme.plan(&g, &cost, &AnalyticAcc, &cfg)?;
+        let stage_model =
+            StageModel::from_strategy(&g, &cost, &strategy, self.stage_bandwidth());
+        let period = self.resolve_period(&g, &cost, plan_bw)?;
+        let drop_after = self.admission.resolve(period);
+        let tasks = generate(
+            self.workload.n_tasks,
+            period,
+            self.workload.correlation,
+            self.workload.n_classes,
+            self.workload.seed,
+        );
+        Ok(SimPlan {
+            scenario: self.clone(),
+            graph: g,
+            cost,
+            strategy,
+            stage_model,
+            tasks,
+            period,
+            drop_after,
+        })
+    }
+
+    /// Run the scenario through the single-stream discrete-event
+    /// simulation (virtual clock, analytic stage occupancies).
+    pub fn simulate(&self) -> Result<RunReport> {
+        Ok(self.compile()?.run())
+    }
+
+    /// Compile one fleet stream: plan + stage model + tasks + policy,
+    /// with the admission threshold resolved against the STREAM's own
+    /// arrival period (a slow stream's `drop_after_periods` bound must
+    /// not shrink to the base cadence).
+    fn compile_stream(
+        &self,
+        g: &ModelGraph,
+        spec: &StreamSpec,
+        index: usize,
+        base_period: f64,
+    ) -> Result<FleetStream> {
+        let cost = self.cost_model(spec.scale);
+        let plan_bw = self.plan_bandwidth();
+        let cfg = self.partition_cfg(g, &cost, plan_bw)?;
+        let strat = self.scheme.plan(g, &cost, &AnalyticAcc, &cfg)?;
+        let sm =
+            StageModel::from_strategy(g, &cost, &strat, self.stage_bandwidth());
+        let period = spec.period.unwrap_or(base_period);
+        let seed = spec.seed.unwrap_or_else(|| {
+            self.workload.seed.wrapping_add(101 * index as u64)
+        });
+        let tasks = generate(
+            spec.n_tasks.unwrap_or(self.workload.n_tasks),
+            period,
+            spec.correlation.unwrap_or(self.workload.correlation),
+            self.workload.n_classes,
+            seed,
+        );
+        let policy = self.make_policy(&strat, &sm, &cost, g);
+        Ok(FleetStream {
+            sm,
+            cost,
+            tasks,
+            policy,
+            drop_after: self.admission.resolve(period),
+        })
+    }
+
+    /// Run the scenario's fleet through the multi-stream DES: N device
+    /// streams (each with its own plan, arrivals and policy state)
+    /// sharing one FIFO link and one cloud in virtual time.
+    pub fn simulate_fleet(&self) -> Result<MultiReport> {
+        let g = self.resolve_graph()?;
+        let base_cost = self.cost_model(1.0);
+        let base_period =
+            self.resolve_period(&g, &base_cost, self.plan_bandwidth())?;
+        let specs = self.stream_specs();
+
+        let mut built = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.iter().enumerate() {
+            built.push(self.compile_stream(&g, spec, i, base_period)?);
+        }
+        let label = self.report_label();
+        let mut streams: Vec<VirtualStream<'_>> = built
+            .iter_mut()
+            .map(|b| VirtualStream {
+                tasks: b.tasks.as_slice(),
+                sm: &b.sm,
+                graph: &g,
+                cost: &b.cost,
+                policy: b.policy.as_mut(),
+                scheme: label.clone(),
+                drop_after: b.drop_after,
+            })
+            .collect();
+        Ok(run_virtual_streams(&mut streams, &self.bandwidth, None))
+    }
+
+    /// Run the scenario's fleet on the wall-clock threaded driver with
+    /// *simulated* compute: busy-sleep device/cloud stages priced from
+    /// the same analytic plan the DES uses, one thread per stream, a
+    /// FIFO link thread and ONE shared cloud thread. Exercises the full
+    /// real-serving scheduling surface on any machine (no artifacts).
+    ///
+    /// Limitation: the wall-clock driver applies ONE admission
+    /// threshold to every stream, so `Admission::AfterPeriods` resolves
+    /// against the base workload period here (the multi-stream DES
+    /// resolves it per stream).
+    pub fn serve_sim(&self) -> Result<MultiReport> {
+        let g = self.resolve_graph()?;
+        let base_cost = self.cost_model(1.0);
+        let base_period =
+            self.resolve_period(&g, &base_cost, self.plan_bandwidth())?;
+        let specs = self.stream_specs();
+        let clock = WallClock::new();
+
+        let mut built = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.iter().enumerate() {
+            built.push(self.compile_stream(&g, spec, i, base_period)?);
+        }
+        // the shared cloud stage serves every stream at the slowest
+        // stream's per-task cloud time
+        let t_c = built.iter().map(|b| b.sm.t_c).fold(0.0f64, f64::max);
+        let source_elems = g.layers[g.source()].out_elems;
+
+        let streams: Vec<(Vec<SimTask>, _)> = built
+            .into_iter()
+            .map(|b| {
+                let FleetStream { sm, cost, tasks, policy, .. } = b;
+                let bw = self.bandwidth.clone();
+                let elems = if sm.cut_elems.is_empty() {
+                    source_elems
+                } else {
+                    sm.cut_elems.iter().sum()
+                };
+                let t_e = sm.t_e + sm.exit_check;
+                let factory = move || -> Result<
+                    SimDevice<Box<dyn OnlinePolicy + Send>>,
+                > {
+                    Ok(SimDevice { policy, t_e, bw, clock, elems, cost })
+                };
+                (tasks, factory)
+            })
+            .collect();
+
+        run_real::<SimDevice<Box<dyn OnlinePolicy + Send>>, SimCloud, _, _>(
+            streams,
+            move || Ok(SimCloud { t_c }),
+            self.bandwidth.clone(),
+            clock,
+            RealCfg {
+                queue_cap: 8,
+                drop_after: self.admission.resolve(base_period),
+                scheme: self.report_label(),
+                model: self.model.clone(),
+            },
+        )
+    }
+
+    /// Serve-mode policy knobs derived from the scheme / policy spec.
+    pub fn serve_policy(&self) -> SchemePolicy {
+        match self.policy {
+            PolicySpec::Static { bits, exit_threshold } => SchemePolicy {
+                bits: Some(bits),
+                early_exit: exit_threshold.is_finite(),
+                adaptive_quant: false,
+            },
+            PolicySpec::Scheme => match self.scheme {
+                Scheme::Coach => SchemePolicy::coach(),
+                s => SchemePolicy {
+                    bits: s.fixed_bits(),
+                    early_exit: s.early_exit(),
+                    adaptive_quant: false,
+                },
+            },
+        }
+    }
+
+    /// Run the scenario on the REAL multi-stream server: compiled PJRT
+    /// artifacts, per-stream engines + semantic caches, one shared cloud
+    /// engine (`coordinator::server::serve_streams`). Requires `make
+    /// artifacts` and the `pjrt` feature; the scenario `model` must name
+    /// a runtime model (e.g. resnet_mini, vgg_mini).
+    ///
+    /// Admission control carries over (`drop_after` resolved against
+    /// the scenario period; one threshold for all streams). The
+    /// DES-only planning knobs (`slo`, `plan_bw`, `stage_bw`,
+    /// `thresholds`) do not apply: the real server takes its cut from
+    /// `cut`/per-stream overrides and calibrates thresholds at startup.
+    pub fn serve(&self, manifest: &Manifest) -> Result<ServeResult> {
+        let m = manifest.model(&self.model)?;
+        let default_cut = (m.blocks.len() - 1) / 2;
+        let PeriodSpec::Secs(period) = self.workload.period else {
+            bail!(
+                "serve scenarios need an explicit arrival period \
+                 ([workload] period_ms)"
+            );
+        };
+        let cut = self.cut.unwrap_or(default_cut);
+        let specs = self.stream_specs();
+        if specs.iter().any(|s| s.n_tasks.is_some()) {
+            bail!(
+                "per-stream n_tasks overrides are not supported by the real \
+                 server (every stream serves [workload] n_tasks)"
+            );
+        }
+        let cfg = ServeCfg {
+            model: self.model.clone(),
+            cut,
+            policy: self.serve_policy(),
+            device_scale: self.device_scale,
+            bw: self.bandwidth.clone(),
+            period,
+            n_tasks: self.workload.n_tasks,
+            correlation: self.workload.correlation,
+            eps: self.eps,
+            seed: self.workload.seed,
+            audit_every: self.audit_every,
+            n_streams: specs.len(),
+            drop_after: self.admission.resolve(period),
+        };
+        let streams: Vec<StreamCfg> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| StreamCfg {
+                cut: s.cut.unwrap_or(cut),
+                device_scale: self.device_scale * s.scale,
+                correlation: s.correlation.unwrap_or(cfg.correlation),
+                seed: s
+                    .seed
+                    .unwrap_or_else(|| cfg.seed.wrapping_add(101 * i as u64)),
+                period: s.period.unwrap_or(period),
+            })
+            .collect();
+        serve_streams(manifest, &cfg, &streams)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::BandwidthModel;
+    use crate::sim::Correlation;
+
+    #[test]
+    fn simulate_runs_every_scheme() {
+        for scheme in Scheme::ALL {
+            let r = Scenario::new("vgg16")
+                .scheme(scheme)
+                .tasks(60)
+                .period(1e-3)
+                .seed(5)
+                .simulate()
+                .unwrap();
+            assert_eq!(r.tasks.len(), 60, "{}", scheme.name());
+            assert_eq!(r.scheme, scheme.name());
+            assert!(r.throughput() > 0.0);
+        }
+    }
+
+    #[test]
+    fn compile_once_run_twice_is_deterministic() {
+        let plan = Scenario::new("resnet101")
+            .tasks(80)
+            .period(2e-3)
+            .compile()
+            .unwrap();
+        let a = plan.run();
+        let b = plan.run();
+        assert_eq!(a.tasks.len(), b.tasks.len());
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.finish, y.finish);
+            assert_eq!(x.bits, y.bits);
+        }
+    }
+
+    #[test]
+    fn fleet_shares_cloud_across_streams() {
+        let multi = Scenario::new("vgg16")
+            .tasks(80)
+            .period(5e-4)
+            .fleet(3)
+            .simulate_fleet()
+            .unwrap();
+        assert_eq!(multi.per_stream.len(), 3);
+        for r in &multi.per_stream {
+            assert_eq!(r.tasks.len(), 80);
+        }
+        // derived per-stream seeds differ, so the streams differ
+        let a = &multi.per_stream[0].tasks;
+        let b = &multi.per_stream[1].tasks;
+        assert!(a.iter().zip(b).any(|(x, y)| x.label != y.label));
+    }
+
+    #[test]
+    fn heterogeneous_fleet_slower_stream_has_higher_latency() {
+        // fixed precision, no exits, unsaturated arrivals: per-task
+        // latency reflects the per-stream plan, and the 3x-slower
+        // device cannot beat the fast one even with its own re-plan
+        // (the fast device could always adopt the same partition).
+        let sc = Scenario::new("vgg16")
+            .policy_static(8, f64::INFINITY)
+            .tasks(40)
+            .period(0.05)
+            .correlation(Correlation::Low)
+            .stream(StreamSpec::default())
+            .stream(StreamSpec { scale: 3.0, ..StreamSpec::default() });
+        let multi = sc.simulate_fleet().unwrap();
+        assert_eq!(multi.per_stream.len(), 2);
+        assert!(
+            multi.per_stream[1].avg_latency_ms()
+                > multi.per_stream[0].avg_latency_ms(),
+            "3x-slower device must raise latency: {:.2} vs {:.2}",
+            multi.per_stream[1].avg_latency_ms(),
+            multi.per_stream[0].avg_latency_ms()
+        );
+    }
+
+    #[test]
+    fn overload_with_admission_control_sheds_tasks() {
+        // DADS (no early exits) under arrivals 2x faster than the COACH
+        // bottleneck: the queue grows without bound, so admission
+        // control must shed.
+        let r = Scenario::new("resnet101")
+            .scheme(Scheme::Dads)
+            .tasks(200)
+            .load_factor(0.5)
+            .drop_after_periods(4.0)
+            .simulate()
+            .unwrap();
+        assert!(r.dropped > 0, "overload must shed tasks");
+        assert_eq!(r.tasks.len() + r.dropped, 200);
+    }
+
+    #[test]
+    fn stale_plan_uses_plan_bw_not_live_bw() {
+        let fresh = Scenario::new("resnet101")
+            .scheme(Scheme::Ns)
+            .slo_unbounded()
+            .bandwidth(BandwidthModel::Static(5.0))
+            .tasks(50)
+            .period(1e-3);
+        let stale = fresh.clone().plan_bw(100.0).stage_bw(100.0);
+        let f = fresh.compile().unwrap();
+        let s = stale.compile().unwrap();
+        // NS at 100 Mbps offloads more than at 5 Mbps
+        assert!(
+            s.strategy.n_device_layers() <= f.strategy.n_device_layers(),
+            "stale plan should keep the high-bandwidth partition"
+        );
+    }
+
+    #[test]
+    fn admission_resolves_relative_and_absolute() {
+        use super::super::Admission;
+        assert_eq!(Admission::Unbounded.resolve(0.01), None);
+        assert_eq!(Admission::After(0.5).resolve(0.01), Some(0.5));
+        let p = Admission::AfterPeriods(6.0).resolve(0.01).unwrap();
+        assert!((p - 0.06).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,436 @@
+//! The **Scenario layer** — describe an experiment once, run it on any
+//! driver (ARCHITECTURE.md §Scenario layer).
+//!
+//! A [`Scenario`] is the single front door to the pipeline core: one
+//! typed description of *model topology + device/cloud profiles +
+//! offline plan knobs + network trace + workload + scheme/policy + a
+//! fleet of per-stream overrides*, with one executor per substrate:
+//!
+//! - [`Scenario::simulate`] — single-stream discrete-event simulation
+//!   (virtual clock, analytic stage occupancies) → `RunReport`;
+//! - [`Scenario::simulate_fleet`] — N device streams sharing one FIFO
+//!   link and one cloud, still in virtual time → `MultiReport`;
+//! - [`Scenario::serve_sim`] — the wall-clock threaded driver with
+//!   simulated compute (busy-sleep stages priced from the same analytic
+//!   plan) → `MultiReport`; runs on any machine, no artifacts;
+//! - [`Scenario::serve`] — the real PJRT multi-stream server
+//!   (`coordinator::server::serve_streams`) → `ServeResult`.
+//!
+//! The same description drives every substrate, so a configuration can
+//! be validated in the simulator and then executed for real — the
+//! comparison the paper's evaluation grid (Tables I-II, Figs. 5-7) is
+//! built from. Scenarios are constructed with the builder API below or
+//! loaded from TOML files (`Scenario::from_toml`, see `scenarios/` for
+//! presets and the `coach run <scenario.toml>` CLI verb).
+//!
+//! ```no_run
+//! use coach::scenario::Scenario;
+//!
+//! let report = Scenario::new("resnet101")
+//!     .bandwidth_mbps(10.0)
+//!     .tasks(400)
+//!     .sustainable_load()
+//!     .drop_after_periods(6.0)
+//!     .simulate()
+//!     .unwrap();
+//! println!("{:.2} ms", report.avg_latency_ms());
+//! ```
+
+mod exec;
+mod toml;
+
+pub use exec::{common_period, des_thresholds, plan_cfg, SimPlan, SPINN_EXIT_THRESHOLD};
+
+use crate::baselines::Scheme;
+use crate::cache::Thresholds;
+use crate::model::{DeviceProfile, ModelGraph};
+use crate::network::BandwidthModel;
+use crate::sim::Correlation;
+
+/// How the online policy of a scenario is chosen.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicySpec {
+    /// Derive the policy from the scheme: COACH gets the shared adaptive
+    /// Eq. 10/11 policy, SPINN a fixed 8-bit + conservative exit, the
+    /// others a fixed-precision no-exit policy.
+    Scheme,
+    /// Fixed precision with an explicit exit threshold
+    /// (`f64::INFINITY` = never exit). On the real server the threshold
+    /// maps to enabling/disabling early exit (thresholds there are
+    /// calibrated at startup, Alg. 1 L18-19).
+    Static { bits: u8, exit_threshold: f64 },
+}
+
+/// Latency-SLO handling for the offline plan (paper Eq. 3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Slo {
+    /// The paper's evaluation rule: COACH plans under
+    /// `T_max = 1.6x` the stage sum of the latency-optimal quantized
+    /// plan; baselines plan unconstrained (see [`plan_cfg`]).
+    Paper,
+    /// No latency constraint for any scheme.
+    Unbounded,
+    /// Fixed `T_max` in seconds, applied to every scheme.
+    Secs(f64),
+}
+
+/// Arrival-period specification of the workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PeriodSpec {
+    /// Fixed inter-arrival period, seconds.
+    Secs(f64),
+    /// Arrivals far faster than any stage (capacity measurement,
+    /// Fig. 7 regime).
+    Saturated,
+    /// `factor x` the COACH plan's bottleneck stage at the plan
+    /// bandwidth (+0.1 ms): `1.1` is the paper's common continuous load
+    /// ([`common_period`]); factors below `1.0` overload the pipeline.
+    OfBottleneck(f64),
+}
+
+/// Admission control of the device queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Admission {
+    /// queue without bound
+    Unbounded,
+    /// shed a task whose queue wait would exceed this many seconds
+    After(f64),
+    /// shed after this many arrival periods of queue wait
+    AfterPeriods(f64),
+}
+
+impl Admission {
+    /// Resolve to the drivers' `drop_after` given the arrival period.
+    pub fn resolve(&self, period: f64) -> Option<f64> {
+        match *self {
+            Admission::Unbounded => None,
+            Admission::After(secs) => Some(secs),
+            Admission::AfterPeriods(p) => Some(p * period),
+        }
+    }
+}
+
+/// Workload shape of one scenario (every stream draws from this unless
+/// overridden per stream).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub n_tasks: usize,
+    pub period: PeriodSpec,
+    pub correlation: Correlation,
+    pub seed: u64,
+    pub n_classes: usize,
+}
+
+impl Default for Workload {
+    fn default() -> Self {
+        Workload {
+            n_tasks: 200,
+            period: PeriodSpec::Secs(0.01),
+            correlation: Correlation::Medium,
+            seed: 42,
+            n_classes: 100,
+        }
+    }
+}
+
+/// Per-stream overrides for a (possibly heterogeneous) fleet. A default
+/// `StreamSpec` replicates the scenario's own settings.
+#[derive(Debug, Clone)]
+pub struct StreamSpec {
+    /// extra device slowdown of this stream (1.0 = the scenario device
+    /// as-is; 2.0 = half speed). In DES/fleet mode it scales the
+    /// analytic device profile; in serve mode it multiplies the
+    /// scenario `device_scale` padding.
+    pub scale: f64,
+    /// serve-mode cut-point override (device runs blocks `0..=cut`)
+    pub cut: Option<usize>,
+    /// arrival-period override, seconds
+    pub period: Option<f64>,
+    pub correlation: Option<Correlation>,
+    /// task-stream seed override (default: scenario seed + 101 * index)
+    pub seed: Option<u64>,
+    pub n_tasks: Option<usize>,
+}
+
+impl Default for StreamSpec {
+    fn default() -> Self {
+        StreamSpec {
+            scale: 1.0,
+            cut: None,
+            period: None,
+            correlation: None,
+            seed: None,
+            n_tasks: None,
+        }
+    }
+}
+
+/// One experiment, described once, runnable on every driver. Construct
+/// with [`Scenario::new`] + the builder methods, or load from TOML with
+/// [`Scenario::from_toml`] / [`Scenario::from_file`].
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// display name (TOML `[scenario] name`)
+    pub name: String,
+    /// analytic graph name (DES: vgg16 | resnet101 | googlenet) and/or
+    /// runtime model name (serve: resnet_mini | vgg_mini)
+    pub model: String,
+    /// explicit topology override (takes precedence over `model` for
+    /// the virtual drivers — custom graphs, property tests)
+    pub graph: Option<ModelGraph>,
+    pub device: DeviceProfile,
+    pub cloud: DeviceProfile,
+    pub scheme: Scheme,
+    pub policy: PolicySpec,
+    /// DES-scale COACH thresholds (the real server calibrates its own)
+    pub thresholds: Thresholds,
+    /// accuracy-loss budget eps for planning/calibration
+    pub eps: f64,
+    pub slo: Slo,
+    /// offline-plan bandwidth, Mbps (default: the bandwidth model at
+    /// t=0 — a stale-plan scenario pins this to the pre-change rate)
+    pub plan_bw: Option<f64>,
+    /// stage-model design bandwidth, Mbps (default: `plan_bw`)
+    pub stage_bw: Option<f64>,
+    /// the network the run actually experiences
+    pub bandwidth: BandwidthModel,
+    pub workload: Workload,
+    pub admission: Admission,
+    /// explicit per-stream fleet; empty = `n_streams` identical streams
+    pub streams: Vec<StreamSpec>,
+    /// fleet size when `streams` is empty
+    pub n_streams: usize,
+    /// serve-mode device emulation padding (NX ~6, TX2 ~10.5)
+    pub device_scale: f64,
+    /// serve-mode cut override (default: middle block)
+    pub cut: Option<usize>,
+    /// serve-mode: audit every k-th early exit against fp32 (0 = off)
+    pub audit_every: usize,
+    /// report scheme label override (default: the scheme's name)
+    pub label: Option<String>,
+}
+
+impl Scenario {
+    /// A scenario over `model` with the paper's defaults: Jetson NX
+    /// device, A6000-class cloud, COACH scheme under the paper SLO,
+    /// 20 Mbps static link, 200 tasks every 10 ms at medium correlation.
+    pub fn new(model: &str) -> Scenario {
+        Scenario {
+            name: model.to_string(),
+            model: model.to_string(),
+            graph: None,
+            device: DeviceProfile::jetson_nx(),
+            cloud: DeviceProfile::cloud_a6000(),
+            scheme: Scheme::Coach,
+            policy: PolicySpec::Scheme,
+            thresholds: des_thresholds(),
+            eps: 0.005,
+            slo: Slo::Paper,
+            plan_bw: None,
+            stage_bw: None,
+            bandwidth: BandwidthModel::Static(20.0),
+            workload: Workload::default(),
+            admission: Admission::Unbounded,
+            streams: Vec::new(),
+            n_streams: 1,
+            device_scale: 6.0,
+            cut: None,
+            audit_every: 0,
+            label: None,
+        }
+    }
+
+    // ---- builder ------------------------------------------------------
+
+    pub fn named(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    /// Run over an explicit topology instead of a named analytic graph.
+    pub fn with_graph(mut self, g: ModelGraph) -> Self {
+        self.graph = Some(g);
+        self
+    }
+
+    pub fn device(mut self, device: DeviceProfile) -> Self {
+        self.device = device;
+        self
+    }
+
+    pub fn cloud(mut self, cloud: DeviceProfile) -> Self {
+        self.cloud = cloud;
+        self
+    }
+
+    pub fn scheme(mut self, scheme: Scheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    /// Force a fixed-precision policy regardless of the scheme.
+    pub fn policy_static(mut self, bits: u8, exit_threshold: f64) -> Self {
+        self.policy = PolicySpec::Static { bits, exit_threshold };
+        self
+    }
+
+    pub fn thresholds(mut self, thresholds: Thresholds) -> Self {
+        self.thresholds = thresholds;
+        self
+    }
+
+    pub fn eps(mut self, eps: f64) -> Self {
+        self.eps = eps;
+        self
+    }
+
+    /// Plan without a latency SLO (plain `PartitionConfig` defaults).
+    pub fn slo_unbounded(mut self) -> Self {
+        self.slo = Slo::Unbounded;
+        self
+    }
+
+    pub fn slo_secs(mut self, t_max: f64) -> Self {
+        self.slo = Slo::Secs(t_max);
+        self
+    }
+
+    /// Pin the offline-plan bandwidth (stale-plan scenarios, Fig. 5).
+    pub fn plan_bw(mut self, mbps: f64) -> Self {
+        self.plan_bw = Some(mbps);
+        self
+    }
+
+    /// Pin the stage-model design bandwidth.
+    pub fn stage_bw(mut self, mbps: f64) -> Self {
+        self.stage_bw = Some(mbps);
+        self
+    }
+
+    pub fn bandwidth(mut self, bw: BandwidthModel) -> Self {
+        self.bandwidth = bw;
+        self
+    }
+
+    pub fn bandwidth_mbps(mut self, mbps: f64) -> Self {
+        self.bandwidth = BandwidthModel::Static(mbps);
+        self
+    }
+
+    pub fn tasks(mut self, n: usize) -> Self {
+        self.workload.n_tasks = n;
+        self
+    }
+
+    /// Fixed inter-arrival period, seconds.
+    pub fn period(mut self, secs: f64) -> Self {
+        self.workload.period = PeriodSpec::Secs(secs);
+        self
+    }
+
+    /// Arrivals far faster than any stage (Fig. 7 capacity regime).
+    pub fn saturated(mut self) -> Self {
+        self.workload.period = PeriodSpec::Saturated;
+        self
+    }
+
+    /// The paper's common continuous load: arrivals at 1.1x the COACH
+    /// plan's bottleneck stage ([`common_period`]).
+    pub fn sustainable_load(mut self) -> Self {
+        self.workload.period = PeriodSpec::OfBottleneck(1.1);
+        self
+    }
+
+    /// Arrivals at `factor x` the COACH bottleneck (below 1.0 =
+    /// overload; pair with [`Scenario::drop_after_periods`]).
+    pub fn load_factor(mut self, factor: f64) -> Self {
+        self.workload.period = PeriodSpec::OfBottleneck(factor);
+        self
+    }
+
+    pub fn correlation(mut self, corr: Correlation) -> Self {
+        self.workload.correlation = corr;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.workload.seed = seed;
+        self
+    }
+
+    pub fn n_classes(mut self, n: usize) -> Self {
+        self.workload.n_classes = n;
+        self
+    }
+
+    /// Shed tasks whose queue wait would exceed `secs`.
+    pub fn drop_after(mut self, secs: f64) -> Self {
+        self.admission = Admission::After(secs);
+        self
+    }
+
+    /// Shed tasks waiting longer than `periods` arrival periods.
+    pub fn drop_after_periods(mut self, periods: f64) -> Self {
+        self.admission = Admission::AfterPeriods(periods);
+        self
+    }
+
+    /// Fleet of `n` identical streams (per-stream seeds derived).
+    pub fn fleet(mut self, n: usize) -> Self {
+        self.n_streams = n.max(1);
+        self
+    }
+
+    /// Append one explicitly-configured stream to the fleet.
+    pub fn stream(mut self, spec: StreamSpec) -> Self {
+        self.streams.push(spec);
+        self
+    }
+
+    /// Serve-mode device emulation padding (NX ~6, TX2 ~10.5).
+    pub fn device_scale(mut self, scale: f64) -> Self {
+        self.device_scale = scale;
+        self
+    }
+
+    /// Serve-mode cut point (device runs blocks `0..=cut`).
+    pub fn cut(mut self, cut: usize) -> Self {
+        self.cut = Some(cut);
+        self
+    }
+
+    /// Serve-mode: audit every k-th early exit against fp32.
+    pub fn audit_every(mut self, k: usize) -> Self {
+        self.audit_every = k;
+        self
+    }
+
+    /// Override the scheme label written into reports.
+    pub fn label(mut self, label: &str) -> Self {
+        self.label = Some(label.to_string());
+        self
+    }
+
+    // ---- derived ------------------------------------------------------
+
+    /// The fleet this scenario describes: the explicit `streams` list,
+    /// or `n_streams` default streams.
+    pub fn stream_specs(&self) -> Vec<StreamSpec> {
+        if self.streams.is_empty() {
+            vec![StreamSpec::default(); self.n_streams.max(1)]
+        } else {
+            self.streams.clone()
+        }
+    }
+
+    /// Whether this scenario describes more than one device stream.
+    pub fn is_fleet(&self) -> bool {
+        self.streams.len() > 1 || (self.streams.is_empty() && self.n_streams > 1)
+    }
+
+    pub(crate) fn report_label(&self) -> String {
+        self.label
+            .clone()
+            .unwrap_or_else(|| self.scheme.name().to_string())
+    }
+}

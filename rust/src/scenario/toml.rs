@@ -1,0 +1,503 @@
+//! Serde-free TOML loading for scenarios, over the same minimal
+//! `[section] key = value` parser the deployment config uses
+//! ([`crate::config::RawConfig`]). Unknown sections or keys are
+//! rejected with an error naming the offender — a typo'd scenario file
+//! fails loudly instead of silently running the defaults.
+//!
+//! Schema (every key optional; see `scenarios/` for commented presets):
+//!
+//! ```text
+//! [scenario]  name, label
+//! [model]     name
+//! [device]    profile (nx|tx2), gflops
+//! [cloud]     gflops
+//! [scheduler] scheme (ns|dads|spinn|jps|coach), eps, t_max_ms,
+//!             slo (paper|none), plan_mbps, stage_mbps
+//! [network]   mbps, trace (fig5a|fig5b), steps ("t:mbps,t:mbps,.."),
+//!             jitter
+//! [policy]    bits, exit_threshold   (forces a fixed-precision policy)
+//! [workload]  n_tasks, period_ms, load (sustainable|saturated),
+//!             load_factor, correlation (none|low|medium|high), seed,
+//!             n_classes, drop_after_ms, drop_after_periods
+//! [serve]     n_streams, device_scale, cut, audit_every
+//! [stream.N]  scale, cut, period_ms, seed, correlation, n_tasks
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::baselines::Scheme;
+use crate::config::RawConfig;
+use crate::model::DeviceProfile;
+use crate::network::{BandwidthModel, Trace};
+use crate::sim::Correlation;
+
+use super::{PeriodSpec, Scenario, StreamSpec};
+
+/// Known `(section, keys)` of the scenario schema; `stream.N` sections
+/// are validated separately.
+const KNOWN: &[(&str, &[&str])] = &[
+    ("scenario", &["name", "label"]),
+    ("model", &["name"]),
+    ("device", &["profile", "gflops"]),
+    ("cloud", &["gflops"]),
+    (
+        "scheduler",
+        &["scheme", "eps", "t_max_ms", "slo", "plan_mbps", "stage_mbps"],
+    ),
+    ("network", &["mbps", "trace", "steps", "jitter"]),
+    ("policy", &["bits", "exit_threshold"]),
+    (
+        "workload",
+        &[
+            "n_tasks",
+            "period_ms",
+            "load",
+            "load_factor",
+            "correlation",
+            "seed",
+            "n_classes",
+            "drop_after_ms",
+            "drop_after_periods",
+        ],
+    ),
+    ("serve", &["n_streams", "device_scale", "cut", "audit_every"]),
+];
+
+const STREAM_KEYS: &[&str] =
+    &["scale", "cut", "period_ms", "seed", "correlation", "n_tasks"];
+
+fn scheme_of(s: &str) -> Result<Scheme> {
+    Ok(match s {
+        "ns" | "NS" => Scheme::Ns,
+        "dads" | "DADS" => Scheme::Dads,
+        "spinn" | "SPINN" => Scheme::Spinn,
+        "jps" | "JPS" => Scheme::Jps,
+        "coach" | "COACH" => Scheme::Coach,
+        other => bail!("unknown scheme '{other}' (ns|dads|spinn|jps|coach)"),
+    })
+}
+
+/// Parse a compact step-trace spec: `"0:20,30:10,60:5"` =
+/// (time_s, mbps) pairs sorted by time, first at 0.
+fn parse_steps(spec: &str) -> Result<Trace> {
+    let mut steps = Vec::new();
+    for part in spec.split(',') {
+        let Some((t, bw)) = part.split_once(':') else {
+            bail!("steps entry '{part}' is not 'time_s:mbps'");
+        };
+        let t: f64 = t.trim().parse().with_context(|| format!("steps '{part}'"))?;
+        let bw: f64 =
+            bw.trim().parse().with_context(|| format!("steps '{part}'"))?;
+        steps.push((t, bw));
+    }
+    if steps.is_empty() || steps[0].0 != 0.0 {
+        bail!("steps must start at time 0 (got '{spec}')");
+    }
+    if steps.windows(2).any(|w| w[1].0 <= w[0].0) {
+        bail!("steps must be strictly increasing in time (got '{spec}')");
+    }
+    Ok(Trace { steps })
+}
+
+fn parse_stream(raw: &RawConfig, section: &str) -> Result<StreamSpec> {
+    let mut spec = StreamSpec::default();
+    if let Some(s) = raw.get_f64(section, "scale")? {
+        if s <= 0.0 {
+            bail!("{section}.scale must be positive, got {s}");
+        }
+        spec.scale = s;
+    }
+    if let Some(c) = raw.get_f64(section, "cut")? {
+        spec.cut = Some(c as usize);
+    }
+    if let Some(p) = raw.get_f64(section, "period_ms")? {
+        spec.period = Some(p / 1e3);
+    }
+    if let Some(s) = raw.get_f64(section, "seed")? {
+        spec.seed = Some(s as u64);
+    }
+    if let Some(c) = raw.get(section, "correlation") {
+        spec.correlation = Some(Correlation::parse(c)?);
+    }
+    if let Some(n) = raw.get_f64(section, "n_tasks")? {
+        spec.n_tasks = Some(n as usize);
+    }
+    Ok(spec)
+}
+
+impl Scenario {
+    /// Load a scenario from a TOML file (see the module docs for the
+    /// schema and `scenarios/` for presets).
+    pub fn from_file(path: &Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml(&text)
+            .with_context(|| format!("scenario {}", path.display()))
+    }
+
+    /// Parse a scenario from TOML text. Unknown sections/keys error.
+    pub fn from_toml(text: &str) -> Result<Scenario> {
+        let raw = RawConfig::parse(text)?;
+        raw.ensure_known(|section, key| {
+            if section.starts_with("stream.") {
+                return STREAM_KEYS.contains(&key);
+            }
+            KNOWN
+                .iter()
+                .any(|(s, keys)| *s == section && keys.contains(&key))
+        })?;
+        let section_names: Vec<&str> =
+            KNOWN.iter().map(|(s, _)| *s).collect();
+        raw.ensure_known_sections(
+            |section| {
+                KNOWN.iter().any(|(s, _)| *s == section)
+                    || section.starts_with("stream.")
+            },
+            &section_names,
+        )?;
+
+        let model = raw.get("model", "name").unwrap_or("resnet101");
+        let mut sc = Scenario::new(model);
+
+        // ---- [scenario] ------------------------------------------------
+        if let Some(n) = raw.get("scenario", "name") {
+            sc.name = n.to_string();
+        }
+        if let Some(l) = raw.get("scenario", "label") {
+            sc.label = Some(l.to_string());
+        }
+
+        // ---- [device] / [cloud] ---------------------------------------
+        if let Some(d) = raw.get("device", "profile") {
+            sc.device = DeviceProfile::by_name(d)
+                .with_context(|| format!("unknown device profile '{d}'"))?;
+        }
+        if let Some(g) = raw.get_f64("device", "gflops")? {
+            sc.device.flops_per_sec = g * 1e9;
+        }
+        if let Some(g) = raw.get_f64("cloud", "gflops")? {
+            sc.cloud.flops_per_sec = g * 1e9;
+        }
+
+        // ---- [scheduler] -----------------------------------------------
+        if let Some(s) = raw.get("scheduler", "scheme") {
+            sc.scheme = scheme_of(s)?;
+        }
+        if let Some(e) = raw.get_f64("scheduler", "eps")? {
+            sc.eps = e;
+        }
+        if raw.get("scheduler", "slo").is_some()
+            && raw.get("scheduler", "t_max_ms").is_some()
+        {
+            bail!("scheduler.slo conflicts with scheduler.t_max_ms — set one");
+        }
+        if let Some(slo) = raw.get("scheduler", "slo") {
+            sc.slo = match slo {
+                "paper" => super::Slo::Paper,
+                "none" => super::Slo::Unbounded,
+                other => bail!("unknown slo '{other}' (paper|none)"),
+            };
+        }
+        if let Some(t) = raw.get_f64("scheduler", "t_max_ms")? {
+            sc.slo = super::Slo::Secs(t / 1e3);
+        }
+        if let Some(b) = raw.get_f64("scheduler", "plan_mbps")? {
+            sc.plan_bw = Some(b);
+        }
+        if let Some(b) = raw.get_f64("scheduler", "stage_mbps")? {
+            sc.stage_bw = Some(b);
+        }
+
+        // ---- [workload] (seed first: the jitter model reuses it) -------
+        if let Some(n) = raw.get_f64("workload", "n_tasks")? {
+            sc.workload.n_tasks = n as usize;
+        }
+        if let Some(s) = raw.get_f64("workload", "seed")? {
+            sc.workload.seed = s as u64;
+        }
+        if let Some(c) = raw.get("workload", "correlation") {
+            sc.workload.correlation = Correlation::parse(c)?;
+        }
+        if let Some(n) = raw.get_f64("workload", "n_classes")? {
+            sc.workload.n_classes = n as usize;
+        }
+        // the period keys are mutually exclusive — reject conflicts
+        // instead of resolving them by parse order
+        let period_keys = ["period_ms", "load", "load_factor"]
+            .iter()
+            .filter(|k| raw.get("workload", k).is_some())
+            .count();
+        if period_keys > 1 {
+            bail!(
+                "workload.period_ms / workload.load / workload.load_factor \
+                 conflict — set exactly one"
+            );
+        }
+        if let Some(p) = raw.get_f64("workload", "period_ms")? {
+            sc.workload.period = PeriodSpec::Secs(p / 1e3);
+        }
+        if let Some(load) = raw.get("workload", "load") {
+            sc.workload.period = match load {
+                "sustainable" => PeriodSpec::OfBottleneck(1.1),
+                "saturated" => PeriodSpec::Saturated,
+                other => bail!("unknown load '{other}' (sustainable|saturated)"),
+            };
+        }
+        if let Some(f) = raw.get_f64("workload", "load_factor")? {
+            sc.workload.period = PeriodSpec::OfBottleneck(f);
+        }
+        if raw.get("workload", "drop_after_ms").is_some()
+            && raw.get("workload", "drop_after_periods").is_some()
+        {
+            bail!(
+                "workload.drop_after_ms conflicts with \
+                 workload.drop_after_periods — set one"
+            );
+        }
+        if let Some(d) = raw.get_f64("workload", "drop_after_ms")? {
+            sc.admission = super::Admission::After(d / 1e3);
+        }
+        if let Some(d) = raw.get_f64("workload", "drop_after_periods")? {
+            sc.admission = super::Admission::AfterPeriods(d);
+        }
+
+        // ---- [network] -------------------------------------------------
+        let mut base_mbps = 20.0;
+        if let Some(b) = raw.get_f64("network", "mbps")? {
+            base_mbps = b;
+            sc.bandwidth = BandwidthModel::Static(b);
+        }
+        let mut trace: Option<Trace> = None;
+        if let Some(tr) = raw.get("network", "trace") {
+            trace = Some(match tr {
+                "fig5a" => Trace::fig5a(10.0, 20.0),
+                "fig5b" => Trace::fig5b(10.0, 20.0),
+                other => bail!("unknown trace '{other}' (fig5a|fig5b)"),
+            });
+        }
+        if let Some(spec) = raw.get("network", "steps") {
+            trace = Some(parse_steps(spec)?);
+        }
+        if let Some(tr) = &trace {
+            sc.bandwidth = BandwidthModel::Stepped(tr.clone());
+        }
+        if let Some(a) = raw.get_f64("network", "jitter")? {
+            sc.bandwidth = BandwidthModel::Jittered {
+                trace: trace.unwrap_or_else(|| Trace::constant(base_mbps)),
+                amplitude: a,
+                seed: sc.workload.seed,
+            };
+        }
+
+        // ---- [policy] --------------------------------------------------
+        if let Some(b) = raw.get_f64("policy", "bits")? {
+            let exit = raw
+                .get_f64("policy", "exit_threshold")?
+                .unwrap_or(f64::INFINITY);
+            sc.policy =
+                super::PolicySpec::Static { bits: b as u8, exit_threshold: exit };
+        } else if raw.get("policy", "exit_threshold").is_some() {
+            bail!("[policy] exit_threshold needs [policy] bits");
+        }
+
+        // ---- [serve] ---------------------------------------------------
+        if let Some(n) = raw.get_f64("serve", "n_streams")? {
+            if n < 1.0 {
+                bail!("serve.n_streams must be >= 1, got {n}");
+            }
+            sc.n_streams = n as usize;
+        }
+        if let Some(s) = raw.get_f64("serve", "device_scale")? {
+            sc.device_scale = s;
+        }
+        if let Some(c) = raw.get_f64("serve", "cut")? {
+            sc.cut = Some(c as usize);
+        }
+        if let Some(a) = raw.get_f64("serve", "audit_every")? {
+            sc.audit_every = a as usize;
+        }
+
+        // ---- [stream.N] ------------------------------------------------
+        let mut stream_ids: Vec<usize> = Vec::new();
+        for section in &raw.sections {
+            if let Some(idx) = section.strip_prefix("stream.") {
+                let idx: usize = idx.parse().with_context(|| {
+                    format!("stream section [{section}]: index must be a number")
+                })?;
+                stream_ids.push(idx);
+            }
+        }
+        stream_ids.sort_unstable();
+        stream_ids.dedup();
+        for &idx in &stream_ids {
+            sc.streams.push(parse_stream(&raw, &format!("stream.{idx}"))?);
+        }
+        Ok(sc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Admission, PolicySpec, Slo};
+    use super::*;
+
+    #[test]
+    fn parses_full_scenario() {
+        let text = r#"
+# a full scenario
+[scenario]
+name = "demo"
+
+[model]
+name = "vgg16"
+
+[device]
+profile = "tx2"
+
+[scheduler]
+scheme = "spinn"
+eps = 0.01
+slo = "none"
+plan_mbps = 50
+
+[network]
+mbps = 10
+
+[workload]
+n_tasks = 123
+period_ms = 5
+correlation = "high"
+seed = 9
+n_classes = 30
+drop_after_periods = 6
+
+[serve]
+n_streams = 2
+device_scale = 10.5
+"#;
+        let sc = Scenario::from_toml(text).unwrap();
+        assert_eq!(sc.name, "demo");
+        assert_eq!(sc.model, "vgg16");
+        assert_eq!(sc.device.name, "tx2");
+        assert_eq!(sc.scheme, Scheme::Spinn);
+        assert_eq!(sc.slo, Slo::Unbounded);
+        assert_eq!(sc.plan_bw, Some(50.0));
+        assert!(matches!(sc.bandwidth, BandwidthModel::Static(b) if b == 10.0));
+        assert_eq!(sc.workload.n_tasks, 123);
+        assert_eq!(sc.workload.seed, 9);
+        assert_eq!(sc.workload.n_classes, 30);
+        assert_eq!(sc.workload.correlation, Correlation::High);
+        assert!(matches!(sc.workload.period, PeriodSpec::Secs(p) if (p - 0.005).abs() < 1e-12));
+        assert_eq!(sc.admission, Admission::AfterPeriods(6.0));
+        assert_eq!(sc.n_streams, 2);
+        assert!((sc.device_scale - 10.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_unknown_key_naming_offender() {
+        let err = Scenario::from_toml("[serve]\nn_stream = 4\n").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("serve.n_stream"), "got: {msg}");
+    }
+
+    #[test]
+    fn rejects_unknown_section() {
+        let err = Scenario::from_toml("[wrokload]\nn_tasks = 5\n").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("wrokload"), "got: {msg}");
+    }
+
+    #[test]
+    fn parses_streams_in_index_order() {
+        let text = r#"
+[stream.2]
+scale = 2.5
+[stream.1]
+scale = 1.5
+period_ms = 8
+"#;
+        let sc = Scenario::from_toml(text).unwrap();
+        assert_eq!(sc.streams.len(), 2);
+        assert!((sc.streams[0].scale - 1.5).abs() < 1e-12);
+        assert_eq!(sc.streams[0].period, Some(0.008));
+        assert!((sc.streams[1].scale - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_stream_key() {
+        let err =
+            Scenario::from_toml("[stream.0]\nspeed = 2.0\n").unwrap_err();
+        assert!(format!("{err:#}").contains("stream.0.speed"));
+    }
+
+    #[test]
+    fn parses_step_trace_and_jitter() {
+        let sc = Scenario::from_toml(
+            "[network]\nsteps = \"0:20, 1.5:10, 3:5\"\n",
+        )
+        .unwrap();
+        match &sc.bandwidth {
+            BandwidthModel::Stepped(tr) => {
+                assert_eq!(tr.steps, vec![(0.0, 20.0), (1.5, 10.0), (3.0, 5.0)]);
+            }
+            other => panic!("expected stepped trace, got {other:?}"),
+        }
+        let sc = Scenario::from_toml(
+            "[workload]\nseed = 7\n[network]\nmbps = 40\njitter = 0.2\n",
+        )
+        .unwrap();
+        match &sc.bandwidth {
+            BandwidthModel::Jittered { trace, amplitude, seed } => {
+                assert_eq!(trace.at(0.0), 40.0);
+                assert!((amplitude - 0.2).abs() < 1e-12);
+                assert_eq!(*seed, 7);
+            }
+            other => panic!("expected jittered model, got {other:?}"),
+        }
+        assert!(Scenario::from_toml("[network]\nsteps = \"1:5\"\n").is_err());
+    }
+
+    #[test]
+    fn policy_section_forces_static_policy() {
+        let sc =
+            Scenario::from_toml("[policy]\nbits = 8\nexit_threshold = 0.7\n")
+                .unwrap();
+        assert_eq!(
+            sc.policy,
+            PolicySpec::Static { bits: 8, exit_threshold: 0.7 }
+        );
+        assert!(Scenario::from_toml("[policy]\nexit_threshold = 0.7\n").is_err());
+    }
+
+    #[test]
+    fn load_modes_map_to_period_specs() {
+        let sc =
+            Scenario::from_toml("[workload]\nload = \"sustainable\"\n").unwrap();
+        assert_eq!(sc.workload.period, PeriodSpec::OfBottleneck(1.1));
+        let sc =
+            Scenario::from_toml("[workload]\nload = \"saturated\"\n").unwrap();
+        assert_eq!(sc.workload.period, PeriodSpec::Saturated);
+        let sc =
+            Scenario::from_toml("[workload]\nload_factor = 0.5\n").unwrap();
+        assert_eq!(sc.workload.period, PeriodSpec::OfBottleneck(0.5));
+    }
+
+    #[test]
+    fn conflicting_keys_are_rejected_not_silently_resolved() {
+        let err = Scenario::from_toml(
+            "[workload]\nperiod_ms = 8\nload = \"sustainable\"\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("conflict"), "{err:#}");
+        assert!(Scenario::from_toml(
+            "[workload]\ndrop_after_ms = 50\ndrop_after_periods = 6\n"
+        )
+        .is_err());
+        assert!(Scenario::from_toml(
+            "[scheduler]\nslo = \"none\"\nt_max_ms = 40\n"
+        )
+        .is_err());
+    }
+}

@@ -46,6 +46,20 @@ impl Correlation {
             Correlation::High => "High",
         }
     }
+
+    /// Parse the config/CLI spelling — the ONE accepted vocabulary for
+    /// every front end (deployment config, scenario TOML, CLI flags).
+    pub fn parse(s: &str) -> anyhow::Result<Correlation> {
+        Ok(match s {
+            "none" => Correlation::None,
+            "low" => Correlation::Low,
+            "medium" => Correlation::Medium,
+            "high" => Correlation::High,
+            other => anyhow::bail!(
+                "unknown correlation '{other}' (none|low|medium|high)"
+            ),
+        })
+    }
 }
 
 /// One simulated inference task.
@@ -185,6 +199,19 @@ mod tests {
         runs.push(cur);
         let mean_run = runs.iter().sum::<usize>() as f64 / runs.len() as f64;
         assert!(mean_run > 5.0, "mean run {mean_run}");
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        for (s, c) in [
+            ("none", Correlation::None),
+            ("low", Correlation::Low),
+            ("medium", Correlation::Medium),
+            ("high", Correlation::High),
+        ] {
+            assert_eq!(Correlation::parse(s).unwrap(), c);
+        }
+        assert!(Correlation::parse("extreme").is_err());
     }
 
     #[test]

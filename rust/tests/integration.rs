@@ -1,19 +1,17 @@
 //! Cross-module integration: offline partitioner -> stage model -> DES
-//! pipeline -> metrics, over the paper-scale analytic graphs. No
-//! artifacts required (runtime-backed integration lives in
-//! runtime_e2e.rs).
+//! pipeline -> metrics, over the paper-scale analytic graphs, all
+//! described and launched through the Scenario API. No artifacts
+//! required (runtime-backed integration lives in runtime_e2e.rs).
 
 use coach::baselines::Scheme;
-use coach::bench::des_thresholds;
-use coach::coordinator::online::coach_des;
-use coach::model::{topology, CostModel, DeviceProfile};
+use coach::model::{topology, DeviceProfile};
 use coach::network::{BandwidthModel, Trace};
 use coach::partition::{optimize, AnalyticAcc, PartitionConfig};
-use coach::pipeline::{run_pipeline, StageModel, StaticPolicy};
-use coach::sim::{generate, Correlation};
+use coach::scenario::Scenario;
+use coach::sim::Correlation;
 
-fn cost(dev: DeviceProfile) -> CostModel {
-    CostModel::new(dev, DeviceProfile::cloud_a6000())
+fn cost(dev: DeviceProfile) -> coach::model::CostModel {
+    coach::model::CostModel::new(dev, DeviceProfile::cloud_a6000())
 }
 
 fn run_scheme(
@@ -66,36 +64,25 @@ fn coach_latency_competitive_under_load() {
     }
 }
 
+/// Fig 5 regime as ONE scenario description: plan pinned at 20 Mbps,
+/// live network at 5 Mbps (stale plan).
+fn stale_plan_scenario(scheme: Scheme) -> Scenario {
+    Scenario::new("resnet101")
+        .scheme(scheme)
+        .slo_unbounded()
+        .plan_bw(20.0)
+        .stage_bw(20.0)
+        .bandwidth(BandwidthModel::Static(5.0))
+        .tasks(300)
+        .period(1e-5)
+        .seed(3)
+}
+
 #[test]
 fn dynamic_bandwidth_coach_degrades_least() {
-    // Fig 5 regime: plan at 20 Mbps, run at 5 Mbps (stale plan).
-    let g = topology::resnet101();
-    let cm = cost(DeviceProfile::jetson_nx());
-    let stale_cfg = PartitionConfig { bw_mbps: 20.0, ..Default::default() };
-    let tasks = generate(300, 1e-5, Correlation::Medium, 100, 3);
-    let bw = BandwidthModel::Static(5.0);
-
     let mut tp = std::collections::HashMap::new();
     for scheme in Scheme::ALL {
-        let strat = scheme.plan(&g, &cm, &AnalyticAcc, &stale_cfg).unwrap();
-        let sm = StageModel::from_strategy(&g, &cm, &strat, 20.0);
-        let report = match scheme {
-            Scheme::Coach => {
-                let mut pol = coach_des(
-                    des_thresholds(),
-                    strat.base_bits(),
-                    sm.clone(),
-                    cm.clone(),
-                    g.clone(),
-                );
-                run_pipeline(&g, &cm, &sm, &bw, &tasks, &mut pol, "c")
-            }
-            _ => {
-                let mut pol =
-                    StaticPolicy::no_exit(scheme.fixed_bits().unwrap_or(32));
-                run_pipeline(&g, &cm, &sm, &bw, &tasks, &mut pol, "b")
-            }
-        };
+        let report = stale_plan_scenario(scheme).simulate().unwrap();
         tp.insert(scheme.name(), report.throughput());
     }
     let coach = tp["COACH"];
@@ -110,31 +97,35 @@ fn dynamic_bandwidth_coach_degrades_least() {
 
 #[test]
 fn stepped_trace_integrates_correctly_through_pipeline() {
-    let g = topology::vgg16();
-    let cm = cost(DeviceProfile::jetson_nx());
-    let cfg = PartitionConfig { bw_mbps: 20.0, ..Default::default() };
-    let strat = Scheme::Spinn.plan(&g, &cm, &AnalyticAcc, &cfg).unwrap();
-    let sm = StageModel::from_strategy(&g, &cm, &strat, 20.0);
-    let tasks = generate(200, 1e-5, Correlation::Low, 100, 9);
-    // throughput under a collapsing trace must fall between the two
-    // static extremes
-    let hi = {
-        let mut p = StaticPolicy::no_exit(8);
-        run_pipeline(&g, &cm, &sm, &BandwidthModel::Static(20.0), &tasks, &mut p, "hi")
-            .throughput()
+    // SPINN's plan run under a fixed 8-bit no-exit policy: throughput
+    // under a collapsing trace must fall between the two static extremes.
+    let scenario = |bw: BandwidthModel| {
+        Scenario::new("vgg16")
+            .scheme(Scheme::Spinn)
+            .policy_static(8, f64::INFINITY)
+            .slo_unbounded()
+            .plan_bw(20.0)
+            .stage_bw(20.0)
+            .bandwidth(bw)
+            .tasks(200)
+            .period(1e-5)
+            .correlation(Correlation::Low)
+            .seed(9)
     };
-    let lo = {
-        let mut p = StaticPolicy::no_exit(8);
-        run_pipeline(&g, &cm, &sm, &BandwidthModel::Static(2.0), &tasks, &mut p, "lo")
-            .throughput()
-    };
-    let stepped = {
-        let mut p = StaticPolicy::no_exit(8);
-        let bw = BandwidthModel::Stepped(Trace {
-            steps: vec![(0.0, 20.0), (1.0, 2.0)],
-        });
-        run_pipeline(&g, &cm, &sm, &bw, &tasks, &mut p, "step").throughput()
-    };
+    let hi = scenario(BandwidthModel::Static(20.0))
+        .simulate()
+        .unwrap()
+        .throughput();
+    let lo = scenario(BandwidthModel::Static(2.0))
+        .simulate()
+        .unwrap()
+        .throughput();
+    let stepped = scenario(BandwidthModel::Stepped(Trace {
+        steps: vec![(0.0, 20.0), (1.0, 2.0)],
+    }))
+    .simulate()
+    .unwrap()
+    .throughput();
     assert!(
         stepped <= hi * 1.02 && stepped >= lo * 0.98,
         "lo={lo:.1} stepped={stepped:.1} hi={hi:.1}"
@@ -163,23 +154,17 @@ fn offline_strategies_scale_with_device_speed() {
 fn early_exit_ratio_tracks_correlation_in_des() {
     // Table II shape on the DES path (the real-pipeline version is
     // asserted in online_e2e.rs).
-    let g = topology::resnet101();
-    let cm = cost(DeviceProfile::jetson_nx());
-    let cfg = PartitionConfig { bw_mbps: 20.0, ..Default::default() };
-    let strat = Scheme::Coach.plan(&g, &cm, &AnalyticAcc, &cfg).unwrap();
-    let sm = StageModel::from_strategy(&g, &cm, &strat, 20.0);
-    let bw = BandwidthModel::Static(20.0);
     let mut ratios = Vec::new();
     for corr in [Correlation::Low, Correlation::Medium, Correlation::High] {
-        let tasks = generate(800, 1e-4, corr, 100, 11);
-        let mut pol = coach_des(
-            des_thresholds(),
-            strat.base_bits(),
-            sm.clone(),
-            cm.clone(),
-            g.clone(),
-        );
-        let r = run_pipeline(&g, &cm, &sm, &bw, &tasks, &mut pol, "t");
+        let r = Scenario::new("resnet101")
+            .slo_unbounded()
+            .bandwidth_mbps(20.0)
+            .tasks(800)
+            .period(1e-4)
+            .correlation(corr)
+            .seed(11)
+            .simulate()
+            .unwrap();
         ratios.push(r.exit_ratio());
     }
     assert!(

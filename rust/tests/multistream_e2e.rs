@@ -108,6 +108,7 @@ fn pjrt_server_serves_four_streams_on_one_cloud_engine() {
         seed: 23,
         audit_every: 0,
         n_streams,
+        drop_after: None,
     };
     let single = serve(&m, &cfg(1)).unwrap();
     assert_eq!(single.per_stream.len(), 1);

@@ -33,6 +33,7 @@ fn base_cfg(model: &str, m: &Manifest) -> ServeCfg {
         seed: 17,
         audit_every: 3,
         n_streams: 1,
+        drop_after: None,
     }
 }
 

@@ -8,13 +8,12 @@ use coach::coordinator::online::coach_des;
 use coach::model::{CostModel, DeviceProfile, LayerKind, ModelGraph};
 use coach::network::{BandwidthModel, Trace};
 use coach::partition::{
-    chain_of, evaluate, optimize, AnalyticAcc, ChainNode, PartitionConfig,
+    chain_of, evaluate, optimize, AnalyticAcc, PartitionConfig,
 };
-use coach::pipeline::{
-    run_pipeline, Decision, OnlinePolicy, StageModel, StaticPolicy, TaskView,
-};
+use coach::pipeline::{Decision, OnlinePolicy, StageModel, TaskView};
 use coach::quant::{clamp_bits, uaq};
-use coach::sim::{generate, Correlation};
+use coach::scenario::Scenario;
+use coach::sim::Correlation;
 use coach::util::Rng;
 
 const CASES: usize = 60;
@@ -281,31 +280,35 @@ fn prop_unified_policy_precision_monotone_in_bandwidth() {
 #[test]
 fn prop_pipeline_conservation_and_ordering() {
     // every generated task produces exactly one outcome; finishes are
-    // causal (>= arrival); busy times fit in the span.
+    // causal (>= arrival); busy times fit in the span. Runs through the
+    // Scenario front door over random graphs (`with_graph`).
     let mut rng = Rng::new(0x1234);
-    let cost =
-        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
-    for case in 0..30 {
+    for case in 0..30u64 {
         let g = random_graph(&mut rng);
-        let cfg = PartitionConfig {
-            bw_mbps: 2.0 + rng.f64() * 50.0,
-            ..Default::default()
-        };
-        let strat = optimize(&g, &cost, &AnalyticAcc, &cfg).unwrap();
-        let sm = StageModel::from_strategy(&g, &cost, &strat, cfg.bw_mbps);
+        let bw_mbps = 2.0 + rng.f64() * 50.0;
         let n = 50 + rng.below(200);
-        let tasks = generate(n, rng.f64() * 0.01, Correlation::Medium, 20, case);
+        let period = rng.f64() * 0.01;
         let bw = if rng.f64() < 0.5 {
-            BandwidthModel::Static(cfg.bw_mbps)
+            BandwidthModel::Static(bw_mbps)
         } else {
             BandwidthModel::Jittered {
-                trace: Trace::constant(cfg.bw_mbps),
+                trace: Trace::constant(bw_mbps),
                 amplitude: 0.2,
                 seed: case,
             }
         };
-        let mut pol = StaticPolicy { bits: 8, exit_threshold: 0.7 };
-        let r = run_pipeline(&g, &cost, &sm, &bw, &tasks, &mut pol, "prop");
+        let r = Scenario::new("prop")
+            .with_graph(g)
+            .slo_unbounded()
+            .plan_bw(bw_mbps)
+            .bandwidth(bw)
+            .policy_static(8, 0.7)
+            .tasks(n)
+            .period(period)
+            .n_classes(20)
+            .seed(case)
+            .simulate()
+            .unwrap();
         assert_eq!(r.tasks.len(), n, "case {case}: task conservation");
         for t in &r.tasks {
             assert!(t.finish >= t.arrive - 1e-9, "case {case}: causality");

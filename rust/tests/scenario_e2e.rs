@@ -1,0 +1,351 @@
+//! Scenario-layer end-to-end guarantees:
+//!
+//! 1. **Golden equivalence** — the Scenario DES path reproduces the
+//!    pre-redesign `run_pipeline` outputs *bit-for-bit* for the paper
+//!    grids (a Table I cell and a Fig. 5 stale-plan phase), so the API
+//!    redesign changed no numbers. The legacy side intentionally calls
+//!    the deprecated veneer with the exact pre-redesign construction.
+//! 2. **TOML round-trip** — `scenarios/table1_cell.toml` parses into
+//!    the same scenario the bench builder constructs, and both produce
+//!    identical reports.
+//! 3. **One description, two substrates** — the same scenario runs
+//!    through `simulate()` (virtual time) and `serve_sim()` (wall-clock
+//!    threads, simulated compute) with conserved tasks on both.
+//! 4. **Preset smoke** — every file in `scenarios/` parses and runs in
+//!    DES mode (the CI smoke step drives the same files through
+//!    `coach run`).
+
+use coach::baselines::Scheme;
+use coach::bench::table1::{cell_scenario, TABLE1_BWS};
+use coach::coordinator::online::coach_des;
+use coach::metrics::RunReport;
+use coach::model::{topology, CostModel, DeviceProfile};
+use coach::network::BandwidthModel;
+use coach::partition::AnalyticAcc;
+use coach::pipeline::{StageModel, StaticPolicy};
+use coach::scenario::{
+    common_period, des_thresholds, plan_cfg, Scenario, SPINN_EXIT_THRESHOLD,
+};
+use coach::sim::generate;
+use coach::sim::Correlation;
+
+fn assert_reports_bit_identical(a: &RunReport, b: &RunReport, what: &str) {
+    assert_eq!(a.tasks.len(), b.tasks.len(), "{what}: task count");
+    assert_eq!(a.dropped, b.dropped, "{what}: dropped");
+    for (x, y) in a.tasks.iter().zip(&b.tasks) {
+        assert_eq!(x.id, y.id, "{what}: id");
+        assert_eq!(x.bits, y.bits, "{what}: bits");
+        assert_eq!(x.exited_early, y.exited_early, "{what}: exit");
+        assert_eq!(x.wire_bytes, y.wire_bytes, "{what}: wire");
+        // bit-identical timing, not approximate
+        assert_eq!(
+            x.finish.to_bits(),
+            y.finish.to_bits(),
+            "{what}: finish of task {} ({} vs {})",
+            x.id,
+            x.finish,
+            y.finish
+        );
+        assert_eq!(x.latency.to_bits(), y.latency.to_bits(), "{what}: latency");
+    }
+    assert_eq!(
+        a.device.busy.to_bits(),
+        b.device.busy.to_bits(),
+        "{what}: device busy"
+    );
+    assert_eq!(a.link.busy.to_bits(), b.link.busy.to_bits(), "{what}: link");
+    assert_eq!(
+        a.cloud.busy.to_bits(),
+        b.cloud.busy.to_bits(),
+        "{what}: cloud"
+    );
+}
+
+/// The PRE-REDESIGN Table I cell construction, verbatim (deprecated
+/// veneer + hand-assembled tuple), for one (scheme, bandwidth-index).
+#[allow(deprecated)]
+fn legacy_table1_point(
+    model: &str,
+    device: DeviceProfile,
+    scheme: Scheme,
+    n_tasks: usize,
+    bi: usize,
+) -> RunReport {
+    use coach::pipeline::des::run_pipeline_opts;
+
+    let bw_mbps = TABLE1_BWS[bi];
+    let g = topology::by_name(model).unwrap();
+    let cost = CostModel::new(device, DeviceProfile::cloud_a6000());
+    let cfg = plan_cfg(&g, &cost, bw_mbps, scheme).unwrap();
+    let strat = scheme.plan(&g, &cost, &AnalyticAcc, &cfg).unwrap();
+    let sm = StageModel::from_strategy(&g, &cost, &strat, bw_mbps);
+    let bw = BandwidthModel::Static(bw_mbps);
+    let period = common_period(&g, &cost, bw_mbps).unwrap();
+    let drop_after = Some(6.0 * period);
+    let tasks =
+        generate(n_tasks, period, Correlation::Medium, 100, 42 + bi as u64);
+    match scheme {
+        Scheme::Coach => {
+            let mut pol = coach_des(
+                des_thresholds(),
+                strat.base_bits(),
+                sm.clone(),
+                cost.clone(),
+                g.clone(),
+            );
+            run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, "COACH", drop_after)
+        }
+        Scheme::Spinn => {
+            let mut pol =
+                StaticPolicy { bits: 8, exit_threshold: SPINN_EXIT_THRESHOLD };
+            run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, "SPINN", drop_after)
+        }
+        _ => {
+            let mut pol =
+                StaticPolicy::no_exit(scheme.fixed_bits().unwrap_or(32));
+            run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, scheme.name(), drop_after)
+        }
+    }
+}
+
+#[test]
+fn golden_table1_rows_bit_identical_to_legacy_pipeline() {
+    // every scheme at 10 Mbps on ResNet101/NX, plus COACH on VGG16/TX2
+    for scheme in Scheme::ALL {
+        let legacy = legacy_table1_point(
+            "resnet101",
+            DeviceProfile::jetson_nx(),
+            scheme,
+            150,
+            2,
+        );
+        let new = cell_scenario(
+            "resnet101",
+            DeviceProfile::jetson_nx(),
+            scheme,
+            150,
+            2,
+        )
+        .simulate()
+        .unwrap();
+        assert_reports_bit_identical(
+            &legacy,
+            &new,
+            &format!("table1 {}", scheme.name()),
+        );
+    }
+    let legacy = legacy_table1_point(
+        "vgg16",
+        DeviceProfile::jetson_tx2(),
+        Scheme::Coach,
+        150,
+        0,
+    );
+    let new =
+        cell_scenario("vgg16", DeviceProfile::jetson_tx2(), Scheme::Coach, 150, 0)
+            .simulate()
+            .unwrap();
+    assert_reports_bit_identical(&legacy, &new, "table1 vgg16/tx2");
+}
+
+/// The PRE-REDESIGN Fig. 5 phase construction (stale plan at
+/// `plan_bw`, stage model and link at `live_bw`).
+#[allow(deprecated)]
+fn legacy_fig5_phase(
+    scheme: Scheme,
+    plan_bw: f64,
+    live_bw: f64,
+    n_tasks: usize,
+) -> RunReport {
+    use coach::partition::PartitionConfig;
+    use coach::pipeline::des::run_pipeline;
+
+    let g = topology::by_name("resnet101").unwrap();
+    let cost =
+        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
+    let stale_cfg =
+        PartitionConfig { bw_mbps: plan_bw, ..Default::default() };
+    let strat = scheme.plan(&g, &cost, &AnalyticAcc, &stale_cfg).unwrap();
+    let sm = StageModel::from_strategy(&g, &cost, &strat, live_bw);
+    let bw = BandwidthModel::Static(live_bw);
+    let tasks = generate(n_tasks, 1e-5, Correlation::Medium, 100, 7);
+    match scheme {
+        Scheme::Coach => {
+            let mut pol = coach_des(
+                des_thresholds(),
+                strat.base_bits(),
+                sm.clone(),
+                cost.clone(),
+                g.clone(),
+            );
+            run_pipeline(&g, &cost, &sm, &bw, &tasks, &mut pol, "COACH")
+        }
+        _ => {
+            let mut pol =
+                StaticPolicy::no_exit(scheme.fixed_bits().unwrap_or(32));
+            run_pipeline(&g, &cost, &sm, &bw, &tasks, &mut pol, scheme.name())
+        }
+    }
+}
+
+#[test]
+fn golden_fig5_stale_phase_bit_identical_to_legacy_pipeline() {
+    for scheme in [Scheme::Coach, Scheme::Ns, Scheme::Jps] {
+        let legacy = legacy_fig5_phase(scheme, 20.0, 5.0, 200);
+        let new =
+            coach::bench::fig5::phase_scenario("resnet101", scheme, 20.0, 5.0, 200)
+                .simulate()
+                .unwrap();
+        assert_reports_bit_identical(
+            &legacy,
+            &new,
+            &format!("fig5 {}", scheme.name()),
+        );
+    }
+}
+
+#[test]
+fn toml_preset_round_trips_to_builder_twin() {
+    // the shipped preset parses into the same scenario the Table I
+    // bench constructs for the 10 Mbps COACH cell …
+    let text = include_str!("../../scenarios/table1_cell.toml");
+    let from_toml = Scenario::from_toml(text).unwrap();
+    let twin = cell_scenario(
+        "resnet101",
+        DeviceProfile::jetson_nx(),
+        Scheme::Coach,
+        400,
+        2,
+    );
+    assert_eq!(from_toml.model, twin.model);
+    assert_eq!(from_toml.scheme, twin.scheme);
+    assert_eq!(from_toml.workload.n_tasks, twin.workload.n_tasks);
+    assert_eq!(from_toml.workload.seed, twin.workload.seed);
+    assert_eq!(from_toml.workload.n_classes, twin.workload.n_classes);
+
+    // … and produces the identical report (smaller task count to keep
+    // the double run fast)
+    let mut a = from_toml;
+    a.workload.n_tasks = 120;
+    let b = cell_scenario(
+        "resnet101",
+        DeviceProfile::jetson_nx(),
+        Scheme::Coach,
+        120,
+        2,
+    );
+    let ra = a.simulate().unwrap();
+    let rb = b.simulate().unwrap();
+    assert_reports_bit_identical(&ra, &rb, "toml round-trip");
+}
+
+#[test]
+fn one_description_runs_on_both_virtual_and_wall_clock_drivers() {
+    // the acceptance scenario: ONE description through simulate() and
+    // serve_sim() (wall-clock threads, sim-compute stages)
+    let sc = Scenario::new("vgg16")
+        .named("dual-driver")
+        .bandwidth_mbps(40.0)
+        .tasks(25)
+        .period(0.004)
+        .n_classes(10)
+        .seed(31);
+
+    let des = sc.simulate().unwrap();
+    assert_eq!(des.tasks.len(), 25);
+
+    let wall = sc.serve_sim().unwrap();
+    assert_eq!(wall.per_stream.len(), 1);
+    let wr = &wall.per_stream[0];
+    assert_eq!(wr.tasks.len(), 25, "wall-clock driver conserves tasks");
+    for t in &wr.tasks {
+        assert!(t.finish >= t.arrive - 1e-9);
+        assert!(t.latency >= 0.0);
+    }
+    // both substrates run the same policy over the same task stream, so
+    // the early-exit decisions agree task-for-task
+    for (a, b) in des.tasks.iter().zip(&wr.tasks) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.exited_early, b.exited_early,
+            "task {}: DES and wall-clock policy disagree",
+            a.id
+        );
+    }
+}
+
+#[test]
+fn fleet_description_runs_on_both_multistream_drivers() {
+    let sc = Scenario::new("vgg16")
+        .bandwidth_mbps(40.0)
+        .tasks(20)
+        .period(0.004)
+        .n_classes(10)
+        .seed(8)
+        .fleet(3);
+    let des = sc.simulate_fleet().unwrap();
+    let wall = sc.serve_sim().unwrap();
+    assert_eq!(des.per_stream.len(), 3);
+    assert_eq!(wall.per_stream.len(), 3);
+    for (d, w) in des.per_stream.iter().zip(&wall.per_stream) {
+        assert_eq!(d.tasks.len(), 20);
+        assert_eq!(w.tasks.len(), 20);
+    }
+}
+
+#[test]
+fn every_shipped_preset_parses_and_simulates() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("scenarios");
+    let mut n_presets = 0;
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("scenarios/ missing at {dir:?}: {e}"))
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+        .collect();
+    entries.sort();
+    for path in entries {
+        n_presets += 1;
+        let mut sc = Scenario::from_file(&path)
+            .unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        // clamp for test speed; CI's `coach run` smoke runs them full
+        sc.workload.n_tasks = sc.workload.n_tasks.min(60);
+        if sc.is_fleet() {
+            let multi = sc
+                .simulate_fleet()
+                .unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+            assert!(!multi.per_stream.is_empty(), "{path:?}");
+        } else {
+            let r = sc.simulate().unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+            assert!(
+                r.tasks.len() + r.dropped > 0,
+                "{path:?}: empty report"
+            );
+        }
+    }
+    assert!(n_presets >= 5, "expected >= 5 presets, found {n_presets}");
+}
+
+#[test]
+fn admission_preset_sheds_under_overload() {
+    let text = include_str!("../../scenarios/admission_control.toml");
+    let mut sc = Scenario::from_toml(text).unwrap();
+    sc.workload.n_tasks = 200;
+    let r = sc.simulate().unwrap();
+    assert!(r.dropped > 0, "overload preset must shed tasks");
+    assert_eq!(r.tasks.len() + r.dropped, 200);
+}
+
+#[test]
+fn hetero_fleet_preset_expresses_mixed_scales() {
+    let text = include_str!("../../scenarios/hetero_fleet.toml");
+    let sc = Scenario::from_toml(text).unwrap();
+    assert_eq!(sc.streams.len(), 4);
+    assert!(sc.streams[3].scale > sc.streams[0].scale);
+    assert!(matches!(
+        sc.bandwidth,
+        coach::network::BandwidthModel::Jittered { .. }
+    ));
+}

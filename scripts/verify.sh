@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# CI / local verification: formatting, lints, tests.
+# CI / local verification: formatting, lints, tests, docs, scenario smoke.
 # Usage: scripts/verify.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -20,5 +20,15 @@ fi
 
 echo "== cargo test =="
 cargo test -q
+
+echo "== cargo doc --no-deps (warnings denied) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "== scenario smoke: coach run on every scenarios/*.toml (DES) =="
+cargo build --release --quiet
+for f in scenarios/*.toml; do
+    echo "-- $f"
+    ./target/release/coach run "$f" --n 80
+done
 
 echo "verify OK"
