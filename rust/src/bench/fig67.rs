@@ -1,6 +1,8 @@
 //! Fig. 6 (latency vs bandwidth) and Fig. 7 (throughput vs bandwidth):
 //! COACH and the four baselines across 1-100 Mbps on the UCF101-like
-//! stream, for ResNet101 and VGG16 on NX and TX2.
+//! stream, for ResNet101 and VGG16 on NX and TX2 — plus the multi-user
+//! [`fleet`] sweep, where N devices contend for the shared link/cloud
+//! on the event-driven fleet DES (`BENCH_fleet.json`).
 
 use anyhow::Result;
 
@@ -60,6 +62,69 @@ pub fn fig6(n_tasks: usize) -> Result<Vec<(String, Table)>> {
 /// Fig. 7: same grid, cells = throughput (it/s).
 pub fn fig7(n_tasks: usize) -> Result<Vec<(String, Table)>> {
     sweep(n_tasks, true)
+}
+
+/// The multi-user companion of one sweep point: `n_streams` identical
+/// devices share the FIFO link and cloud at `bw_mbps`, under the common
+/// continuous load with the serving drivers' bounded hand-off window
+/// (`queue_cap 8`) and 6-period admission shedding — the contention
+/// regime the event-driven fleet DES models.
+pub fn fleet_point_scenario(
+    model: &str,
+    device: DeviceProfile,
+    scheme: Scheme,
+    bw_mbps: f64,
+    n_tasks: usize,
+    n_streams: usize,
+) -> Scenario {
+    point_scenario(model, device, scheme, bw_mbps, n_tasks, false)
+        .queue_cap(8)
+        .fleet(n_streams)
+}
+
+/// The fleet bench: per-(model, scheme, bandwidth) AGGREGATE throughput
+/// with `n_streams` contending devices, on the event-driven multi-stream
+/// DES. Writes `BENCH_fleet.json` (throughput, latency, drop counts and
+/// device stall per row) for cross-PR perf diffing.
+pub fn fleet(n_tasks: usize, n_streams: usize) -> Result<Vec<(String, Table)>> {
+    let mut out = Vec::new();
+    let mut json = BenchJson::new("fleet");
+    for (model, dev) in [
+        ("resnet101", DeviceProfile::jetson_nx()),
+        ("vgg16", DeviceProfile::jetson_nx()),
+    ] {
+        let mut header = vec!["scheme".to_string()];
+        header.extend(BW_GRID.iter().map(|b| format!("{b}Mbps")));
+        let mut t = Table { header, rows: Vec::new() };
+        for scheme in Scheme::ALL {
+            let mut row = vec![scheme.name().to_string()];
+            for &bw in &BW_GRID {
+                let multi = fleet_point_scenario(
+                    model,
+                    dev.clone(),
+                    scheme,
+                    bw,
+                    n_tasks,
+                    n_streams,
+                )
+                .simulate_fleet()?;
+                let agg = multi.aggregate();
+                json.add(
+                    &format!(
+                        "{model}/{}/{}/{bw}Mbps/x{n_streams}",
+                        dev.name,
+                        scheme.name()
+                    ),
+                    &agg,
+                );
+                row.push(format!("{:.1}", agg.throughput()));
+            }
+            t.row(row);
+        }
+        out.push((format!("{model}/{}/x{n_streams}", dev.name), t));
+    }
+    json.write()?;
+    Ok(out)
 }
 
 fn sweep(n_tasks: usize, saturate: bool) -> Result<Vec<(String, Table)>> {

@@ -74,6 +74,72 @@ fn cell_reports(
     Ok((lat_sum / TABLE1_BWS.len() as f64, reports))
 }
 
+/// The Table I cell under multi-user contention: the same grid point,
+/// but `n_streams` devices share the link and cloud (event-driven fleet
+/// DES with the serving drivers' `queue_cap 8` backpressure window).
+pub fn cell_scenario_fleet(
+    model: &str,
+    device: DeviceProfile,
+    scheme: Scheme,
+    n_tasks: usize,
+    bw_index: usize,
+    n_streams: usize,
+) -> Scenario {
+    cell_scenario(model, device, scheme, n_tasks, bw_index)
+        .queue_cap(8)
+        .fleet(n_streams)
+}
+
+/// Table I with `n_streams` contending users per cell: cross-stream
+/// average latency (ms) of admitted tasks over the bandwidth band.
+/// Writes BENCH_table1_fleet.json.
+pub fn run_fleet(n_tasks: usize, n_streams: usize) -> Result<Table> {
+    let mut t = Table::new(&[
+        "",
+        "Resnet101/NX",
+        "Resnet101/TX2",
+        "VGG16/NX",
+        "VGG16/TX2",
+    ]);
+    let mut json = BenchJson::new("table1_fleet");
+    for scheme in Scheme::ALL {
+        let mut row = vec![scheme.name().to_string()];
+        for (model, dev) in [
+            ("resnet101", DeviceProfile::jetson_nx()),
+            ("resnet101", DeviceProfile::jetson_tx2()),
+            ("vgg16", DeviceProfile::jetson_nx()),
+            ("vgg16", DeviceProfile::jetson_tx2()),
+        ] {
+            let dev_name = dev.name.clone();
+            let mut lat_sum = 0.0;
+            for (bi, &bw_mbps) in TABLE1_BWS.iter().enumerate() {
+                let agg = cell_scenario_fleet(
+                    model,
+                    dev.clone(),
+                    scheme,
+                    n_tasks,
+                    bi,
+                    n_streams,
+                )
+                .simulate_fleet()?
+                .aggregate();
+                json.add(
+                    &format!(
+                        "{model}/{dev_name}/{}/{bw_mbps}Mbps/x{n_streams}",
+                        scheme.name()
+                    ),
+                    &agg,
+                );
+                lat_sum += agg.avg_latency_ms();
+            }
+            row.push(format!("{:.2}", lat_sum / TABLE1_BWS.len() as f64));
+        }
+        t.row(row);
+    }
+    json.write()?;
+    Ok(t)
+}
+
 /// Full Table I (also writes BENCH_table1.json).
 pub fn run(n_tasks: usize) -> Result<Table> {
     let mut t = Table::new(&[

@@ -14,8 +14,9 @@
 //!   runs) priced with live measured stage times, and apply the UAQ
 //!   round trip (L1 kernel artifact) before "transmission".
 //! - **link thread** — simulated WiFi shared by all streams: sleeps
-//!   `wire_bytes / bw(t)` per task, FIFO (ARCHITECTURE.md
-//!   §Substitutions).
+//!   `wire_bytes / bw(t) + rtt_half` per task, FIFO (ARCHITECTURE.md
+//!   §Substitutions); the result-return leg is priced onto each task's
+//!   finish after the cloud stage, matching the DES wire cost.
 //! - **cloud thread** — owns the single shared `Engine`; runs each
 //!   stream's suffix blocks and returns the label, which the origin
 //!   stream folds into its cache (Eq. 7).
@@ -91,6 +92,9 @@ pub struct ServeCfg {
     /// admission control: shed a task whose admission falls this many
     /// seconds behind its arrival (None = queue without bound)
     pub drop_after: Option<f64>,
+    /// bounded in-flight items per hand-off queue (stage backpressure;
+    /// the scenario layer's `queue_cap` knob)
+    pub queue_cap: usize,
 }
 
 /// Per-stream overrides for a heterogeneous fleet.
@@ -471,8 +475,12 @@ pub fn serve_streams(
         cfg.bw.clone(),
         clock,
         RealCfg {
-            queue_cap: 8,
+            queue_cap: cfg.queue_cap.max(1),
             drop_after: cfg.drop_after,
+            // price the same wire the DES charges: one-way latency on
+            // both legs plus the label/logits return payload
+            rtt_half: cost.rtt_half,
+            result_wire_bytes: cost.wire_bytes(manifest.n_classes, 32),
             scheme: "real".into(),
             model: cfg.model.clone(),
         },

@@ -11,7 +11,8 @@
 //! coach partition  [--model M] [--device nx|tx2] [--bw MBPS] [--eps E]
 //! coach serve      [--model vgg_mini|resnet_mini] [--cut K] [--n N]
 //!                  [--bw MBPS] [--corr low|medium|high] [--scheme coach|noadjust]
-//!                  [--device-scale S] [--streams N] [--config deploy.toml]
+//!                  [--device-scale S] [--streams N] [--queue-cap Q]
+//!                  [--config deploy.toml]
 //! coach profile    [--reps R]       # per-block times -> profile.json
 //! coach bench-table1 [--n N]
 //! coach bench-table2 [--n N]
@@ -19,6 +20,7 @@
 //! coach bench-fig5   [--n N]
 //! coach bench-fig6   [--n N]
 //! coach bench-fig7   [--n N]
+//! coach bench-fleet  [--n N] [--streams K]   # multi-user contention sweep
 //! coach trace                        # Fig. 2 scheme walkthrough
 //! ```
 
@@ -160,6 +162,22 @@ fn run() -> Result<()> {
             }
             Ok(())
         }
+        "bench-fleet" => {
+            let n = args.usize_or("n", 150)?;
+            let streams = args.usize_or("streams", 4)?;
+            println!(
+                "Fleet sweep: aggregate throughput (it/s) vs bandwidth, \
+                 {streams} contending streams"
+            );
+            for (name, t) in bench::fig67::fleet(n, streams)? {
+                println!("[{name}]\n{}", t.render());
+            }
+            println!(
+                "Table I under contention: avg latency (ms), x{streams} users"
+            );
+            println!("{}", bench::table1::run_fleet(n, streams)?.render());
+            Ok(())
+        }
         "trace" => cmd_trace(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -173,7 +191,7 @@ fn report_summary(r: &RunReport) -> String {
     format!(
         "lat {:.2} ms (p99 {:.2}) | {:.1} it/s | exits {:.1}% | \
          wire {:.1} Kb | dropped {} | util d/l/c {:.0}/{:.0}/{:.0}% | \
-         bubbles {:.2} s",
+         bubbles {:.2} s (stall {:.2} s)",
         r.avg_latency_ms(),
         r.p99_latency_ms(),
         r.throughput(),
@@ -183,7 +201,8 @@ fn report_summary(r: &RunReport) -> String {
         r.device.utilization() * 100.0,
         r.link.utilization() * 100.0,
         r.cloud.utilization() * 100.0,
-        r.total_bubbles()
+        r.total_bubbles(),
+        r.device.stall
     )
 }
 
@@ -353,6 +372,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         audit_every: args.usize_or("audit-every", 0)?,
         n_streams,
         drop_after: None,
+        queue_cap: args.usize_or("queue-cap", 8)?.max(1),
     };
     println!(
         "serving {n} tasks x {n_streams} stream(s) of {model} (cut {cut}, {:?}, {corr:?})...",
@@ -444,7 +464,8 @@ fn print_help() {
     println!(
         "COACH - near bubble-free end-cloud collaborative inference\n\
          commands: run | partition | serve | profile | bench-table1 | bench-table2 |\n\
-         \x20         bench-fig1 | bench-fig5 | bench-fig6 | bench-fig7 | trace | help\n\
+         \x20         bench-fig1 | bench-fig5 | bench-fig6 | bench-fig7 | bench-fleet |\n\
+         \x20         trace | help\n\
          `coach run scenarios/<name>.toml [--real|--wall]` runs one scenario\n\
          description on the DES / wall-clock / PJRT driver; see scenarios/\n\
          for presets and rust/src/main.rs docs for flags"

@@ -27,6 +27,11 @@ pub struct TaskOutcome {
 pub struct StageUsage {
     pub busy: f64,
     pub span: f64,
+    /// idle time attributable to DOWNSTREAM backpressure (the bounded
+    /// hand-off window stalling this resource) — a subset of
+    /// [`StageUsage::bubbles`], so contention-induced bubbles can be
+    /// told apart from plain arrival gaps
+    pub stall: f64,
 }
 
 impl StageUsage {
@@ -40,6 +45,15 @@ impl StageUsage {
             0.0
         } else {
             (self.busy / self.span).clamp(0.0, 1.0)
+        }
+    }
+
+    /// Fraction of the active span spent stalled on backpressure.
+    pub fn stall_ratio(&self) -> f64 {
+        if self.span <= 0.0 {
+            0.0
+        } else {
+            (self.stall / self.span).clamp(0.0, 1.0)
         }
     }
 }
@@ -158,6 +172,7 @@ impl RunReport {
         put("exit_ratio", Json::Num(self.exit_ratio()));
         put("avg_wire_kb", Json::Num(self.avg_wire_kb()));
         put("bubble_ratio", Json::Num(self.bubble_ratio()));
+        put("device_stall_s", Json::Num(self.device.stall));
         put("device_util", Json::Num(self.device.utilization()));
         put("link_util", Json::Num(self.link.utilization()));
         put("cloud_util", Json::Num(self.cloud.utilization()));
@@ -193,6 +208,7 @@ impl MultiReport {
             tasks.extend(r.tasks.iter().cloned());
             dropped += r.dropped;
             dev.busy += r.device.busy;
+            dev.stall += r.device.stall;
             link.busy += r.link.busy;
             cloud.busy += r.cloud.busy;
         }
@@ -308,21 +324,25 @@ mod tests {
 
     #[test]
     fn stage_usage_bubbles() {
-        let u = StageUsage { busy: 3.0, span: 4.0 };
+        let u = StageUsage { busy: 3.0, span: 4.0, stall: 0.5 };
         assert!((u.bubbles() - 1.0).abs() < 1e-12);
         assert!((u.utilization() - 0.75).abs() < 1e-12);
+        // the stall is attributed inside the bubble budget
+        assert!(u.stall <= u.bubbles() + 1e-12);
+        assert!((u.stall_ratio() - 0.125).abs() < 1e-12);
+        assert_eq!(StageUsage::default().stall_ratio(), 0.0);
     }
 
     #[test]
     fn multi_report_aggregates_streams() {
         let a = RunReport {
             tasks: vec![outcome(0.010, false, 1000)],
-            device: StageUsage { busy: 0.004, span: 0.010 },
+            device: StageUsage { busy: 0.004, span: 0.010, stall: 0.001 },
             ..Default::default()
         };
         let b = RunReport {
             tasks: vec![outcome(0.020, true, 0)],
-            device: StageUsage { busy: 0.006, span: 0.020 },
+            device: StageUsage { busy: 0.006, span: 0.020, stall: 0.002 },
             dropped: 2,
             ..Default::default()
         };
@@ -331,6 +351,7 @@ mod tests {
         assert_eq!(agg.tasks.len(), 2);
         assert_eq!(agg.dropped, 2);
         assert!((agg.device.busy - 0.010).abs() < 1e-12);
+        assert!((agg.device.stall - 0.003).abs() < 1e-12);
         assert!((agg.device.span - 0.020).abs() < 1e-12);
         assert!((multi.aggregate_throughput() - 100.0).abs() < 1e-9);
     }
@@ -339,9 +360,9 @@ mod tests {
     fn bubble_ratio_and_json_summary() {
         let r = RunReport {
             tasks: vec![outcome(0.010, false, 1000)],
-            device: StageUsage { busy: 1.0, span: 2.0 },
-            link: StageUsage { busy: 2.0, span: 2.0 },
-            cloud: StageUsage { busy: 0.0, span: 2.0 },
+            device: StageUsage { busy: 1.0, span: 2.0, stall: 0.25 },
+            link: StageUsage { busy: 2.0, span: 2.0, stall: 0.0 },
+            cloud: StageUsage { busy: 0.0, span: 2.0, stall: 0.0 },
             ..Default::default()
         };
         // bubbles = 1 + 0 + 2 = 3 over 3*2 span
@@ -349,6 +370,10 @@ mod tests {
         let j = r.to_json();
         assert!(j.get("throughput_its").is_ok());
         assert!((j.get("bubble_ratio").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
+        assert!(
+            (j.get("device_stall_s").unwrap().as_f64().unwrap() - 0.25).abs()
+                < 1e-12
+        );
     }
 
     #[test]

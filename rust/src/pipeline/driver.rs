@@ -6,6 +6,9 @@
 //! - **virtual time** ([`run_virtual`], [`run_virtual_streams`]) — the
 //!   discrete-event simulation behind the paper-scale benches. Stage
 //!   occupancies come from the analytic [`StageModel`]; the clock jumps.
+//!   The multi-stream form interleaves all N streams on a global event
+//!   heap, with per-stream bounded in-flight windows mirroring the
+//!   wall-clock driver's queue backpressure ([`VirtualCfg`]).
 //! - **wall time** ([`run_real`]) — the serving driver: one thread per
 //!   device stream, a FIFO link thread, and ONE cloud thread shared by
 //!   every stream (in the PJRT server the cloud thread owns the single
@@ -20,10 +23,12 @@
 //! transmission time, whether to early-exit or at what precision to
 //! transmit (paper Alg. 1 online component, Eq. 10-11).
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::metrics::{MultiReport, RunReport, StageUsage, TaskOutcome};
 use crate::model::{CostModel, ModelGraph};
@@ -33,7 +38,7 @@ use crate::sim::SimTask;
 use super::policy::{Decision, OnlinePolicy, TaskView};
 use super::stage::{
     bounded, BusyMeter, Clock, CloudStage, DeviceStage, DeviceVerdict,
-    VirtualClock, WallClock,
+    VirtualClock, VirtualQueue, WallClock,
 };
 use super::stage_model::StageModel;
 
@@ -51,11 +56,24 @@ struct SharedStages {
     cloud_free: f64,
 }
 
+/// One serviced transmission on the shared resources: when the link
+/// started moving bits for it, how long the link stayed busy, and when
+/// the task's result lands back on the device.
+#[derive(Debug, Clone, Copy)]
+struct LinkService {
+    /// link service start, `max(link_free, avail)` — the instant a
+    /// bounded in-flight window releases this item's slot
+    start: f64,
+    /// link busy seconds charged (transmission + one-way latency)
+    tx: f64,
+    /// task finish (cloud end + result-return leg)
+    finish: f64,
+}
+
 impl SharedStages {
     /// Service one transmission: link occupies FIFO from `avail` (first
     /// cut produced), `t_c_par` of the cloud work overlaps the
-    /// transmission tail, result returns as a tiny payload. Returns
-    /// `(link_busy_secs, task_finish_time)`.
+    /// transmission tail, result returns as a tiny payload.
     #[allow(clippy::too_many_arguments)]
     fn transmit(
         &mut self,
@@ -67,7 +85,7 @@ impl SharedStages {
         t_c: f64,
         t_c_par: f64,
         result_elems: usize,
-    ) -> (f64, f64) {
+    ) -> LinkService {
         let t_start = self.link_free.max(avail);
         let tx = bw.transmit_time(wire_bytes, t_start) + cost.rtt_half;
         // transmission of the *last* cut cannot complete before the
@@ -84,7 +102,7 @@ impl SharedStages {
 
         // result return (tiny payload)
         let ret = cost.t_transmit(result_elems, 32, bw.true_mbps(c_end));
-        (tx, c_end + ret)
+        LinkService { start: t_start, tx, finish: c_end + ret }
     }
 }
 
@@ -97,8 +115,10 @@ enum DeviceStep {
 
 /// Advance one stream's device timeline by one task and consult the
 /// policy — the per-task device-stage logic shared by both virtual
-/// drivers. Admission control stays with the caller (the single-stream
-/// driver can see the link backlog; a multi-stream device cannot).
+/// drivers. Admission control stays with the caller (both drivers check
+/// it against the shared link backlog before calling this). The policy
+/// fires with the bandwidth estimate at `d_end`, the instant the task
+/// is handed to the link.
 #[allow(clippy::too_many_arguments)]
 fn device_step(
     dev_free: &mut f64,
@@ -219,7 +239,7 @@ pub fn run_virtual(
         let outcome = match step {
             DeviceStep::Done(o) => o,
             DeviceStep::Send { avail, d_end, bits, wire_bytes } => {
-                let (tx, finish) = shared.transmit(
+                let svc = shared.transmit(
                     bw,
                     cost,
                     avail,
@@ -229,13 +249,13 @@ pub fn run_virtual(
                     sm.t_c_par,
                     sm.result_elems,
                 );
-                link_busy += tx;
+                link_busy += svc.tx;
                 cloud_busy += sm.t_c;
                 TaskOutcome {
                     id: task.id,
                     arrive: task.arrive,
-                    finish,
-                    latency: finish - task.arrive,
+                    finish: svc.finish,
+                    latency: svc.finish - task.arrive,
                     exited_early: false,
                     bits,
                     wire_bytes,
@@ -249,21 +269,25 @@ pub fn run_virtual(
         outcomes.push(outcome);
     }
 
-    let span = clock.now()
-        - tasks.first().map(|t| t.arrive).unwrap_or(0.0);
+    // clamp like the multi-stream driver: with every task dropped (or
+    // an empty task list) the clock never advances, and a bare
+    // `now - first_arrive` would go negative, poisoning
+    // `StageUsage::utilization` / `bubble_ratio`
+    let first_arrive = tasks.first().map(|t| t.arrive).unwrap_or(0.0);
+    let span = (clock.now() - first_arrive).max(0.0);
     RunReport {
         scheme: scheme.to_string(),
         model: g.name.clone(),
         tasks: outcomes,
         dropped,
-        device: StageUsage { busy: dev_busy, span },
-        link: StageUsage { busy: link_busy, span },
-        cloud: StageUsage { busy: cloud_busy, span },
+        device: StageUsage { busy: dev_busy, span, stall: 0.0 },
+        link: StageUsage { busy: link_busy, span, stall: 0.0 },
+        cloud: StageUsage { busy: cloud_busy, span, stall: 0.0 },
     }
 }
 
 // ---------------------------------------------------------------------
-// Virtual-time driver, N streams sharing link + cloud
+// Virtual-time driver, N streams sharing link + cloud (event-driven)
 // ---------------------------------------------------------------------
 
 /// One device stream of the multi-stream virtual driver. Each stream
@@ -278,124 +302,275 @@ pub struct VirtualStream<'a> {
     pub scheme: String,
     /// per-stream admission threshold (heterogeneous fleets pace their
     /// streams differently); `None` falls back to the run-level
-    /// `drop_after` argument of [`run_virtual_streams`]
+    /// [`VirtualCfg::drop_after`]
     pub drop_after: Option<f64>,
 }
 
-/// A transmitting task queued for the shared link+cloud pass.
-struct WireJob {
-    stream: usize,
+/// Configuration of the event-driven multi-stream DES.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VirtualCfg {
+    /// bounded in-flight transmissions PER STREAM — the virtual-time
+    /// counterpart of [`RealCfg::queue_cap`]: a device stalls its next
+    /// hand-off while this many of its transmissions are still waiting
+    /// for the shared link, and the stall is charged to its bubble
+    /// accounting (`StageUsage::stall`). Note the wall-clock driver
+    /// bounds ONE hand-off channel of this depth shared by all streams,
+    /// so with n > 1 the DES window is the per-stream approximation of
+    /// that backpressure, not an exact twin. `None` = unbounded (the
+    /// [`run_virtual`] semantics, required for bit-for-bit n=1
+    /// equivalence).
+    pub queue_cap: Option<usize>,
+    /// run-level admission fallback (a stream's own
+    /// [`VirtualStream::drop_after`] takes precedence)
+    pub drop_after: Option<f64>,
+}
+
+/// A transmission decided at device completion, awaiting its link
+/// hand-off (possibly stalled by the bounded in-flight window).
+struct PendingTx {
     id: usize,
     arrive: f64,
     /// link availability (first cut produced)
     avail: f64,
+    /// device completion — the hand-off attempt instant
     d_end: f64,
     bits: u8,
     wire_bytes: usize,
-    t_c: f64,
-    t_c_par: f64,
-    result_elems: usize,
     label: usize,
 }
 
+/// Mutable per-stream state of the event loop.
+struct StreamRt {
+    /// next task index
+    next: usize,
+    dev_free: f64,
+    dev_busy: f64,
+    /// device idle seconds caused by link backpressure
+    stall: f64,
+    dropped: usize,
+    pending: Option<PendingTx>,
+    window: VirtualQueue,
+}
+
+/// What happens when an event of the global heap fires.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// the stream advances to its next task (admission + device stage)
+    Advance(usize),
+    /// the stream's decided transmission attempts its link hand-off
+    HandOff(usize),
+}
+
+/// Heap key: virtual time, then insertion order — a deterministic
+/// tie-break for simultaneous events (times are always finite).
+struct EvKey {
+    t: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for EvKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for EvKey {}
+
+impl PartialOrd for EvKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EvKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
 /// Simulate N device streams feeding one FIFO link and one shared cloud
-/// in virtual time. Device timelines are advanced per stream (policy
-/// decisions in stream order); transmissions are then serviced in link-
-/// arrival (FIFO) order against the shared link/cloud resources — the
-/// contention model of the multi-stream server, at DES cost.
+/// in virtual time — a true event-driven interleaving, not a per-stream
+/// pass. A global event heap orders every stream's device completions
+/// and link hand-offs in virtual-time order, so:
 ///
-/// Admission control sheds on the *device* queue only: unlike
-/// [`run_virtual`], a stream cannot see the shared link backlog at
-/// arrival time. Each stream's own `drop_after` takes precedence over
-/// the run-level `drop_after` argument.
+/// - the policy `decide`/`observe` hooks fire at each task's
+///   device-completion / hand-off-attempt instant (`d_end`) with the
+///   bandwidth estimate *at that time* — a late stream's decisions see
+///   the contended timeline, not a contention-blind private one. (A
+///   window-stalled hand-off transmits later than `d_end` with the
+///   decision taken at `d_end`; run_virtual prices decisions the same
+///   way, which the n=1 equivalence below depends on);
+/// - the shared link serves transmissions FIFO in hand-off order, and a
+///   device stalls once [`VirtualCfg::queue_cap`] of its transmissions
+///   are still waiting for the link — mirroring the bounded-queue
+///   backpressure [`run_real`] imposes (per stream here, one shared
+///   channel of the same depth there), charged to `StageUsage::stall`
+///   inside the device bubbles;
+/// - admission control sees the shared link backlog exactly as
+///   [`run_virtual`] does (max of device-queue wait and projected link
+///   wait).
+///
+/// With one stream and `queue_cap: None` the event order degenerates to
+/// the task order and the outcome is bit-for-bit identical to
+/// [`run_virtual`] (pinned by the golden test and a property test).
 pub fn run_virtual_streams(
     streams: &mut [VirtualStream<'_>],
     bw: &BandwidthModel,
-    drop_after: Option<f64>,
+    cfg: VirtualCfg,
 ) -> MultiReport {
     let n = streams.len();
     let mut outcomes: Vec<Vec<TaskOutcome>> = vec![Vec::new(); n];
-    let mut dropped = vec![0usize; n];
-    let mut dev_busy = vec![0.0f64; n];
     let mut link_busy = vec![0.0f64; n];
     let mut cloud_busy = vec![0.0f64; n];
-    let mut jobs: Vec<WireJob> = Vec::new();
+    let mut shared = SharedStages::default();
+    let mut rt: Vec<StreamRt> = (0..n)
+        .map(|_| StreamRt {
+            next: 0,
+            dev_free: 0.0,
+            dev_busy: 0.0,
+            stall: 0.0,
+            dropped: 0,
+            pending: None,
+            window: VirtualQueue::new(cfg.queue_cap),
+        })
+        .collect();
 
-    // ---- phase 1: per-stream device timelines + decisions -------------
-    for (si, st) in streams.iter_mut().enumerate() {
-        let sm = st.sm;
-        let cap_opt = st.drop_after.or(drop_after);
-        let mut dev_free = 0.0f64;
-        for task in st.tasks {
-            if let Some(cap) = cap_opt {
-                if dev_free - task.arrive > cap {
-                    dropped[si] += 1;
-                    continue;
-                }
-            }
-            let step = device_step(
-                &mut dev_free,
-                &mut dev_busy[si],
-                sm,
-                st.graph,
-                st.cost,
-                bw,
-                st.policy,
-                task,
-            );
-            match step {
-                DeviceStep::Done(o) => outcomes[si].push(o),
-                DeviceStep::Send { avail, d_end, bits, wire_bytes } => {
-                    jobs.push(WireJob {
-                        stream: si,
-                        id: task.id,
-                        arrive: task.arrive,
-                        avail,
-                        d_end,
-                        bits,
-                        wire_bytes,
-                        t_c: sm.t_c,
-                        t_c_par: sm.t_c_par.min(sm.t_c),
-                        result_elems: sm.result_elems,
-                        label: task.label,
-                    });
-                }
-            }
+    let mut heap: BinaryHeap<Reverse<EvKey>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    for (si, st) in streams.iter().enumerate() {
+        if let Some(first) = st.tasks.first() {
+            heap.push(Reverse(EvKey {
+                t: first.arrive,
+                seq,
+                ev: Ev::Advance(si),
+            }));
+            seq += 1;
         }
     }
 
-    // ---- phase 2: shared FIFO link + shared cloud ----------------------
-    jobs.sort_by(|a, b| {
-        (a.avail, a.d_end, a.stream)
-            .partial_cmp(&(b.avail, b.d_end, b.stream))
-            .unwrap_or(std::cmp::Ordering::Equal)
-    });
-    let mut shared = SharedStages::default();
-    for job in &jobs {
-        let st = &streams[job.stream];
-        let (tx, finish) = shared.transmit(
-            bw,
-            st.cost,
-            job.avail,
-            job.d_end,
-            job.wire_bytes,
-            job.t_c,
-            job.t_c_par,
-            job.result_elems,
-        );
-        link_busy[job.stream] += tx;
-        cloud_busy[job.stream] += job.t_c;
-        outcomes[job.stream].push(TaskOutcome {
-            id: job.id,
-            arrive: job.arrive,
-            finish,
-            latency: finish - job.arrive,
-            exited_early: false,
-            bits: job.bits,
-            wire_bytes: job.wire_bytes,
-            label: job.label,
-            correct: true,
-        });
+    while let Some(Reverse(EvKey { t: now, ev, .. })) = heap.pop() {
+        match ev {
+            Ev::Advance(si) => loop {
+                // advance the stream task-by-task until it blocks on a
+                // future pickup or commits a device stage
+                let st = &mut streams[si];
+                let s = &mut rt[si];
+                // copy the slice ref out so `task` does not hold a
+                // borrow of `st` across the mutable policy use below
+                let tasks = st.tasks;
+                let Some(task) = tasks.get(s.next) else { break };
+                let pickup = s.dev_free.max(task.arrive);
+                if pickup > now {
+                    heap.push(Reverse(EvKey {
+                        t: pickup,
+                        seq,
+                        ev: Ev::Advance(si),
+                    }));
+                    seq += 1;
+                    break;
+                }
+                // admission at pickup, with the same link-backlog
+                // visibility as run_virtual: the max of the device
+                // queue wait and the projected shared-link wait
+                if let Some(cap) = st.drop_after.or(cfg.drop_after) {
+                    let wait = (s.dev_free - task.arrive)
+                        .max(shared.link_free - task.arrive - st.sm.t_e);
+                    if wait > cap {
+                        s.dropped += 1;
+                        s.next += 1;
+                        continue;
+                    }
+                }
+                let step = device_step(
+                    &mut s.dev_free,
+                    &mut s.dev_busy,
+                    st.sm,
+                    st.graph,
+                    st.cost,
+                    bw,
+                    st.policy,
+                    task,
+                );
+                s.next += 1;
+                match step {
+                    // on-device completion: keep advancing (the next
+                    // pickup is at or after this task's d_end)
+                    DeviceStep::Done(o) => outcomes[si].push(o),
+                    DeviceStep::Send { avail, d_end, bits, wire_bytes } => {
+                        s.pending = Some(PendingTx {
+                            id: task.id,
+                            arrive: task.arrive,
+                            avail,
+                            d_end,
+                            bits,
+                            wire_bytes,
+                            label: task.label,
+                        });
+                        heap.push(Reverse(EvKey {
+                            t: d_end,
+                            seq,
+                            ev: Ev::HandOff(si),
+                        }));
+                        seq += 1;
+                        break;
+                    }
+                }
+            },
+            Ev::HandOff(si) => {
+                let ready = rt[si].window.ready_at(now);
+                if ready > now {
+                    // bounded in-flight window full: stall the device
+                    // until the shared link starts one of its items
+                    heap.push(Reverse(EvKey {
+                        t: ready,
+                        seq,
+                        ev: Ev::HandOff(si),
+                    }));
+                    seq += 1;
+                    continue;
+                }
+                let job = rt[si]
+                    .pending
+                    .take()
+                    .expect("hand-off without a decided transmission");
+                let st = &streams[si];
+                let svc = shared.transmit(
+                    bw,
+                    st.cost,
+                    job.avail,
+                    job.d_end,
+                    job.wire_bytes,
+                    st.sm.t_c,
+                    st.sm.t_c_par,
+                    st.sm.result_elems,
+                );
+                rt[si].window.push(svc.start);
+                // backpressure extends the device timeline: the stall
+                // is idle (never busy) time, visible in the bubbles
+                rt[si].stall += now - job.d_end;
+                rt[si].dev_free = rt[si].dev_free.max(now);
+                link_busy[si] += svc.tx;
+                cloud_busy[si] += st.sm.t_c;
+                outcomes[si].push(TaskOutcome {
+                    id: job.id,
+                    arrive: job.arrive,
+                    finish: svc.finish,
+                    latency: svc.finish - job.arrive,
+                    exited_early: false,
+                    bits: job.bits,
+                    wire_bytes: job.wire_bytes,
+                    label: job.label,
+                    correct: true,
+                });
+                heap.push(Reverse(EvKey {
+                    t: now,
+                    seq,
+                    ev: Ev::Advance(si),
+                }));
+                seq += 1;
+            }
+        }
     }
 
     // ---- assemble per-stream reports -----------------------------------
@@ -410,10 +585,14 @@ pub fn run_virtual_streams(
             scheme: st.scheme.clone(),
             model: st.graph.name.clone(),
             tasks,
-            dropped: dropped[si],
-            device: StageUsage { busy: dev_busy[si], span },
-            link: StageUsage { busy: link_busy[si], span },
-            cloud: StageUsage { busy: cloud_busy[si], span },
+            dropped: rt[si].dropped,
+            device: StageUsage {
+                busy: rt[si].dev_busy,
+                span,
+                stall: rt[si].stall,
+            },
+            link: StageUsage { busy: link_busy[si], span, stall: 0.0 },
+            cloud: StageUsage { busy: cloud_busy[si], span, stall: 0.0 },
         });
     }
     MultiReport { per_stream }
@@ -431,6 +610,14 @@ pub struct RealCfg {
     /// shed a task whose admission falls this many seconds behind its
     /// arrival (None = queue without bound)
     pub drop_after: Option<f64>,
+    /// one-way network latency added to every link traversal — the DES
+    /// charges `CostModel::rtt_half` on both the forward and the
+    /// result-return leg, so the wall-clock link must price the same
+    /// wire (0.0 = latency-free legacy wire)
+    pub rtt_half: f64,
+    /// wire bytes of the result-return payload priced after the cloud
+    /// stage (0 = no return leg)
+    pub result_wire_bytes: usize,
     pub scheme: String,
     pub model: String,
 }
@@ -440,6 +627,8 @@ impl Default for RealCfg {
         RealCfg {
             queue_cap: 8,
             drop_after: None,
+            rtt_half: 0.0,
+            result_wire_bytes: 0,
             scheme: "real".into(),
             model: String::new(),
         }
@@ -460,10 +649,13 @@ struct LinkItem<W> {
 /// Drive N device streams through the real-time three-stage pipeline:
 /// one thread per device stream (stage built in-thread by its factory,
 /// so non-`Send` state like a PJRT engine is fine), one FIFO link thread
-/// sleeping `wire_bytes / bw(t)` per item, and ONE cloud thread shared
-/// by all streams. `clock` must be the epoch the stage implementations
-/// read (bandwidth traces and arrival pacing share it). Returns one
-/// report per stream; aggregate via [`MultiReport::aggregate`].
+/// sleeping `wire_bytes / bw(t) + rtt_half` per item, and ONE cloud
+/// thread shared by all streams; the result-return leg is priced after
+/// the cloud stage (`RealCfg::result_wire_bytes`), so the wall-clock
+/// wire costs what the DES charges. `clock` must be the epoch the stage
+/// implementations read (bandwidth traces and arrival pacing share it).
+/// Returns one report per stream; aggregate via
+/// [`MultiReport::aggregate`].
 pub fn run_real<D, C, DF, CF>(
     streams: Vec<(Vec<SimTask>, DF)>,
     cloud_factory: CF,
@@ -497,57 +689,64 @@ where
         let out_tx = out_tx.clone();
         let meter = dev_busy[si].clone();
         let drop_after = cfg.drop_after;
-        device_handles.push(thread::spawn(move || -> Result<usize> {
-            let mut dev = factory()?;
+        device_handles.push(thread::spawn(move || -> (usize, Result<()>) {
             let mut dropped = 0usize;
-            for task in &tasks {
-                while let Ok(fb) = fb_rx.try_recv() {
-                    dev.absorb(fb);
-                }
-                let now = clock.wait_until(task.arrive);
-                if let Some(cap) = drop_after {
-                    if now - task.arrive > cap {
-                        dropped += 1;
-                        continue;
+            let run = (|| -> Result<()> {
+                let mut dev = factory()?;
+                for task in &tasks {
+                    while let Ok(fb) = fb_rx.try_recv() {
+                        dev.absorb(fb);
                     }
-                }
-                let (verdict, busy) = dev.process(task)?;
-                meter.add_secs(busy);
-                match verdict {
-                    DeviceVerdict::Exit { label, correct } => {
-                        let finish = clock.now();
-                        let _ = out_tx.send((
-                            si,
-                            TaskOutcome {
+                    let now = clock.wait_until(task.arrive);
+                    if let Some(cap) = drop_after {
+                        if now - task.arrive > cap {
+                            dropped += 1;
+                            continue;
+                        }
+                    }
+                    let (verdict, busy) = dev.process(task)?;
+                    meter.add_secs(busy);
+                    match verdict {
+                        DeviceVerdict::Exit { label, correct } => {
+                            let finish = clock.now();
+                            let _ = out_tx.send((
+                                si,
+                                TaskOutcome {
+                                    id: task.id,
+                                    arrive: now,
+                                    finish,
+                                    latency: finish - now,
+                                    exited_early: true,
+                                    bits: 0,
+                                    wire_bytes: 0,
+                                    label,
+                                    correct,
+                                },
+                            ));
+                        }
+                        DeviceVerdict::Transmit { wire, bits, wire_bytes } => {
+                            let item = LinkItem {
+                                stream: si,
                                 id: task.id,
                                 arrive: now,
-                                finish,
-                                latency: finish - now,
-                                exited_early: true,
-                                bits: 0,
-                                wire_bytes: 0,
-                                label,
-                                correct,
-                            },
-                        ));
-                    }
-                    DeviceVerdict::Transmit { wire, bits, wire_bytes } => {
-                        let item = LinkItem {
-                            stream: si,
-                            id: task.id,
-                            arrive: now,
-                            bits,
-                            wire_bytes,
-                            label_hint: task.label,
-                            payload: wire,
-                        };
-                        if link_tx.send(item).is_err() {
-                            bail!("stream {si}: link stage terminated early");
+                                bits,
+                                wire_bytes,
+                                label_hint: task.label,
+                                payload: wire,
+                            };
+                            if link_tx.send(item).is_err() {
+                                bail!(
+                                    "stream {si}: link stage terminated early"
+                                );
+                            }
                         }
                     }
                 }
-            }
-            Ok(dropped)
+                Ok(())
+            })();
+            // the shed count survives an error — the caller reports it
+            // instead of a phantom 0 for the errored stream
+            (dropped, run)
         }));
     }
     drop(link_tx);
@@ -556,10 +755,14 @@ where
 
     // ---- link thread (shared FIFO, simulated WiFi) ---------------------
     let link_meters = link_busy.clone();
+    let link_rtt = cfg.rtt_half;
+    let bw_link = bw.clone();
     let link_handle = thread::spawn(move || {
         while let Some(item) = link_rx.recv() {
             let now = clock.now();
-            let secs = bw.transmit_time(item.wire_bytes, now);
+            // price the wire like the DES: payload over the live rate
+            // plus the one-way network latency
+            let secs = bw_link.transmit_time(item.wire_bytes, now) + link_rtt;
             thread::sleep(Duration::from_secs_f64(secs));
             link_meters[item.stream].add_secs(secs);
             if cloud_tx.send(item).is_err() {
@@ -570,13 +773,22 @@ where
 
     // ---- cloud thread (shared engine) ----------------------------------
     let cloud_meters = cloud_busy.clone();
+    let ret_rtt = cfg.rtt_half;
+    let ret_bytes = cfg.result_wire_bytes;
     let cloud_handle = thread::spawn(move || -> Result<()> {
         let mut cloud = cloud_factory()?;
         while let Some(item) = cloud_rx.recv() {
             let s = Instant::now();
             let (label, fb) = cloud.process(item.payload)?;
             cloud_meters[item.stream].add_secs(s.elapsed().as_secs_f64());
-            let finish = clock.now();
+            let now = clock.now();
+            // result-return leg priced like the DES (rtt + payload at
+            // the instantaneous rate); the return rides the network, not
+            // the cloud engine, so it extends the task's finish without
+            // blocking the next item
+            let ret =
+                ret_rtt + ret_bytes as f64 * 8.0 / (bw.true_mbps(now) * 1e6);
+            let finish = now + ret;
             let _ = cloud_out_tx.send((
                 item.stream,
                 TaskOutcome {
@@ -606,9 +818,10 @@ where
     let mut first_err: Option<anyhow::Error> = None;
     for h in device_handles {
         match h.join() {
-            Ok(Ok(d)) => dropped.push(d),
-            Ok(Err(e)) => {
-                dropped.push(0);
+            Ok((d, Ok(()))) => dropped.push(d),
+            Ok((d, Err(e))) => {
+                // the stream still reports its real shed count
+                dropped.push(d);
                 first_err.get_or_insert(e);
             }
             Err(_) => {
@@ -628,7 +841,10 @@ where
         Err(_) => first_err = Some(anyhow::anyhow!("cloud thread panicked")),
     }
     if let Some(e) = first_err {
-        return Err(e);
+        // the admission counts would otherwise vanish with the report
+        return Err(e).context(format!(
+            "run_real failed; per-stream dropped so far: {dropped:?}"
+        ));
     }
 
     let mut per_stream = Vec::with_capacity(n);
@@ -645,9 +861,9 @@ where
             model: cfg.model.clone(),
             tasks,
             dropped: dropped[si],
-            device: StageUsage { busy: dev_busy[si].secs(), span },
-            link: StageUsage { busy: link_busy[si].secs(), span },
-            cloud: StageUsage { busy: cloud_busy[si].secs(), span },
+            device: StageUsage { busy: dev_busy[si].secs(), span, stall: 0.0 },
+            link: StageUsage { busy: link_busy[si].secs(), span, stall: 0.0 },
+            cloud: StageUsage { busy: cloud_busy[si].secs(), span, stall: 0.0 },
         });
     }
     Ok(MultiReport { per_stream })
@@ -726,10 +942,12 @@ impl CloudStage for SimCloud {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cache::Thresholds;
     use crate::model::topology::vgg16;
     use crate::model::DeviceProfile;
+    use crate::network::Trace;
     use crate::partition::{AnalyticAcc, PartitionConfig};
-    use crate::pipeline::StaticPolicy;
+    use crate::pipeline::{Coach, CoachPolicy, ModelTransmitCost, StaticPolicy};
     use crate::sim::{generate, Correlation};
 
     fn setup() -> (ModelGraph, CostModel, StageModel) {
@@ -748,12 +966,17 @@ mod tests {
     #[test]
     fn single_stream_virtual_matches_legacy_loop() {
         let (g, cost, sm) = setup();
-        let bw = BandwidthModel::Static(12.0);
+        // a stepped link AND admission control: the event-driven path
+        // must reproduce run_virtual bit-for-bit, including drops from
+        // the link-visible admission rule
+        let bw = BandwidthModel::Stepped(Trace {
+            steps: vec![(0.0, 12.0), (0.4, 4.0)],
+        });
         let tasks = generate(250, 2e-3, Correlation::Medium, 20, 5);
 
         let mut p1 = StaticPolicy { bits: 8, exit_threshold: 0.7 };
         let legacy =
-            run_virtual(&g, &cost, &sm, &bw, &tasks, &mut p1, "x", None);
+            run_virtual(&g, &cost, &sm, &bw, &tasks, &mut p1, "x", Some(0.05));
 
         let mut p2 = StaticPolicy { bits: 8, exit_threshold: 0.7 };
         let multi = run_virtual_streams(
@@ -767,23 +990,210 @@ mod tests {
                 drop_after: None,
             }],
             &bw,
-            None,
+            VirtualCfg { queue_cap: None, drop_after: Some(0.05) },
         );
         let r = &multi.per_stream[0];
+        assert_eq!(r.dropped, legacy.dropped);
         assert_eq!(r.tasks.len(), legacy.tasks.len());
         for (a, b) in r.tasks.iter().zip(&legacy.tasks) {
             assert_eq!(a.id, b.id);
             assert_eq!(a.bits, b.bits);
             assert_eq!(a.exited_early, b.exited_early);
-            assert!(
-                (a.finish - b.finish).abs() < 1e-9,
+            assert_eq!(a.wire_bytes, b.wire_bytes);
+            assert_eq!(
+                a.finish.to_bits(),
+                b.finish.to_bits(),
                 "task {}: {} vs {}",
                 a.id,
                 a.finish,
                 b.finish
             );
+            assert_eq!(a.latency.to_bits(), b.latency.to_bits());
         }
+        assert_eq!(r.device.busy.to_bits(), legacy.device.busy.to_bits());
+        assert_eq!(r.link.busy.to_bits(), legacy.link.busy.to_bits());
+        assert_eq!(r.cloud.busy.to_bits(), legacy.cloud.busy.to_bits());
+        assert_eq!(r.device.stall, 0.0, "no backpressure without a cap");
         assert!((r.throughput() - legacy.throughput()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_virtual_span_clamped_when_all_tasks_dropped_or_empty() {
+        let (g, cost, sm) = setup();
+        let bw = BandwidthModel::Static(12.0);
+        let mut tasks = generate(10, 1e-3, Correlation::Low, 5, 3);
+        for t in &mut tasks {
+            t.arrive += 5.0; // first arrival well past the virtual epoch
+        }
+        let mut p = StaticPolicy::no_exit(8);
+        // a pathological admission budget sheds every task at arrival;
+        // the clock then never advances and the pre-fix span would be
+        // 0 - first_arrive = -5s
+        let r =
+            run_virtual(&g, &cost, &sm, &bw, &tasks, &mut p, "x", Some(-10.0));
+        assert_eq!(r.tasks.len(), 0);
+        assert_eq!(r.dropped, 10);
+        assert!(r.device.span >= 0.0, "span must not go negative");
+        assert!((0.0..=1.0).contains(&r.device.utilization()));
+        assert!((0.0..=1.0).contains(&r.bubble_ratio()));
+
+        let empty = run_virtual(&g, &cost, &sm, &bw, &[], &mut p, "x", None);
+        assert_eq!(empty.tasks.len(), 0);
+        assert_eq!(empty.device.span, 0.0);
+    }
+
+    /// Saturated shared link: 4 devices produce ~50 KB transmissions far
+    /// faster than a 10 Mbps link can carry them. With a bounded
+    /// in-flight window the devices must stall (visible in the bubble
+    /// accounting) and the aggregate throughput cannot exceed the serial
+    /// link rate.
+    #[test]
+    fn saturated_link_backpressure_stalls_devices_and_caps_throughput() {
+        let (g, cost, _) = setup();
+        let sm = StageModel {
+            t_e: 0.001,
+            t_c: 0.0005,
+            first_send_offset: 0.0,
+            t_c_par: 0.0,
+            cut_elems: vec![50_000],
+            result_elems: 10,
+            exit_check: 0.0,
+        };
+        let bw = BandwidthModel::Static(10.0);
+        let tls: Vec<Vec<SimTask>> =
+            (0..4).map(|i| generate(30, 4e-3, Correlation::Low, 20, i)).collect();
+        let mut pols: Vec<StaticPolicy> =
+            (0..4).map(|_| StaticPolicy::no_exit(8)).collect();
+        let mut streams: Vec<VirtualStream<'_>> = tls
+            .iter()
+            .zip(pols.iter_mut())
+            .map(|(tasks, pol)| VirtualStream {
+                tasks,
+                sm: &sm,
+                graph: &g,
+                cost: &cost,
+                policy: pol,
+                scheme: "sat".into(),
+                drop_after: None,
+            })
+            .collect();
+        let multi = run_virtual_streams(
+            &mut streams,
+            &bw,
+            VirtualCfg { queue_cap: Some(2), drop_after: None },
+        );
+        for r in &multi.per_stream {
+            assert_eq!(r.tasks.len(), 30, "bounded window must not lose tasks");
+            assert!(
+                r.device.stall > 0.0,
+                "saturated link must stall the device"
+            );
+            assert!(
+                r.device.bubbles() >= r.device.stall - 1e-9,
+                "stall is part of the bubble budget: {} vs {}",
+                r.device.bubbles(),
+                r.device.stall
+            );
+            assert!(r.bubble_ratio() > 0.0);
+        }
+        // the serial link bounds the aggregate rate
+        let tx_secs =
+            bw.transmit_time(cost.wire_bytes(50_000, 8), 0.0) + cost.rtt_half;
+        let agg = multi.aggregate_throughput();
+        assert!(
+            agg <= 1.0 / tx_secs * 1.02,
+            "aggregate {agg:.2} it/s exceeds link capacity {:.2} it/s",
+            1.0 / tx_secs
+        );
+    }
+
+    /// Decisions fire at transmission time: under a saturated link with
+    /// a bounded window, a late-starting stream (and the late tasks of
+    /// an early stream) decide AFTER the bandwidth step and pick a lower
+    /// precision, while the contention-blind (unbounded) run keeps every
+    /// decision at the pre-step estimate.
+    #[test]
+    fn backpressure_shifts_policy_decisions_to_transmission_time() {
+        let (g, cost, _) = setup();
+        let sm = StageModel {
+            t_e: 0.002,
+            t_c: 0.03,
+            first_send_offset: 0.0,
+            t_c_par: 0.0,
+            cut_elems: vec![60_000],
+            result_elems: 10,
+            exit_check: 0.0,
+        };
+        // 20 Mbps until t=0.3s, then 4 Mbps: at 20 Mbps the full 8 bits
+        // hide under the 30 ms cloud stage; at 4 Mbps not even Q_r does
+        let bw = BandwidthModel::Stepped(Trace {
+            steps: vec![(0.0, 20.0), (0.3, 4.0)],
+        });
+        let mk_policy = || Coach {
+            policy: CoachPolicy::new(
+                // never exit; Q_r = 2 for every task
+                Thresholds { s_ext: f64::INFINITY, s_adj: vec![-1.0; 6] },
+                8,
+            ),
+            cost: ModelTransmitCost::new(sm.clone(), cost.clone(), g.clone()),
+        };
+        let run = |queue_cap: Option<usize>| {
+            let tls: Vec<Vec<SimTask>> = (0..4)
+                .map(|i| {
+                    let mut tasks =
+                        generate(20, 4e-3, Correlation::Low, 20, 50 + i);
+                    // stagger the streams: stream 3 starts after the step
+                    for t in &mut tasks {
+                        t.arrive += i as f64 * 0.12;
+                    }
+                    tasks
+                })
+                .collect();
+            let mut pols: Vec<_> = (0..4).map(|_| mk_policy()).collect();
+            let mut streams: Vec<VirtualStream<'_>> = tls
+                .iter()
+                .zip(pols.iter_mut())
+                .map(|(tasks, pol)| VirtualStream {
+                    tasks,
+                    sm: &sm,
+                    graph: &g,
+                    cost: &cost,
+                    policy: pol,
+                    scheme: "step".into(),
+                    drop_after: None,
+                })
+                .collect();
+            run_virtual_streams(
+                &mut streams,
+                &bw,
+                VirtualCfg { queue_cap, drop_after: None },
+            )
+        };
+
+        let contended = run(Some(2));
+        let s0 = &contended.per_stream[0].tasks;
+        let s3 = &contended.per_stream[3].tasks;
+        assert_eq!(s0.first().unwrap().bits, 8, "stream 0 starts pre-step");
+        assert_eq!(
+            s0.last().unwrap().bits,
+            2,
+            "stream 0's late tasks decide on the contended, degraded link"
+        );
+        assert_eq!(
+            s3.first().unwrap().bits,
+            2,
+            "stream 3 starts after the step: early vs late streams differ"
+        );
+        assert!(contended.per_stream[0].device.stall > 0.0);
+
+        // contention-blind control: without the bounded window every
+        // device timeline finishes before the step, so every decision
+        // keeps the pre-step 8 bits and nothing stalls
+        let blind = run(None);
+        for r in &blind.per_stream[..3] {
+            assert!(r.tasks.iter().all(|t| t.bits == 8), "{:?}", r.scheme);
+            assert_eq!(r.device.stall, 0.0);
+        }
     }
 
     #[test]
@@ -817,7 +1227,7 @@ mod tests {
                 drop_after: None,
             }],
             &bw,
-            None,
+            VirtualCfg::default(),
         )
         .aggregate_throughput();
 
@@ -837,7 +1247,7 @@ mod tests {
                 drop_after: None,
             })
             .collect();
-        let multi = run_virtual_streams(&mut streams, &bw, None);
+        let multi = run_virtual_streams(&mut streams, &bw, VirtualCfg::default());
         assert_eq!(multi.per_stream.len(), 4);
         let agg = multi.aggregate_throughput();
         assert!(
@@ -905,5 +1315,120 @@ mod tests {
         }
         let agg = multi.aggregate();
         assert_eq!(agg.tasks.len(), n_streams * n_tasks);
+    }
+
+    /// Device stage that busy-sleeps per task and fails on any task with
+    /// id at or past `fail_from` that survives admission.
+    struct FailingDevice {
+        fail_from: usize,
+        t_e: f64,
+    }
+
+    impl DeviceStage for FailingDevice {
+        type Wire = SimWire;
+        type Feedback = ();
+
+        fn process(
+            &mut self,
+            task: &SimTask,
+        ) -> Result<(DeviceVerdict<SimWire>, f64)> {
+            thread::sleep(Duration::from_secs_f64(self.t_e));
+            if task.id >= self.fail_from {
+                bail!("injected device failure");
+            }
+            Ok((
+                DeviceVerdict::Exit { label: task.label, correct: true },
+                self.t_e,
+            ))
+        }
+    }
+
+    #[test]
+    fn real_driver_keeps_dropped_count_when_device_errors() {
+        let clock = WallClock::new();
+        // 5ms of device work per task against 1ms arrivals: tasks 1-2
+        // are guaranteed to wait > 2ms behind task 0 and be shed; the
+        // last task arrives after the backlog has drained, survives
+        // admission, and triggers the injected failure
+        let mut tasks = generate(12, 0.001, Correlation::Low, 5, 11);
+        tasks[11].arrive = 0.3;
+        let streams =
+            vec![(tasks, || Ok(FailingDevice { fail_from: 5, t_e: 0.005 }))];
+        let err = run_real::<FailingDevice, SimCloud, _, _>(
+            streams,
+            || Ok(SimCloud { t_c: 0.0 }),
+            BandwidthModel::Static(50.0),
+            clock,
+            RealCfg {
+                drop_after: Some(0.002),
+                model: "sim".into(),
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("injected device failure"),
+            "root cause lost: {msg}"
+        );
+        assert!(
+            msg.contains("dropped so far"),
+            "shed count must survive the error: {msg}"
+        );
+        // at least tasks 1-2 were shed before the failure, so the count
+        // reported alongside the error cannot be the phantom [0]
+        assert!(!msg.contains("dropped so far: [0]"), "lost the count: {msg}");
+    }
+
+    #[test]
+    fn real_driver_prices_rtt_and_result_return_like_the_des() {
+        let n_tasks = 3;
+        let clock = WallClock::new();
+        let bw = BandwidthModel::Static(10.0);
+        let cost = CostModel::new(
+            DeviceProfile::jetson_nx(),
+            DeviceProfile::cloud_a6000(),
+        );
+        let tasks = generate(n_tasks, 0.002, Correlation::Low, 5, 17);
+        let factory = {
+            let bw = bw.clone();
+            move || -> Result<SimDevice<StaticPolicy>> {
+                Ok(SimDevice {
+                    policy: StaticPolicy::no_exit(8),
+                    t_e: 0.0,
+                    bw,
+                    clock,
+                    elems: 1000,
+                    cost,
+                })
+            }
+        };
+        let multi = run_real::<SimDevice<StaticPolicy>, SimCloud, _, _>(
+            vec![(tasks, factory)],
+            || Ok(SimCloud { t_c: 0.0 }),
+            bw,
+            clock,
+            RealCfg {
+                // 30ms each way + a 50 KB result at 10 Mbps (40ms): every
+                // transmitted task owes >= 100ms of wire latency
+                rtt_half: 0.03,
+                result_wire_bytes: 50_000,
+                model: "sim".into(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let r = &multi.per_stream[0];
+        assert_eq!(r.tasks.len(), n_tasks);
+        for t in &r.tasks {
+            assert!(
+                t.latency >= 0.09,
+                "task {} latency {:.3}s misses the rtt + return leg",
+                t.id,
+                t.latency
+            );
+        }
+        // the forward rtt is charged to the link busy meter (DES parity)
+        assert!(r.link.busy >= 0.03 * n_tasks as f64 - 1e-6);
     }
 }

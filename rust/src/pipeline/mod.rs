@@ -24,10 +24,16 @@ pub mod stage_model;
 
 #[allow(deprecated)]
 pub use des::{run_pipeline, run_pipeline_opts};
-pub use driver::{run_real, run_virtual, run_virtual_streams, RealCfg, VirtualStream};
+pub use driver::{
+    run_real, run_virtual, run_virtual_streams, RealCfg, VirtualCfg,
+    VirtualStream,
+};
 pub use policy::{
     Coach, CoachPolicy, Decision, MeasuredTransmitCost, ModelTransmitCost,
     OnlinePolicy, StaticPolicy, TaskView, TransmitCost,
 };
-pub use stage::{Clock, CloudStage, DeviceStage, DeviceVerdict, VirtualClock, WallClock};
+pub use stage::{
+    Clock, CloudStage, DeviceStage, DeviceVerdict, VirtualClock, VirtualQueue,
+    WallClock,
+};
 pub use stage_model::StageModel;

@@ -202,6 +202,73 @@ impl<T> BoundedReceiver<T> {
 }
 
 // ---------------------------------------------------------------------
+// Virtual bounded hand-off window
+// ---------------------------------------------------------------------
+
+/// The bounded hand-off queue in VIRTUAL time — the DES counterpart of
+/// [`bounded`]: a producer may have at most `cap` items whose
+/// downstream service has not yet begun. The event-driven multi-stream
+/// driver gives each device stream one of these so a device stalls
+/// (backpressure) exactly where the wall-clock driver's `send` would
+/// block, instead of running its timeline to completion contention-blind.
+///
+/// Items are recorded by their *scheduled downstream service-start*
+/// time, which the FIFO link fixes at hand-off; starts are therefore
+/// monotone and a slot's release time is known in advance.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualQueue {
+    cap: Option<usize>,
+    /// scheduled service-start times of in-flight items (monotone)
+    starts: VecDeque<f64>,
+}
+
+impl VirtualQueue {
+    /// `cap = None` means unbounded (the single-stream DES semantics);
+    /// `Some(0)` is promoted to 1, matching [`bounded`].
+    pub fn new(cap: Option<usize>) -> VirtualQueue {
+        VirtualQueue {
+            cap: cap.map(|c| c.max(1)),
+            starts: VecDeque::new(),
+        }
+    }
+
+    /// Forget items whose downstream service has begun by `now`.
+    fn release_until(&mut self, now: f64) {
+        while self.starts.front().is_some_and(|&s| s <= now) {
+            self.starts.pop_front();
+        }
+    }
+
+    /// Earliest time at or after `now` a new item may enter the window
+    /// (`now` itself when there is room). A later return value is the
+    /// producer's backpressure stall.
+    pub fn ready_at(&mut self, now: f64) -> f64 {
+        self.release_until(now);
+        match self.cap {
+            Some(cap) if self.starts.len() >= cap => {
+                // room opens once the (len - cap + 1) oldest items have
+                // started service; starts are monotone, so that is the
+                // start time of item index len - cap
+                self.starts[self.starts.len() - cap]
+            }
+            _ => now,
+        }
+    }
+
+    /// Record a handed-off item whose downstream service starts at
+    /// `service_start`.
+    pub fn push(&mut self, service_start: f64) {
+        self.starts.push_back(service_start);
+    }
+
+    /// Items handed off whose service has not started as of the last
+    /// [`VirtualQueue::ready_at`] call.
+    pub fn in_flight(&self) -> usize {
+        self.starts.len()
+    }
+}
+
+// ---------------------------------------------------------------------
 // Busy-time meters
 // ---------------------------------------------------------------------
 
@@ -342,6 +409,42 @@ mod tests {
         drop(tx2);
         assert_eq!(rx.recv(), Some(1));
         assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn virtual_queue_unbounded_never_stalls() {
+        let mut q = VirtualQueue::new(None);
+        for i in 0..100 {
+            let t = i as f64;
+            assert_eq!(q.ready_at(t), t);
+            q.push(t + 50.0); // service far in the future: still no cap
+        }
+    }
+
+    #[test]
+    fn virtual_queue_stalls_at_cap_until_service_starts() {
+        let mut q = VirtualQueue::new(Some(2));
+        // two items queued, service starts at t=5 and t=9
+        assert_eq!(q.ready_at(0.0), 0.0);
+        q.push(5.0);
+        assert_eq!(q.ready_at(1.0), 1.0);
+        q.push(9.0);
+        // window full: the third hand-off waits for the oldest start
+        assert_eq!(q.ready_at(2.0), 5.0);
+        assert_eq!(q.in_flight(), 2);
+        // at t=5 the first item is in service -> room again
+        assert_eq!(q.ready_at(5.0), 5.0);
+        assert_eq!(q.in_flight(), 1);
+        q.push(13.0);
+        assert_eq!(q.ready_at(6.0), 9.0);
+    }
+
+    #[test]
+    fn virtual_queue_cap_zero_promoted_to_one() {
+        let mut q = VirtualQueue::new(Some(0));
+        assert_eq!(q.ready_at(0.0), 0.0);
+        q.push(3.0);
+        assert_eq!(q.ready_at(1.0), 3.0);
     }
 
     #[test]

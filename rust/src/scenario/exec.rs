@@ -20,7 +20,7 @@ use crate::model::{topology, CostModel, ModelGraph};
 use crate::partition::{AnalyticAcc, PartitionConfig, Strategy};
 use crate::pipeline::driver::{
     run_real, run_virtual, run_virtual_streams, RealCfg, SimCloud, SimDevice,
-    VirtualStream,
+    VirtualCfg, VirtualStream,
 };
 use crate::pipeline::{OnlinePolicy, StageModel, StaticPolicy, WallClock};
 use crate::runtime::Manifest;
@@ -344,9 +344,13 @@ impl Scenario {
         })
     }
 
-    /// Run the scenario's fleet through the multi-stream DES: N device
-    /// streams (each with its own plan, arrivals and policy state)
-    /// sharing one FIFO link and one cloud in virtual time.
+    /// Run the scenario's fleet through the event-driven multi-stream
+    /// DES: N device streams (each with its own plan, arrivals and
+    /// policy state) interleaved in virtual-time order on one FIFO link
+    /// and one cloud. The scenario's `queue_cap` becomes the per-stream
+    /// bounded in-flight window (backpressure stalls visible in
+    /// `StageUsage::stall`); admission control sees the shared link
+    /// backlog, like the single-stream DES.
     pub fn simulate_fleet(&self) -> Result<MultiReport> {
         let g = self.resolve_graph()?;
         let base_cost = self.cost_model(1.0);
@@ -371,7 +375,16 @@ impl Scenario {
                 drop_after: b.drop_after,
             })
             .collect();
-        Ok(run_virtual_streams(&mut streams, &self.bandwidth, None))
+        Ok(run_virtual_streams(
+            &mut streams,
+            &self.bandwidth,
+            // same default window as serve_sim/serve, so one scenario
+            // models the same backpressure on every multi-stream driver
+            VirtualCfg {
+                queue_cap: Some(self.queue_cap.unwrap_or(8)),
+                drop_after: None,
+            },
+        ))
     }
 
     /// Run the scenario's fleet on the wall-clock threaded driver with
@@ -427,8 +440,13 @@ impl Scenario {
             self.bandwidth.clone(),
             clock,
             RealCfg {
-                queue_cap: 8,
+                queue_cap: self.queue_cap.unwrap_or(8),
                 drop_after: self.admission.resolve(base_period),
+                // price the same wire the DES charges: one-way latency
+                // on both legs plus the result-return payload
+                rtt_half: base_cost.rtt_half,
+                result_wire_bytes: base_cost
+                    .wire_bytes(g.layers[g.sink()].out_elems, 32),
                 scheme: self.report_label(),
                 model: self.model.clone(),
             },
@@ -460,11 +478,12 @@ impl Scenario {
     /// artifacts` and the `pjrt` feature; the scenario `model` must name
     /// a runtime model (e.g. resnet_mini, vgg_mini).
     ///
-    /// Admission control carries over (`drop_after` resolved against
-    /// the scenario period; one threshold for all streams). The
-    /// DES-only planning knobs (`slo`, `plan_bw`, `stage_bw`,
-    /// `thresholds`) do not apply: the real server takes its cut from
-    /// `cut`/per-stream overrides and calibrates thresholds at startup.
+    /// Admission control and the bounded hand-off window carry over
+    /// (`drop_after` resolved against the scenario period, `queue_cap`
+    /// defaulting to 8; one threshold for all streams). The DES-only
+    /// planning knobs (`slo`, `plan_bw`, `stage_bw`, `thresholds`) do
+    /// not apply: the real server takes its cut from `cut`/per-stream
+    /// overrides and calibrates thresholds at startup.
     pub fn serve(&self, manifest: &Manifest) -> Result<ServeResult> {
         let m = manifest.model(&self.model)?;
         let default_cut = (m.blocks.len() - 1) / 2;
@@ -496,6 +515,7 @@ impl Scenario {
             audit_every: self.audit_every,
             n_streams: specs.len(),
             drop_after: self.admission.resolve(period),
+            queue_cap: self.queue_cap.unwrap_or(8),
         };
         let streams: Vec<StreamCfg> = specs
             .iter()

@@ -200,6 +200,13 @@ pub struct Scenario {
     pub streams: Vec<StreamSpec>,
     /// fleet size when `streams` is empty
     pub n_streams: usize,
+    /// bounded in-flight transmission depth: the wall-clock drivers'
+    /// (shared) hand-off queue depth, and the multi-stream DES's
+    /// per-stream backpressure window — the same knob, applied
+    /// per-stream in virtual time and to the shared channel in wall
+    /// time. `None` = every multi-stream driver uses the serving
+    /// default of 8.
+    pub queue_cap: Option<usize>,
     /// serve-mode device emulation padding (NX ~6, TX2 ~10.5)
     pub device_scale: f64,
     /// serve-mode cut override (default: middle block)
@@ -233,6 +240,7 @@ impl Scenario {
             admission: Admission::Unbounded,
             streams: Vec::new(),
             n_streams: 1,
+            queue_cap: None,
             device_scale: 6.0,
             cut: None,
             audit_every: 0,
@@ -384,6 +392,14 @@ impl Scenario {
     /// Append one explicitly-configured stream to the fleet.
     pub fn stream(mut self, spec: StreamSpec) -> Self {
         self.streams.push(spec);
+        self
+    }
+
+    /// Bounded in-flight transmissions per stream (backpressure): the
+    /// hand-off queue depth of the wall-clock drivers and the virtual
+    /// window of the multi-stream DES.
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = Some(cap);
         self
     }
 

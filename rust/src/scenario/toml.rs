@@ -19,7 +19,7 @@
 //! [workload]  n_tasks, period_ms, load (sustainable|saturated),
 //!             load_factor, correlation (none|low|medium|high), seed,
 //!             n_classes, drop_after_ms, drop_after_periods
-//! [serve]     n_streams, device_scale, cut, audit_every
+//! [serve]     n_streams, device_scale, cut, audit_every, queue_cap
 //! [stream.N]  scale, cut, period_ms, seed, correlation, n_tasks
 //! ```
 
@@ -62,7 +62,10 @@ const KNOWN: &[(&str, &[&str])] = &[
             "drop_after_periods",
         ],
     ),
-    ("serve", &["n_streams", "device_scale", "cut", "audit_every"]),
+    (
+        "serve",
+        &["n_streams", "device_scale", "cut", "audit_every", "queue_cap"],
+    ),
 ];
 
 const STREAM_KEYS: &[&str] =
@@ -318,6 +321,12 @@ impl Scenario {
         if let Some(a) = raw.get_f64("serve", "audit_every")? {
             sc.audit_every = a as usize;
         }
+        if let Some(q) = raw.get_f64("serve", "queue_cap")? {
+            if q < 1.0 {
+                bail!("serve.queue_cap must be >= 1, got {q}");
+            }
+            sc.queue_cap = Some(q as usize);
+        }
 
         // ---- [stream.N] ------------------------------------------------
         let mut stream_ids: Vec<usize> = Vec::new();
@@ -376,6 +385,7 @@ drop_after_periods = 6
 [serve]
 n_streams = 2
 device_scale = 10.5
+queue_cap = 4
 "#;
         let sc = Scenario::from_toml(text).unwrap();
         assert_eq!(sc.name, "demo");
@@ -393,6 +403,13 @@ device_scale = 10.5
         assert_eq!(sc.admission, Admission::AfterPeriods(6.0));
         assert_eq!(sc.n_streams, 2);
         assert!((sc.device_scale - 10.5).abs() < 1e-12);
+        assert_eq!(sc.queue_cap, Some(4));
+    }
+
+    #[test]
+    fn queue_cap_must_be_positive() {
+        assert!(Scenario::from_toml("[serve]\nqueue_cap = 0\n").is_err());
+        assert_eq!(Scenario::from_toml("").unwrap().queue_cap, None);
     }
 
     #[test]

@@ -109,6 +109,7 @@ fn pjrt_server_serves_four_streams_on_one_cloud_engine() {
         audit_every: 0,
         n_streams,
         drop_after: None,
+        queue_cap: 8,
     };
     let single = serve(&m, &cfg(1)).unwrap();
     assert_eq!(single.per_stream.len(), 1);

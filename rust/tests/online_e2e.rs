@@ -34,6 +34,7 @@ fn base_cfg(model: &str, m: &Manifest) -> ServeCfg {
         audit_every: 3,
         n_streams: 1,
         drop_after: None,
+        queue_cap: 8,
     }
 }
 

@@ -324,3 +324,137 @@ fn prop_pipeline_conservation_and_ordering() {
         }
     }
 }
+
+/// The event-driven multi-stream DES with ONE stream must reproduce
+/// `run_virtual` bit-for-bit across random stage models, workloads,
+/// bandwidth models and admission budgets — the golden guarantee that
+/// the contention-aware rewrite changed no single-stream numbers.
+#[test]
+fn prop_event_driven_single_stream_matches_run_virtual_bit_for_bit() {
+    use coach::model::topology;
+    use coach::pipeline::{
+        run_virtual, run_virtual_streams, StaticPolicy, VirtualCfg,
+        VirtualStream,
+    };
+    use coach::sim::generate;
+
+    let g = topology::vgg16();
+    let cost =
+        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
+    let mut rng = Rng::new(0x5EED5);
+    for case in 0..40 {
+        // random analytic stage model covering device-, link- and
+        // cloud-bound regimes plus the all-device / all-cloud shapes
+        let shape = rng.below(10);
+        let cut_elems: Vec<usize> = if shape < 2 {
+            Vec::new()
+        } else {
+            (0..1 + rng.below(3)).map(|_| 100 + rng.below(50_000)).collect()
+        };
+        let t_c = if shape == 0 { 0.0 } else { 1e-4 + rng.f64() * 0.01 };
+        let sm = StageModel {
+            t_e: 1e-4 + rng.f64() * 0.02,
+            t_c,
+            first_send_offset: rng.f64() * 0.01,
+            t_c_par: rng.f64() * 0.01,
+            cut_elems,
+            result_elems: 10 + rng.below(1000),
+            exit_check: rng.f64() * 1e-4,
+        };
+        let bw = match rng.below(3) {
+            0 => BandwidthModel::Static(1.0 + rng.f64() * 99.0),
+            1 => BandwidthModel::Stepped(Trace {
+                steps: vec![
+                    (0.0, 5.0 + rng.f64() * 45.0),
+                    (0.05 + rng.f64() * 0.3, 1.0 + rng.f64() * 20.0),
+                ],
+            }),
+            _ => BandwidthModel::Jittered {
+                trace: Trace::constant(5.0 + rng.f64() * 45.0),
+                amplitude: rng.f64() * 0.4,
+                seed: rng.next_u64(),
+            },
+        };
+        let period = 1e-4 + rng.f64() * 0.01;
+        let corr = match rng.below(3) {
+            0 => Correlation::Low,
+            1 => Correlation::Medium,
+            _ => Correlation::High,
+        };
+        let tasks = generate(
+            20 + rng.below(80),
+            period,
+            corr,
+            5 + rng.below(50),
+            rng.next_u64(),
+        );
+        let drop_after = if rng.below(2) == 0 {
+            None
+        } else {
+            Some(period * rng.f64() * 8.0)
+        };
+        let bits = (2 + rng.below(7)) as u8;
+        let exit = if rng.below(3) == 0 {
+            f64::INFINITY
+        } else {
+            0.3 + rng.f64()
+        };
+
+        let mut p1 = StaticPolicy { bits, exit_threshold: exit };
+        let legacy =
+            run_virtual(&g, &cost, &sm, &bw, &tasks, &mut p1, "p", drop_after);
+
+        let mut p2 = StaticPolicy { bits, exit_threshold: exit };
+        let multi = run_virtual_streams(
+            &mut [VirtualStream {
+                tasks: &tasks,
+                sm: &sm,
+                graph: &g,
+                cost: &cost,
+                policy: &mut p2,
+                scheme: "p".into(),
+                drop_after,
+            }],
+            &bw,
+            VirtualCfg { queue_cap: None, drop_after: None },
+        );
+        let r = &multi.per_stream[0];
+        assert_eq!(r.dropped, legacy.dropped, "case {case}: dropped");
+        assert_eq!(r.tasks.len(), legacy.tasks.len(), "case {case}: count");
+        for (a, b) in r.tasks.iter().zip(&legacy.tasks) {
+            assert_eq!(a.id, b.id, "case {case}: id");
+            assert_eq!(a.bits, b.bits, "case {case}: bits");
+            assert_eq!(a.exited_early, b.exited_early, "case {case}: exit");
+            assert_eq!(a.wire_bytes, b.wire_bytes, "case {case}: wire");
+            assert_eq!(
+                a.finish.to_bits(),
+                b.finish.to_bits(),
+                "case {case}: task {} finish {} vs {}",
+                a.id,
+                a.finish,
+                b.finish
+            );
+            assert_eq!(
+                a.latency.to_bits(),
+                b.latency.to_bits(),
+                "case {case}: latency"
+            );
+        }
+        assert_eq!(
+            r.device.busy.to_bits(),
+            legacy.device.busy.to_bits(),
+            "case {case}: device busy"
+        );
+        assert_eq!(
+            r.link.busy.to_bits(),
+            legacy.link.busy.to_bits(),
+            "case {case}: link busy"
+        );
+        assert_eq!(
+            r.cloud.busy.to_bits(),
+            legacy.cloud.busy.to_bits(),
+            "case {case}: cloud busy"
+        );
+        assert_eq!(r.device.stall, 0.0, "case {case}: no-cap stall");
+    }
+}

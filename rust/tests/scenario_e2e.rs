@@ -339,6 +339,27 @@ fn admission_preset_sheds_under_overload() {
 }
 
 #[test]
+fn saturated_fleet_preset_exercises_backpressure_and_admission() {
+    let text = include_str!("../../scenarios/fleet_saturated_link.toml");
+    let mut sc = Scenario::from_toml(text).unwrap();
+    assert_eq!(sc.queue_cap, Some(2), "preset must pin the bounded window");
+    assert_eq!(sc.stream_specs().len(), 4);
+    sc.workload.n_tasks = 80; // trim for test speed; CI smoke runs it full
+    let n = sc.workload.n_tasks;
+    let multi = sc.simulate_fleet().unwrap();
+    assert_eq!(multi.per_stream.len(), 4);
+    let agg = multi.aggregate();
+    // the overloaded fleet must shed, and every task is accounted for
+    assert!(agg.dropped > 0, "2x overload must shed tasks");
+    assert_eq!(agg.tasks.len() + agg.dropped, 4 * n);
+    // stall never exceeds the bubble budget it is attributed inside
+    for r in &multi.per_stream {
+        assert!(r.device.stall >= 0.0);
+        assert!(r.device.stall <= r.device.bubbles() + 1e-9);
+    }
+}
+
+#[test]
 fn hetero_fleet_preset_expresses_mixed_scales() {
     let text = include_str!("../../scenarios/hetero_fleet.toml");
     let sc = Scenario::from_toml(text).unwrap();
