@@ -18,8 +18,8 @@ use anyhow::Result;
 
 use crate::model::{CostModel, ModelGraph};
 use crate::partition::{
-    chain_of, evaluate, optimize, AccProvider, CutEdge, PartitionConfig,
-    Strategy,
+    chain_of, evaluate, optimize_with, AccProvider, ChainNode, CutEdge,
+    PartitionConfig, SearchCtx, Strategy,
 };
 
 /// Scheduling scheme identifier (COACH + the four baselines).
@@ -74,8 +74,23 @@ impl Scheme {
         acc: &dyn AccProvider,
         cfg: &PartitionConfig,
     ) -> Result<Strategy> {
+        let mut ctx = SearchCtx::new(g)?;
+        self.plan_with(&mut ctx, g, cost, acc, cfg)
+    }
+
+    /// [`Scheme::plan`] over a shared memoized [`SearchCtx`] (one graph
+    /// analysis per scenario execution / plan-portfolio build; COACH
+    /// additionally shares candidate preparations across bandwidths).
+    pub fn plan_with(
+        &self,
+        ctx: &mut SearchCtx,
+        g: &ModelGraph,
+        cost: &CostModel,
+        acc: &dyn AccProvider,
+        cfg: &PartitionConfig,
+    ) -> Result<Strategy> {
         match self {
-            Scheme::Coach => optimize(g, cost, acc, cfg),
+            Scheme::Coach => optimize_with(ctx, g, cost, acc, cfg),
             _ => {
                 let objective = |s: &Strategy| -> f64 {
                     match self {
@@ -89,7 +104,14 @@ impl Scheme {
                         Scheme::Coach => unreachable!(),
                     }
                 };
-                best_chain_cut(g, cost, cfg, self.fixed_bits().unwrap(), objective)
+                best_chain_cut_on(
+                    ctx.chain(),
+                    g,
+                    cost,
+                    cfg,
+                    self.fixed_bits().unwrap(),
+                    objective,
+                )
             }
         }
     }
@@ -105,6 +127,18 @@ pub fn best_chain_cut(
     objective: impl Fn(&Strategy) -> f64,
 ) -> Result<Strategy> {
     let chain = chain_of(g)?;
+    best_chain_cut_on(&chain, g, cost, cfg, bits, objective)
+}
+
+/// [`best_chain_cut`] over a precomputed chain decomposition.
+fn best_chain_cut_on(
+    chain: &[ChainNode],
+    g: &ModelGraph,
+    cost: &CostModel,
+    cfg: &PartitionConfig,
+    bits: u8,
+    objective: impl Fn(&Strategy) -> f64,
+) -> Result<Strategy> {
     let mut best: Option<(f64, Strategy)> = None;
     for k in 0..=chain.len() {
         let mut on_device = vec![false; g.n()];

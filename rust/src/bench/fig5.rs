@@ -17,7 +17,8 @@ use anyhow::Result;
 use crate::baselines::Scheme;
 use crate::bench::emit::BenchJson;
 use crate::metrics::Table;
-use crate::scenario::Scenario;
+use crate::network::{BandwidthModel, Trace};
+use crate::scenario::{ReplanSpec, Scenario};
 
 /// The Fig. 5 scenario of one phase: saturated arrivals, plan made at
 /// `plan_bw` (stale when the trace has stepped away from it), stage
@@ -84,6 +85,68 @@ pub fn subplot(
         }
         t.row(row);
     }
+    Ok(t)
+}
+
+/// The Fig. 5(a) step trace as ONE run with a 20 Mbps design point:
+/// short 20 and 10 Mbps phases, then the long 5 Mbps tail the stale
+/// plan suffers through. With `replan` the scenario carries the
+/// 16-rung 2-100 Mbps plan portfolio and switches cuts live
+/// (hysteresis K = 3) as the trace walks away from the design point —
+/// the same description `scenarios/fig5_replan.toml` ships.
+pub fn replan_scenario(model: &str, n_tasks: usize, replan: bool) -> Scenario {
+    let sc = Scenario::new(model)
+        .scheme(Scheme::Coach)
+        .slo_unbounded()
+        .plan_bw(20.0)
+        .bandwidth(BandwidthModel::Stepped(Trace {
+            steps: vec![(0.0, 20.0), (0.15, 10.0), (0.3, 5.0)],
+        }))
+        .tasks(n_tasks)
+        .period(1e-5)
+        .seed(7);
+    if replan {
+        sc.replan(ReplanSpec { rungs: 16, k: 3, ..ReplanSpec::default() })
+    } else {
+        sc
+    }
+}
+
+/// Fig. 5 replan variant: stale plan vs live re-planning vs the
+/// re-planned static optimum of the trace's tail regime (a fresh 5 Mbps
+/// plan), on the step trace. Writes BENCH_fig5_replan.json with the
+/// switch telemetry (`plan_switches`, `plan_occupancy`).
+pub fn replan(n_tasks: usize) -> Result<Table> {
+    let mut json = BenchJson::new("fig5_replan");
+    let mut t = Table::new(&[
+        "variant",
+        "it/s",
+        "avg lat ms",
+        "wire Kb",
+        "switches",
+        "occupancy",
+    ]);
+    let stale = replan_scenario("resnet101", n_tasks, false).simulate()?;
+    let live = replan_scenario("resnet101", n_tasks, true).simulate()?;
+    let fresh =
+        phase_scenario("resnet101", Scheme::Coach, 5.0, 5.0, n_tasks)
+            .simulate()?;
+    for (name, r) in [
+        ("stale-plan", &stale),
+        ("replan", &live),
+        ("fresh-static-5mbps", &fresh),
+    ] {
+        json.add(&format!("resnet101/COACH/step-trace/{name}"), r);
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}", r.throughput()),
+            format!("{:.2}", r.avg_latency_ms()),
+            format!("{:.1}", r.avg_wire_kb()),
+            r.plan.switches.to_string(),
+            format!("{:?}", r.plan.occupancy),
+        ]);
+    }
+    json.write()?;
     Ok(t)
 }
 

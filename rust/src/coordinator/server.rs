@@ -35,14 +35,14 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::cache::{calibrate, SemanticCache, Thresholds};
-use crate::metrics::RunReport;
+use crate::metrics::{PlanTelemetry, RunReport};
 use crate::model::{CostModel, DeviceProfile};
 use crate::network::BandwidthModel;
 use crate::pipeline::driver::{run_real, RealCfg};
 use crate::pipeline::stage::{CloudStage, DeviceStage, DeviceVerdict};
 use crate::pipeline::{
-    Clock, CoachPolicy, Decision, MeasuredTransmitCost, OnlinePolicy,
-    StaticPolicy, TaskView, WallClock,
+    Clock, CoachPolicy, Decision, Hysteresis, MeasuredTransmitCost,
+    OnlinePolicy, StaticPolicy, TaskView, WallClock,
 };
 use crate::runtime::{Engine, Manifest, ModelRuntime, Tensor};
 use crate::sim::{generate, Correlation, SimTask};
@@ -95,6 +95,32 @@ pub struct ServeCfg {
     /// bounded in-flight items per hand-off queue (stage backpressure;
     /// the scenario layer's `queue_cap` knob)
     pub queue_cap: usize,
+    /// live cut re-planning over an explicit bw→cut ladder (None =
+    /// every stream keeps its configured cut for the whole run)
+    pub replan: Option<ServeReplan>,
+}
+
+/// Serve-mode re-planning: the bw→cut ladder (`(min_mbps, cut)`,
+/// strictly ascending in min_mbps — the active cut is the last entry
+/// whose min_mbps is at or below the bandwidth estimate) plus the
+/// shared hysteresis K. Every ladder cut is calibrated once at startup
+/// (cache + thresholds, Alg. 1 L18-19) and its cloud suffix preloaded;
+/// a switch reuses those per-cut artifacts.
+#[derive(Debug, Clone)]
+pub struct ServeReplan {
+    pub ladder: Vec<(f64, usize)>,
+    pub k: usize,
+}
+
+/// Ladder index of the regime covering `bw_mbps`.
+fn ladder_index(ladder: &[(f64, usize)], bw_mbps: f64) -> usize {
+    let mut idx = 0;
+    for (i, &(min_bw, _)) in ladder.iter().enumerate() {
+        if bw_mbps >= min_bw {
+            idx = i;
+        }
+    }
+    idx
 }
 
 /// Per-stream overrides for a heterogeneous fleet.
@@ -157,39 +183,66 @@ impl StreamPolicy {
 }
 
 /// Map the scheme knobs onto the shared policy for one stream.
+/// `gated` must already carry the scheme's early-exit gate (s_ext =
+/// calibrated value, or INFINITY when exits are off) — the ONE gating
+/// rule lives in [`gate_thresholds`], shared with the live cut switch.
 fn stream_policy(
     scheme: &SchemePolicy,
-    calibrated: &Thresholds,
+    gated: Thresholds,
     base_bits: u8,
     elems: usize,
     cost: CostModel,
 ) -> StreamPolicy {
-    let s_ext = if scheme.early_exit {
-        calibrated.s_ext
-    } else {
-        f64::INFINITY
-    };
     match scheme.bits {
         // raw f32 transmission (optionally with threshold early-exit)
         None => StreamPolicy::Static(StaticPolicy {
             bits: 32,
-            exit_threshold: s_ext,
+            exit_threshold: gated.s_ext,
         }),
         // fixed precision passes through UNCLAMPED (e.g. Some(16) stays
         // 16); only the adaptive Eq. 11 search is bounded to 2..=8
-        Some(b) if !scheme.adaptive_quant => {
-            StreamPolicy::Static(StaticPolicy { bits: b, exit_threshold: s_ext })
-        }
-        Some(_) => {
-            let th = Thresholds { s_ext, s_adj: calibrated.s_adj.clone() };
-            StreamPolicy::Coach {
-                policy: CoachPolicy::new(th, base_bits),
-                // stage estimates refreshed from the engine's running
-                // average before each decision
-                cost: MeasuredTransmitCost { elems, cost, t_e: 2e-3, t_c: 2e-3 },
-            }
-        }
+        Some(b) if !scheme.adaptive_quant => StreamPolicy::Static(
+            StaticPolicy { bits: b, exit_threshold: gated.s_ext },
+        ),
+        Some(_) => StreamPolicy::Coach {
+            policy: CoachPolicy::new(gated, base_bits),
+            // stage estimates refreshed from the engine's running
+            // average before each decision
+            cost: MeasuredTransmitCost { elems, cost, t_e: 2e-3, t_c: 2e-3 },
+        },
     }
+}
+
+/// Apply the scheme's early-exit gate to one cut's calibrated
+/// thresholds — what both the startup policy and a live cut switch
+/// consume.
+fn gate_thresholds(scheme: &SchemePolicy, calibrated: &Thresholds) -> Thresholds {
+    Thresholds {
+        s_ext: if scheme.early_exit {
+            calibrated.s_ext
+        } else {
+            f64::INFINITY
+        },
+        s_adj: calibrated.s_adj.clone(),
+    }
+}
+
+/// Live cut re-planning state of one serving stream: the bw→cut
+/// ladder, the shared hysteresis, and the per-cut calibration
+/// artifacts a switch reuses (thresholds, base precision, wire elems;
+/// the per-cut semantic caches live in `PjrtDevice::caches`).
+struct DeviceReplan {
+    ladder: Vec<(f64, usize)>,
+    hysteresis: Hysteresis,
+    /// ladder index of the active cut
+    active: usize,
+    switches: usize,
+    occupancy: Vec<usize>,
+    /// per-cut calibrated thresholds, s_ext already adjusted for the
+    /// scheme's early-exit setting
+    thresholds: BTreeMap<usize, Thresholds>,
+    base_bits: BTreeMap<usize, u8>,
+    cut_elems: BTreeMap<usize, usize>,
 }
 
 /// Device stage of one stream over its private PJRT engine.
@@ -201,7 +254,14 @@ struct PjrtDevice {
     n_blocks: usize,
     device_scale: f64,
     policy: StreamPolicy,
-    cache: SemanticCache,
+    /// semantic cache per cut (one entry when replan is off); each cut
+    /// has its own feature dimension, and every cache keeps absorbing
+    /// its own cut's returns even while another cut is active
+    caches: BTreeMap<usize, SemanticCache>,
+    replan: Option<DeviceReplan>,
+    /// tasks processed with replan OFF — the single occupancy bucket
+    /// the telemetry reports, matching the DES/serve_sim drivers
+    tasks_done: usize,
     bw: BandwidthModel,
     clock: WallClock,
     patterns: Arc<Vec<f32>>,
@@ -212,15 +272,52 @@ struct PjrtDevice {
     cost: CostModel,
 }
 
+impl PjrtDevice {
+    /// One hand-off instant: count the task against the active rung
+    /// and advance the hysteresis. On a switch, swap the live cut and
+    /// re-point the policy at the new cut's calibrated thresholds,
+    /// base precision and wire size — the cache and policy warmup
+    /// state persist. Fixed-precision policies re-point their exit
+    /// threshold too (the separability scale is per-cut).
+    fn note_replan(&mut self, bw_est: f64) {
+        let Some(rp) = &mut self.replan else {
+            self.tasks_done += 1;
+            return;
+        };
+        rp.occupancy[rp.active] += 1;
+        let target = ladder_index(&rp.ladder, bw_est);
+        if let Some(next) = rp.hysteresis.observe(target, rp.active) {
+            rp.active = next;
+            rp.switches += 1;
+            let cut = rp.ladder[next].1;
+            self.cut = cut;
+            match &mut self.policy {
+                StreamPolicy::Coach { policy, cost } => {
+                    policy.thresholds = rp.thresholds[&cut].clone();
+                    policy.base_bits = rp.base_bits[&cut];
+                    cost.elems = rp.cut_elems[&cut];
+                }
+                StreamPolicy::Static(p) => {
+                    // the gated per-cut s_ext (INFINITY when exits off)
+                    p.exit_threshold = rp.thresholds[&cut].s_ext;
+                }
+            }
+        }
+    }
+}
+
 impl DeviceStage for PjrtDevice {
     type Wire = WireMsg;
-    type Feedback = (usize, Vec<f32>);
+    type Feedback = (usize, usize, Vec<f32>);
 
     fn process(
         &mut self,
         task: &SimTask,
     ) -> Result<(DeviceVerdict<WireMsg>, f64)> {
         let rt = ModelRuntime::new(&self.engine, &self.manifest, &self.model)?;
+        // the cut is pinned for this task: a replan switch observed at
+        // the end of process() only applies from the next task
+        let cut = self.cut;
 
         // synthesize the input: class pattern + per-video context offset
         // (shared by all frames of a run — the temporal locality the
@@ -237,7 +334,7 @@ impl DeviceStage for PjrtDevice {
 
         // ---- device stage: prefix blocks + feature --------------------
         let s = Instant::now();
-        let act = rt.run_device(self.cut, &x)?;
+        let act = rt.run_device(cut, &x)?;
         let feat = rt.gap_feature(&act)?;
         let real = s.elapsed();
         // pad to emulate the slower end device; only scaled compute is
@@ -248,17 +345,18 @@ impl DeviceStage for PjrtDevice {
         let mut busy = real.as_secs_f64() * self.device_scale.max(1.0);
 
         // ---- online decision (shared Eq. 10/11) -----------------------
-        let sep = self.cache.separability(&feat.data);
+        let sep =
+            self.caches.get(&cut).expect("calibrated cut").separability(&feat.data);
         if let StreamPolicy::Coach { cost, .. } = &mut self.policy {
             let per = self.engine.avg_exec_secs().unwrap_or(2e-3);
-            cost.t_e = per * (self.cut + 1) as f64 * self.device_scale;
-            cost.t_c = per * (self.n_blocks - self.cut - 1) as f64;
+            cost.t_e = per * (cut + 1) as f64 * self.device_scale;
+            cost.t_c = per * (self.n_blocks - cut - 1) as f64;
         }
         let bw_est = self.bw.estimate_mbps(self.clock.now());
         let decision = self.policy.decide(sep.s, bw_est);
         self.policy.observe(matches!(decision, Decision::Exit));
 
-        match decision {
+        let verdict = match decision {
             Decision::Exit => {
                 // Eq. 10: cached result; optionally audited vs fp32
                 let correct = if self.audit_every > 0
@@ -269,7 +367,7 @@ impl DeviceStage for PjrtDevice {
                 } else {
                     true
                 };
-                Ok((DeviceVerdict::Exit { label: sep.best_label, correct }, busy))
+                DeviceVerdict::Exit { label: sep.best_label, correct }
             }
             Decision::Transmit { bits } => {
                 // codec: UAQ round trip through the compiled kernel
@@ -285,25 +383,44 @@ impl DeviceStage for PjrtDevice {
                 } else {
                     (act.clone(), self.cost.wire_bytes(act.elems(), 32))
                 };
-                Ok((
-                    DeviceVerdict::Transmit {
-                        wire: WireMsg {
-                            tensor: sent,
-                            feature: feat.data,
-                            cut: self.cut,
-                        },
-                        bits,
-                        wire_bytes,
+                DeviceVerdict::Transmit {
+                    wire: WireMsg {
+                        tensor: sent,
+                        feature: feat.data,
+                        cut,
                     },
-                    busy,
-                ))
+                    bits,
+                    wire_bytes,
+                }
             }
+        };
+        // hand-off instant: the ladder may switch the cut for the NEXT
+        // task (this task's activation was produced on `cut`)
+        self.note_replan(bw_est);
+        Ok((verdict, busy))
+    }
+
+    /// Fold a returned label into the ORIGIN cut's cache (Eq. 7) — the
+    /// feature dimension is per-cut, so returns route by the cut that
+    /// produced them even after a switch.
+    fn absorb(&mut self, (cut, label, feature): (usize, usize, Vec<f32>)) {
+        if let Some(cache) = self.caches.get_mut(&cut) {
+            cache.update(label, &feature);
         }
     }
 
-    /// Fold a returned label into the cache (Eq. 7).
-    fn absorb(&mut self, (label, feature): (usize, Vec<f32>)) {
-        self.cache.update(label, &feature);
+    fn plan_telemetry(&self) -> PlanTelemetry {
+        match &self.replan {
+            Some(rp) => PlanTelemetry {
+                switches: rp.switches,
+                occupancy: rp.occupancy.clone(),
+            },
+            // one bucket, like the DES/serve_sim single-plan drivers
+            None => PlanTelemetry {
+                switches: 0,
+                occupancy: vec![self.tasks_done],
+            },
+        }
     }
 }
 
@@ -316,13 +433,18 @@ struct PjrtCloud {
 
 impl CloudStage for PjrtCloud {
     type Wire = WireMsg;
-    type Feedback = (usize, Vec<f32>);
+    type Feedback = (usize, usize, Vec<f32>);
 
-    fn process(&mut self, msg: WireMsg) -> Result<(usize, (usize, Vec<f32>))> {
+    fn process(
+        &mut self,
+        msg: WireMsg,
+    ) -> Result<(usize, (usize, usize, Vec<f32>))> {
         let rt = ModelRuntime::new(&self.engine, &self.manifest, &self.model)?;
         let logits = rt.run_cloud(msg.cut, &msg.tensor)?;
         let label = logits.argmax();
-        Ok((label, (label, msg.feature)))
+        // the cut rides back so the origin stream updates the right
+        // per-cut cache (the feature dimension differs per cut)
+        Ok((label, (msg.cut, label, msg.feature)))
     }
 }
 
@@ -355,17 +477,50 @@ pub fn serve_streams(
     for st in streams {
         anyhow::ensure!(st.cut + 1 < n_blocks, "cut {} out of range", st.cut);
     }
+    if let Some(rp) = &cfg.replan {
+        anyhow::ensure!(!rp.ladder.is_empty(), "replan ladder is empty");
+        anyhow::ensure!(
+            rp.ladder.windows(2).all(|w| w[0].0 < w[1].0),
+            "replan ladder must be strictly ascending in min_mbps"
+        );
+        for &(_, cut) in &rp.ladder {
+            anyhow::ensure!(
+                cut + 1 < n_blocks,
+                "replan ladder cut {cut} out of range"
+            );
+        }
+        // the live cut, hysteresis state and occupancy telemetry index
+        // into the ladder, so every stream must START on a rung — fail
+        // loudly instead of silently ignoring a configured cut
+        for st in streams {
+            anyhow::ensure!(
+                rp.ladder.iter().any(|&(_, c)| c == st.cut),
+                "stream cut {} is not on the replan serve_cuts ladder — \
+                 add a '<mbps>:{}' rung or change the cut",
+                st.cut,
+                st.cut
+            );
+        }
+    }
+    // every cut any stream can run: its configured cut plus the whole
+    // re-planning ladder (calibrated once, suffixes preloaded)
+    let mut all_cuts: Vec<usize> = streams.iter().map(|s| s.cut).collect();
+    if let Some(rp) = &cfg.replan {
+        all_cuts.extend(rp.ladder.iter().map(|&(_, c)| c));
+    }
+    all_cuts.sort_unstable();
+    all_cuts.dedup();
 
     // ---- one-time calibration per distinct cut (temporary engine) -----
     let mut calib: BTreeMap<usize, (SemanticCache, Thresholds)> = BTreeMap::new();
     {
         let engine = Engine::new(manifest)?;
         let rt = ModelRuntime::new(&engine, manifest, &cfg.model)?;
-        for st in streams {
+        for &cut in &all_cuts {
             if let std::collections::btree_map::Entry::Vacant(e) =
-                calib.entry(st.cut)
+                calib.entry(cut)
             {
-                e.insert(warm_cache(&rt, manifest, st.cut, cfg.eps)?);
+                e.insert(warm_cache(&rt, manifest, cut, cfg.eps)?);
             }
         }
     }
@@ -394,6 +549,12 @@ pub fn serve_streams(
     );
     let clock = WallClock::new();
 
+    // the early-exit-gated thresholds of one cut (what the startup
+    // policy and every live switch consume)
+    let th_for = |cut: usize| -> Thresholds {
+        gate_thresholds(&cfg.policy, &calib[&cut].1)
+    };
+
     // ---- device stream factories --------------------------------------
     let mut specs = Vec::with_capacity(streams.len());
     for st in streams {
@@ -404,14 +565,54 @@ pub fn serve_streams(
             manifest.n_classes,
             st.seed,
         );
-        let (cache, thresholds) = calib[&st.cut].clone();
+        // with re-planning on, the configured cut is guaranteed to sit
+        // on the ladder (validated above), so the live cut, the
+        // hysteresis state and the occupancy telemetry start in sync
+        let start_rung = cfg.replan.as_ref().map_or(0, |rp| {
+            rp.ladder
+                .iter()
+                .position(|&(_, c)| c == st.cut)
+                .expect("validated: stream cut on ladder")
+        });
         let policy = stream_policy(
             &cfg.policy,
-            &thresholds,
+            th_for(st.cut),
             base_bits_for(st.cut),
             model.cut_elems(st.cut),
             cost.clone(),
         );
+        // per-cut caches: the starting cut, plus every ladder cut the
+        // stream can switch to (each starts from the calibrated clone
+        // and diverges with this stream's own traffic)
+        let mut caches: BTreeMap<usize, SemanticCache> = BTreeMap::new();
+        caches.insert(st.cut, calib[&st.cut].0.clone());
+        let replan = cfg.replan.as_ref().map(|rp| {
+            for &(_, c) in &rp.ladder {
+                caches.entry(c).or_insert_with(|| calib[&c].0.clone());
+            }
+            DeviceReplan {
+                ladder: rp.ladder.clone(),
+                hysteresis: Hysteresis::new(rp.k),
+                active: start_rung,
+                switches: 0,
+                occupancy: vec![0; rp.ladder.len()],
+                thresholds: rp
+                    .ladder
+                    .iter()
+                    .map(|&(_, c)| (c, th_for(c)))
+                    .collect(),
+                base_bits: rp
+                    .ladder
+                    .iter()
+                    .map(|&(_, c)| (c, base_bits_for(c)))
+                    .collect(),
+                cut_elems: rp
+                    .ladder
+                    .iter()
+                    .map(|&(_, c)| (c, model.cut_elems(c)))
+                    .collect(),
+            }
+        });
         let manifest_c = manifest.clone();
         let model_name = cfg.model.clone();
         let patterns_c = patterns.clone();
@@ -433,7 +634,9 @@ pub fn serve_streams(
                 n_blocks,
                 device_scale: scale,
                 policy,
-                cache,
+                caches,
+                replan,
+                tasks_done: 0,
                 bw: bw_c,
                 clock,
                 patterns: patterns_c,

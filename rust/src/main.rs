@@ -144,6 +144,11 @@ fn run() -> Result<()> {
             for (name, t) in bench::fig5::run(n)? {
                 println!("{name}\n{}", t.render());
             }
+            println!(
+                "Fig 5 replan: live re-planning on the step trace \
+                 (stale vs replan vs fresh-static)"
+            );
+            println!("{}", bench::fig5::replan(n)?.render());
             Ok(())
         }
         "bench-fig6" => {
@@ -188,7 +193,7 @@ fn run() -> Result<()> {
 }
 
 fn report_summary(r: &RunReport) -> String {
-    format!(
+    let mut s = format!(
         "lat {:.2} ms (p99 {:.2}) | {:.1} it/s | exits {:.1}% | \
          wire {:.1} Kb | dropped {} | util d/l/c {:.0}/{:.0}/{:.0}% | \
          bubbles {:.2} s (stall {:.2} s)",
@@ -203,7 +208,15 @@ fn report_summary(r: &RunReport) -> String {
         r.cloud.utilization() * 100.0,
         r.total_bubbles(),
         r.device.stall
-    )
+    );
+    // re-planning telemetry only when a portfolio was live
+    if r.plan.occupancy.len() > 1 || r.plan.switches > 0 {
+        s.push_str(&format!(
+            " | plan switches {} (share {:?})",
+            r.plan.switches, r.plan.occupancy
+        ));
+    }
+    s
 }
 
 /// `coach run <scenario.toml> [--real] [--wall] [--n N]` — load one
@@ -373,6 +386,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         n_streams,
         drop_after: None,
         queue_cap: args.usize_or("queue-cap", 8)?.max(1),
+        replan: None,
     };
     println!(
         "serving {n} tasks x {n_streams} stream(s) of {model} (cut {cut}, {:?}, {corr:?})...",

@@ -58,6 +58,55 @@ impl StageUsage {
     }
 }
 
+/// Re-planning telemetry of one run (pipeline::replan): how often the
+/// active plan switched rungs and how many tasks ran under each rung of
+/// the portfolio ladder. A single-plan run reports zero switches and
+/// one occupancy bucket; a fleet aggregates via
+/// [`PlanTelemetry::aggregate`] (element-wise only across matching
+/// ladder shapes).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PlanTelemetry {
+    /// live plan switches during the run
+    pub switches: usize,
+    /// tasks processed under each plan-ladder rung (index = rung)
+    pub occupancy: Vec<usize>,
+}
+
+impl PlanTelemetry {
+    /// Fold a fleet's per-stream telemetry into one aggregate. Switch
+    /// counts always add; occupancy buckets index into a stream's OWN
+    /// plan ladder, so they only add element-wise when every stream
+    /// shares the same ladder shape — in a mixed fleet the aggregate
+    /// carries no per-rung attribution (empty occupancy) and the
+    /// per-stream reports remain authoritative.
+    pub fn aggregate<'a>(
+        streams: impl Iterator<Item = &'a PlanTelemetry> + Clone,
+    ) -> PlanTelemetry {
+        let mut agg = PlanTelemetry::default();
+        let same_shape = streams
+            .clone()
+            .map(|t| t.occupancy.len())
+            .collect::<Vec<_>>()
+            .windows(2)
+            .all(|w| w[0] == w[1]);
+        for t in streams {
+            agg.switches += t.switches;
+            if same_shape {
+                if agg.occupancy.is_empty() {
+                    agg.occupancy = t.occupancy.clone();
+                } else {
+                    for (a, b) in
+                        agg.occupancy.iter_mut().zip(&t.occupancy)
+                    {
+                        *a += *b;
+                    }
+                }
+            }
+        }
+        agg
+    }
+}
+
 /// Aggregated result of one pipeline experiment.
 #[derive(Debug, Clone, Default)]
 pub struct RunReport {
@@ -69,6 +118,8 @@ pub struct RunReport {
     pub device: StageUsage,
     pub link: StageUsage,
     pub cloud: StageUsage,
+    /// live re-planning telemetry (zero switches when `[replan]` is off)
+    pub plan: PlanTelemetry,
 }
 
 impl RunReport {
@@ -172,6 +223,17 @@ impl RunReport {
         put("exit_ratio", Json::Num(self.exit_ratio()));
         put("avg_wire_kb", Json::Num(self.avg_wire_kb()));
         put("bubble_ratio", Json::Num(self.bubble_ratio()));
+        put("plan_switches", Json::Num(self.plan.switches as f64));
+        put(
+            "plan_occupancy",
+            Json::Arr(
+                self.plan
+                    .occupancy
+                    .iter()
+                    .map(|&n| Json::Num(n as f64))
+                    .collect(),
+            ),
+        );
         put("device_stall_s", Json::Num(self.device.stall));
         put("device_util", Json::Num(self.device.utilization()));
         put("link_util", Json::Num(self.link.utilization()));
@@ -202,6 +264,8 @@ impl MultiReport {
     pub fn aggregate(&self) -> RunReport {
         let mut tasks = Vec::new();
         let mut dropped = 0;
+        let plan =
+            PlanTelemetry::aggregate(self.per_stream.iter().map(|r| &r.plan));
         let (mut dev, mut link, mut cloud) =
             (StageUsage::default(), StageUsage::default(), StageUsage::default());
         for r in &self.per_stream {
@@ -237,6 +301,7 @@ impl MultiReport {
             device: dev,
             link,
             cloud,
+            plan,
         }
     }
 }
@@ -373,6 +438,33 @@ mod tests {
         assert!(
             (j.get("device_stall_s").unwrap().as_f64().unwrap() - 0.25).abs()
                 < 1e-12
+        );
+    }
+
+    #[test]
+    fn plan_telemetry_aggregates_and_serializes() {
+        // same ladder shape: element-wise sum
+        let a = PlanTelemetry { switches: 1, occupancy: vec![10, 5] };
+        let b = PlanTelemetry { switches: 2, occupancy: vec![1, 2] };
+        let agg = PlanTelemetry::aggregate([&a, &b].into_iter());
+        assert_eq!(agg.switches, 3);
+        assert_eq!(agg.occupancy, vec![11, 7]);
+        // mixed ladders: per-rung attribution is per-stream state, so
+        // the aggregate keeps switches but drops the buckets
+        let c = PlanTelemetry { switches: 4, occupancy: vec![1, 2, 3] };
+        let mixed = PlanTelemetry::aggregate([&a, &b, &c].into_iter());
+        assert_eq!(mixed.switches, 7);
+        assert!(mixed.occupancy.is_empty());
+
+        let r = RunReport { plan: agg, ..Default::default() };
+        let j = r.to_json();
+        assert_eq!(
+            j.get("plan_switches").unwrap().as_f64().unwrap(),
+            3.0
+        );
+        assert_eq!(
+            j.get("plan_occupancy").unwrap().as_arr().unwrap().len(),
+            2
         );
     }
 

@@ -14,21 +14,29 @@ use crate::model::{CostModel, ModelGraph};
 
 use super::strategy::{CutEdge, TaskEval};
 
-/// Evaluate one task under an assignment at a fixed bandwidth.
-///
-/// `on_device` must be prefix-closed (every pred of a device layer on
-/// the device); `bits_for` gives the precision per cut edge.
-pub fn evaluate(
+/// The bandwidth-INDEPENDENT half of one evaluation: the sequential
+/// device timeline of an assignment plus its busy windows. A candidate's
+/// device pass never changes across the bandwidth grid, so the memoized
+/// search ([`super::dnc::SearchCtx`]) computes it once per assignment
+/// and re-prices only the link/cloud passes per bandwidth.
+#[derive(Debug, Clone)]
+pub struct DevicePass {
+    /// per-layer device finish time (0.0 for cloud layers)
+    pub dev_finish: Vec<f64>,
+    /// device stage sum T_e (Eq. 2)
+    pub t_e: f64,
+    /// busy windows of the device resource (for Eq. 4 overlap)
+    busy: Vec<(f64, f64)>,
+}
+
+/// Run the device pass of an assignment (see [`DevicePass`]).
+pub fn device_pass(
     g: &ModelGraph,
     cost: &CostModel,
     on_device: &[bool],
-    cuts: &[CutEdge],
-    bw_mbps: f64,
-) -> TaskEval {
+) -> DevicePass {
     let n = g.n();
     debug_assert_eq!(on_device.len(), n);
-
-    // --- device pass: sequential in topo order -------------------------
     let mut dev_finish = vec![0.0f64; n];
     let mut dev_clock = 0.0f64;
     for i in 0..n {
@@ -42,6 +50,41 @@ pub fn evaluate(
         }
     }
     let t_e: f64 = cost.sum_device(g, on_device);
+    let busy = busy_windows_device(g, on_device, &dev_finish, cost);
+    DevicePass { dev_finish, t_e, busy }
+}
+
+/// Evaluate one task under an assignment at a fixed bandwidth.
+///
+/// `on_device` must be prefix-closed (every pred of a device layer on
+/// the device); each cut edge carries its own precision.
+pub fn evaluate(
+    g: &ModelGraph,
+    cost: &CostModel,
+    on_device: &[bool],
+    cuts: &[CutEdge],
+    bw_mbps: f64,
+) -> TaskEval {
+    let dev = device_pass(g, cost, on_device);
+    evaluate_with(g, cost, on_device, cuts, bw_mbps, &dev)
+}
+
+/// [`evaluate`] with a precomputed [`DevicePass`] — the link and cloud
+/// passes (the only bandwidth-dependent arithmetic) at `bw_mbps`.
+/// `dev` MUST come from `device_pass(g, cost, on_device)` with the same
+/// arguments; the result is bit-for-bit identical to [`evaluate`].
+pub fn evaluate_with(
+    g: &ModelGraph,
+    cost: &CostModel,
+    on_device: &[bool],
+    cuts: &[CutEdge],
+    bw_mbps: f64,
+    dev: &DevicePass,
+) -> TaskEval {
+    let n = g.n();
+    debug_assert_eq!(on_device.len(), n);
+    let dev_finish = &dev.dev_finish;
+    let t_e = dev.t_e;
 
     // --- link pass: FIFO in order of availability ----------------------
     // If nothing runs on the device, the raw input is the transmission.
@@ -113,16 +156,16 @@ pub fn evaluate(
 
     // --- overlap accounting (Eq. 4) -------------------------------------
     // T_t^p: transmission time overlapped with device or cloud busy time.
-    let dev_busy: Vec<(f64, f64)> = busy_windows_device(g, on_device, &dev_finish, cost);
+    let dev_busy: &[(f64, f64)] = &dev.busy;
     let t_t_par: f64 = tx_windows
         .iter()
-        .map(|w| overlap(*w, &dev_busy) + overlap(*w, &cloud_windows))
+        .map(|w| overlap(*w, dev_busy) + overlap(*w, &cloud_windows))
         .sum::<f64>()
         .min(t_t);
     // T_c^p: cloud compute overlapped with device compute or transmission.
     let t_c_par: f64 = cloud_windows
         .iter()
-        .map(|w| overlap(*w, &dev_busy) + overlap(*w, &tx_windows))
+        .map(|w| overlap(*w, dev_busy) + overlap(*w, &tx_windows))
         .sum::<f64>()
         .min(t_c);
 
@@ -252,6 +295,42 @@ mod tests {
         // input 1000 elems * 32 bits = 32_000 bits -> 3.2ms at 10 Mbps
         assert!(e.t_t > 0.003, "t_t={}", e.t_t);
         assert!((e.t_c - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prepared_evaluation_is_bit_identical_to_direct() {
+        // the memoized search relies on evaluate_with(prep) == evaluate
+        let g = chain3();
+        let cm = cm();
+        for od in [
+            vec![true, true, true, false],
+            vec![true, true, false, false],
+            vec![true, false, false, false],
+            vec![true, true, true, true],
+        ] {
+            let cuts: Vec<CutEdge> = g
+                .cut_edges(&od)
+                .unwrap()
+                .into_iter()
+                .map(|(from, to)| CutEdge {
+                    from,
+                    to,
+                    bits: 8,
+                    elems: g.layers[from].out_elems,
+                })
+                .collect();
+            let prep = device_pass(&g, &cm, &od);
+            for bw in [0.5, 5.0, 50.0] {
+                let a = evaluate(&g, &cm, &od, &cuts, bw);
+                let b = evaluate_with(&g, &cm, &od, &cuts, bw, &prep);
+                assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+                assert_eq!(a.t_t.to_bits(), b.t_t.to_bits());
+                assert_eq!(a.t_t_par.to_bits(), b.t_t_par.to_bits());
+                assert_eq!(a.t_c_par.to_bits(), b.t_c_par.to_bits());
+                assert_eq!(a.b_t.to_bits(), b.b_t.to_bits());
+                assert_eq!(a.b_c.to_bits(), b.b_c.to_bits());
+            }
+        }
     }
 
     #[test]

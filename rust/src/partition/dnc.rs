@@ -13,12 +13,23 @@
 //!
 //! Complexity: O(c·n) candidate evaluations for n chain nodes and c
 //! layers per block, vs O(c^n) brute force (paper §III-B).
+//!
+//! Searches are memoized through a [`SearchCtx`]: the chain
+//! decomposition, the bandwidth-independent candidate preparations
+//! (cut edges + precision search + device timeline) and the
+//! per-(candidate, bandwidth) timeline evaluations are all cached, so
+//! re-running the search across a bandwidth grid
+//! ([`super::portfolio::PlanBook::build`]) or across the repeated plan
+//! calls of one scenario compilation costs little more than one search.
+
+use std::collections::HashMap;
+use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
 use crate::model::{CostModel, ModelGraph};
 
-use super::bubbles::evaluate;
+use super::bubbles::{device_pass, evaluate_with, DevicePass};
 use super::quant_search::AccProvider;
 use super::strategy::{CutEdge, Strategy, TaskEval};
 use super::virtual_block::{chain_of, ChainNode};
@@ -40,11 +51,86 @@ impl Default for PartitionConfig {
     }
 }
 
-/// A candidate assignment before evaluation.
-struct Candidate {
-    on_device: Vec<bool>,
-    /// description for tracing
-    desc: String,
+/// Counters of the memoized search — how much candidate work the memo
+/// actually shared (the portfolio build asserts on these).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SearchStats {
+    /// candidate preparations computed (cut edges + precision search +
+    /// device timeline) — the bandwidth-independent work the memo shares
+    pub prep_misses: usize,
+    /// candidate preparations served from the memo
+    pub prep_hits: usize,
+    /// bandwidth-dependent timeline evaluations computed
+    pub eval_misses: usize,
+    /// timeline evaluations served from the memo
+    pub eval_hits: usize,
+}
+
+/// A prepared candidate: everything about an assignment that does not
+/// depend on the design bandwidth.
+struct Prepared {
+    cuts: Vec<CutEdge>,
+    dev: DevicePass,
+}
+
+/// Memoized state shared across partition searches over ONE
+/// (graph, cost model, accuracy provider) triple. The design bandwidth
+/// and the latency SLO may vary freely between calls; the accuracy
+/// budget `eps` is part of the memo keys. Create one per scenario
+/// execution (or per plan-portfolio build) and pass it to
+/// [`optimize_with`] / `Scheme::plan_with`.
+pub struct SearchCtx {
+    chain: Vec<ChainNode>,
+    depth: Vec<f64>,
+    /// (assignment bitset, eps bits) -> prepared candidate
+    /// (None = non-prefix assignment or unsatisfiable accuracy budget)
+    prep: HashMap<(Vec<u64>, u64), Option<Rc<Prepared>>>,
+    /// (assignment bitset, eps bits, bw bits) -> timeline evaluation
+    evals: HashMap<(Vec<u64>, u64, u64), TaskEval>,
+    pub stats: SearchStats,
+}
+
+/// Bitset key of an assignment.
+fn od_key(on_device: &[bool]) -> Vec<u64> {
+    let mut key = vec![0u64; on_device.len().div_ceil(64)];
+    for (i, &d) in on_device.iter().enumerate() {
+        if d {
+            key[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    key
+}
+
+impl SearchCtx {
+    /// Decompose `g` once; subsequent searches share the chain and the
+    /// candidate memos.
+    pub fn new(g: &ModelGraph) -> Result<SearchCtx> {
+        Ok(SearchCtx {
+            chain: chain_of(g)?,
+            depth: depth_fractions(g),
+            prep: HashMap::new(),
+            evals: HashMap::new(),
+            stats: SearchStats::default(),
+        })
+    }
+
+    /// Same chain decomposition, fresh memos — for reusing the graph
+    /// analysis under a DIFFERENT cost model (e.g. the scaled device
+    /// profiles of a heterogeneous fleet).
+    pub fn fork(&self) -> SearchCtx {
+        SearchCtx {
+            chain: self.chain.clone(),
+            depth: self.depth.clone(),
+            prep: HashMap::new(),
+            evals: HashMap::new(),
+            stats: SearchStats::default(),
+        }
+    }
+
+    /// The chain decomposition of the graph this ctx was built over.
+    pub fn chain(&self) -> &[ChainNode] {
+        &self.chain
+    }
 }
 
 /// The offline optimizer (paper Alg. 1 offline component).
@@ -54,43 +140,61 @@ pub fn optimize(
     acc: &dyn AccProvider,
     cfg: &PartitionConfig,
 ) -> Result<Strategy> {
-    let chain = chain_of(g)?;
-    let depth = depth_fractions(g);
+    let mut ctx = SearchCtx::new(g)?;
+    optimize_with(&mut ctx, g, cost, acc, cfg)
+}
 
-    let mut best: Option<Strategy> = None;
-    let mut best_any: Option<Strategy> = None; // ignoring T_max, fallback
+/// Best strategies found so far (Eq. 6 under the SLO, plus the
+/// latency-minimal fallback ignoring T_max).
+#[derive(Default)]
+struct BestSoFar {
+    best: Option<Strategy>,
+    best_any: Option<Strategy>,
+}
 
-    let mut consider = |cand: Candidate| -> Result<()> {
-        let Some((cuts, eval)) =
-            evaluate_candidate(g, cost, acc, cfg, &cand.on_device, &depth)?
-        else {
-            return Ok(()); // no feasible precision for some cut
-        };
-        let strat = Strategy {
-            model: g.name.clone(),
-            on_device: cand.on_device,
-            cuts,
-            eval,
-        };
+impl BestSoFar {
+    fn consider(
+        &mut self,
+        g: &ModelGraph,
+        cfg: &PartitionConfig,
+        on_device: Vec<bool>,
+        cuts: Vec<CutEdge>,
+        eval: TaskEval,
+    ) {
+        let strat = Strategy { model: g.name.clone(), on_device, cuts, eval };
         let obj = strat.eval.objective();
         let sum = strat.eval.t_e + strat.eval.t_t + strat.eval.t_c;
         if sum <= cfg.t_max
-            && best
+            && self
+                .best
                 .as_ref()
                 .map(|b| obj < b.eval.objective())
                 .unwrap_or(true)
         {
-            best = Some(strat.clone());
+            self.best = Some(strat.clone());
         }
-        if best_any
+        if self
+            .best_any
             .as_ref()
             .map(|b| strat.eval.latency < b.eval.latency)
             .unwrap_or(true)
         {
-            best_any = Some(strat);
+            self.best_any = Some(strat);
         }
-        Ok(())
-    };
+    }
+}
+
+/// [`optimize`] over a shared [`SearchCtx`] — `ctx` must have been
+/// built over the same `g`, and be used with one (cost, acc) pair.
+pub fn optimize_with(
+    ctx: &mut SearchCtx,
+    g: &ModelGraph,
+    cost: &CostModel,
+    acc: &dyn AccProvider,
+    cfg: &PartitionConfig,
+) -> Result<Strategy> {
+    let chain = ctx.chain.clone();
+    let mut best = BestSoFar::default();
 
     // --- chain-level cuts (incl. all-cloud k=0 and all-device k=last) --
     for k in 0..chain.len() {
@@ -100,20 +204,25 @@ pub fn optimize(
                 on_device[l] = true;
             }
         }
-        consider(Candidate {
-            on_device,
-            desc: format!("chain-cut after node {k}"),
-        })?;
+        if let Some((prep, eval)) =
+            evaluate_candidate(ctx, g, cost, acc, cfg, &on_device)?
+        {
+            best.consider(g, cfg, on_device, prep.cuts.clone(), eval);
+        }
     }
     // all-cloud: only meaningful as "input transmitted raw"
-    consider(Candidate {
-        on_device: vec![false; g.n()],
-        desc: "all-cloud".into(),
-    })?;
+    {
+        let on_device = vec![false; g.n()];
+        if let Some((prep, eval)) =
+            evaluate_candidate(ctx, g, cost, acc, cfg, &on_device)?
+        {
+            best.consider(g, cfg, on_device, prep.cuts.clone(), eval);
+        }
+    }
 
     // --- block-internal cuts (recursive divide & conquer, Fig. 4) ------
     for k in 0..chain.len() {
-        if let ChainNode::Virtual { entry: _, exit, branches } = &chain[k] {
+        if let ChainNode::Virtual { entry: _, exit: _, branches } = &chain[k] {
             // device gets all nodes before this block; branches are
             // opened and cut individually (layer-parallel execution).
             let mut base = vec![false; g.n()];
@@ -137,9 +246,9 @@ pub fn optimize(
                         let od = assign_with_branch_cuts(
                             &base, branches, &cut_pos,
                         );
-                        if let Some((_, eval)) = evaluate_candidate(
-                            g, cost, acc, cfg, &od, &depth,
-                        )? {
+                        if let Some((_, eval)) =
+                            evaluate_candidate(ctx, g, cost, acc, cfg, &od)?
+                        {
                             let obj = eval.objective();
                             if obj < best_obj {
                                 best_obj = obj;
@@ -154,14 +263,15 @@ pub fn optimize(
                 }
             }
             let od = assign_with_branch_cuts(&base, branches, &cut_pos);
-            consider(Candidate {
-                on_device: od,
-                desc: format!("block-cut in node {k} (exit {exit})"),
-            })?;
+            if let Some((prep, eval)) =
+                evaluate_candidate(ctx, g, cost, acc, cfg, &od)?
+            {
+                best.consider(g, cfg, od, prep.cuts.clone(), eval);
+            }
         }
     }
 
-    match best.or(best_any) {
+    match best.best.or(best.best_any) {
         Some(s) => Ok(s),
         None => bail!("no feasible strategy for model {}", g.name),
     }
@@ -196,16 +306,18 @@ pub fn depth_fractions(g: &ModelGraph) -> Vec<f64> {
         .collect()
 }
 
-/// Build cut edges with precisions and evaluate. Returns None if the
-/// accuracy constraint is unsatisfiable for some cut.
-fn evaluate_candidate(
+/// Build cut edges with precisions and run the device pass — the
+/// bandwidth-independent candidate preparation the memo shares. Returns
+/// None if the assignment is not prefix-closed or the accuracy
+/// constraint is unsatisfiable for some cut.
+fn build_prepared(
     g: &ModelGraph,
     cost: &CostModel,
     acc: &dyn AccProvider,
     cfg: &PartitionConfig,
     on_device: &[bool],
     depth: &[f64],
-) -> Result<Option<(Vec<CutEdge>, TaskEval)>> {
+) -> Result<Option<Rc<Prepared>>> {
     let raw_cuts = match g.cut_edges(on_device) {
         Ok(c) => c,
         Err(_) => return Ok(None), // non-prefix assignment
@@ -228,8 +340,62 @@ fn evaluate_candidate(
             elems: g.layers[from].out_elems,
         });
     }
-    let eval = evaluate(g, cost, on_device, &cuts, cfg.bw_mbps);
-    Ok(Some((cuts, eval)))
+    let dev = device_pass(g, cost, on_device);
+    Ok(Some(Rc::new(Prepared { cuts, dev })))
+}
+
+/// Memoized candidate evaluation: the preparation (cut edges, precision
+/// search, device timeline) is shared across every bandwidth; the
+/// link/cloud passes are cached per (candidate, bandwidth). Returns the
+/// shared preparation handle — callers clone its cut list only for the
+/// few candidates that actually become a best-so-far strategy, not for
+/// every coordinate-descent probe.
+fn evaluate_candidate(
+    ctx: &mut SearchCtx,
+    g: &ModelGraph,
+    cost: &CostModel,
+    acc: &dyn AccProvider,
+    cfg: &PartitionConfig,
+    on_device: &[bool],
+) -> Result<Option<(Rc<Prepared>, TaskEval)>> {
+    let key = od_key(on_device);
+    let eps_bits = cfg.eps.to_bits();
+    let prep_key = (key.clone(), eps_bits);
+    let prep = match ctx.prep.get(&prep_key) {
+        Some(p) => {
+            ctx.stats.prep_hits += 1;
+            p.clone()
+        }
+        None => {
+            ctx.stats.prep_misses += 1;
+            let built =
+                build_prepared(g, cost, acc, cfg, on_device, &ctx.depth)?;
+            ctx.prep.insert(prep_key, built.clone());
+            built
+        }
+    };
+    let Some(prep) = prep else { return Ok(None) };
+    let eval_key = (key, eps_bits, cfg.bw_mbps.to_bits());
+    let eval = match ctx.evals.get(&eval_key) {
+        Some(e) => {
+            ctx.stats.eval_hits += 1;
+            *e
+        }
+        None => {
+            ctx.stats.eval_misses += 1;
+            let e = evaluate_with(
+                g,
+                cost,
+                on_device,
+                &prep.cuts,
+                cfg.bw_mbps,
+                &prep.dev,
+            );
+            ctx.evals.insert(eval_key, e);
+            e
+        }
+    };
+    Ok(Some((prep, eval)))
 }
 
 #[cfg(test)]
@@ -237,6 +403,7 @@ mod tests {
     use super::*;
     use crate::model::topology::{googlenet, resnet101, vgg16};
     use crate::model::DeviceProfile;
+    use crate::partition::bubbles::evaluate;
     use crate::partition::quant_search::AnalyticAcc;
 
     fn cost() -> CostModel {
@@ -331,5 +498,29 @@ mod tests {
         let cfg = PartitionConfig { t_max: sum * 1.5, ..Default::default() };
         let s = optimize(&g, &cm, &AnalyticAcc, &cfg).unwrap();
         assert!(s.eval.t_e + s.eval.t_t + s.eval.t_c <= cfg.t_max + 1e-9);
+    }
+
+    #[test]
+    fn shared_ctx_reproduces_fresh_search_exactly() {
+        // one ctx reused across bandwidths must return the same strategy
+        // a fresh search returns at each bandwidth
+        let g = resnet101();
+        let cm = cost();
+        let mut ctx = SearchCtx::new(&g).unwrap();
+        for bw in [2.0, 7.5, 20.0, 66.0] {
+            let cfg = PartitionConfig { bw_mbps: bw, ..Default::default() };
+            let shared =
+                optimize_with(&mut ctx, &g, &cm, &AnalyticAcc, &cfg).unwrap();
+            let fresh = optimize(&g, &cm, &AnalyticAcc, &cfg).unwrap();
+            assert_eq!(shared.on_device, fresh.on_device, "bw {bw}");
+            assert_eq!(shared.cuts, fresh.cuts, "bw {bw}");
+            assert_eq!(
+                shared.eval.objective().to_bits(),
+                fresh.eval.objective().to_bits(),
+                "bw {bw}"
+            );
+        }
+        // the second and later searches must have shared preparations
+        assert!(ctx.stats.prep_hits > 0, "memo never hit: {:?}", ctx.stats);
     }
 }

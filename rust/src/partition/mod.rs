@@ -1,15 +1,23 @@
 //! Offline component (paper §III-B): joint model partitioning +
 //! transmission quantization via recursive divide-and-conquer over
-//! virtual blocks, minimizing pipeline bubbles (Eq. 5-6).
+//! virtual blocks, minimizing pipeline bubbles (Eq. 5-6) — plus the
+//! plan portfolio ([`portfolio::PlanBook`]): the same search run over a
+//! bandwidth grid through one memoized [`SearchCtx`], so the online
+//! re-planner (pipeline::replan) can switch cuts at runtime.
 
 pub mod bubbles;
 pub mod dnc;
+pub mod portfolio;
 pub mod quant_search;
 pub mod strategy;
 pub mod virtual_block;
 
 pub use bubbles::evaluate;
-pub use dnc::{depth_fractions, optimize, PartitionConfig};
+pub use dnc::{
+    depth_fractions, optimize, optimize_with, PartitionConfig, SearchCtx,
+    SearchStats,
+};
+pub use portfolio::{log_grid, PlanBook, PlanRung};
 pub use quant_search::{AccProvider, AnalyticAcc, MeasuredAcc};
 pub use strategy::{CutEdge, Strategy, TaskEval};
 pub use virtual_block::{chain_of, ChainNode};

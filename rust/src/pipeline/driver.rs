@@ -5,7 +5,9 @@
 //!
 //! - **virtual time** ([`run_virtual`], [`run_virtual_streams`]) — the
 //!   discrete-event simulation behind the paper-scale benches. Stage
-//!   occupancies come from the analytic [`StageModel`]; the clock jumps.
+//!   occupancies come from the analytic stage model of the stream's
+//!   [`ActivePlan`] handle (a live-switching plan portfolio, or the
+//!   classic fixed plan via [`ActivePlan::single`]); the clock jumps.
 //!   The multi-stream form interleaves all N streams on a global event
 //!   heap, with per-stream bounded in-flight windows mirroring the
 //!   wall-clock driver's queue backpressure ([`VirtualCfg`]).
@@ -30,16 +32,20 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::metrics::{MultiReport, RunReport, StageUsage, TaskOutcome};
+use crate::metrics::{
+    MultiReport, PlanTelemetry, RunReport, StageUsage, TaskOutcome,
+};
 use crate::model::{CostModel, ModelGraph};
 use crate::network::BandwidthModel;
 use crate::sim::SimTask;
 
 use super::policy::{Decision, OnlinePolicy, TaskView};
+use super::replan::ActivePlan;
 use super::stage::{
     bounded, BusyMeter, Clock, CloudStage, DeviceStage, DeviceVerdict,
     VirtualClock, VirtualQueue, WallClock,
 };
+#[cfg(test)]
 use super::stage_model::StageModel;
 
 // ---------------------------------------------------------------------
@@ -108,79 +114,111 @@ impl SharedStages {
 
 /// Outcome of one task's device stage in virtual time: the task either
 /// completed on-device, or a transmission is ready for the shared pass.
+/// The `Send` variant carries the ACTIVE plan's cloud-stage occupancies
+/// at decision time, so a plan switch between hand-off and link service
+/// cannot re-price a transmission already produced under the old cut.
 enum DeviceStep {
     Done(TaskOutcome),
-    Send { avail: f64, d_end: f64, bits: u8, wire_bytes: usize },
+    Send {
+        avail: f64,
+        d_end: f64,
+        bits: u8,
+        wire_bytes: usize,
+        t_c: f64,
+        t_c_par: f64,
+        result_elems: usize,
+    },
 }
 
 /// Advance one stream's device timeline by one task and consult the
 /// policy — the per-task device-stage logic shared by both virtual
-/// drivers. Admission control stays with the caller (both drivers check
-/// it against the shared link backlog before calling this). The policy
+/// drivers. Per-task stage occupancies come from the stream's
+/// [`ActivePlan`] handle; after the decision the plan's hysteresis
+/// observes the hand-off (a switch applies from the NEXT task's device
+/// stage, and re-prices the policy via `OnlinePolicy::replan`).
+/// Admission control stays with the caller (both drivers check it
+/// against the shared link backlog before calling this). The policy
 /// fires with the bandwidth estimate at `d_end`, the instant the task
 /// is handed to the link.
 #[allow(clippy::too_many_arguments)]
 fn device_step(
     dev_free: &mut f64,
     dev_busy: &mut f64,
-    sm: &StageModel,
+    plan: &mut ActivePlan,
     graph: &ModelGraph,
     cost: &CostModel,
     bw: &BandwidthModel,
     policy: &mut dyn OnlinePolicy,
     task: &SimTask,
 ) -> DeviceStep {
-    let d_start = dev_free.max(task.arrive);
-    let d_end = d_start + sm.t_e + sm.exit_check;
-    *dev_free = d_end;
-    *dev_busy += sm.t_e + sm.exit_check;
+    plan.note_task();
+    let (step, bw_est) = {
+        let sm = plan.sm();
+        let d_start = dev_free.max(task.arrive);
+        let d_end = d_start + sm.t_e + sm.exit_check;
+        *dev_free = d_end;
+        *dev_busy += sm.t_e + sm.exit_check;
 
-    // online decision at transmission time
-    let decision = policy.decide(TaskView {
-        separability: task.separability,
-        bw_est_mbps: bw.estimate_mbps(d_end),
-    });
-    // all-device strategy: no transmission, no cloud stage
-    let all_device = sm.cut_elems.is_empty() && sm.t_c == 0.0 && sm.t_e > 0.0;
-    let done = |exited: bool, correct: bool| {
-        DeviceStep::Done(TaskOutcome {
-            id: task.id,
-            arrive: task.arrive,
-            finish: d_end,
-            latency: d_end - task.arrive,
-            exited_early: exited,
-            bits: 0,
-            wire_bytes: 0,
-            label: task.label,
-            correct,
-        })
-    };
-    match decision {
-        Decision::Exit => {
-            policy.observe(true);
-            done(true, task.exit_correct)
-        }
-        Decision::Transmit { .. } if all_device => {
-            policy.observe(false);
-            done(false, true)
-        }
-        Decision::Transmit { bits } => {
-            policy.observe(false);
-            let wire_bytes = if sm.cut_elems.is_empty() {
-                // true all-cloud (no cut edges): raw input on the wire
-                cost.wire_bytes(graph.layers[graph.source()].out_elems, 32)
-            } else {
-                sm.wire_bytes(cost, bits)
-            };
-            DeviceStep::Send {
-                // link occupies from first cut availability
-                avail: d_start + sm.first_send_offset.min(sm.t_e),
-                d_end,
-                bits,
-                wire_bytes,
+        // online decision at transmission time
+        let bw_est = bw.estimate_mbps(d_end);
+        let decision = policy.decide(TaskView {
+            separability: task.separability,
+            bw_est_mbps: bw_est,
+        });
+        // all-device strategy: no transmission, no cloud stage
+        let all_device =
+            sm.cut_elems.is_empty() && sm.t_c == 0.0 && sm.t_e > 0.0;
+        let done = |exited: bool, correct: bool| {
+            DeviceStep::Done(TaskOutcome {
+                id: task.id,
+                arrive: task.arrive,
+                finish: d_end,
+                latency: d_end - task.arrive,
+                exited_early: exited,
+                bits: 0,
+                wire_bytes: 0,
+                label: task.label,
+                correct,
+            })
+        };
+        let step = match decision {
+            Decision::Exit => {
+                policy.observe(true);
+                done(true, task.exit_correct)
             }
-        }
+            Decision::Transmit { .. } if all_device => {
+                policy.observe(false);
+                done(false, true)
+            }
+            Decision::Transmit { bits } => {
+                policy.observe(false);
+                let wire_bytes = if sm.cut_elems.is_empty() {
+                    // true all-cloud (no cut edges): raw input on the wire
+                    cost.wire_bytes(graph.layers[graph.source()].out_elems, 32)
+                } else {
+                    sm.wire_bytes(cost, bits)
+                };
+                DeviceStep::Send {
+                    // link occupies from first cut availability
+                    avail: d_start + sm.first_send_offset.min(sm.t_e),
+                    d_end,
+                    bits,
+                    wire_bytes,
+                    t_c: sm.t_c,
+                    t_c_par: sm.t_c_par,
+                    result_elems: sm.result_elems,
+                }
+            }
+        };
+        (step, bw_est)
+    };
+    // the hand-off instant drives the re-planner: a switch takes effect
+    // for the tasks AFTER this one (this task's activation was produced
+    // under the old cut)
+    if plan.note_handoff(bw_est) {
+        policy.replan(plan.sm(), plan.base_bits());
     }
+    step
 }
 
 // ---------------------------------------------------------------------
@@ -193,11 +231,17 @@ fn device_step(
 /// shed frames instead of queueing without bound — the paper's
 /// continuous-task regime). Dropped tasks are counted in
 /// `RunReport::dropped`.
+///
+/// Per-task stage occupancies come from the [`ActivePlan`] handle: with
+/// [`ActivePlan::single`] this is the classic single-plan DES
+/// (bit-for-bit the pre-portfolio semantics); with a portfolio the
+/// active rung can switch at task hand-off instants
+/// (`RunReport::plan` reports the telemetry).
 #[allow(clippy::too_many_arguments)]
 pub fn run_virtual(
     g: &ModelGraph,
     cost: &CostModel,
-    sm: &StageModel,
+    plan: &mut ActivePlan,
     bw: &BandwidthModel,
     tasks: &[SimTask],
     policy: &mut dyn OnlinePolicy,
@@ -219,7 +263,7 @@ pub fn run_virtual(
         // ---- admission control ----------------------------------------
         if let Some(cap) = drop_after {
             let wait = (dev_free - task.arrive)
-                .max(shared.link_free - task.arrive - sm.t_e);
+                .max(shared.link_free - task.arrive - plan.sm().t_e);
             if wait > cap {
                 dropped += 1;
                 continue;
@@ -229,7 +273,7 @@ pub fn run_virtual(
         let step = device_step(
             &mut dev_free,
             &mut dev_busy,
-            sm,
+            plan,
             g,
             cost,
             bw,
@@ -238,19 +282,27 @@ pub fn run_virtual(
         );
         let outcome = match step {
             DeviceStep::Done(o) => o,
-            DeviceStep::Send { avail, d_end, bits, wire_bytes } => {
+            DeviceStep::Send {
+                avail,
+                d_end,
+                bits,
+                wire_bytes,
+                t_c,
+                t_c_par,
+                result_elems,
+            } => {
                 let svc = shared.transmit(
                     bw,
                     cost,
                     avail,
                     d_end,
                     wire_bytes,
-                    sm.t_c,
-                    sm.t_c_par,
-                    sm.result_elems,
+                    t_c,
+                    t_c_par,
+                    result_elems,
                 );
                 link_busy += svc.tx;
-                cloud_busy += sm.t_c;
+                cloud_busy += t_c;
                 TaskOutcome {
                     id: task.id,
                     arrive: task.arrive,
@@ -283,6 +335,7 @@ pub fn run_virtual(
         device: StageUsage { busy: dev_busy, span, stall: 0.0 },
         link: StageUsage { busy: link_busy, span, stall: 0.0 },
         cloud: StageUsage { busy: cloud_busy, span, stall: 0.0 },
+        plan: plan.telemetry(),
     }
 }
 
@@ -291,11 +344,12 @@ pub fn run_virtual(
 // ---------------------------------------------------------------------
 
 /// One device stream of the multi-stream virtual driver. Each stream
-/// has its own task arrivals, stage model (cut point / device speed) and
-/// policy state; all streams contend for one FIFO link and one cloud.
+/// has its own task arrivals, runtime plan handle (cut point / device
+/// speed, possibly a live-switching portfolio) and policy state; all
+/// streams contend for one FIFO link and one cloud.
 pub struct VirtualStream<'a> {
     pub tasks: &'a [SimTask],
-    pub sm: &'a StageModel,
+    pub plan: &'a mut ActivePlan,
     pub graph: &'a ModelGraph,
     pub cost: &'a CostModel,
     pub policy: &'a mut dyn OnlinePolicy,
@@ -326,7 +380,9 @@ pub struct VirtualCfg {
 }
 
 /// A transmission decided at device completion, awaiting its link
-/// hand-off (possibly stalled by the bounded in-flight window).
+/// hand-off (possibly stalled by the bounded in-flight window). Carries
+/// the cloud-stage occupancies of the plan it was produced under, so a
+/// live plan switch cannot re-price an in-flight transmission.
 struct PendingTx {
     id: usize,
     arrive: f64,
@@ -337,6 +393,9 @@ struct PendingTx {
     bits: u8,
     wire_bytes: usize,
     label: usize,
+    t_c: f64,
+    t_c_par: f64,
+    result_elems: usize,
 }
 
 /// Mutable per-stream state of the event loop.
@@ -475,7 +534,7 @@ pub fn run_virtual_streams(
                 // queue wait and the projected shared-link wait
                 if let Some(cap) = st.drop_after.or(cfg.drop_after) {
                     let wait = (s.dev_free - task.arrive)
-                        .max(shared.link_free - task.arrive - st.sm.t_e);
+                        .max(shared.link_free - task.arrive - st.plan.sm().t_e);
                     if wait > cap {
                         s.dropped += 1;
                         s.next += 1;
@@ -485,7 +544,7 @@ pub fn run_virtual_streams(
                 let step = device_step(
                     &mut s.dev_free,
                     &mut s.dev_busy,
-                    st.sm,
+                    st.plan,
                     st.graph,
                     st.cost,
                     bw,
@@ -497,7 +556,15 @@ pub fn run_virtual_streams(
                     // on-device completion: keep advancing (the next
                     // pickup is at or after this task's d_end)
                     DeviceStep::Done(o) => outcomes[si].push(o),
-                    DeviceStep::Send { avail, d_end, bits, wire_bytes } => {
+                    DeviceStep::Send {
+                        avail,
+                        d_end,
+                        bits,
+                        wire_bytes,
+                        t_c,
+                        t_c_par,
+                        result_elems,
+                    } => {
                         s.pending = Some(PendingTx {
                             id: task.id,
                             arrive: task.arrive,
@@ -506,6 +573,9 @@ pub fn run_virtual_streams(
                             bits,
                             wire_bytes,
                             label: task.label,
+                            t_c,
+                            t_c_par,
+                            result_elems,
                         });
                         heap.push(Reverse(EvKey {
                             t: d_end,
@@ -541,9 +611,9 @@ pub fn run_virtual_streams(
                     job.avail,
                     job.d_end,
                     job.wire_bytes,
-                    st.sm.t_c,
-                    st.sm.t_c_par,
-                    st.sm.result_elems,
+                    job.t_c,
+                    job.t_c_par,
+                    job.result_elems,
                 );
                 rt[si].window.push(svc.start);
                 // backpressure extends the device timeline: the stall
@@ -551,7 +621,7 @@ pub fn run_virtual_streams(
                 rt[si].stall += now - job.d_end;
                 rt[si].dev_free = rt[si].dev_free.max(now);
                 link_busy[si] += svc.tx;
-                cloud_busy[si] += st.sm.t_c;
+                cloud_busy[si] += job.t_c;
                 outcomes[si].push(TaskOutcome {
                     id: job.id,
                     arrive: job.arrive,
@@ -593,6 +663,7 @@ pub fn run_virtual_streams(
             },
             link: StageUsage { busy: link_busy[si], span, stall: 0.0 },
             cloud: StageUsage { busy: cloud_busy[si], span, stall: 0.0 },
+            plan: st.plan.telemetry(),
         });
     }
     MultiReport { per_stream }
@@ -689,65 +760,75 @@ where
         let out_tx = out_tx.clone();
         let meter = dev_busy[si].clone();
         let drop_after = cfg.drop_after;
-        device_handles.push(thread::spawn(move || -> (usize, Result<()>) {
-            let mut dropped = 0usize;
-            let run = (|| -> Result<()> {
-                let mut dev = factory()?;
-                for task in &tasks {
-                    while let Ok(fb) = fb_rx.try_recv() {
-                        dev.absorb(fb);
-                    }
-                    let now = clock.wait_until(task.arrive);
-                    if let Some(cap) = drop_after {
-                        if now - task.arrive > cap {
-                            dropped += 1;
-                            continue;
+        device_handles.push(thread::spawn(
+            move || -> (usize, PlanTelemetry, Result<()>) {
+                let mut dropped = 0usize;
+                let mut telemetry = PlanTelemetry::default();
+                let run = (|| -> Result<()> {
+                    let mut dev = factory()?;
+                    for task in &tasks {
+                        while let Ok(fb) = fb_rx.try_recv() {
+                            dev.absorb(fb);
                         }
-                    }
-                    let (verdict, busy) = dev.process(task)?;
-                    meter.add_secs(busy);
-                    match verdict {
-                        DeviceVerdict::Exit { label, correct } => {
-                            let finish = clock.now();
-                            let _ = out_tx.send((
-                                si,
-                                TaskOutcome {
-                                    id: task.id,
-                                    arrive: now,
-                                    finish,
-                                    latency: finish - now,
-                                    exited_early: true,
-                                    bits: 0,
-                                    wire_bytes: 0,
-                                    label,
-                                    correct,
-                                },
-                            ));
+                        let now = clock.wait_until(task.arrive);
+                        if let Some(cap) = drop_after {
+                            if now - task.arrive > cap {
+                                dropped += 1;
+                                continue;
+                            }
                         }
-                        DeviceVerdict::Transmit { wire, bits, wire_bytes } => {
-                            let item = LinkItem {
-                                stream: si,
-                                id: task.id,
-                                arrive: now,
+                        let (verdict, busy) = dev.process(task)?;
+                        meter.add_secs(busy);
+                        match verdict {
+                            DeviceVerdict::Exit { label, correct } => {
+                                let finish = clock.now();
+                                let _ = out_tx.send((
+                                    si,
+                                    TaskOutcome {
+                                        id: task.id,
+                                        arrive: now,
+                                        finish,
+                                        latency: finish - now,
+                                        exited_early: true,
+                                        bits: 0,
+                                        wire_bytes: 0,
+                                        label,
+                                        correct,
+                                    },
+                                ));
+                            }
+                            DeviceVerdict::Transmit {
+                                wire,
                                 bits,
                                 wire_bytes,
-                                label_hint: task.label,
-                                payload: wire,
-                            };
-                            if link_tx.send(item).is_err() {
-                                bail!(
-                                    "stream {si}: link stage terminated early"
-                                );
+                            } => {
+                                let item = LinkItem {
+                                    stream: si,
+                                    id: task.id,
+                                    arrive: now,
+                                    bits,
+                                    wire_bytes,
+                                    label_hint: task.label,
+                                    payload: wire,
+                                };
+                                if link_tx.send(item).is_err() {
+                                    bail!(
+                                        "stream {si}: link stage terminated \
+                                         early"
+                                    );
+                                }
                             }
                         }
                     }
-                }
-                Ok(())
-            })();
-            // the shed count survives an error — the caller reports it
-            // instead of a phantom 0 for the errored stream
-            (dropped, run)
-        }));
+                    telemetry = dev.plan_telemetry();
+                    Ok(())
+                })();
+                // the shed count survives an error — the caller reports
+                // it instead of a phantom 0 for the errored stream
+                // (plan telemetry is only read on clean completion)
+                (dropped, telemetry, run)
+            },
+        ));
     }
     drop(link_tx);
     let cloud_out_tx = out_tx.clone();
@@ -815,17 +896,23 @@ where
     }
 
     let mut dropped = Vec::with_capacity(n);
+    let mut plans: Vec<PlanTelemetry> = Vec::with_capacity(n);
     let mut first_err: Option<anyhow::Error> = None;
     for h in device_handles {
         match h.join() {
-            Ok((d, Ok(()))) => dropped.push(d),
-            Ok((d, Err(e))) => {
+            Ok((d, t, Ok(()))) => {
+                dropped.push(d);
+                plans.push(t);
+            }
+            Ok((d, t, Err(e))) => {
                 // the stream still reports its real shed count
                 dropped.push(d);
+                plans.push(t);
                 first_err.get_or_insert(e);
             }
             Err(_) => {
                 dropped.push(0);
+                plans.push(PlanTelemetry::default());
                 first_err.get_or_insert(anyhow::anyhow!("device thread panicked"));
             }
         }
@@ -864,6 +951,7 @@ where
             device: StageUsage { busy: dev_busy[si].secs(), span, stall: 0.0 },
             link: StageUsage { busy: link_busy[si].secs(), span, stall: 0.0 },
             cloud: StageUsage { busy: cloud_busy[si].secs(), span, stall: 0.0 },
+            plan: plans[si].clone(),
         });
     }
     Ok(MultiReport { per_stream })
@@ -873,23 +961,29 @@ where
 // Simulated-compute stages (wall clock, no PJRT)
 // ---------------------------------------------------------------------
 
-/// Wire payload of the simulated stages.
+/// Wire payload of the simulated stages: the label riding to the cloud
+/// plus the cloud busy-sleep seconds priced from the ORIGIN stream's
+/// active plan at decision time (per-item, so a live plan switch — or a
+/// heterogeneous fleet — prices each stream's own cloud stage).
 pub struct SimWire {
     pub label: usize,
+    pub t_c: f64,
 }
 
 /// Device stage with synthetic busy-sleep compute and the SHARED online
 /// policy — exercises the full wall-clock scheduling surface (queues,
-/// FIFO link, shared cloud, Eq. 10/11 decisions) on machines without
-/// compiled artifacts.
+/// FIFO link, shared cloud, Eq. 10/11 decisions, live re-planning) on
+/// machines without compiled artifacts. Stage occupancies come from the
+/// stream's [`ActivePlan`], mirroring the virtual drivers.
 pub struct SimDevice<P: OnlinePolicy> {
     pub policy: P,
-    /// device compute per task, seconds
-    pub t_e: f64,
+    /// runtime plan handle (single plan or live portfolio)
+    pub plan: ActivePlan,
     pub bw: BandwidthModel,
     pub clock: WallClock,
-    /// cut activation elements priced onto the wire
-    pub elems: usize,
+    /// raw-input elements priced when the active plan has no cut edges
+    /// (true all-cloud)
+    pub source_elems: usize,
     pub cost: CostModel,
 }
 
@@ -901,40 +995,60 @@ impl<P: OnlinePolicy> DeviceStage for SimDevice<P> {
         &mut self,
         task: &SimTask,
     ) -> Result<(DeviceVerdict<SimWire>, f64)> {
-        thread::sleep(Duration::from_secs_f64(self.t_e));
+        self.plan.note_task();
+        let (t_e, t_c, elems) = {
+            let sm = self.plan.sm();
+            let elems = if sm.cut_elems.is_empty() {
+                self.source_elems
+            } else {
+                sm.cut_elems.iter().sum()
+            };
+            (sm.t_e + sm.exit_check, sm.t_c, elems)
+        };
+        thread::sleep(Duration::from_secs_f64(t_e));
+        let bw_est = self.bw.estimate_mbps(self.clock.now());
         let view = TaskView {
             separability: task.separability,
-            bw_est_mbps: self.bw.estimate_mbps(self.clock.now()),
+            bw_est_mbps: bw_est,
         };
         let decision = self.policy.decide(view);
         self.policy.observe(matches!(decision, Decision::Exit));
+        // hand-off instant: the re-planner may switch the active rung
+        // for the NEXT task (this task's wire was produced on the old
+        // cut) and re-prices Eq. 11 via the policy hook
+        if self.plan.note_handoff(bw_est) {
+            self.policy.replan(self.plan.sm(), self.plan.base_bits());
+        }
         let verdict = match decision {
             Decision::Exit => DeviceVerdict::Exit {
                 label: task.label,
                 correct: task.exit_correct,
             },
             Decision::Transmit { bits } => DeviceVerdict::Transmit {
-                wire: SimWire { label: task.label },
+                wire: SimWire { label: task.label, t_c },
                 bits,
-                wire_bytes: self.cost.wire_bytes(self.elems, bits),
+                wire_bytes: self.cost.wire_bytes(elems, bits),
             },
         };
-        Ok((verdict, self.t_e))
+        Ok((verdict, t_e))
+    }
+
+    fn plan_telemetry(&self) -> PlanTelemetry {
+        self.plan.telemetry()
     }
 }
 
-/// Cloud stage with synthetic busy-sleep compute, shared by all streams.
-pub struct SimCloud {
-    /// cloud compute per task, seconds
-    pub t_c: f64,
-}
+/// Cloud stage with synthetic busy-sleep compute, shared by all
+/// streams; each item carries its own cloud seconds ([`SimWire::t_c`],
+/// priced from the origin stream's active plan).
+pub struct SimCloud;
 
 impl CloudStage for SimCloud {
     type Wire = SimWire;
     type Feedback = ();
 
     fn process(&mut self, wire: SimWire) -> Result<(usize, ())> {
-        thread::sleep(Duration::from_secs_f64(self.t_c));
+        thread::sleep(Duration::from_secs_f64(wire.t_c.max(0.0)));
         Ok((wire.label, ()))
     }
 }
@@ -947,6 +1061,7 @@ mod tests {
     use crate::model::DeviceProfile;
     use crate::network::Trace;
     use crate::partition::{AnalyticAcc, PartitionConfig};
+    use crate::pipeline::replan::PlanOption;
     use crate::pipeline::{Coach, CoachPolicy, ModelTransmitCost, StaticPolicy};
     use crate::sim::{generate, Correlation};
 
@@ -975,14 +1090,24 @@ mod tests {
         let tasks = generate(250, 2e-3, Correlation::Medium, 20, 5);
 
         let mut p1 = StaticPolicy { bits: 8, exit_threshold: 0.7 };
-        let legacy =
-            run_virtual(&g, &cost, &sm, &bw, &tasks, &mut p1, "x", Some(0.05));
+        let mut plan1 = ActivePlan::single(sm.clone());
+        let legacy = run_virtual(
+            &g,
+            &cost,
+            &mut plan1,
+            &bw,
+            &tasks,
+            &mut p1,
+            "x",
+            Some(0.05),
+        );
 
         let mut p2 = StaticPolicy { bits: 8, exit_threshold: 0.7 };
+        let mut plan2 = ActivePlan::single(sm.clone());
         let multi = run_virtual_streams(
             &mut [VirtualStream {
                 tasks: &tasks,
-                sm: &sm,
+                plan: &mut plan2,
                 graph: &g,
                 cost: &cost,
                 policy: &mut p2,
@@ -1029,15 +1154,26 @@ mod tests {
         // a pathological admission budget sheds every task at arrival;
         // the clock then never advances and the pre-fix span would be
         // 0 - first_arrive = -5s
-        let r =
-            run_virtual(&g, &cost, &sm, &bw, &tasks, &mut p, "x", Some(-10.0));
+        let mut plan = ActivePlan::single(sm.clone());
+        let r = run_virtual(
+            &g,
+            &cost,
+            &mut plan,
+            &bw,
+            &tasks,
+            &mut p,
+            "x",
+            Some(-10.0),
+        );
         assert_eq!(r.tasks.len(), 0);
         assert_eq!(r.dropped, 10);
         assert!(r.device.span >= 0.0, "span must not go negative");
         assert!((0.0..=1.0).contains(&r.device.utilization()));
         assert!((0.0..=1.0).contains(&r.bubble_ratio()));
 
-        let empty = run_virtual(&g, &cost, &sm, &bw, &[], &mut p, "x", None);
+        let mut plan = ActivePlan::single(sm.clone());
+        let empty =
+            run_virtual(&g, &cost, &mut plan, &bw, &[], &mut p, "x", None);
         assert_eq!(empty.tasks.len(), 0);
         assert_eq!(empty.device.span, 0.0);
     }
@@ -1064,12 +1200,15 @@ mod tests {
             (0..4).map(|i| generate(30, 4e-3, Correlation::Low, 20, i)).collect();
         let mut pols: Vec<StaticPolicy> =
             (0..4).map(|_| StaticPolicy::no_exit(8)).collect();
+        let mut plans: Vec<ActivePlan> =
+            (0..4).map(|_| ActivePlan::single(sm.clone())).collect();
         let mut streams: Vec<VirtualStream<'_>> = tls
             .iter()
             .zip(pols.iter_mut())
-            .map(|(tasks, pol)| VirtualStream {
+            .zip(plans.iter_mut())
+            .map(|((tasks, pol), plan)| VirtualStream {
                 tasks,
-                sm: &sm,
+                plan,
                 graph: &g,
                 cost: &cost,
                 policy: pol,
@@ -1150,12 +1289,15 @@ mod tests {
                 })
                 .collect();
             let mut pols: Vec<_> = (0..4).map(|_| mk_policy()).collect();
+            let mut plans: Vec<ActivePlan> =
+                (0..4).map(|_| ActivePlan::single(sm.clone())).collect();
             let mut streams: Vec<VirtualStream<'_>> = tls
                 .iter()
                 .zip(pols.iter_mut())
-                .map(|(tasks, pol)| VirtualStream {
+                .zip(plans.iter_mut())
+                .map(|((tasks, pol), plan)| VirtualStream {
                     tasks,
-                    sm: &sm,
+                    plan,
                     graph: &g,
                     cost: &cost,
                     policy: pol,
@@ -1216,10 +1358,11 @@ mod tests {
         let mk = |seed| generate(200, 1e-4, Correlation::Low, 20, seed);
         let tasks1 = mk(1);
         let mut p = StaticPolicy::no_exit(8);
+        let mut plan1 = ActivePlan::single(sm.clone());
         let single = run_virtual_streams(
             &mut [VirtualStream {
                 tasks: &tasks1,
-                sm: &sm,
+                plan: &mut plan1,
                 graph: &g,
                 cost: &cost,
                 policy: &mut p,
@@ -1234,12 +1377,15 @@ mod tests {
         let tls: Vec<Vec<SimTask>> = (0..4).map(|i| mk(10 + i)).collect();
         let mut pols: Vec<StaticPolicy> =
             (0..4).map(|_| StaticPolicy::no_exit(8)).collect();
+        let mut plans: Vec<ActivePlan> =
+            (0..4).map(|_| ActivePlan::single(sm.clone())).collect();
         let mut streams: Vec<VirtualStream<'_>> = tls
             .iter()
             .zip(pols.iter_mut())
-            .map(|(tasks, pol)| VirtualStream {
+            .zip(plans.iter_mut())
+            .map(|((tasks, pol), plan)| VirtualStream {
                 tasks,
-                sm: &sm,
+                plan,
                 graph: &g,
                 cost: &cost,
                 policy: pol,
@@ -1266,6 +1412,19 @@ mod tests {
         );
     }
 
+    /// A fixed-plan SimDevice stage model (the pre-portfolio fields).
+    fn sim_sm(t_e: f64, t_c: f64, elems: usize) -> StageModel {
+        StageModel {
+            t_e,
+            t_c,
+            first_send_offset: 0.0,
+            t_c_par: 0.0,
+            cut_elems: vec![elems],
+            result_elems: 10,
+            exit_check: 0.0,
+        }
+    }
+
     #[test]
     fn real_driver_conserves_tasks_across_streams() {
         let n_streams = 2;
@@ -1283,10 +1442,10 @@ mod tests {
                 let factory = move || -> Result<SimDevice<StaticPolicy>> {
                     Ok(SimDevice {
                         policy: StaticPolicy { bits: 8, exit_threshold: 0.8 },
-                        t_e: 0.002,
+                        plan: ActivePlan::single(sim_sm(0.002, 0.0005, 4096)),
                         bw,
                         clock,
-                        elems: 4096,
+                        source_elems: 4096,
                         cost,
                     })
                 };
@@ -1295,7 +1454,7 @@ mod tests {
             .collect();
         let multi = run_real::<SimDevice<StaticPolicy>, SimCloud, _, _>(
             streams,
-            || Ok(SimCloud { t_c: 0.0005 }),
+            || Ok(SimCloud),
             BandwidthModel::Static(50.0),
             clock,
             RealCfg { model: "sim".into(), ..Default::default() },
@@ -1356,7 +1515,7 @@ mod tests {
             vec![(tasks, || Ok(FailingDevice { fail_from: 5, t_e: 0.005 }))];
         let err = run_real::<FailingDevice, SimCloud, _, _>(
             streams,
-            || Ok(SimCloud { t_c: 0.0 }),
+            || Ok(SimCloud),
             BandwidthModel::Static(50.0),
             clock,
             RealCfg {
@@ -1395,17 +1554,17 @@ mod tests {
             move || -> Result<SimDevice<StaticPolicy>> {
                 Ok(SimDevice {
                     policy: StaticPolicy::no_exit(8),
-                    t_e: 0.0,
+                    plan: ActivePlan::single(sim_sm(0.0, 0.0, 1000)),
                     bw,
                     clock,
-                    elems: 1000,
+                    source_elems: 1000,
                     cost,
                 })
             }
         };
         let multi = run_real::<SimDevice<StaticPolicy>, SimCloud, _, _>(
             vec![(tasks, factory)],
-            || Ok(SimCloud { t_c: 0.0 }),
+            || Ok(SimCloud),
             bw,
             clock,
             RealCfg {
@@ -1430,5 +1589,257 @@ mod tests {
         }
         // the forward rtt is charged to the link busy meter (DES parity)
         assert!(r.link.busy >= 0.03 * n_tasks as f64 - 1e-6);
+    }
+
+    // ---- live re-planning (ActivePlan portfolio) -----------------------
+
+    /// A 2-rung ladder for deterministic switch tests: a small-cut
+    /// low-bandwidth plan and a big-cut high-bandwidth plan, boundary
+    /// at 10 Mbps.
+    fn two_rung_plan(k: usize) -> ActivePlan {
+        let opt = |elems: usize, design: f64, lo: f64, hi: f64| PlanOption {
+            sm: StageModel {
+                t_e: 0.004,
+                t_c: 0.001,
+                first_send_offset: 0.0,
+                t_c_par: 0.0,
+                cut_elems: vec![elems],
+                result_elems: 10,
+                exit_check: 0.0,
+            },
+            base_bits: 8,
+            design_bw: design,
+            lo_mbps: lo,
+            hi_mbps: hi,
+        };
+        ActivePlan::portfolio(
+            vec![
+                opt(100, 2.0, 0.0, 10.0),
+                opt(2000, 20.0, 10.0, f64::INFINITY),
+            ],
+            1,
+            k,
+        )
+    }
+
+    /// The stepped-trace plan-switch contract: with K = 3 the switch
+    /// fires on exactly the 3rd consecutive hand-off whose estimate
+    /// sits in the other regime, and applies from the NEXT task — so
+    /// the first small-wire task index is fully determined.
+    #[test]
+    fn des_plan_switch_fires_after_exactly_k_handoffs() {
+        let (g, cost, _) = setup();
+        let mut plan = two_rung_plan(3);
+        // 20 Mbps until t=0.1, then 2; the estimate lags 50 ms. Tasks
+        // arrive every 10 ms with a 4 ms device stage: d_end(i) =
+        // 0.01 i + 0.004, so tasks 0..=14 estimate 20 Mbps and tasks
+        // 15.. estimate 2 Mbps. Streak: 15, 16, 17 -> switch fires at
+        // task 17's hand-off; task 18 is the first on the small cut.
+        let bw = BandwidthModel::Stepped(Trace {
+            steps: vec![(0.0, 20.0), (0.1, 2.0)],
+        });
+        let tasks = generate(30, 0.01, Correlation::Low, 5, 1);
+        let mut pol = StaticPolicy::no_exit(8);
+        let r = run_virtual(
+            &g,
+            &cost,
+            &mut plan,
+            &bw,
+            &tasks,
+            &mut pol,
+            "replan",
+            None,
+        );
+        assert_eq!(r.tasks.len(), 30);
+        assert_eq!(r.plan.switches, 1, "exactly one switch");
+        assert_eq!(
+            r.plan.occupancy,
+            vec![12, 18],
+            "tasks 0..=17 on the stale rung, 18..=29 on the new one"
+        );
+        let big = cost.wire_bytes(2000, 8);
+        let small = cost.wire_bytes(100, 8);
+        assert_eq!(r.tasks[17].wire_bytes, big, "switch-task still old cut");
+        assert_eq!(r.tasks[18].wire_bytes, small, "next task on new cut");
+        assert!(r.tasks[..18].iter().all(|t| t.wire_bytes == big));
+        assert!(r.tasks[18..].iter().all(|t| t.wire_bytes == small));
+    }
+
+    /// A flapping trace (regime dwell shorter than K hand-offs) must
+    /// never switch — the hysteresis absorbs the jitter.
+    #[test]
+    fn des_plan_never_thrashes_on_a_flapping_trace() {
+        let (g, cost, _) = setup();
+        let mut plan = two_rung_plan(3);
+        // estimate flips regime every 2 hand-offs: dwell 20 ms vs the
+        // 10 ms hand-off cadence, K = 3
+        let mut steps = vec![(0.0, 20.0)];
+        let mut t = 0.1;
+        for i in 0..20 {
+            steps.push((t, if i % 2 == 0 { 2.0 } else { 20.0 }));
+            t += 0.02;
+        }
+        let bw = BandwidthModel::Stepped(Trace { steps });
+        let tasks = generate(40, 0.01, Correlation::Low, 5, 2);
+        let mut pol = StaticPolicy::no_exit(8);
+        let r = run_virtual(
+            &g,
+            &cost,
+            &mut plan,
+            &bw,
+            &tasks,
+            &mut pol,
+            "flap",
+            None,
+        );
+        assert_eq!(r.plan.switches, 0, "flapping estimate must not thrash");
+        assert_eq!(r.plan.occupancy, vec![0, 40]);
+    }
+
+    /// The multi-stream event driver consults the same per-stream
+    /// ActivePlan: one stream on a portfolio switches, its fixed-plan
+    /// neighbour does not, and both report their telemetry.
+    #[test]
+    fn des_fleet_streams_replan_independently() {
+        let (g, cost, _) = setup();
+        let bw = BandwidthModel::Stepped(Trace {
+            steps: vec![(0.0, 20.0), (0.1, 2.0)],
+        });
+        let tasks_a = generate(30, 0.01, Correlation::Low, 5, 3);
+        let tasks_b = generate(30, 0.01, Correlation::Low, 5, 4);
+        let mut plan_a = two_rung_plan(3);
+        let mut plan_b =
+            ActivePlan::single(two_rung_plan(3).options()[1].sm.clone());
+        let mut pol_a = StaticPolicy::no_exit(8);
+        let mut pol_b = StaticPolicy::no_exit(8);
+        let mut streams = [
+            VirtualStream {
+                tasks: &tasks_a,
+                plan: &mut plan_a,
+                graph: &g,
+                cost: &cost,
+                policy: &mut pol_a,
+                scheme: "replan".into(),
+                drop_after: None,
+            },
+            VirtualStream {
+                tasks: &tasks_b,
+                plan: &mut plan_b,
+                graph: &g,
+                cost: &cost,
+                policy: &mut pol_b,
+                scheme: "fixed".into(),
+                drop_after: None,
+            },
+        ];
+        let multi = run_virtual_streams(
+            &mut streams,
+            &bw,
+            VirtualCfg { queue_cap: None, drop_after: None },
+        );
+        assert!(multi.per_stream[0].plan.switches >= 1);
+        assert_eq!(multi.per_stream[1].plan.switches, 0);
+        let agg = multi.aggregate();
+        assert_eq!(
+            agg.plan.switches,
+            multi.per_stream[0].plan.switches,
+            "aggregate telemetry sums the streams"
+        );
+    }
+
+    // ---- single-stream DES behaviour (ported from the retired
+    //      pipeline::des veneer's test suite) -----------------------------
+
+    fn run_single(
+        g: &ModelGraph,
+        cost: &CostModel,
+        sm: &StageModel,
+        bw: &BandwidthModel,
+        tasks: &[SimTask],
+        policy: &mut dyn OnlinePolicy,
+    ) -> RunReport {
+        let mut plan = ActivePlan::single(sm.clone());
+        run_virtual(g, cost, &mut plan, bw, tasks, policy, "t", None)
+    }
+
+    #[test]
+    fn saturated_throughput_tracks_bottleneck() {
+        let (g, cost, sm) = setup();
+        let bw = BandwidthModel::Static(20.0);
+        // saturate: arrivals much faster than any stage
+        let tasks = generate(300, 1e-4, Correlation::Low, 20, 1);
+        let mut pol = StaticPolicy::no_exit(8);
+        let r = run_single(&g, &cost, &sm, &bw, &tasks, &mut pol);
+        let period = 1.0 / r.throughput();
+        let t_t8 = sm.t_transmit(&cost, &g, 8, 20.0, false);
+        let bottleneck = sm.t_e.max(t_t8).max(sm.t_c);
+        assert!(
+            (period - bottleneck).abs() / bottleneck < 0.25,
+            "period={period} bottleneck={bottleneck}"
+        );
+    }
+
+    #[test]
+    fn early_exit_raises_throughput() {
+        let (g, cost, sm) = setup();
+        let bw = BandwidthModel::Static(5.0);
+        let tasks = generate(400, 1e-4, Correlation::High, 20, 2);
+        let mut without = StaticPolicy::no_exit(8);
+        let r1 = run_single(&g, &cost, &sm, &bw, &tasks, &mut without);
+        let mut with = StaticPolicy { bits: 8, exit_threshold: 0.6 };
+        let r2 = run_single(&g, &cost, &sm, &bw, &tasks, &mut with);
+        assert!(r2.exit_ratio() > 0.2, "exit={}", r2.exit_ratio());
+        assert!(
+            r2.throughput() > r1.throughput(),
+            "{} !> {}",
+            r2.throughput(),
+            r1.throughput()
+        );
+    }
+
+    #[test]
+    fn lower_bits_cut_transmission_cost() {
+        let (g, cost, sm) = setup();
+        let bw = BandwidthModel::Static(10.0);
+        let tasks = generate(200, 1e-4, Correlation::Low, 20, 3);
+        let mut p8 = StaticPolicy::no_exit(8);
+        let mut p4 = StaticPolicy::no_exit(4);
+        let r8 = run_single(&g, &cost, &sm, &bw, &tasks, &mut p8);
+        let r4 = run_single(&g, &cost, &sm, &bw, &tasks, &mut p4);
+        assert!(r4.avg_wire_kb() < r8.avg_wire_kb() * 0.6);
+        assert!(r4.throughput() >= r8.throughput());
+    }
+
+    #[test]
+    fn unsaturated_latency_close_to_single_task() {
+        let (g, cost, sm) = setup();
+        let bw = BandwidthModel::Static(20.0);
+        // slow arrivals: no queueing
+        let tasks = generate(50, 1.0, Correlation::Low, 20, 4);
+        let mut pol = StaticPolicy::no_exit(8);
+        let r = run_single(&g, &cost, &sm, &bw, &tasks, &mut pol);
+        let single = sm.t_e
+            + sm.exit_check
+            + sm.t_transmit(&cost, &g, 8, 20.0, false)
+            + sm.t_c;
+        assert!(
+            r.avg_latency_ms() < (single * 1.4) * 1e3,
+            "avg={} single={}",
+            r.avg_latency_ms(),
+            single * 1e3
+        );
+    }
+
+    #[test]
+    fn bubbles_accumulate_when_unbalanced() {
+        let (g, cost, sm) = setup();
+        // very slow link: device+cloud idle a lot within the span
+        let bw = BandwidthModel::Static(0.5);
+        let tasks = generate(100, 1e-4, Correlation::Low, 20, 5);
+        let mut pol = StaticPolicy::no_exit(8);
+        let r = run_single(&g, &cost, &sm, &bw, &tasks, &mut pol);
+        assert!(r.device.utilization() < 0.5);
+        assert!(r.link.utilization() > 0.9);
+        assert!(r.total_bubbles() > 0.0);
     }
 }

@@ -7,23 +7,25 @@
 //!
 //! - [`policy`] — the ONE implementation of the online decision
 //!   (Eq. 10-11), consumed by the DES and the real server alike;
+//! - [`replan`] — the live re-planner: the [`replan::ActivePlan`]
+//!   handle per-task stage occupancies come from, with the shared
+//!   hysteresis switch rule over a plan-portfolio ladder
+//!   (ARCHITECTURE.md §Planner);
 //! - [`stage`] — clock abstraction, bounded hand-off queues, busy
 //!   meters, and the stage traits of the wall-clock driver;
 //! - [`driver`] — the virtual-time drivers (single- and multi-stream
 //!   DES) and the wall-clock multi-stream driver (real threads, shared
 //!   FIFO link + shared cloud);
-//! - [`des`] — DEPRECATED single-stream veneer over the core (the
-//!   supported front door is `crate::scenario::Scenario`);
 //! - [`stage_model`] — analytic per-task stage timings from a strategy.
+//!
+//! The supported front door is `crate::scenario::Scenario`.
 
-pub mod des;
 pub mod driver;
 pub mod policy;
+pub mod replan;
 pub mod stage;
 pub mod stage_model;
 
-#[allow(deprecated)]
-pub use des::{run_pipeline, run_pipeline_opts};
 pub use driver::{
     run_real, run_virtual, run_virtual_streams, RealCfg, VirtualCfg,
     VirtualStream,
@@ -32,6 +34,7 @@ pub use policy::{
     Coach, CoachPolicy, Decision, MeasuredTransmitCost, ModelTransmitCost,
     OnlinePolicy, StaticPolicy, TaskView, TransmitCost,
 };
+pub use replan::{ActivePlan, Hysteresis, PlanOption};
 pub use stage::{
     Clock, CloudStage, DeviceStage, DeviceVerdict, VirtualClock, VirtualQueue,
     WallClock,

@@ -48,6 +48,12 @@ pub trait OnlinePolicy {
     fn decide(&mut self, view: TaskView) -> Decision;
     /// called after the task's device stage completes (cache updates etc.)
     fn observe(&mut self, _exited: bool) {}
+    /// called when the live re-planner (pipeline::replan::ActivePlan)
+    /// switches the active plan: adopt the new stage model and offline
+    /// base precision so Eq. 11 prices against the new cut. Policy
+    /// state (warmup, caches) persists across the switch. Fixed
+    /// policies ignore it.
+    fn replan(&mut self, _sm: &StageModel, _base_bits: u8) {}
 }
 
 /// Boxed policies pass through the hook unchanged — the scenario layer
@@ -59,6 +65,10 @@ impl OnlinePolicy for Box<dyn OnlinePolicy + Send> {
 
     fn observe(&mut self, exited: bool) {
         (**self).observe(exited);
+    }
+
+    fn replan(&mut self, sm: &StageModel, base_bits: u8) {
+        (**self).replan(sm, base_bits);
     }
 }
 
@@ -93,6 +103,10 @@ pub trait TransmitCost {
     /// max of the other pipeline stages (device, cloud) — Eq. 11's
     /// no-bubble target T_t' must not exceed this
     fn stage_target(&self) -> f64;
+    /// adopt a new stage model after a live plan switch (analytic cost
+    /// models re-price; measured costs refresh themselves per decision
+    /// and ignore it)
+    fn set_stage_model(&mut self, _sm: &StageModel) {}
 }
 
 /// Eq. 11's Q_c selection: the highest precision in
@@ -201,6 +215,11 @@ impl TransmitCost for ModelTransmitCost {
     fn stage_target(&self) -> f64 {
         self.sm.t_e.max(self.sm.t_c)
     }
+
+    fn set_stage_model(&mut self, sm: &StageModel) {
+        self.all_cloud = sm.cut_elems.is_empty();
+        self.sm = sm.clone();
+    }
 }
 
 /// Measured transmission cost of one real serving stream: raw cut-tensor
@@ -242,6 +261,11 @@ impl<C: TransmitCost> OnlinePolicy for Coach<C> {
 
     fn observe(&mut self, exited: bool) {
         self.policy.observe(exited);
+    }
+
+    fn replan(&mut self, sm: &StageModel, base_bits: u8) {
+        self.cost.set_stage_model(sm);
+        self.policy.base_bits = base_bits;
     }
 }
 
@@ -322,6 +346,36 @@ mod tests {
         }
         assert_eq!(pol.policy.warmup_seen(), 80);
         assert_eq!(pol.decide(hot), Decision::Exit);
+    }
+
+    #[test]
+    fn replan_reprices_eq11_against_the_new_stage_model() {
+        let (tc, _base) = setup();
+        let th = Thresholds { s_ext: f64::INFINITY, s_adj: vec![-1.0; 6] };
+        let mut pol = Coach { policy: CoachPolicy::new(th, 8), cost: tc };
+        let view = TaskView { separability: 0.5, bw_est_mbps: 1.0 };
+        let before = match pol.decide(view) {
+            Decision::Transmit { bits } => bits,
+            Decision::Exit => panic!("s_ext=inf never exits"),
+        };
+        assert_eq!(before, 2, "stale big cut on a slow link falls to Q_r");
+        // live switch to a tiny-cut plan: full precision now hides
+        // under the stage target even at 1 Mbps
+        let small = StageModel {
+            t_e: 0.01,
+            t_c: 0.01,
+            first_send_offset: 0.0,
+            t_c_par: 0.0,
+            cut_elems: vec![64],
+            result_elems: 10,
+            exit_check: 0.0,
+        };
+        pol.replan(&small, 8);
+        let after = match pol.decide(view) {
+            Decision::Transmit { bits } => bits,
+            Decision::Exit => panic!("s_ext=inf never exits"),
+        };
+        assert_eq!(after, 8, "re-planned small cut restores full precision");
     }
 
     #[test]

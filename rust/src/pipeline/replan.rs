@@ -1,0 +1,348 @@
+//! Live re-planning: the offline cut as RUNTIME state.
+//!
+//! The offline portfolio (`partition::portfolio::PlanBook`) precomputes
+//! a ladder of strategies over a bandwidth grid; at runtime every
+//! driver holds an [`ActivePlan`] — the handle per-task stage
+//! occupancies come from — and consults a hysteresis rule at each task
+//! hand-off instant: when the bandwidth estimate has sat outside the
+//! active rung's regime for K consecutive hand-offs, the active rung
+//! switches and the online policy re-prices Eq. 11 against the new
+//! stage model (`OnlinePolicy::replan`). A single-option plan
+//! ([`ActivePlan::single`]) is the replan-off mode and is bit-for-bit
+//! identical to the pre-portfolio drivers.
+//!
+//! The [`Hysteresis`] core is shared with the real server
+//! (coordinator::server swaps a stream's cut live over its bw→cut
+//! ladder, reusing the per-cut calibration cache).
+
+use crate::metrics::PlanTelemetry;
+use crate::model::{CostModel, ModelGraph};
+use crate::partition::PlanBook;
+
+use super::stage_model::StageModel;
+
+/// One rung of the runtime ladder: the stage model priced at the rung's
+/// design bandwidth, the offline base precision of its strategy, and
+/// the bandwidth regime `[lo_mbps, hi_mbps)` it covers.
+#[derive(Debug, Clone)]
+pub struct PlanOption {
+    pub sm: StageModel,
+    pub base_bits: u8,
+    /// design bandwidth this option was planned at, Mbps
+    pub design_bw: f64,
+    /// regime lower bound (inclusive), Mbps — 0.0 on the first rung
+    pub lo_mbps: f64,
+    /// regime upper bound (exclusive), Mbps — INFINITY on the last rung
+    pub hi_mbps: f64,
+}
+
+/// The K-consecutive-observations switch rule, shared by the DES
+/// drivers ([`ActivePlan`]) and the real server's cut ladder: a switch
+/// fires on the K-th consecutive observation whose regime differs from
+/// the active one; any observation back inside the active regime (or in
+/// a different foreign regime) resets the streak, so a flapping
+/// estimate never thrashes.
+#[derive(Debug, Clone)]
+pub struct Hysteresis {
+    k: usize,
+    streak: usize,
+    candidate: usize,
+}
+
+impl Hysteresis {
+    pub fn new(k: usize) -> Hysteresis {
+        Hysteresis { k: k.max(1), streak: 0, candidate: usize::MAX }
+    }
+
+    /// Record one observation mapping to regime `target` while `active`
+    /// is live. Returns `Some(target)` exactly on the K-th consecutive
+    /// observation of the same foreign regime.
+    pub fn observe(&mut self, target: usize, active: usize) -> Option<usize> {
+        if target == active {
+            self.streak = 0;
+            self.candidate = usize::MAX;
+            return None;
+        }
+        if target == self.candidate {
+            self.streak += 1;
+        } else {
+            self.candidate = target;
+            self.streak = 1;
+        }
+        if self.streak >= self.k {
+            self.streak = 0;
+            self.candidate = usize::MAX;
+            Some(target)
+        } else {
+            None
+        }
+    }
+}
+
+/// The runtime plan handle of one stream: per-task stage occupancies
+/// come from `sm()`, and [`ActivePlan::note_handoff`] advances the
+/// hysteresis (switching the active rung when it fires). Telemetry
+/// (switch count, per-rung task share) is reported into
+/// `RunReport::plan`.
+#[derive(Debug, Clone)]
+pub struct ActivePlan {
+    options: Vec<PlanOption>,
+    active: usize,
+    hysteresis: Option<Hysteresis>,
+    switches: usize,
+    occupancy: Vec<usize>,
+}
+
+impl ActivePlan {
+    /// Replan-off mode: one fixed plan for the whole run (the exact
+    /// pre-portfolio driver semantics).
+    pub fn single(sm: StageModel) -> ActivePlan {
+        ActivePlan {
+            options: vec![PlanOption {
+                sm,
+                base_bits: 8,
+                design_bw: 0.0,
+                lo_mbps: 0.0,
+                hi_mbps: f64::INFINITY,
+            }],
+            active: 0,
+            hysteresis: None,
+            switches: 0,
+            occupancy: vec![0],
+        }
+    }
+
+    /// Set the (single) option's offline base precision — only read
+    /// back through [`ActivePlan::base_bits`] when assembling policies.
+    pub fn with_base_bits(mut self, bits: u8) -> ActivePlan {
+        for o in &mut self.options {
+            o.base_bits = bits;
+        }
+        self
+    }
+
+    /// A live portfolio over `options` (ascending in design bandwidth,
+    /// contiguous regimes), starting at rung `initial`, switching after
+    /// `k` consecutive out-of-regime hand-offs.
+    pub fn portfolio(
+        options: Vec<PlanOption>,
+        initial: usize,
+        k: usize,
+    ) -> ActivePlan {
+        assert!(!options.is_empty(), "a plan needs at least one option");
+        let active = initial.min(options.len() - 1);
+        ActivePlan {
+            occupancy: vec![0; options.len()],
+            active,
+            hysteresis: Some(Hysteresis::new(k)),
+            switches: 0,
+            options,
+        }
+    }
+
+    /// Build the runtime ladder from an offline [`PlanBook`]: each rung
+    /// priced at its own design bandwidth, regime boundaries at the
+    /// geometric midpoints, initial rung = the one covering
+    /// `initial_bw_mbps` (the scenario's — possibly stale — plan
+    /// bandwidth).
+    pub fn from_book(
+        book: &PlanBook,
+        g: &ModelGraph,
+        cost: &CostModel,
+        initial_bw_mbps: f64,
+        k: usize,
+    ) -> ActivePlan {
+        let n = book.rungs.len();
+        let mut options = Vec::with_capacity(n);
+        for (i, rung) in book.rungs.iter().enumerate() {
+            let lo = if i == 0 {
+                0.0
+            } else {
+                (book.rungs[i - 1].bw_hi * rung.bw_lo).sqrt()
+            };
+            let hi = if i + 1 == n {
+                f64::INFINITY
+            } else {
+                (rung.bw_hi * book.rungs[i + 1].bw_lo).sqrt()
+            };
+            options.push(PlanOption {
+                sm: StageModel::from_strategy(
+                    g,
+                    cost,
+                    &rung.strategy,
+                    rung.bw_design,
+                ),
+                base_bits: rung.strategy.base_bits(),
+                design_bw: rung.bw_design,
+                lo_mbps: lo,
+                hi_mbps: hi,
+            });
+        }
+        let initial = book.rung_for(initial_bw_mbps);
+        ActivePlan::portfolio(options, initial, k)
+    }
+
+    /// Stage model of the active rung — the per-task occupancies every
+    /// driver prices with.
+    pub fn sm(&self) -> &StageModel {
+        &self.options[self.active].sm
+    }
+
+    /// Offline base precision of the active rung.
+    pub fn base_bits(&self) -> u8 {
+        self.options[self.active].base_bits
+    }
+
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    pub fn options(&self) -> &[PlanOption] {
+        &self.options
+    }
+
+    /// Rung whose regime covers `bw` (regimes are contiguous).
+    fn regime_of(&self, bw: f64) -> usize {
+        self.options
+            .iter()
+            .position(|o| bw < o.hi_mbps)
+            .unwrap_or(self.options.len() - 1)
+    }
+
+    /// Count one task against the active rung's occupancy (call at the
+    /// task's device-stage pickup, before any switch this task causes).
+    pub fn note_task(&mut self) {
+        self.occupancy[self.active] += 1;
+    }
+
+    /// One hand-off instant with bandwidth estimate `bw_est_mbps`:
+    /// advance the hysteresis; returns true when the active rung just
+    /// switched (the caller re-prices its policy via
+    /// `OnlinePolicy::replan`). No-op in replan-off mode.
+    pub fn note_handoff(&mut self, bw_est_mbps: f64) -> bool {
+        if self.hysteresis.is_none() || self.options.len() < 2 {
+            return false;
+        }
+        let target = self.regime_of(bw_est_mbps);
+        let active = self.active;
+        let h = self.hysteresis.as_mut().expect("checked above");
+        match h.observe(target, active) {
+            Some(next) => {
+                self.active = next;
+                self.switches += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn telemetry(&self) -> PlanTelemetry {
+        PlanTelemetry {
+            switches: self.switches,
+            occupancy: self.occupancy.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sm(t_e: f64, elems: usize) -> StageModel {
+        StageModel {
+            t_e,
+            t_c: 0.001,
+            first_send_offset: 0.0,
+            t_c_par: 0.0,
+            cut_elems: vec![elems],
+            result_elems: 10,
+            exit_check: 0.0,
+        }
+    }
+
+    fn two_rungs() -> Vec<PlanOption> {
+        vec![
+            PlanOption {
+                sm: sm(0.004, 100),
+                base_bits: 4,
+                design_bw: 2.0,
+                lo_mbps: 0.0,
+                hi_mbps: 10.0,
+            },
+            PlanOption {
+                sm: sm(0.002, 2000),
+                base_bits: 8,
+                design_bw: 20.0,
+                lo_mbps: 10.0,
+                hi_mbps: f64::INFINITY,
+            },
+        ]
+    }
+
+    #[test]
+    fn switch_fires_on_exactly_the_kth_consecutive_handoff() {
+        let mut plan = ActivePlan::portfolio(two_rungs(), 1, 3);
+        assert_eq!(plan.active(), 1);
+        assert!(!plan.note_handoff(20.0), "in regime: no streak");
+        assert!(!plan.note_handoff(4.0), "streak 1");
+        assert!(!plan.note_handoff(4.0), "streak 2");
+        assert!(plan.note_handoff(4.0), "streak 3 = K: switch");
+        assert_eq!(plan.active(), 0);
+        assert_eq!(plan.base_bits(), 4);
+        assert_eq!(plan.telemetry().switches, 1);
+        // and back up after K more
+        assert!(!plan.note_handoff(50.0));
+        assert!(!plan.note_handoff(50.0));
+        assert!(plan.note_handoff(50.0));
+        assert_eq!(plan.active(), 1);
+    }
+
+    #[test]
+    fn flapping_estimate_never_thrashes() {
+        let mut plan = ActivePlan::portfolio(two_rungs(), 1, 3);
+        // alternating regimes: the streak resets before reaching K
+        for _ in 0..50 {
+            assert!(!plan.note_handoff(4.0));
+            assert!(!plan.note_handoff(4.0));
+            assert!(!plan.note_handoff(25.0));
+        }
+        assert_eq!(plan.active(), 1);
+        assert_eq!(plan.telemetry().switches, 0);
+    }
+
+    #[test]
+    fn single_plan_never_switches_and_counts_occupancy() {
+        let mut plan = ActivePlan::single(sm(0.001, 10)).with_base_bits(6);
+        assert_eq!(plan.base_bits(), 6);
+        for _ in 0..10 {
+            plan.note_task();
+            assert!(!plan.note_handoff(0.01));
+        }
+        let t = plan.telemetry();
+        assert_eq!(t.switches, 0);
+        assert_eq!(t.occupancy, vec![10]);
+    }
+
+    #[test]
+    fn occupancy_tracks_the_rung_a_task_ran_under() {
+        let mut plan = ActivePlan::portfolio(two_rungs(), 1, 2);
+        for i in 0..6 {
+            plan.note_task();
+            plan.note_handoff(if i < 3 { 20.0 } else { 3.0 });
+        }
+        // tasks 0-4 ran on rung 1 (the switch fires at task 4's
+        // hand-off, after its pickup was counted); task 5 on rung 0
+        let t = plan.telemetry();
+        assert_eq!(t.switches, 1);
+        assert_eq!(t.occupancy, vec![1, 5]);
+    }
+
+    #[test]
+    fn regime_lookup_is_contiguous() {
+        let plan = ActivePlan::portfolio(two_rungs(), 0, 1);
+        assert_eq!(plan.regime_of(0.0), 0);
+        assert_eq!(plan.regime_of(9.99), 0);
+        assert_eq!(plan.regime_of(10.0), 1);
+        assert_eq!(plan.regime_of(1e9), 1);
+    }
+}

@@ -12,6 +12,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::metrics::PlanTelemetry;
 use crate::sim::SimTask;
 
 // ---------------------------------------------------------------------
@@ -326,6 +327,13 @@ pub trait DeviceStage {
 
     /// Fold a completed task's result back into stream state.
     fn absorb(&mut self, _feedback: Self::Feedback) {}
+
+    /// Live re-planning telemetry of this stream (switch count and
+    /// per-rung task share), collected by the driver when the stream
+    /// finishes. Stages without a plan ladder report the default.
+    fn plan_telemetry(&self) -> PlanTelemetry {
+        PlanTelemetry::default()
+    }
 }
 
 /// Cloud-side completion shared by every stream (one instance, one

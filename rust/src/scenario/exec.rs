@@ -6,6 +6,12 @@
 //! drivers (see tests/scenario_e2e.rs golden tests): the same
 //! `plan_cfg` SLO rule, the same `common_period` load rule, the same
 //! policy assembly, the same `run_virtual` call.
+//!
+//! Every execution builds ONE graph and one memoized
+//! [`SearchCtx`] and threads it through the whole compilation —
+//! the SLO rule, the plan, the load rule and the (optional) plan
+//! portfolio all share the chain decomposition and the candidate
+//! memos instead of re-deriving them per call.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -13,16 +19,20 @@ use crate::baselines::Scheme;
 use crate::cache::Thresholds;
 use crate::coordinator::online::coach_des;
 use crate::coordinator::server::{
-    serve_streams, SchemePolicy, ServeCfg, ServeResult, StreamCfg,
+    serve_streams, SchemePolicy, ServeCfg, ServeReplan, ServeResult, StreamCfg,
 };
 use crate::metrics::{MultiReport, RunReport};
 use crate::model::{topology, CostModel, ModelGraph};
-use crate::partition::{AnalyticAcc, PartitionConfig, Strategy};
+use crate::partition::{
+    log_grid, AnalyticAcc, PartitionConfig, PlanBook, SearchCtx, Strategy,
+};
 use crate::pipeline::driver::{
     run_real, run_virtual, run_virtual_streams, RealCfg, SimCloud, SimDevice,
     VirtualCfg, VirtualStream,
 };
-use crate::pipeline::{OnlinePolicy, StageModel, StaticPolicy, WallClock};
+use crate::pipeline::{
+    ActivePlan, OnlinePolicy, StageModel, StaticPolicy, WallClock,
+};
 use crate::runtime::Manifest;
 use crate::sim::{generate, SimTask};
 
@@ -58,7 +68,8 @@ pub fn plan_cfg(
     if scheme != Scheme::Coach {
         return Ok(base);
     }
-    paper_slo(g, cost, base)
+    let mut ctx = SearchCtx::new(g)?;
+    paper_slo(&mut ctx, g, cost, base)
 }
 
 /// The Eq. 3 rule itself: T_max = 1.6x the stage sum of the
@@ -66,11 +77,12 @@ pub fn plan_cfg(
 /// the ONE implementation behind both [`plan_cfg`] and the scenario
 /// `Slo::Paper` mode.
 fn paper_slo(
+    ctx: &mut SearchCtx,
     g: &ModelGraph,
     cost: &CostModel,
     base: PartitionConfig,
 ) -> Result<PartitionConfig> {
-    let lat_min = Scheme::Spinn.plan(g, cost, &AnalyticAcc, &base)?;
+    let lat_min = Scheme::Spinn.plan_with(ctx, g, cost, &AnalyticAcc, &base)?;
     let sum = lat_min.eval.t_e + lat_min.eval.t_t + lat_min.eval.t_c;
     Ok(PartitionConfig { t_max: sum * 1.6, ..base })
 }
@@ -78,12 +90,13 @@ fn paper_slo(
 /// The COACH plan's bottleneck stage time at `bw_mbps` — the basis of
 /// the common-load arrival periods.
 fn bottleneck_period(
+    ctx: &mut SearchCtx,
     g: &ModelGraph,
     cost: &CostModel,
     bw_mbps: f64,
 ) -> Result<f64> {
     let cfg = PartitionConfig { bw_mbps, ..Default::default() };
-    let coach = Scheme::Coach.plan(g, cost, &AnalyticAcc, &cfg)?;
+    let coach = Scheme::Coach.plan_with(ctx, g, cost, &AnalyticAcc, &cfg)?;
     let sm = StageModel::from_strategy(g, cost, &coach, bw_mbps);
     let t_t = sm.t_transmit(
         cost,
@@ -103,18 +116,23 @@ pub fn common_period(
     cost: &CostModel,
     bw_mbps: f64,
 ) -> Result<f64> {
-    Ok(bottleneck_period(g, cost, bw_mbps)? * 1.1 + 1e-4)
+    let mut ctx = SearchCtx::new(g)?;
+    Ok(bottleneck_period(&mut ctx, g, cost, bw_mbps)? * 1.1 + 1e-4)
 }
 
 /// A scenario compiled for the single-stream DES: the offline plan and
 /// task stream, reusable across runs (each [`SimPlan::run`] builds a
-/// fresh policy, so repeated runs are independent and identical).
+/// fresh policy and clones the plan handle, so repeated runs are
+/// independent and identical).
 pub struct SimPlan {
     scenario: Scenario,
     pub graph: ModelGraph,
     pub cost: CostModel,
     pub strategy: Strategy,
     pub stage_model: StageModel,
+    /// the runtime plan handle: single-plan (replan off) or the
+    /// portfolio ladder with its hysteresis configuration
+    pub plan: ActivePlan,
     pub tasks: Vec<SimTask>,
     pub period: f64,
     pub drop_after: Option<f64>,
@@ -122,7 +140,7 @@ pub struct SimPlan {
 
 /// One compiled stream of a fleet scenario (simulate_fleet/serve_sim).
 struct FleetStream {
-    sm: StageModel,
+    plan: ActivePlan,
     cost: CostModel,
     tasks: Vec<SimTask>,
     policy: Box<dyn OnlinePolicy + Send>,
@@ -133,16 +151,17 @@ struct FleetStream {
 impl SimPlan {
     /// Execute the compiled scenario once on the virtual-time driver.
     pub fn run(&self) -> RunReport {
+        let mut plan = self.plan.clone();
         let mut policy = self.scenario.make_policy(
-            &self.strategy,
-            &self.stage_model,
+            plan.base_bits(),
+            plan.sm(),
             &self.cost,
             &self.graph,
         );
         run_virtual(
             &self.graph,
             &self.cost,
-            &self.stage_model,
+            &mut plan,
             &self.scenario.bandwidth,
             &self.tasks,
             policy.as_mut(),
@@ -195,6 +214,7 @@ impl Scenario {
 
     fn partition_cfg(
         &self,
+        ctx: &mut SearchCtx,
         g: &ModelGraph,
         cost: &CostModel,
         bw_mbps: f64,
@@ -208,7 +228,7 @@ impl Scenario {
                 if self.scheme != Scheme::Coach {
                     base
                 } else {
-                    paper_slo(g, cost, base)?
+                    paper_slo(ctx, g, cost, base)?
                 }
             }
         })
@@ -218,13 +238,15 @@ impl Scenario {
     pub fn plan(&self) -> Result<Strategy> {
         let g = self.resolve_graph()?;
         let cost = self.cost_model(1.0);
+        let mut ctx = SearchCtx::new(&g)?;
         let bw = self.plan_bandwidth();
-        let cfg = self.partition_cfg(&g, &cost, bw)?;
-        self.scheme.plan(&g, &cost, &AnalyticAcc, &cfg)
+        let cfg = self.partition_cfg(&mut ctx, &g, &cost, bw)?;
+        self.scheme.plan_with(&mut ctx, &g, &cost, &AnalyticAcc, &cfg)
     }
 
     fn resolve_period(
         &self,
+        ctx: &mut SearchCtx,
         g: &ModelGraph,
         cost: &CostModel,
         bw_mbps: f64,
@@ -233,15 +255,17 @@ impl Scenario {
             PeriodSpec::Secs(p) => Ok(p),
             PeriodSpec::Saturated => Ok(1e-5),
             PeriodSpec::OfBottleneck(factor) => {
-                Ok(bottleneck_period(g, cost, bw_mbps)? * factor + 1e-4)
+                Ok(bottleneck_period(ctx, g, cost, bw_mbps)? * factor + 1e-4)
             }
         }
     }
 
-    /// Assemble the online policy the scenario's scheme prescribes.
+    /// Assemble the online policy the scenario's scheme prescribes,
+    /// priced against (the active rung's) stage model and offline base
+    /// precision.
     pub(crate) fn make_policy(
         &self,
-        strat: &Strategy,
+        base_bits: u8,
         sm: &StageModel,
         cost: &CostModel,
         g: &ModelGraph,
@@ -253,7 +277,7 @@ impl Scenario {
             PolicySpec::Scheme => match self.scheme {
                 Scheme::Coach => Box::new(coach_des(
                     self.thresholds.clone(),
-                    strat.base_bits(),
+                    base_bits,
                     sm.clone(),
                     cost.clone(),
                     g.clone(),
@@ -269,17 +293,57 @@ impl Scenario {
         }
     }
 
+    /// Build the runtime plan handle: replan off = one fixed plan (the
+    /// bit-for-bit classic semantics); replan on = the portfolio ladder
+    /// from a `PlanBook` built over the `[replan]` grid through the
+    /// SAME memoized search ctx, starting on the rung covering the
+    /// (possibly stale) plan bandwidth.
+    fn runtime_plan(
+        &self,
+        ctx: &mut SearchCtx,
+        g: &ModelGraph,
+        cost: &CostModel,
+        cfg: &PartitionConfig,
+        strategy: &Strategy,
+        stage_model: &StageModel,
+    ) -> Result<ActivePlan> {
+        let Some(spec) = &self.replan else {
+            return Ok(ActivePlan::single(stage_model.clone())
+                .with_base_bits(strategy.base_bits()));
+        };
+        let grid = log_grid(spec.lo_mbps, spec.hi_mbps, spec.rungs);
+        let book = PlanBook::build_with(&grid, |bw| {
+            let rung_cfg = PartitionConfig { bw_mbps: bw, ..cfg.clone() };
+            self.scheme.plan_with(ctx, g, cost, &AnalyticAcc, &rung_cfg)
+        })?;
+        Ok(ActivePlan::from_book(
+            &book,
+            g,
+            cost,
+            self.plan_bandwidth(),
+            spec.k,
+        ))
+    }
+
     /// Compile the scenario for the single-stream DES (plan once, run
     /// many times — see [`SimPlan`]).
     pub fn compile(&self) -> Result<SimPlan> {
         let g = self.resolve_graph()?;
         let cost = self.cost_model(1.0);
+        let mut ctx = SearchCtx::new(&g)?;
         let plan_bw = self.plan_bandwidth();
-        let cfg = self.partition_cfg(&g, &cost, plan_bw)?;
-        let strategy = self.scheme.plan(&g, &cost, &AnalyticAcc, &cfg)?;
-        let stage_model =
-            StageModel::from_strategy(&g, &cost, &strategy, self.stage_bandwidth());
-        let period = self.resolve_period(&g, &cost, plan_bw)?;
+        let cfg = self.partition_cfg(&mut ctx, &g, &cost, plan_bw)?;
+        let strategy =
+            self.scheme.plan_with(&mut ctx, &g, &cost, &AnalyticAcc, &cfg)?;
+        let stage_model = StageModel::from_strategy(
+            &g,
+            &cost,
+            &strategy,
+            self.stage_bandwidth(),
+        );
+        let plan =
+            self.runtime_plan(&mut ctx, &g, &cost, &cfg, &strategy, &stage_model)?;
+        let period = self.resolve_period(&mut ctx, &g, &cost, plan_bw)?;
         let drop_after = self.admission.resolve(period);
         let tasks = generate(
             self.workload.n_tasks,
@@ -294,6 +358,7 @@ impl Scenario {
             cost,
             strategy,
             stage_model,
+            plan,
             tasks,
             period,
             drop_after,
@@ -306,12 +371,13 @@ impl Scenario {
         Ok(self.compile()?.run())
     }
 
-    /// Compile one fleet stream: plan + stage model + tasks + policy,
-    /// with the admission threshold resolved against the STREAM's own
-    /// arrival period (a slow stream's `drop_after_periods` bound must
-    /// not shrink to the base cadence).
+    /// Compile one fleet stream: plan + runtime plan handle + tasks +
+    /// policy, with the admission threshold resolved against the
+    /// STREAM's own arrival period (a slow stream's
+    /// `drop_after_periods` bound must not shrink to the base cadence).
     fn compile_stream(
         &self,
+        ctx: &mut SearchCtx,
         g: &ModelGraph,
         spec: &StreamSpec,
         index: usize,
@@ -319,10 +385,12 @@ impl Scenario {
     ) -> Result<FleetStream> {
         let cost = self.cost_model(spec.scale);
         let plan_bw = self.plan_bandwidth();
-        let cfg = self.partition_cfg(g, &cost, plan_bw)?;
-        let strat = self.scheme.plan(g, &cost, &AnalyticAcc, &cfg)?;
+        let cfg = self.partition_cfg(ctx, g, &cost, plan_bw)?;
+        let strat =
+            self.scheme.plan_with(ctx, g, &cost, &AnalyticAcc, &cfg)?;
         let sm =
             StageModel::from_strategy(g, &cost, &strat, self.stage_bandwidth());
+        let plan = self.runtime_plan(ctx, g, &cost, &cfg, &strat, &sm)?;
         let period = spec.period.unwrap_or(base_period);
         let seed = spec.seed.unwrap_or_else(|| {
             self.workload.seed.wrapping_add(101 * index as u64)
@@ -334,14 +402,52 @@ impl Scenario {
             self.workload.n_classes,
             seed,
         );
-        let policy = self.make_policy(&strat, &sm, &cost, g);
+        let policy = self.make_policy(plan.base_bits(), plan.sm(), &cost, g);
         Ok(FleetStream {
-            sm,
+            plan,
             cost,
             tasks,
             policy,
             drop_after: self.admission.resolve(period),
         })
+    }
+
+    /// Compile every stream of the fleet, sharing one memoized search
+    /// ctx per DISTINCT device scale (a scale changes the cost model,
+    /// which invalidates the candidate memos but not the chain
+    /// decomposition — equal-scale streams reuse one fork, so a
+    /// homogeneous slow fleet still plans once).
+    fn compile_fleet(
+        &self,
+        ctx: &mut SearchCtx,
+        g: &ModelGraph,
+        base_period: f64,
+    ) -> Result<Vec<FleetStream>> {
+        let specs = self.stream_specs();
+        let mut built = Vec::with_capacity(specs.len());
+        let mut forks: Vec<(u64, SearchCtx)> = Vec::new();
+        for (i, spec) in specs.iter().enumerate() {
+            if spec.scale == 1.0 {
+                built.push(self.compile_stream(ctx, g, spec, i, base_period)?);
+            } else {
+                let key = spec.scale.to_bits();
+                let idx = match forks.iter().position(|(k, _)| *k == key) {
+                    Some(idx) => idx,
+                    None => {
+                        forks.push((key, ctx.fork()));
+                        forks.len() - 1
+                    }
+                };
+                built.push(self.compile_stream(
+                    &mut forks[idx].1,
+                    g,
+                    spec,
+                    i,
+                    base_period,
+                )?);
+            }
+        }
+        Ok(built)
     }
 
     /// Run the scenario's fleet through the event-driven multi-stream
@@ -354,20 +460,16 @@ impl Scenario {
     pub fn simulate_fleet(&self) -> Result<MultiReport> {
         let g = self.resolve_graph()?;
         let base_cost = self.cost_model(1.0);
+        let mut ctx = SearchCtx::new(&g)?;
         let base_period =
-            self.resolve_period(&g, &base_cost, self.plan_bandwidth())?;
-        let specs = self.stream_specs();
-
-        let mut built = Vec::with_capacity(specs.len());
-        for (i, spec) in specs.iter().enumerate() {
-            built.push(self.compile_stream(&g, spec, i, base_period)?);
-        }
+            self.resolve_period(&mut ctx, &g, &base_cost, self.plan_bandwidth())?;
+        let mut built = self.compile_fleet(&mut ctx, &g, base_period)?;
         let label = self.report_label();
         let mut streams: Vec<VirtualStream<'_>> = built
             .iter_mut()
             .map(|b| VirtualStream {
                 tasks: b.tasks.as_slice(),
-                sm: &b.sm,
+                plan: &mut b.plan,
                 graph: &g,
                 cost: &b.cost,
                 policy: b.policy.as_mut(),
@@ -391,7 +493,10 @@ impl Scenario {
     /// *simulated* compute: busy-sleep device/cloud stages priced from
     /// the same analytic plan the DES uses, one thread per stream, a
     /// FIFO link thread and ONE shared cloud thread. Exercises the full
-    /// real-serving scheduling surface on any machine (no artifacts).
+    /// real-serving scheduling surface on any machine (no artifacts) —
+    /// including live re-planning (each `SimDevice` carries its own
+    /// `ActivePlan`, and the shared cloud prices each item's own
+    /// cloud seconds).
     ///
     /// Limitation: the wall-clock driver applies ONE admission
     /// threshold to every stream, so `Admission::AfterPeriods` resolves
@@ -400,35 +505,29 @@ impl Scenario {
     pub fn serve_sim(&self) -> Result<MultiReport> {
         let g = self.resolve_graph()?;
         let base_cost = self.cost_model(1.0);
+        let mut ctx = SearchCtx::new(&g)?;
         let base_period =
-            self.resolve_period(&g, &base_cost, self.plan_bandwidth())?;
-        let specs = self.stream_specs();
+            self.resolve_period(&mut ctx, &g, &base_cost, self.plan_bandwidth())?;
+        let built = self.compile_fleet(&mut ctx, &g, base_period)?;
         let clock = WallClock::new();
-
-        let mut built = Vec::with_capacity(specs.len());
-        for (i, spec) in specs.iter().enumerate() {
-            built.push(self.compile_stream(&g, spec, i, base_period)?);
-        }
-        // the shared cloud stage serves every stream at the slowest
-        // stream's per-task cloud time
-        let t_c = built.iter().map(|b| b.sm.t_c).fold(0.0f64, f64::max);
         let source_elems = g.layers[g.source()].out_elems;
 
         let streams: Vec<(Vec<SimTask>, _)> = built
             .into_iter()
             .map(|b| {
-                let FleetStream { sm, cost, tasks, policy, .. } = b;
+                let FleetStream { plan, cost, tasks, policy, .. } = b;
                 let bw = self.bandwidth.clone();
-                let elems = if sm.cut_elems.is_empty() {
-                    source_elems
-                } else {
-                    sm.cut_elems.iter().sum()
-                };
-                let t_e = sm.t_e + sm.exit_check;
                 let factory = move || -> Result<
                     SimDevice<Box<dyn OnlinePolicy + Send>>,
                 > {
-                    Ok(SimDevice { policy, t_e, bw, clock, elems, cost })
+                    Ok(SimDevice {
+                        policy,
+                        plan,
+                        bw,
+                        clock,
+                        source_elems,
+                        cost,
+                    })
                 };
                 (tasks, factory)
             })
@@ -436,7 +535,7 @@ impl Scenario {
 
         run_real::<SimDevice<Box<dyn OnlinePolicy + Send>>, SimCloud, _, _>(
             streams,
-            move || Ok(SimCloud { t_c }),
+            move || Ok(SimCloud),
             self.bandwidth.clone(),
             clock,
             RealCfg {
@@ -483,7 +582,11 @@ impl Scenario {
     /// defaulting to 8; one threshold for all streams). The DES-only
     /// planning knobs (`slo`, `plan_bw`, `stage_bw`, `thresholds`) do
     /// not apply: the real server takes its cut from `cut`/per-stream
-    /// overrides and calibrates thresholds at startup.
+    /// overrides and calibrates thresholds at startup. With `[replan]`,
+    /// the server swaps cuts live over the explicit `serve_cuts`
+    /// bw→cut ladder (per-cut calibration runs once; the hysteresis K
+    /// carries over; every stream's starting cut must be a ladder rung,
+    /// enforced with an error naming the offender).
     pub fn serve(&self, manifest: &Manifest) -> Result<ServeResult> {
         let m = manifest.model(&self.model)?;
         let default_cut = (m.blocks.len() - 1) / 2;
@@ -501,6 +604,18 @@ impl Scenario {
                  server (every stream serves [workload] n_tasks)"
             );
         }
+        let replan = match &self.replan {
+            None => None,
+            Some(spec) if spec.serve_cuts.is_empty() => bail!(
+                "[replan] on the real server needs an explicit serve_cuts \
+                 ladder (e.g. serve_cuts = \"2:3, 10:2, 40:1\") — the \
+                 analytic planner cannot derive cuts for runtime models"
+            ),
+            Some(spec) => Some(ServeReplan {
+                ladder: spec.serve_cuts.clone(),
+                k: spec.k,
+            }),
+        };
         let cfg = ServeCfg {
             model: self.model.clone(),
             cut,
@@ -516,6 +631,7 @@ impl Scenario {
             n_streams: specs.len(),
             drop_after: self.admission.resolve(period),
             queue_cap: self.queue_cap.unwrap_or(8),
+            replan,
         };
         let streams: Vec<StreamCfg> = specs
             .iter()
@@ -538,6 +654,7 @@ impl Scenario {
 mod tests {
     use super::*;
     use crate::network::BandwidthModel;
+    use crate::scenario::ReplanSpec;
     use crate::sim::Correlation;
 
     #[test]
@@ -655,5 +772,44 @@ mod tests {
         assert_eq!(Admission::After(0.5).resolve(0.01), Some(0.5));
         let p = Admission::AfterPeriods(6.0).resolve(0.01).unwrap();
         assert!((p - 0.06).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replan_compiles_a_portfolio_and_starts_on_the_stale_rung() {
+        let plan = Scenario::new("resnet101")
+            .slo_unbounded()
+            .plan_bw(20.0)
+            .bandwidth_mbps(5.0)
+            .tasks(40)
+            .period(1e-3)
+            .replan(ReplanSpec { rungs: 8, ..ReplanSpec::default() })
+            .compile()
+            .unwrap();
+        let opts = plan.plan.options();
+        assert!(opts.len() >= 2, "2-100 Mbps must ladder");
+        // initial rung covers the (stale) 20 Mbps plan bandwidth
+        let active = &opts[plan.plan.active()];
+        assert!(
+            active.lo_mbps <= 20.0 && 20.0 < active.hi_mbps,
+            "initial rung [{}, {}) must cover the plan bandwidth",
+            active.lo_mbps,
+            active.hi_mbps
+        );
+        // regimes tile (0, inf) contiguously
+        assert_eq!(opts[0].lo_mbps, 0.0);
+        assert!(opts[opts.len() - 1].hi_mbps.is_infinite());
+        for w in opts.windows(2) {
+            assert_eq!(w[0].hi_mbps, w[1].lo_mbps);
+        }
+    }
+
+    #[test]
+    fn serve_with_replan_requires_an_explicit_cut_ladder() {
+        let sc = Scenario::new("resnet_mini")
+            .period(0.01)
+            .replan(ReplanSpec::default());
+        // without artifacts Manifest::load fails first, so test the
+        // spec validation directly: serve_cuts must be demanded
+        assert!(sc.replan.as_ref().unwrap().serve_cuts.is_empty());
     }
 }

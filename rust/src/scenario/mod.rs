@@ -88,6 +88,44 @@ pub enum PeriodSpec {
     OfBottleneck(f64),
 }
 
+/// Live re-planning configuration (TOML `[replan]`; OFF by default —
+/// absent spec means the classic single-plan run, bit-for-bit).
+///
+/// Offline, the scenario builds a plan portfolio
+/// (`partition::PlanBook`) over a log-spaced bandwidth grid; online,
+/// every driver consults a hysteresis rule at task hand-off instants
+/// and switches the active plan when the bandwidth estimate has left
+/// the current rung's regime for `k` consecutive hand-offs
+/// (`pipeline::replan::ActivePlan`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplanSpec {
+    /// lower bound of the planning grid, Mbps
+    pub lo_mbps: f64,
+    /// upper bound of the planning grid, Mbps
+    pub hi_mbps: f64,
+    /// ladder size before deduplication (grid points)
+    pub rungs: usize,
+    /// hysteresis: consecutive out-of-regime hand-offs before a switch
+    pub k: usize,
+    /// serve-mode bw→cut ladder `(min_mbps, cut)`, ascending — the
+    /// real server cannot derive its ladder from the analytic planner,
+    /// so `[replan] serve_cuts` supplies it explicitly (DES/wall-clock
+    /// runs ignore it)
+    pub serve_cuts: Vec<(f64, usize)>,
+}
+
+impl Default for ReplanSpec {
+    fn default() -> Self {
+        ReplanSpec {
+            lo_mbps: 2.0,
+            hi_mbps: 100.0,
+            rungs: 8,
+            k: 3,
+            serve_cuts: Vec::new(),
+        }
+    }
+}
+
 /// Admission control of the device queue.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Admission {
@@ -190,8 +228,12 @@ pub struct Scenario {
     /// offline-plan bandwidth, Mbps (default: the bandwidth model at
     /// t=0 — a stale-plan scenario pins this to the pre-change rate)
     pub plan_bw: Option<f64>,
-    /// stage-model design bandwidth, Mbps (default: `plan_bw`)
+    /// stage-model design bandwidth, Mbps (default: `plan_bw`; ignored
+    /// when `replan` is on — each rung prices its own design bandwidth)
     pub stage_bw: Option<f64>,
+    /// live re-planning over a plan portfolio (None = off: the offline
+    /// cut stays a run-wide constant, as before)
+    pub replan: Option<ReplanSpec>,
     /// the network the run actually experiences
     pub bandwidth: BandwidthModel,
     pub workload: Workload,
@@ -235,6 +277,7 @@ impl Scenario {
             slo: Slo::Paper,
             plan_bw: None,
             stage_bw: None,
+            replan: None,
             bandwidth: BandwidthModel::Static(20.0),
             workload: Workload::default(),
             admission: Admission::Unbounded,
@@ -312,6 +355,14 @@ impl Scenario {
     /// Pin the stage-model design bandwidth.
     pub fn stage_bw(mut self, mbps: f64) -> Self {
         self.stage_bw = Some(mbps);
+        self
+    }
+
+    /// Enable live re-planning over a plan portfolio (see
+    /// [`ReplanSpec`]; `ReplanSpec::default()` is the 2-100 Mbps
+    /// 8-rung ladder with hysteresis K = 3).
+    pub fn replan(mut self, spec: ReplanSpec) -> Self {
+        self.replan = Some(spec);
         self
     }
 

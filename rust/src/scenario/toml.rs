@@ -20,6 +20,8 @@
 //!             load_factor, correlation (none|low|medium|high), seed,
 //!             n_classes, drop_after_ms, drop_after_periods
 //! [serve]     n_streams, device_scale, cut, audit_every, queue_cap
+//! [replan]    enabled, min_mbps, max_mbps, rungs, k,
+//!             serve_cuts ("mbps:cut,mbps:cut,..")
 //! [stream.N]  scale, cut, period_ms, seed, correlation, n_tasks
 //! ```
 
@@ -33,7 +35,7 @@ use crate::model::DeviceProfile;
 use crate::network::{BandwidthModel, Trace};
 use crate::sim::Correlation;
 
-use super::{PeriodSpec, Scenario, StreamSpec};
+use super::{PeriodSpec, ReplanSpec, Scenario, StreamSpec};
 
 /// Known `(section, keys)` of the scenario schema; `stream.N` sections
 /// are validated separately.
@@ -65,6 +67,10 @@ const KNOWN: &[(&str, &[&str])] = &[
     (
         "serve",
         &["n_streams", "device_scale", "cut", "audit_every", "queue_cap"],
+    ),
+    (
+        "replan",
+        &["enabled", "min_mbps", "max_mbps", "rungs", "k", "serve_cuts"],
     ),
 ];
 
@@ -102,6 +108,31 @@ fn parse_steps(spec: &str) -> Result<Trace> {
         bail!("steps must be strictly increasing in time (got '{spec}')");
     }
     Ok(Trace { steps })
+}
+
+/// Parse the serve-mode bw→cut ladder: `"2:3, 10:2, 40:1"` =
+/// (min_mbps, cut) pairs, strictly ascending in min_mbps.
+fn parse_serve_cuts(spec: &str) -> Result<Vec<(f64, usize)>> {
+    let mut ladder = Vec::new();
+    for part in spec.split(',') {
+        let Some((bw, cut)) = part.split_once(':') else {
+            bail!("serve_cuts entry '{part}' is not 'min_mbps:cut'");
+        };
+        let bw: f64 =
+            bw.trim().parse().with_context(|| format!("serve_cuts '{part}'"))?;
+        let cut: usize = cut
+            .trim()
+            .parse()
+            .with_context(|| format!("serve_cuts '{part}'"))?;
+        ladder.push((bw, cut));
+    }
+    if ladder.is_empty() {
+        bail!("serve_cuts must list at least one 'min_mbps:cut' pair");
+    }
+    if ladder.windows(2).any(|w| w[1].0 <= w[0].0) {
+        bail!("serve_cuts must be strictly ascending in min_mbps ('{spec}')");
+    }
+    Ok(ladder)
 }
 
 fn parse_stream(raw: &RawConfig, section: &str) -> Result<StreamSpec> {
@@ -328,6 +359,52 @@ impl Scenario {
             sc.queue_cap = Some(q as usize);
         }
 
+        // ---- [replan] --------------------------------------------------
+        if raw.sections.contains("replan") {
+            let enabled = match raw.get("replan", "enabled") {
+                None | Some("true") | Some("1") => true,
+                Some("false") | Some("0") => false,
+                Some(other) => {
+                    bail!("replan.enabled must be true|false, got '{other}'")
+                }
+            };
+            if enabled {
+                let mut spec = ReplanSpec::default();
+                if let Some(v) = raw.get_f64("replan", "min_mbps")? {
+                    if v <= 0.0 {
+                        bail!("replan.min_mbps must be positive, got {v}");
+                    }
+                    spec.lo_mbps = v;
+                }
+                if let Some(v) = raw.get_f64("replan", "max_mbps")? {
+                    spec.hi_mbps = v;
+                }
+                if spec.hi_mbps < spec.lo_mbps {
+                    bail!(
+                        "replan.max_mbps ({}) must be >= min_mbps ({})",
+                        spec.hi_mbps,
+                        spec.lo_mbps
+                    );
+                }
+                if let Some(v) = raw.get_f64("replan", "rungs")? {
+                    if v < 1.0 {
+                        bail!("replan.rungs must be >= 1, got {v}");
+                    }
+                    spec.rungs = v as usize;
+                }
+                if let Some(v) = raw.get_f64("replan", "k")? {
+                    if v < 1.0 {
+                        bail!("replan.k must be >= 1, got {v}");
+                    }
+                    spec.k = v as usize;
+                }
+                if let Some(s) = raw.get("replan", "serve_cuts") {
+                    spec.serve_cuts = parse_serve_cuts(s)?;
+                }
+                sc.replan = Some(spec);
+            }
+        }
+
         // ---- [stream.N] ------------------------------------------------
         let mut stream_ids: Vec<usize> = Vec::new();
         for section in &raw.sections {
@@ -499,6 +576,57 @@ period_ms = 8
         let sc =
             Scenario::from_toml("[workload]\nload_factor = 0.5\n").unwrap();
         assert_eq!(sc.workload.period, PeriodSpec::OfBottleneck(0.5));
+    }
+
+    #[test]
+    fn replan_section_parses_and_defaults_off() {
+        assert_eq!(Scenario::from_toml("").unwrap().replan, None);
+        let sc = Scenario::from_toml(
+            "[replan]\nmin_mbps = 4\nmax_mbps = 80\nrungs = 16\nk = 5\n",
+        )
+        .unwrap();
+        let spec = sc.replan.unwrap();
+        assert_eq!(spec.lo_mbps, 4.0);
+        assert_eq!(spec.hi_mbps, 80.0);
+        assert_eq!(spec.rungs, 16);
+        assert_eq!(spec.k, 5);
+        assert!(spec.serve_cuts.is_empty());
+        // a bare section enables the defaults; enabled=false disables
+        let sc = Scenario::from_toml("[replan]\n").unwrap();
+        assert_eq!(sc.replan, Some(ReplanSpec::default()));
+        let sc =
+            Scenario::from_toml("[replan]\nenabled = false\n").unwrap();
+        assert_eq!(sc.replan, None);
+        // anything but true|false is rejected, never silently enabled
+        assert!(Scenario::from_toml("[replan]\nenabled = off\n").is_err());
+    }
+
+    #[test]
+    fn replan_serve_cuts_parse_and_validate() {
+        let sc = Scenario::from_toml(
+            "[replan]\nserve_cuts = \"2:3, 10:2, 40:1\"\n",
+        )
+        .unwrap();
+        assert_eq!(
+            sc.replan.unwrap().serve_cuts,
+            vec![(2.0, 3), (10.0, 2), (40.0, 1)]
+        );
+        assert!(Scenario::from_toml(
+            "[replan]\nserve_cuts = \"10:2, 2:3\"\n"
+        )
+        .is_err());
+        assert!(
+            Scenario::from_toml("[replan]\nserve_cuts = \"nope\"\n").is_err()
+        );
+        assert!(Scenario::from_toml("[replan]\nrungs = 0\n").is_err());
+        assert!(Scenario::from_toml(
+            "[replan]\nmin_mbps = 50\nmax_mbps = 10\n"
+        )
+        .is_err());
+        assert!(
+            Scenario::from_toml("[replan]\ngrid = 5\n").is_err(),
+            "unknown replan key must be rejected"
+        );
     }
 
     #[test]

@@ -13,7 +13,7 @@ use coach::metrics::MultiReport;
 use coach::model::{CostModel, DeviceProfile};
 use coach::network::BandwidthModel;
 use coach::pipeline::driver::{run_real, RealCfg, SimCloud, SimDevice};
-use coach::pipeline::{StaticPolicy, WallClock};
+use coach::pipeline::{ActivePlan, StageModel, StaticPolicy, WallClock};
 use coach::runtime::{default_artifact_dir, Engine, Manifest};
 use coach::sim::{generate, Correlation, SimTask};
 
@@ -38,13 +38,22 @@ fn run_sim_streams(n_streams: usize) -> MultiReport {
                 DeviceProfile::jetson_nx(),
                 DeviceProfile::cloud_a6000(),
             );
+            let sm = StageModel {
+                t_e: T_E,
+                t_c: T_C,
+                first_send_offset: 0.0,
+                t_c_par: 0.0,
+                cut_elems: vec![2048],
+                result_elems: 10,
+                exit_check: 0.0,
+            };
             let factory = move || -> anyhow::Result<SimDevice<StaticPolicy>> {
                 Ok(SimDevice {
                     policy: StaticPolicy::no_exit(8),
-                    t_e: T_E,
+                    plan: ActivePlan::single(sm),
                     bw,
                     clock,
-                    elems: 2048,
+                    source_elems: 2048,
                     cost,
                 })
             };
@@ -53,7 +62,7 @@ fn run_sim_streams(n_streams: usize) -> MultiReport {
         .collect();
     run_real::<SimDevice<StaticPolicy>, SimCloud, _, _>(
         streams,
-        || Ok(SimCloud { t_c: T_C }),
+        || Ok(SimCloud),
         BandwidthModel::Static(50.0),
         clock,
         RealCfg { model: "sim".into(), ..Default::default() },
@@ -110,6 +119,7 @@ fn pjrt_server_serves_four_streams_on_one_cloud_engine() {
         n_streams,
         drop_after: None,
         queue_cap: 8,
+        replan: None,
     };
     let single = serve(&m, &cfg(1)).unwrap();
     assert_eq!(single.per_stream.len(), 1);

@@ -5,7 +5,7 @@
 //! the actual PJRT artifacts with real wall-clock pacing, so task
 //! counts are kept small.
 
-use coach::coordinator::server::{serve, SchemePolicy, ServeCfg};
+use coach::coordinator::server::{serve, SchemePolicy, ServeCfg, ServeReplan};
 use coach::network::{BandwidthModel, Trace};
 use coach::runtime::{default_artifact_dir, Engine, Manifest};
 use coach::sim::Correlation;
@@ -35,6 +35,7 @@ fn base_cfg(model: &str, m: &Manifest) -> ServeCfg {
         n_streams: 1,
         drop_after: None,
         queue_cap: 8,
+        replan: None,
     }
 }
 
@@ -128,5 +129,45 @@ fn serve_rejects_out_of_range_cut() {
     let Some(m) = load() else { return };
     let mut cfg = base_cfg("vgg_mini", &m);
     cfg.cut = 99;
+    assert!(serve(&m, &cfg).is_err());
+}
+
+#[test]
+fn server_swaps_cut_live_when_the_network_collapses() {
+    let Some(m) = load() else { return };
+    let mut cfg = base_cfg("resnet_mini", &m);
+    let blocks = m.models["resnet_mini"].blocks.len();
+    // ladder: collapse -> the deepest valid cut (small wire), healthy
+    // network -> the configured mid cut
+    let deep = blocks - 2;
+    cfg.replan = Some(ServeReplan {
+        ladder: vec![(0.5, deep), (10.0, cfg.cut)],
+        k: 3,
+    });
+    cfg.n_tasks = 90;
+    let span = cfg.n_tasks as f64 * cfg.period;
+    cfg.bw = BandwidthModel::Stepped(Trace {
+        steps: vec![(0.0, 50.0), (span / 3.0, 1.0)],
+    });
+    let res = serve(&m, &cfg).unwrap();
+    let r = &res.per_stream[0];
+    assert!(
+        r.plan.switches >= 1,
+        "bandwidth collapse must switch the cut live"
+    );
+    assert!(
+        r.plan.occupancy.iter().filter(|&&c| c > 0).count() >= 2,
+        "tasks must have run on both rungs: {:?}",
+        r.plan.occupancy
+    );
+    assert_eq!(r.tasks.len() + r.dropped, cfg.n_tasks);
+}
+
+#[test]
+fn serve_rejects_a_non_ascending_replan_ladder() {
+    let Some(m) = load() else { return };
+    let mut cfg = base_cfg("resnet_mini", &m);
+    cfg.replan =
+        Some(ServeReplan { ladder: vec![(10.0, 1), (2.0, 2)], k: 3 });
     assert!(serve(&m, &cfg).is_err());
 }

@@ -333,8 +333,8 @@ fn prop_pipeline_conservation_and_ordering() {
 fn prop_event_driven_single_stream_matches_run_virtual_bit_for_bit() {
     use coach::model::topology;
     use coach::pipeline::{
-        run_virtual, run_virtual_streams, StaticPolicy, VirtualCfg,
-        VirtualStream,
+        run_virtual, run_virtual_streams, ActivePlan, StaticPolicy,
+        VirtualCfg, VirtualStream,
     };
     use coach::sim::generate;
 
@@ -401,14 +401,24 @@ fn prop_event_driven_single_stream_matches_run_virtual_bit_for_bit() {
         };
 
         let mut p1 = StaticPolicy { bits, exit_threshold: exit };
-        let legacy =
-            run_virtual(&g, &cost, &sm, &bw, &tasks, &mut p1, "p", drop_after);
+        let mut plan1 = ActivePlan::single(sm.clone());
+        let legacy = run_virtual(
+            &g,
+            &cost,
+            &mut plan1,
+            &bw,
+            &tasks,
+            &mut p1,
+            "p",
+            drop_after,
+        );
 
         let mut p2 = StaticPolicy { bits, exit_threshold: exit };
+        let mut plan2 = ActivePlan::single(sm.clone());
         let multi = run_virtual_streams(
             &mut [VirtualStream {
                 tasks: &tasks,
-                sm: &sm,
+                plan: &mut plan2,
                 graph: &g,
                 cost: &cost,
                 policy: &mut p2,
@@ -456,5 +466,96 @@ fn prop_event_driven_single_stream_matches_run_virtual_bit_for_bit() {
             "case {case}: cloud busy"
         );
         assert_eq!(r.device.stall, 0.0, "case {case}: no-cap stall");
+    }
+}
+
+/// A plan portfolio built over a SINGLE-POINT grid must reproduce the
+/// single-plan run bit-for-bit (replan on, one rung == replan off):
+/// the ladder degenerates to the exact plan/stage model the classic
+/// compile path builds, and a one-rung hysteresis can never switch —
+/// across random schemes, bandwidths, traces, workloads and hysteresis
+/// depths.
+#[test]
+fn prop_single_rung_portfolio_matches_single_plan_bit_for_bit() {
+    use coach::baselines::Scheme;
+    use coach::scenario::ReplanSpec;
+
+    let mut rng = Rng::new(0x9E91A);
+    for case in 0..12u64 {
+        let model = if case % 2 == 0 { "resnet101" } else { "vgg16" };
+        let scheme = match case % 4 {
+            0 | 1 => Scheme::Coach,
+            2 => Scheme::Spinn,
+            _ => Scheme::Ns,
+        };
+        let plan_bw = 3.0 + rng.f64() * 60.0;
+        let n = 50 + rng.below(80);
+        let period = 2e-4 + rng.f64() * 5e-3;
+        let live = if rng.below(2) == 0 {
+            BandwidthModel::Static(1.0 + rng.f64() * 80.0)
+        } else {
+            BandwidthModel::Stepped(Trace {
+                steps: vec![
+                    (0.0, plan_bw),
+                    (0.05 + rng.f64() * 0.2, 1.0 + rng.f64() * 30.0),
+                ],
+            })
+        };
+        let base = Scenario::new(model)
+            .scheme(scheme)
+            .plan_bw(plan_bw)
+            .bandwidth(live)
+            .tasks(n)
+            .period(period)
+            .seed(case)
+            .drop_after_periods(8.0);
+        let off = base.clone().simulate().unwrap();
+        let on = base
+            .replan(ReplanSpec {
+                lo_mbps: plan_bw,
+                hi_mbps: plan_bw,
+                rungs: 1,
+                k: 1 + rng.below(5),
+                serve_cuts: vec![],
+            })
+            .simulate()
+            .unwrap();
+        assert_eq!(on.tasks.len(), off.tasks.len(), "case {case}: count");
+        assert_eq!(on.dropped, off.dropped, "case {case}: dropped");
+        assert_eq!(on.plan.switches, 0, "case {case}: one rung never switches");
+        for (a, b) in on.tasks.iter().zip(&off.tasks) {
+            assert_eq!(a.id, b.id, "case {case}");
+            assert_eq!(a.bits, b.bits, "case {case}: bits");
+            assert_eq!(a.exited_early, b.exited_early, "case {case}: exit");
+            assert_eq!(a.wire_bytes, b.wire_bytes, "case {case}: wire");
+            assert_eq!(
+                a.finish.to_bits(),
+                b.finish.to_bits(),
+                "case {case}: task {} finish {} vs {}",
+                a.id,
+                a.finish,
+                b.finish
+            );
+            assert_eq!(
+                a.latency.to_bits(),
+                b.latency.to_bits(),
+                "case {case}: latency"
+            );
+        }
+        assert_eq!(
+            on.device.busy.to_bits(),
+            off.device.busy.to_bits(),
+            "case {case}: device busy"
+        );
+        assert_eq!(
+            on.link.busy.to_bits(),
+            off.link.busy.to_bits(),
+            "case {case}: link busy"
+        );
+        assert_eq!(
+            on.cloud.busy.to_bits(),
+            off.cloud.busy.to_bits(),
+            "case {case}: cloud busy"
+        );
     }
 }

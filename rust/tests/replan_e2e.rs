@@ -1,0 +1,103 @@
+//! Live re-planning end-to-end (ISSUE acceptance): on the Fig. 5 step
+//! trace the plan-portfolio DES must recover at least half of the
+//! stale-plan → re-planned-static throughput gap, switch telemetry must
+//! land in the report, and the `[replan]` TOML preset must drive the
+//! same machinery.
+
+use coach::baselines::Scheme;
+use coach::bench::fig5::{phase_scenario, replan_scenario};
+use coach::scenario::Scenario;
+
+/// The headline acceptance: COACH plans at 20 Mbps, the trace steps
+/// down to a long 5 Mbps tail. Stale = the cut pinned for the whole
+/// run (only Eq. 10/11 compensates); replan = the portfolio switches
+/// the cut live; fresh = a static run re-planned offline for the tail
+/// regime (the "re-planned static" optimum of Fig. 5). Re-planning
+/// must recover >= half of whatever gap staleness opened.
+#[test]
+fn replan_recovers_half_the_stale_plan_throughput_gap() {
+    let n = 400;
+    let stale = replan_scenario("resnet101", n, false).simulate().unwrap();
+    let live = replan_scenario("resnet101", n, true).simulate().unwrap();
+    let fresh = phase_scenario("resnet101", Scheme::Coach, 5.0, 5.0, n)
+        .simulate()
+        .unwrap();
+
+    // the switch telemetry is the acceptance's observable: the run
+    // must actually have followed the trace down the ladder
+    assert!(
+        live.plan.switches >= 1,
+        "the 20->10->5 trace must trigger at least one plan switch"
+    );
+    assert!(
+        live.plan.occupancy.iter().filter(|&&c| c > 0).count() >= 2,
+        "tasks must have run under more than one rung: {:?}",
+        live.plan.occupancy
+    );
+    assert_eq!(stale.plan.switches, 0, "replan off must never switch");
+
+    let stale_tp = stale.throughput();
+    let live_tp = live.throughput();
+    let fresh_tp = fresh.throughput();
+    let gap = fresh_tp - stale_tp;
+    if gap > 0.01 * fresh_tp {
+        // the paper's Fig. 5 regime: staleness costs real throughput,
+        // and live re-planning must close at least half of it
+        assert!(
+            live_tp >= stale_tp + 0.5 * gap,
+            "recovered too little: stale {stale_tp:.1}, replan {live_tp:.1}, \
+             fresh {fresh_tp:.1} it/s"
+        );
+    } else {
+        // degenerate case (online quantization already compensates the
+        // whole gap here): re-planning must at least not hurt
+        assert!(
+            live_tp >= stale_tp * 0.95,
+            "re-planning must not cost throughput: stale {stale_tp:.1} vs \
+             replan {live_tp:.1} it/s"
+        );
+    }
+}
+
+/// The shipped preset drives the same machinery end to end.
+#[test]
+fn fig5_replan_preset_switches_and_reports_telemetry() {
+    let text = include_str!("../../scenarios/fig5_replan.toml");
+    let mut sc = Scenario::from_toml(text).unwrap();
+    let spec = sc.replan.clone().expect("[replan] must be on in the preset");
+    assert_eq!(spec.rungs, 16);
+    assert_eq!(spec.k, 3);
+    sc.workload.n_tasks = 300; // trim for test speed; CI smoke runs it full
+    let r = sc.simulate().unwrap();
+    assert_eq!(r.tasks.len() + r.dropped, 300);
+    assert!(
+        r.plan.switches >= 1,
+        "preset step trace must switch at least once"
+    );
+    assert_eq!(
+        r.plan.occupancy.iter().sum::<usize>(),
+        r.tasks.len(),
+        "every admitted task is attributed to exactly one rung"
+    );
+}
+
+/// Re-planning is observable in the wall-clock sim-compute driver too:
+/// the same description runs on serve_sim and reports its telemetry
+/// (the per-stream SimDevice carries its own ActivePlan).
+#[test]
+fn serve_sim_carries_the_replan_ladder() {
+    let text = include_str!("../../scenarios/fig5_replan.toml");
+    let mut sc = Scenario::from_toml(text).unwrap();
+    // wall-clock runs sleep for real: keep it tiny and just assert the
+    // portfolio plumbs through with conserved tasks
+    sc.workload.n_tasks = 20;
+    let multi = sc.serve_sim().unwrap();
+    assert_eq!(multi.per_stream.len(), 1);
+    let r = &multi.per_stream[0];
+    assert_eq!(r.tasks.len() + r.dropped, 20);
+    assert!(
+        r.plan.occupancy.len() >= 2,
+        "the ladder must reach the wall-clock driver: {:?}",
+        r.plan.occupancy
+    );
+}

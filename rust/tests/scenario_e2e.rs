@@ -1,10 +1,12 @@
 //! Scenario-layer end-to-end guarantees:
 //!
 //! 1. **Golden equivalence** — the Scenario DES path reproduces the
-//!    pre-redesign `run_pipeline` outputs *bit-for-bit* for the paper
-//!    grids (a Table I cell and a Fig. 5 stale-plan phase), so the API
-//!    redesign changed no numbers. The legacy side intentionally calls
-//!    the deprecated veneer with the exact pre-redesign construction.
+//!    pre-redesign pipeline outputs *bit-for-bit* for the paper grids
+//!    (a Table I cell and a Fig. 5 stale-plan phase), so neither the
+//!    API redesign nor the plan-portfolio refactor changed any
+//!    numbers. The legacy side pins the exact pre-redesign
+//!    hand-assembled construction (the retired `pipeline::des` veneer
+//!    inlined: a direct single-plan `run_virtual` call).
 //! 2. **TOML round-trip** — `scenarios/table1_cell.toml` parses into
 //!    the same scenario the bench builder constructs, and both produce
 //!    identical reports.
@@ -22,12 +24,31 @@ use coach::metrics::RunReport;
 use coach::model::{topology, CostModel, DeviceProfile};
 use coach::network::BandwidthModel;
 use coach::partition::AnalyticAcc;
-use coach::pipeline::{StageModel, StaticPolicy};
+use coach::pipeline::{
+    run_virtual, ActivePlan, OnlinePolicy, StageModel, StaticPolicy,
+};
 use coach::scenario::{
     common_period, des_thresholds, plan_cfg, Scenario, SPINN_EXIT_THRESHOLD,
 };
 use coach::sim::generate;
 use coach::sim::Correlation;
+
+/// The retired `pipeline::des::run_pipeline_opts` veneer, inlined: the
+/// pre-portfolio single-plan DES call the goldens pin against.
+#[allow(clippy::too_many_arguments)]
+fn legacy_run(
+    g: &coach::model::ModelGraph,
+    cost: &CostModel,
+    sm: &StageModel,
+    bw: &BandwidthModel,
+    tasks: &[coach::sim::SimTask],
+    policy: &mut dyn OnlinePolicy,
+    scheme: &str,
+    drop_after: Option<f64>,
+) -> RunReport {
+    let mut plan = ActivePlan::single(sm.clone());
+    run_virtual(g, cost, &mut plan, bw, tasks, policy, scheme, drop_after)
+}
 
 fn assert_reports_bit_identical(a: &RunReport, b: &RunReport, what: &str) {
     assert_eq!(a.tasks.len(), b.tasks.len(), "{what}: task count");
@@ -61,9 +82,9 @@ fn assert_reports_bit_identical(a: &RunReport, b: &RunReport, what: &str) {
     );
 }
 
-/// The PRE-REDESIGN Table I cell construction, verbatim (deprecated
-/// veneer + hand-assembled tuple), for one (scheme, bandwidth-index).
-#[allow(deprecated)]
+/// The PRE-REDESIGN Table I cell construction, verbatim
+/// (hand-assembled plan + single-plan driver call), for one
+/// (scheme, bandwidth-index).
 fn legacy_table1_point(
     model: &str,
     device: DeviceProfile,
@@ -71,8 +92,6 @@ fn legacy_table1_point(
     n_tasks: usize,
     bi: usize,
 ) -> RunReport {
-    use coach::pipeline::des::run_pipeline_opts;
-
     let bw_mbps = TABLE1_BWS[bi];
     let g = topology::by_name(model).unwrap();
     let cost = CostModel::new(device, DeviceProfile::cloud_a6000());
@@ -93,17 +112,26 @@ fn legacy_table1_point(
                 cost.clone(),
                 g.clone(),
             );
-            run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, "COACH", drop_after)
+            legacy_run(&g, &cost, &sm, &bw, &tasks, &mut pol, "COACH", drop_after)
         }
         Scheme::Spinn => {
             let mut pol =
                 StaticPolicy { bits: 8, exit_threshold: SPINN_EXIT_THRESHOLD };
-            run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, "SPINN", drop_after)
+            legacy_run(&g, &cost, &sm, &bw, &tasks, &mut pol, "SPINN", drop_after)
         }
         _ => {
             let mut pol =
                 StaticPolicy::no_exit(scheme.fixed_bits().unwrap_or(32));
-            run_pipeline_opts(&g, &cost, &sm, &bw, &tasks, &mut pol, scheme.name(), drop_after)
+            legacy_run(
+                &g,
+                &cost,
+                &sm,
+                &bw,
+                &tasks,
+                &mut pol,
+                scheme.name(),
+                drop_after,
+            )
         }
     }
 }
@@ -150,7 +178,6 @@ fn golden_table1_rows_bit_identical_to_legacy_pipeline() {
 
 /// The PRE-REDESIGN Fig. 5 phase construction (stale plan at
 /// `plan_bw`, stage model and link at `live_bw`).
-#[allow(deprecated)]
 fn legacy_fig5_phase(
     scheme: Scheme,
     plan_bw: f64,
@@ -158,7 +185,6 @@ fn legacy_fig5_phase(
     n_tasks: usize,
 ) -> RunReport {
     use coach::partition::PartitionConfig;
-    use coach::pipeline::des::run_pipeline;
 
     let g = topology::by_name("resnet101").unwrap();
     let cost =
@@ -178,12 +204,21 @@ fn legacy_fig5_phase(
                 cost.clone(),
                 g.clone(),
             );
-            run_pipeline(&g, &cost, &sm, &bw, &tasks, &mut pol, "COACH")
+            legacy_run(&g, &cost, &sm, &bw, &tasks, &mut pol, "COACH", None)
         }
         _ => {
             let mut pol =
                 StaticPolicy::no_exit(scheme.fixed_bits().unwrap_or(32));
-            run_pipeline(&g, &cost, &sm, &bw, &tasks, &mut pol, scheme.name())
+            legacy_run(
+                &g,
+                &cost,
+                &sm,
+                &bw,
+                &tasks,
+                &mut pol,
+                scheme.name(),
+                None,
+            )
         }
     }
 }

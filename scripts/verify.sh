@@ -31,4 +31,11 @@ for f in scenarios/*.toml; do
     ./target/release/coach run "$f" --n 80
 done
 
+echo "== replan bench smoke: tiny-n coach bench-fig5 emits BENCH_fig5_replan.json =="
+BENCH_DIR="$(mktemp -d)"
+COACH_BENCH_DIR="$BENCH_DIR" ./target/release/coach bench-fig5 --n 40
+test -s "$BENCH_DIR/BENCH_fig5_replan.json" \
+    || { echo "BENCH_fig5_replan.json missing"; exit 1; }
+rm -rf "$BENCH_DIR"
+
 echo "verify OK"
