@@ -1,0 +1,215 @@
+//! DES-core scaling bench: events/sec of the multi-stream virtual
+//! pipeline across fleet sizes, engine (binary heap vs calendar queue)
+//! and shard-parallel execution. This is the perf gate for the
+//! hardware-fast DES work: a 100k-stream / 1M-task fleet should
+//! simulate in single-digit seconds on the calendar engine.
+//!
+//! The workload is deliberately synthetic-but-realistic: a fixed
+//! measured-shape [`StageModel`] per stream (no partition search in the
+//! timed region), static precision-8 policies, one shared 1 Gbps link
+//! per shard, bounded receive windows, and staggered arrivals so the
+//! link actually interleaves streams instead of batching them.
+//! Everything timed is the DES hot loop itself.
+//!
+//! Writes `BENCH_des_scale.json` with one row per (n_streams, engine)
+//! cell: `events`, `secs`, `events_per_sec`, and `speedup_vs_heap`.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::bench::emit::BenchJson;
+use crate::metrics::{MultiReport, Table};
+use crate::model::topology::vgg16;
+use crate::model::{CostModel, DeviceProfile, ModelGraph};
+use crate::network::BandwidthModel;
+use crate::pipeline::{
+    run_virtual_shards, run_virtual_streams, ActivePlan, FleetShard,
+    QueueEngine, StageModel, StaticPolicy, VirtualCfg, VirtualStream,
+};
+use crate::sim::{generate, Correlation, SimTask};
+use crate::util::Json;
+
+/// Inter-arrival period per stream (seconds). Short enough that the
+/// shared link stays contended at every fleet size.
+const PERIOD: f64 = 2e-3;
+
+/// One stream's fixed execution profile: sub-millisecond device and
+/// cloud stages with a small feature tensor, the regime where event
+/// overhead (queue ops, per-event allocation) dominates wall time.
+fn stage_model() -> StageModel {
+    StageModel {
+        t_e: 5e-4,
+        t_c: 2e-4,
+        first_send_offset: 0.0,
+        t_c_par: 0.0,
+        cut_elems: vec![512],
+        result_elems: 10,
+        exit_check: 0.0,
+    }
+}
+
+/// Per-stream task lists with arrivals staggered by `i/n` of a period,
+/// so no two streams tie on arrival time and the link round-robins.
+fn fleet_tasks(n_streams: usize, tasks_per_stream: usize) -> Vec<Vec<SimTask>> {
+    (0..n_streams)
+        .map(|i| {
+            let mut tasks =
+                generate(tasks_per_stream, PERIOD, Correlation::Low, 10, i as u64);
+            let offset = PERIOD * i as f64 / n_streams as f64;
+            for t in tasks.iter_mut() {
+                t.arrive += offset;
+            }
+            tasks
+        })
+        .collect()
+}
+
+/// Run one fleet configuration and return (report, wall seconds).
+/// `shards = 1` uses the plain sequential entry point; otherwise the
+/// fleet is split round-robin into `shards` independent link groups.
+fn run_fleet(
+    tls: &[Vec<SimTask>],
+    g: &ModelGraph,
+    cost: &CostModel,
+    bw: &BandwidthModel,
+    engine: QueueEngine,
+    shards: usize,
+) -> (MultiReport, f64) {
+    let sm = stage_model();
+    let n = tls.len();
+    let mut pols: Vec<StaticPolicy> =
+        (0..n).map(|_| StaticPolicy::no_exit(8)).collect();
+    let mut plans: Vec<ActivePlan> =
+        (0..n).map(|_| ActivePlan::single(sm.clone())).collect();
+    let cfg = VirtualCfg { queue_cap: Some(4), engine, ..VirtualCfg::default() };
+
+    let mut streams: Vec<VirtualStream<'_>> = tls
+        .iter()
+        .zip(pols.iter_mut())
+        .zip(plans.iter_mut())
+        .map(|((tasks, pol), plan)| VirtualStream {
+            tasks,
+            plan,
+            graph: g,
+            cost,
+            policy: pol,
+            scheme: "bench".into(),
+            drop_after: None,
+        })
+        .collect();
+
+    if shards <= 1 {
+        let t0 = Instant::now();
+        let multi = run_virtual_streams(&mut streams, bw, cfg);
+        (multi, t0.elapsed().as_secs_f64())
+    } else {
+        let mut groups: Vec<FleetShard<'_>> = (0..shards)
+            .map(|_| FleetShard { indices: Vec::new(), streams: Vec::new() })
+            .collect();
+        for (i, s) in streams.into_iter().enumerate() {
+            groups[i % shards].indices.push(i);
+            groups[i % shards].streams.push(s);
+        }
+        let t0 = Instant::now();
+        let multi = run_virtual_shards(groups, bw, cfg);
+        (multi, t0.elapsed().as_secs_f64())
+    }
+}
+
+/// Run the scaling grid. Each entry of `stream_grid` is a fleet size;
+/// every size is timed on the heap engine, the calendar engine, and the
+/// calendar engine sharded `n_shards` ways. Prints nothing — the CLI
+/// renders the returned table. Also writes `BENCH_des_scale.json`.
+pub fn run(
+    stream_grid: &[usize],
+    tasks_per_stream: usize,
+    n_shards: usize,
+) -> Result<Table> {
+    let g = vgg16();
+    let cost =
+        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
+    let bw = BandwidthModel::Static(1000.0);
+
+    let mut t = Table::new(&[
+        "streams",
+        "tasks",
+        "engine",
+        "events",
+        "secs",
+        "events/sec",
+        "vs heap",
+    ]);
+    let mut json = BenchJson::new("des_scale");
+
+    for &n_streams in stream_grid {
+        let tls = fleet_tasks(n_streams, tasks_per_stream);
+        let mut heap_eps = 0.0f64;
+        let configs: [(&str, QueueEngine, usize); 3] = [
+            ("heap", QueueEngine::Heap, 1),
+            ("calendar", QueueEngine::Calendar, 1),
+            ("calendar-sharded", QueueEngine::Calendar, n_shards.max(2)),
+        ];
+        for (name, engine, shards) in configs {
+            let (multi, secs) = run_fleet(&tls, &g, &cost, &bw, engine, shards);
+            let eps = if secs > 0.0 { multi.events as f64 / secs } else { 0.0 };
+            if engine == QueueEngine::Heap && shards == 1 {
+                heap_eps = eps;
+            }
+            let speedup = if heap_eps > 0.0 { eps / heap_eps } else { 1.0 };
+            t.row(vec![
+                n_streams.to_string(),
+                (n_streams * tasks_per_stream).to_string(),
+                name.to_string(),
+                multi.events.to_string(),
+                format!("{secs:.3}"),
+                format!("{eps:.0}"),
+                format!("{speedup:.2}x"),
+            ]);
+            json.add_row(
+                &format!("{n_streams}x{tasks_per_stream}/{name}"),
+                &[
+                    ("n_streams", Json::Num(n_streams as f64)),
+                    ("tasks_per_stream", Json::Num(tasks_per_stream as f64)),
+                    ("engine", Json::Str(name.to_string())),
+                    ("shards", Json::Num(shards as f64)),
+                    ("events", Json::Num(multi.events as f64)),
+                    ("secs", Json::Num(secs)),
+                    ("events_per_sec", Json::Num(eps)),
+                    ("speedup_vs_heap", Json::Num(speedup)),
+                ],
+            );
+        }
+    }
+    json.write()?;
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny grid end-to-end: rows present, events counted, JSON written
+    /// with the `events_per_sec` field the CI smoke greps for.
+    #[test]
+    fn tiny_grid_runs_and_emits_json() {
+        let dir = std::env::temp_dir().join("coach_bench_des_scale_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // route the JSON into the temp dir for this process
+        let prev = std::env::var_os("COACH_BENCH_DIR");
+        std::env::set_var("COACH_BENCH_DIR", &dir);
+        let t = run(&[4, 8], 3, 2).unwrap();
+        match prev {
+            Some(v) => std::env::set_var("COACH_BENCH_DIR", v),
+            None => std::env::remove_var("COACH_BENCH_DIR"),
+        }
+        assert_eq!(t.rows.len(), 6, "3 engine rows per fleet size");
+        let j = Json::from_file(&dir.join("BENCH_des_scale.json")).unwrap();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 6);
+        for row in rows {
+            assert!(row.get("events_per_sec").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(row.get("events").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+}

@@ -39,6 +39,18 @@ impl BenchJson {
         self.rows.push(Json::Obj(row));
     }
 
+    /// Record one free-form row of named fields under `label` (drivers
+    /// whose rows are scalar measurements rather than pipeline runs,
+    /// e.g. bench-des-scale's events/sec grid).
+    pub fn add_row(&mut self, label: &str, fields: &[(&str, Json)]) {
+        let mut o = BTreeMap::new();
+        o.insert("label".to_string(), Json::Str(label.to_string()));
+        for (k, v) in fields {
+            o.insert(k.to_string(), v.clone());
+        }
+        self.rows.push(Json::Obj(o));
+    }
+
     /// Record a rendered table verbatim (drivers whose rows are not
     /// pipeline runs, e.g. fig1's locality statistics).
     pub fn add_table(&mut self, label: &str, table: &Table) {

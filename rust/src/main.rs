@@ -21,6 +21,10 @@
 //! coach bench-fig6   [--n N]
 //! coach bench-fig7   [--n N]
 //! coach bench-fleet  [--n N] [--streams K]   # multi-user contention sweep
+//! coach bench-des-scale [--streams A,B,..] [--tasks T] [--shards S]
+//!                                    # DES events/sec: heap vs calendar
+//!                                    # vs shard-parallel (default grid
+//!                                    # 1k,10k,100k streams x 10 tasks)
 //! coach trace                        # Fig. 2 scheme walkthrough
 //! ```
 
@@ -181,6 +185,30 @@ fn run() -> Result<()> {
                 "Table I under contention: avg latency (ms), x{streams} users"
             );
             println!("{}", bench::table1::run_fleet(n, streams)?.render());
+            Ok(())
+        }
+        "bench-des-scale" => {
+            let tasks = args.usize_or("tasks", 10)?;
+            let shards = args.usize_or("shards", 4)?;
+            let grid: Vec<usize> = match args.get("streams") {
+                None => vec![1000, 10_000, 100_000],
+                Some(spec) => spec
+                    .split(',')
+                    .map(|s| {
+                        s.trim().parse::<usize>().with_context(|| {
+                            format!("--streams entry '{s}' is not a number")
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+            };
+            println!(
+                "DES scaling: events/sec, heap vs calendar vs sharded \
+                 ({tasks} tasks/stream)"
+            );
+            println!(
+                "{}",
+                bench::des_scale::run(&grid, tasks, shards)?.render()
+            );
             Ok(())
         }
         "trace" => cmd_trace(),
@@ -479,7 +507,7 @@ fn print_help() {
         "COACH - near bubble-free end-cloud collaborative inference\n\
          commands: run | partition | serve | profile | bench-table1 | bench-table2 |\n\
          \x20         bench-fig1 | bench-fig5 | bench-fig6 | bench-fig7 | bench-fleet |\n\
-         \x20         trace | help\n\
+         \x20         bench-des-scale | trace | help\n\
          `coach run scenarios/<name>.toml [--real|--wall]` runs one scenario\n\
          description on the DES / wall-clock / PJRT driver; see scenarios/\n\
          for presets and rust/src/main.rs docs for flags"

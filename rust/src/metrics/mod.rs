@@ -4,6 +4,7 @@
 //! per-stream breakdown of multi-stream runs ([`MultiReport`]).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::util::{mean, percentile, Json};
 
@@ -108,10 +109,14 @@ impl PlanTelemetry {
 }
 
 /// Aggregated result of one pipeline experiment.
-#[derive(Debug, Clone, Default)]
+///
+/// `scheme` / `model` are interned `Arc<str>` labels: a 100k-stream
+/// fleet report shares two allocations for its names instead of
+/// carrying 200k `String` clones. Compare with `&*r.scheme == "COACH"`.
+#[derive(Debug, Clone)]
 pub struct RunReport {
-    pub scheme: String,
-    pub model: String,
+    pub scheme: Arc<str>,
+    pub model: Arc<str>,
     pub tasks: Vec<TaskOutcome>,
     /// tasks shed by admission control (bounded real-time queue)
     pub dropped: usize,
@@ -120,6 +125,23 @@ pub struct RunReport {
     pub cloud: StageUsage,
     /// live re-planning telemetry (zero switches when `[replan]` is off)
     pub plan: PlanTelemetry,
+}
+
+// manual impl: `Arc<str>: Default` is a recent std addition, and the
+// offline toolchain floor predates it
+impl Default for RunReport {
+    fn default() -> RunReport {
+        RunReport {
+            scheme: "".into(),
+            model: "".into(),
+            tasks: Vec::new(),
+            dropped: 0,
+            device: StageUsage::default(),
+            link: StageUsage::default(),
+            cloud: StageUsage::default(),
+            plan: PlanTelemetry::default(),
+        }
+    }
 }
 
 impl RunReport {
@@ -212,8 +234,8 @@ impl RunReport {
         let mut put = |k: &str, v: Json| {
             o.insert(k.to_string(), v);
         };
-        put("scheme", Json::Str(self.scheme.clone()));
-        put("model", Json::Str(self.model.clone()));
+        put("scheme", Json::Str(self.scheme.to_string()));
+        put("model", Json::Str(self.model.to_string()));
         put("n_tasks", Json::Num(self.tasks.len() as f64));
         put("dropped", Json::Num(self.dropped as f64));
         put("throughput_its", Json::Num(self.throughput()));
@@ -252,6 +274,9 @@ impl RunReport {
 #[derive(Debug, Clone, Default)]
 pub struct MultiReport {
     pub per_stream: Vec<RunReport>,
+    /// DES events fired to produce this report (0 for wall-clock runs) —
+    /// the numerator of `coach bench-des-scale`'s events/sec metric
+    pub events: u64,
 }
 
 impl MultiReport {
@@ -290,12 +315,12 @@ impl MultiReport {
                 .per_stream
                 .first()
                 .map(|r| r.scheme.clone())
-                .unwrap_or_default(),
+                .unwrap_or_else(|| "".into()),
             model: self
                 .per_stream
                 .first()
                 .map(|r| r.model.clone())
-                .unwrap_or_default(),
+                .unwrap_or_else(|| "".into()),
             tasks,
             dropped,
             device: dev,
@@ -411,7 +436,7 @@ mod tests {
             dropped: 2,
             ..Default::default()
         };
-        let multi = MultiReport { per_stream: vec![a, b] };
+        let multi = MultiReport { per_stream: vec![a, b], events: 0 };
         let agg = multi.aggregate();
         assert_eq!(agg.tasks.len(), 2);
         assert_eq!(agg.dropped, 2);

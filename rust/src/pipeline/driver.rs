@@ -25,8 +25,7 @@
 //! transmission time, whether to early-exit or at what precision to
 //! transmit (paper Alg. 1 online component, Eq. 10-11).
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -39,11 +38,13 @@ use crate::model::{CostModel, ModelGraph};
 use crate::network::BandwidthModel;
 use crate::sim::SimTask;
 
+use super::evq::{CalendarQueue, EventQueue, HeapQueue, QueueEngine};
 use super::policy::{Decision, OnlinePolicy, TaskView};
 use super::replan::ActivePlan;
+use super::slab::StreamSlab;
 use super::stage::{
     bounded, BusyMeter, Clock, CloudStage, DeviceStage, DeviceVerdict,
-    VirtualClock, VirtualQueue, WallClock,
+    VirtualClock, WallClock,
 };
 #[cfg(test)]
 use super::stage_model::StageModel;
@@ -328,8 +329,8 @@ pub fn run_virtual(
     let first_arrive = tasks.first().map(|t| t.arrive).unwrap_or(0.0);
     let span = (clock.now() - first_arrive).max(0.0);
     RunReport {
-        scheme: scheme.to_string(),
-        model: g.name.clone(),
+        scheme: scheme.into(),
+        model: g.name.as_str().into(),
         tasks: outcomes,
         dropped,
         device: StageUsage { busy: dev_busy, span, stall: 0.0 },
@@ -352,8 +353,10 @@ pub struct VirtualStream<'a> {
     pub plan: &'a mut ActivePlan,
     pub graph: &'a ModelGraph,
     pub cost: &'a CostModel,
-    pub policy: &'a mut dyn OnlinePolicy,
-    pub scheme: String,
+    pub policy: &'a mut (dyn OnlinePolicy + Send),
+    /// interned run label shared by every stream of a fleet — cloning
+    /// it per report is a refcount bump, not a `String` copy
+    pub scheme: Arc<str>,
     /// per-stream admission threshold (heterogeneous fleets pace their
     /// streams differently); `None` falls back to the run-level
     /// [`VirtualCfg::drop_after`]
@@ -377,12 +380,17 @@ pub struct VirtualCfg {
     /// run-level admission fallback (a stream's own
     /// [`VirtualStream::drop_after`] takes precedence)
     pub drop_after: Option<f64>,
+    /// event-queue engine; both orderings are bit-for-bit identical,
+    /// [`QueueEngine::Calendar`] is simply faster at fleet scale
+    pub engine: QueueEngine,
 }
 
 /// A transmission decided at device completion, awaiting its link
 /// hand-off (possibly stalled by the bounded in-flight window). Carries
 /// the cloud-stage occupancies of the plan it was produced under, so a
-/// live plan switch cannot re-price an in-flight transmission.
+/// live plan switch cannot re-price an in-flight transmission. `Copy`
+/// so its slab slot moves without touching the heap.
+#[derive(Clone, Copy)]
 struct PendingTx {
     id: usize,
     arrive: f64,
@@ -398,54 +406,14 @@ struct PendingTx {
     result_elems: usize,
 }
 
-/// Mutable per-stream state of the event loop.
-struct StreamRt {
-    /// next task index
-    next: usize,
-    dev_free: f64,
-    dev_busy: f64,
-    /// device idle seconds caused by link backpressure
-    stall: f64,
-    dropped: usize,
-    pending: Option<PendingTx>,
-    window: VirtualQueue,
-}
-
-/// What happens when an event of the global heap fires.
+/// What happens when an event of the global queue fires. The `(t, seq)`
+/// ordering key lives inside the [`EventQueue`] engines.
 #[derive(Debug, Clone, Copy)]
 enum Ev {
     /// the stream advances to its next task (admission + device stage)
     Advance(usize),
     /// the stream's decided transmission attempts its link hand-off
     HandOff(usize),
-}
-
-/// Heap key: virtual time, then insertion order — a deterministic
-/// tie-break for simultaneous events (times are always finite).
-struct EvKey {
-    t: f64,
-    seq: u64,
-    ev: Ev,
-}
-
-impl PartialEq for EvKey {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == std::cmp::Ordering::Equal
-    }
-}
-
-impl Eq for EvKey {}
-
-impl PartialOrd for EvKey {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for EvKey {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
-    }
 }
 
 /// Simulate N device streams feeding one FIFO link and one shared cloud
@@ -478,72 +446,83 @@ pub fn run_virtual_streams(
     bw: &BandwidthModel,
     cfg: VirtualCfg,
 ) -> MultiReport {
+    let (per_stream, events) = run_streams_engine(streams, bw, &cfg);
+    MultiReport { per_stream, events }
+}
+
+/// Monomorphize the DES core on the configured queue engine. Either
+/// engine sees at most ~2 outstanding events per stream (an `Advance`
+/// and a transiently coexisting `HandOff`), hence the capacity hint.
+fn run_streams_engine(
+    streams: &mut [VirtualStream<'_>],
+    bw: &BandwidthModel,
+    cfg: &VirtualCfg,
+) -> (Vec<RunReport>, u64) {
+    let hint = streams.len() * 2 + 4;
+    match cfg.engine {
+        QueueEngine::Heap => des_core(streams, bw, cfg, HeapQueue::with_capacity(hint)),
+        QueueEngine::Calendar => {
+            des_core(streams, bw, cfg, CalendarQueue::with_capacity(hint))
+        }
+    }
+}
+
+/// The event loop proper, generic over the queue engine. Returns the
+/// per-stream reports (in input order) and the number of events fired.
+fn des_core<Q: EventQueue<Ev>>(
+    streams: &mut [VirtualStream<'_>],
+    bw: &BandwidthModel,
+    cfg: &VirtualCfg,
+    mut events: Q,
+) -> (Vec<RunReport>, u64) {
     let n = streams.len();
-    let mut outcomes: Vec<Vec<TaskOutcome>> = vec![Vec::new(); n];
+    let mut outcomes: Vec<Vec<TaskOutcome>> = streams
+        .iter()
+        .map(|s| Vec::with_capacity(s.tasks.len()))
+        .collect();
     let mut link_busy = vec![0.0f64; n];
     let mut cloud_busy = vec![0.0f64; n];
     let mut shared = SharedStages::default();
-    let mut rt: Vec<StreamRt> = (0..n)
-        .map(|_| StreamRt {
-            next: 0,
-            dev_free: 0.0,
-            dev_busy: 0.0,
-            stall: 0.0,
-            dropped: 0,
-            pending: None,
-            window: VirtualQueue::new(cfg.queue_cap),
-        })
-        .collect();
+    let mut rt: StreamSlab<PendingTx> = StreamSlab::new(n, cfg.queue_cap);
+    let mut fired = 0u64;
 
-    let mut heap: BinaryHeap<Reverse<EvKey>> = BinaryHeap::new();
-    let mut seq = 0u64;
     for (si, st) in streams.iter().enumerate() {
         if let Some(first) = st.tasks.first() {
-            heap.push(Reverse(EvKey {
-                t: first.arrive,
-                seq,
-                ev: Ev::Advance(si),
-            }));
-            seq += 1;
+            events.push(first.arrive, Ev::Advance(si));
         }
     }
 
-    while let Some(Reverse(EvKey { t: now, ev, .. })) = heap.pop() {
+    while let Some((now, ev)) = events.pop() {
+        fired += 1;
         match ev {
             Ev::Advance(si) => loop {
                 // advance the stream task-by-task until it blocks on a
                 // future pickup or commits a device stage
                 let st = &mut streams[si];
-                let s = &mut rt[si];
                 // copy the slice ref out so `task` does not hold a
                 // borrow of `st` across the mutable policy use below
                 let tasks = st.tasks;
-                let Some(task) = tasks.get(s.next) else { break };
-                let pickup = s.dev_free.max(task.arrive);
+                let Some(task) = tasks.get(rt.next[si]) else { break };
+                let pickup = rt.dev_free[si].max(task.arrive);
                 if pickup > now {
-                    heap.push(Reverse(EvKey {
-                        t: pickup,
-                        seq,
-                        ev: Ev::Advance(si),
-                    }));
-                    seq += 1;
+                    events.push(pickup, Ev::Advance(si));
                     break;
                 }
                 // admission at pickup, with the same link-backlog
                 // visibility as run_virtual: the max of the device
                 // queue wait and the projected shared-link wait
                 if let Some(cap) = st.drop_after.or(cfg.drop_after) {
-                    let wait = (s.dev_free - task.arrive)
+                    let wait = (rt.dev_free[si] - task.arrive)
                         .max(shared.link_free - task.arrive - st.plan.sm().t_e);
                     if wait > cap {
-                        s.dropped += 1;
-                        s.next += 1;
+                        rt.dropped[si] += 1;
+                        rt.next[si] += 1;
                         continue;
                     }
                 }
                 let step = device_step(
-                    &mut s.dev_free,
-                    &mut s.dev_busy,
+                    &mut rt.dev_free[si],
+                    &mut rt.dev_busy[si],
                     st.plan,
                     st.graph,
                     st.cost,
@@ -551,7 +530,7 @@ pub fn run_virtual_streams(
                     st.policy,
                     task,
                 );
-                s.next += 1;
+                rt.next[si] += 1;
                 match step {
                     // on-device completion: keep advancing (the next
                     // pickup is at or after this task's d_end)
@@ -565,7 +544,7 @@ pub fn run_virtual_streams(
                         t_c_par,
                         result_elems,
                     } => {
-                        s.pending = Some(PendingTx {
+                        rt.pending[si] = Some(PendingTx {
                             id: task.id,
                             arrive: task.arrive,
                             avail,
@@ -577,31 +556,20 @@ pub fn run_virtual_streams(
                             t_c_par,
                             result_elems,
                         });
-                        heap.push(Reverse(EvKey {
-                            t: d_end,
-                            seq,
-                            ev: Ev::HandOff(si),
-                        }));
-                        seq += 1;
+                        events.push(d_end, Ev::HandOff(si));
                         break;
                     }
                 }
             },
             Ev::HandOff(si) => {
-                let ready = rt[si].window.ready_at(now);
+                let ready = rt.windows.ready_at(si, now);
                 if ready > now {
                     // bounded in-flight window full: stall the device
                     // until the shared link starts one of its items
-                    heap.push(Reverse(EvKey {
-                        t: ready,
-                        seq,
-                        ev: Ev::HandOff(si),
-                    }));
-                    seq += 1;
+                    events.push(ready, Ev::HandOff(si));
                     continue;
                 }
-                let job = rt[si]
-                    .pending
+                let job = rt.pending[si]
                     .take()
                     .expect("hand-off without a decided transmission");
                 let st = &streams[si];
@@ -615,11 +583,11 @@ pub fn run_virtual_streams(
                     job.t_c_par,
                     job.result_elems,
                 );
-                rt[si].window.push(svc.start);
+                rt.windows.push(si, svc.start);
                 // backpressure extends the device timeline: the stall
                 // is idle (never busy) time, visible in the bubbles
-                rt[si].stall += now - job.d_end;
-                rt[si].dev_free = rt[si].dev_free.max(now);
+                rt.stall[si] += now - job.d_end;
+                rt.dev_free[si] = rt.dev_free[si].max(now);
                 link_busy[si] += svc.tx;
                 cloud_busy[si] += job.t_c;
                 outcomes[si].push(TaskOutcome {
@@ -633,17 +601,15 @@ pub fn run_virtual_streams(
                     label: job.label,
                     correct: true,
                 });
-                heap.push(Reverse(EvKey {
-                    t: now,
-                    seq,
-                    ev: Ev::Advance(si),
-                }));
-                seq += 1;
+                events.push(now, Ev::Advance(si));
             }
         }
     }
 
     // ---- assemble per-stream reports -----------------------------------
+    // model names are interned per distinct graph (fleets share one or
+    // two), so reports hold refcounted labels instead of String clones
+    let mut model_names: Vec<(*const ModelGraph, Arc<str>)> = Vec::new();
     let mut per_stream = Vec::with_capacity(n);
     for (si, st) in streams.iter().enumerate() {
         let mut tasks = std::mem::take(&mut outcomes[si]);
@@ -651,22 +617,107 @@ pub fn run_virtual_streams(
         let first = st.tasks.first().map(|t| t.arrive).unwrap_or(0.0);
         let last = tasks.iter().map(|o| o.finish).fold(0.0f64, f64::max);
         let span = (last - first).max(0.0);
+        let gp: *const ModelGraph = st.graph;
+        let model = match model_names.iter().find(|(p, _)| std::ptr::eq(*p, gp)) {
+            Some((_, m)) => m.clone(),
+            None => {
+                let m: Arc<str> = st.graph.name.as_str().into();
+                model_names.push((gp, m.clone()));
+                m
+            }
+        };
         per_stream.push(RunReport {
             scheme: st.scheme.clone(),
-            model: st.graph.name.clone(),
+            model,
             tasks,
-            dropped: rt[si].dropped,
+            dropped: rt.dropped[si],
             device: StageUsage {
-                busy: rt[si].dev_busy,
+                busy: rt.dev_busy[si],
                 span,
-                stall: rt[si].stall,
+                stall: rt.stall[si],
             },
             link: StageUsage { busy: link_busy[si], span, stall: 0.0 },
             cloud: StageUsage { busy: cloud_busy[si], span, stall: 0.0 },
             plan: st.plan.telemetry(),
         });
     }
-    MultiReport { per_stream }
+    (per_stream, fired)
+}
+
+// ---------------------------------------------------------------------
+// Shard-parallel DES: independent link groups on threads
+// ---------------------------------------------------------------------
+
+/// One shard of a fleet: the streams of a single link group plus their
+/// positions in the fleet-wide stream order.
+///
+/// Streams in the same shard contend for one FIFO link and one cloud;
+/// different shards are fully independent resource domains (separate
+/// cells, each with its own uplink and edge server), which is exactly
+/// what makes running them on separate threads legal: no event of one
+/// shard can affect another, so each shard's sequential DES order — and
+/// therefore its bit-for-bit output — is identical whether shards run
+/// serially or in parallel.
+pub struct FleetShard<'a> {
+    /// fleet-wide stream index of each `streams` entry, used to merge
+    /// shard reports back into input order deterministically
+    pub indices: Vec<usize>,
+    pub streams: Vec<VirtualStream<'a>>,
+}
+
+/// Run each shard's sequential DES, in parallel across threads when
+/// there is more than one shard, and merge the per-stream reports back
+/// into fleet order. With a single shard this is exactly
+/// [`run_virtual_streams`]. `events` sums over shards.
+pub fn run_virtual_shards(
+    mut shards: Vec<FleetShard<'_>>,
+    bw: &BandwidthModel,
+    cfg: VirtualCfg,
+) -> MultiReport {
+    let total: usize = shards.iter().map(|s| s.streams.len()).sum();
+    let mut slots: Vec<Option<RunReport>> = (0..total).map(|_| None).collect();
+    let mut events = 0u64;
+    let merged: Vec<(Vec<usize>, Vec<RunReport>, u64)> = if shards.len() <= 1 {
+        shards
+            .iter_mut()
+            .map(|shard| {
+                let (reports, ev) = run_streams_engine(&mut shard.streams, bw, &cfg);
+                (std::mem::take(&mut shard.indices), reports, ev)
+            })
+            .collect()
+    } else {
+        thread::scope(|scope| {
+            let handles: Vec<_> = shards
+                .into_iter()
+                .map(|mut shard| {
+                    scope.spawn(move || {
+                        let (reports, ev) =
+                            run_streams_engine(&mut shard.streams, bw, &cfg);
+                        (shard.indices, reports, ev)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("DES shard thread panicked"))
+                .collect()
+        })
+    };
+    for (indices, reports, ev) in merged {
+        events += ev;
+        debug_assert_eq!(indices.len(), reports.len());
+        for (idx, r) in indices.into_iter().zip(reports) {
+            debug_assert!(slots[idx].is_none(), "duplicate stream index {idx}");
+            slots[idx] = Some(r);
+        }
+    }
+    MultiReport {
+        per_stream: slots
+            .into_iter()
+            .map(|o| o.expect("shard indices must cover 0..total"))
+            .collect(),
+        events,
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -935,6 +986,9 @@ where
     }
 
     let mut per_stream = Vec::with_capacity(n);
+    // intern once; the per-stream clones below are refcount bumps
+    let scheme: Arc<str> = cfg.scheme.as_str().into();
+    let model: Arc<str> = cfg.model.as_str().into();
     for (si, mut tasks) in per.into_iter().enumerate() {
         tasks.sort_by_key(|o| o.id);
         let first = tasks
@@ -944,8 +998,8 @@ where
         let last = tasks.iter().map(|o| o.finish).fold(0.0f64, f64::max);
         let span = if tasks.is_empty() { 0.0 } else { (last - first).max(0.0) };
         per_stream.push(RunReport {
-            scheme: cfg.scheme.clone(),
-            model: cfg.model.clone(),
+            scheme: scheme.clone(),
+            model: model.clone(),
             tasks,
             dropped: dropped[si],
             device: StageUsage { busy: dev_busy[si].secs(), span, stall: 0.0 },
@@ -954,7 +1008,7 @@ where
             plan: plans[si].clone(),
         });
     }
-    Ok(MultiReport { per_stream })
+    Ok(MultiReport { per_stream, events: 0 })
 }
 
 // ---------------------------------------------------------------------
@@ -1102,44 +1156,47 @@ mod tests {
             Some(0.05),
         );
 
-        let mut p2 = StaticPolicy { bits: 8, exit_threshold: 0.7 };
-        let mut plan2 = ActivePlan::single(sm.clone());
-        let multi = run_virtual_streams(
-            &mut [VirtualStream {
-                tasks: &tasks,
-                plan: &mut plan2,
-                graph: &g,
-                cost: &cost,
-                policy: &mut p2,
-                scheme: "x".into(),
-                drop_after: None,
-            }],
-            &bw,
-            VirtualCfg { queue_cap: None, drop_after: Some(0.05) },
-        );
-        let r = &multi.per_stream[0];
-        assert_eq!(r.dropped, legacy.dropped);
-        assert_eq!(r.tasks.len(), legacy.tasks.len());
-        for (a, b) in r.tasks.iter().zip(&legacy.tasks) {
-            assert_eq!(a.id, b.id);
-            assert_eq!(a.bits, b.bits);
-            assert_eq!(a.exited_early, b.exited_early);
-            assert_eq!(a.wire_bytes, b.wire_bytes);
-            assert_eq!(
-                a.finish.to_bits(),
-                b.finish.to_bits(),
-                "task {}: {} vs {}",
-                a.id,
-                a.finish,
-                b.finish
+        // both queue engines must reproduce run_virtual bit-for-bit
+        for engine in [QueueEngine::Heap, QueueEngine::Calendar] {
+            let mut p2 = StaticPolicy { bits: 8, exit_threshold: 0.7 };
+            let mut plan2 = ActivePlan::single(sm.clone());
+            let multi = run_virtual_streams(
+                &mut [VirtualStream {
+                    tasks: &tasks,
+                    plan: &mut plan2,
+                    graph: &g,
+                    cost: &cost,
+                    policy: &mut p2,
+                    scheme: "x".into(),
+                    drop_after: None,
+                }],
+                &bw,
+                VirtualCfg { queue_cap: None, drop_after: Some(0.05), engine },
             );
-            assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+            let r = &multi.per_stream[0];
+            assert_eq!(r.dropped, legacy.dropped, "{engine:?}");
+            assert_eq!(r.tasks.len(), legacy.tasks.len(), "{engine:?}");
+            for (a, b) in r.tasks.iter().zip(&legacy.tasks) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.bits, b.bits);
+                assert_eq!(a.exited_early, b.exited_early);
+                assert_eq!(a.wire_bytes, b.wire_bytes);
+                assert_eq!(
+                    a.finish.to_bits(),
+                    b.finish.to_bits(),
+                    "{engine:?} task {}: {} vs {}",
+                    a.id,
+                    a.finish,
+                    b.finish
+                );
+                assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+            }
+            assert_eq!(r.device.busy.to_bits(), legacy.device.busy.to_bits());
+            assert_eq!(r.link.busy.to_bits(), legacy.link.busy.to_bits());
+            assert_eq!(r.cloud.busy.to_bits(), legacy.cloud.busy.to_bits());
+            assert_eq!(r.device.stall, 0.0, "no backpressure without a cap");
+            assert!((r.throughput() - legacy.throughput()).abs() < 1e-9);
         }
-        assert_eq!(r.device.busy.to_bits(), legacy.device.busy.to_bits());
-        assert_eq!(r.link.busy.to_bits(), legacy.link.busy.to_bits());
-        assert_eq!(r.cloud.busy.to_bits(), legacy.cloud.busy.to_bits());
-        assert_eq!(r.device.stall, 0.0, "no backpressure without a cap");
-        assert!((r.throughput() - legacy.throughput()).abs() < 1e-9);
     }
 
     #[test]
@@ -1219,7 +1276,7 @@ mod tests {
         let multi = run_virtual_streams(
             &mut streams,
             &bw,
-            VirtualCfg { queue_cap: Some(2), drop_after: None },
+            VirtualCfg { queue_cap: Some(2), ..VirtualCfg::default() },
         );
         for r in &multi.per_stream {
             assert_eq!(r.tasks.len(), 30, "bounded window must not lose tasks");
@@ -1308,7 +1365,7 @@ mod tests {
             run_virtual_streams(
                 &mut streams,
                 &bw,
-                VirtualCfg { queue_cap, drop_after: None },
+                VirtualCfg { queue_cap, ..VirtualCfg::default() },
             )
         };
 
@@ -1410,6 +1467,114 @@ mod tests {
             agg_report.cloud.busy,
             cloud_per_stream
         );
+    }
+
+    #[test]
+    fn sharded_fleet_is_bit_for_bit_the_per_group_sequential_runs() {
+        let (g, cost, _opt_sm) = setup();
+        let sm = StageModel {
+            t_e: 0.004,
+            t_c: 0.002,
+            first_send_offset: 0.0,
+            t_c_par: 0.0,
+            cut_elems: vec![2048],
+            result_elems: 10,
+            exit_check: 0.0,
+        };
+        let bw = BandwidthModel::Static(25.0);
+        let n = 6usize;
+        // interleaved link groups: shard membership must not depend on
+        // stream adjacency
+        let group = [0usize, 1, 2, 0, 1, 2];
+        let tls: Vec<Vec<SimTask>> = (0..n)
+            .map(|i| generate(120, 5e-4, Correlation::Low, 20, 40 + i as u64))
+            .collect();
+        let cfg = VirtualCfg {
+            queue_cap: Some(2),
+            drop_after: Some(0.05),
+            ..VirtualCfg::default()
+        };
+
+        // (a) parallel: one DES per link group across threads
+        let mut pols: Vec<StaticPolicy> =
+            (0..n).map(|_| StaticPolicy::no_exit(8)).collect();
+        let mut plans: Vec<ActivePlan> =
+            (0..n).map(|_| ActivePlan::single(sm.clone())).collect();
+        let mut shards: Vec<FleetShard<'_>> = (0..3)
+            .map(|_| FleetShard { indices: Vec::new(), streams: Vec::new() })
+            .collect();
+        for (i, ((tasks, pol), plan)) in tls
+            .iter()
+            .zip(pols.iter_mut())
+            .zip(plans.iter_mut())
+            .enumerate()
+        {
+            shards[group[i]].indices.push(i);
+            shards[group[i]].streams.push(VirtualStream {
+                tasks,
+                plan,
+                graph: &g,
+                cost: &cost,
+                policy: pol,
+                scheme: "shard".into(),
+                drop_after: None,
+            });
+        }
+        let sharded = run_virtual_shards(shards, &bw, cfg);
+        assert_eq!(sharded.per_stream.len(), n);
+
+        // (b) reference: each group run alone, sequentially
+        let mut ref_reports: Vec<Option<RunReport>> = (0..n).map(|_| None).collect();
+        let mut ref_events = 0u64;
+        for gid in 0..3 {
+            let members: Vec<usize> =
+                (0..n).filter(|&i| group[i] == gid).collect();
+            let mut pols2: Vec<StaticPolicy> =
+                members.iter().map(|_| StaticPolicy::no_exit(8)).collect();
+            let mut plans2: Vec<ActivePlan> =
+                members.iter().map(|_| ActivePlan::single(sm.clone())).collect();
+            let mut streams: Vec<VirtualStream<'_>> = members
+                .iter()
+                .zip(pols2.iter_mut())
+                .zip(plans2.iter_mut())
+                .map(|((&i, pol), plan)| VirtualStream {
+                    tasks: &tls[i],
+                    plan,
+                    graph: &g,
+                    cost: &cost,
+                    policy: pol,
+                    scheme: "shard".into(),
+                    drop_after: None,
+                })
+                .collect();
+            let solo = run_virtual_streams(&mut streams, &bw, cfg);
+            ref_events += solo.events;
+            for (&i, r) in members.iter().zip(solo.per_stream) {
+                ref_reports[i] = Some(r);
+            }
+        }
+        assert_eq!(sharded.events, ref_events);
+        for (i, want) in ref_reports.into_iter().enumerate() {
+            let want = want.unwrap();
+            let got = &sharded.per_stream[i];
+            assert_eq!(got.dropped, want.dropped, "stream {i}");
+            assert_eq!(got.tasks.len(), want.tasks.len(), "stream {i}");
+            for (a, b) in got.tasks.iter().zip(&want.tasks) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.bits, b.bits);
+                assert_eq!(a.wire_bytes, b.wire_bytes);
+                assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "stream {i}");
+                assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+            }
+            assert_eq!(
+                got.device.busy.to_bits(),
+                want.device.busy.to_bits(),
+                "stream {i}"
+            );
+            assert_eq!(got.device.stall.to_bits(), want.device.stall.to_bits());
+            assert_eq!(got.link.busy.to_bits(), want.link.busy.to_bits());
+            assert_eq!(got.cloud.busy.to_bits(), want.cloud.busy.to_bits());
+        }
     }
 
     /// A fixed-plan SimDevice stage model (the pre-portfolio fields).
@@ -1735,7 +1900,7 @@ mod tests {
         let multi = run_virtual_streams(
             &mut streams,
             &bw,
-            VirtualCfg { queue_cap: None, drop_after: None },
+            VirtualCfg::default(),
         );
         assert!(multi.per_stream[0].plan.switches >= 1);
         assert_eq!(multi.per_stream[1].plan.switches, 0);

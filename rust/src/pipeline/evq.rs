@@ -1,0 +1,421 @@
+//! Pluggable event queues for the discrete-event simulator.
+//!
+//! The DES core pops the globally earliest `(t, seq)` event, where `seq`
+//! is a per-queue push counter: events at equal times are handled in the
+//! order they were scheduled. Both engines implement exactly this order,
+//! so swapping one for the other is bit-for-bit invisible in simulator
+//! output — the heap is the obviously-correct reference, the calendar
+//! queue is the fast path at fleet scale.
+//!
+//! # Why a calendar queue
+//!
+//! A binary heap over `n` pending events costs `O(log n)` *random*
+//! memory touches per operation; at 100k+ in-flight streams the heap
+//! spans megabytes and every sift walks a cache-missing path. A calendar
+//! queue (Brown, CACM 1988) hashes events by time into an array of
+//! "day" buckets of width `w`; with `w` tuned near the mean gap between
+//! consecutive pops, each bucket holds O(1) events and both push and pop
+//! are amortised O(1) with mostly-sequential memory access.
+//!
+//! Our variant keeps a tiny min-heap *per bucket* (instead of a sorted
+//! list) so the degenerate case of many equal-time events in one bucket
+//! stays `O(log bucket)` rather than `O(bucket)` per operation.
+//!
+//! # Invariant
+//!
+//! The DES never schedules into the past: every `push(t, _)` has `t >=`
+//! the time of the last `pop`. The calendar's pop scan starts at the
+//! bucket of the last popped time and relies on this invariant (it is
+//! `debug_assert`ed). Arbitrary-order pushes would need a full rebuild
+//! of the scan cursor, which the simulator never requires.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Minimal interface the DES core needs from an event queue.
+///
+/// `push` assigns each event a monotonically increasing sequence number;
+/// `pop` returns events ordered by `(t, seq)` — earliest time first,
+/// FIFO among equal times.
+pub trait EventQueue<T> {
+    fn push(&mut self, t: f64, item: T);
+    fn pop(&mut self) -> Option<(f64, T)>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Which event-queue engine the virtual drivers use.
+///
+/// Both produce bit-for-bit identical simulator output (pinned by
+/// proptests); `Calendar` is the default because it is ~O(1) per event
+/// at large fleet sizes where the heap's `O(log n)` random walks
+/// dominate. `Heap` remains as the reference implementation and as the
+/// baseline for `coach bench-des-scale`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueEngine {
+    /// `BinaryHeap<Reverse<(t, seq)>>` reference implementation.
+    Heap,
+    /// Bucketed calendar queue with self-tuning bucket width.
+    #[default]
+    Calendar,
+}
+
+/// An event plus its deterministic tie-break key. Ordering looks only at
+/// `(t, seq)` — the payload never participates in comparisons.
+struct Entry<T> {
+    t: f64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t.total_cmp(&other.t).is_eq() && self.seq == other.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Reference engine: one global binary heap.
+pub struct HeapQueue<T> {
+    heap: BinaryHeap<Reverse<Entry<T>>>,
+    seq: u64,
+}
+
+impl<T> HeapQueue<T> {
+    pub fn new() -> HeapQueue<T> {
+        HeapQueue::with_capacity(0)
+    }
+
+    pub fn with_capacity(cap: usize) -> HeapQueue<T> {
+        HeapQueue { heap: BinaryHeap::with_capacity(cap), seq: 0 }
+    }
+}
+
+impl<T> Default for HeapQueue<T> {
+    fn default() -> Self {
+        HeapQueue::new()
+    }
+}
+
+impl<T> EventQueue<T> for HeapQueue<T> {
+    fn push(&mut self, t: f64, item: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Entry { t, seq, item }));
+    }
+
+    fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|Reverse(e)| (e.t, e.item))
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+const MIN_BUCKETS: usize = 64;
+const MAX_BUCKETS: usize = 1 << 21;
+/// Re-examine the bucket width after this many pops.
+const RETUNE_EVERY: u64 = 4096;
+
+/// Calendar queue: a power-of-two ring of "day" buckets of width
+/// `width` seconds; bucket `i` holds every pending event whose virtual
+/// day `floor(t / width)` is `≡ i (mod nb)`. Each bucket is a small
+/// min-heap on `(t, seq)`.
+///
+/// Pop scans forward from the day of the last popped time; a bucket's
+/// head is the answer as soon as it falls inside the day under scan
+/// (all remaining events are `>=` the frontier, so the first in-day
+/// head found is the global minimum, and equal-time events share a
+/// bucket so `seq` order is preserved). If a whole year (`nb` days)
+/// passes without a hit the queue is sparse relative to `width`; we
+/// fall back to a direct min-scan of all bucket heads.
+///
+/// The width self-tunes: an EMA of the gap between consecutive pop
+/// times is kept, and every [`RETUNE_EVERY`] pops the calendar rebuilds
+/// if the width has drifted more than 4× from the ideal (a few days per
+/// event gap). Pushes that outgrow the ring (`len > 2·nb`) double it.
+pub struct CalendarQueue<T> {
+    buckets: Vec<BinaryHeap<Reverse<Entry<T>>>>,
+    /// seconds per bucket ("day length")
+    width: f64,
+    len: usize,
+    seq: u64,
+    /// time of the last pop — the scan frontier
+    last_t: f64,
+    pops: u64,
+    /// EMA of consecutive pop-time gaps, the width-tuning signal
+    gap_ema: f64,
+}
+
+impl<T> CalendarQueue<T> {
+    pub fn new() -> CalendarQueue<T> {
+        CalendarQueue::with_capacity(0)
+    }
+
+    /// `cap` is the expected steady-state number of pending events; the
+    /// ring is sized so buckets stay O(1) occupied at that load.
+    pub fn with_capacity(cap: usize) -> CalendarQueue<T> {
+        let nb = cap.next_power_of_two().clamp(MIN_BUCKETS, MAX_BUCKETS);
+        CalendarQueue {
+            buckets: (0..nb).map(|_| BinaryHeap::new()).collect(),
+            width: 1e-3,
+            len: 0,
+            seq: 0,
+            last_t: 0.0,
+            pops: 0,
+            gap_ema: 0.0,
+        }
+    }
+
+    /// Virtual day of time `t` (monotone in `t`; `as u64` saturates, so
+    /// astronomically late events all land in the last day and still
+    /// order correctly within their bucket heap).
+    fn day(&self, t: f64) -> u64 {
+        (t.max(0.0) / self.width) as u64
+    }
+
+    fn rebuild(&mut self, width: f64, nb: usize) {
+        let mut all: Vec<Entry<T>> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            all.extend(b.drain().map(|Reverse(e)| e));
+        }
+        self.width = width;
+        if nb != self.buckets.len() {
+            self.buckets = (0..nb).map(|_| BinaryHeap::new()).collect();
+        }
+        let mask = (nb - 1) as u64;
+        for e in all {
+            let i = (self.day(e.t) & mask) as usize;
+            self.buckets[i].push(Reverse(e));
+        }
+    }
+
+    fn ideal_width(&self) -> f64 {
+        // a couple of pop-gaps per day keeps buckets ~O(1) occupied
+        // while the scan advances ~1 bucket per pop
+        (self.gap_ema * 2.0).max(1e-12)
+    }
+
+    fn record_pop(&mut self, t: f64) {
+        let gap = (t - self.last_t).max(0.0);
+        self.gap_ema = if self.pops == 0 {
+            gap
+        } else {
+            self.gap_ema * 0.98 + gap * 0.02
+        };
+        self.last_t = t;
+        self.len -= 1;
+        self.pops += 1;
+        if self.pops % RETUNE_EVERY == 0 {
+            let ideal = self.ideal_width();
+            if ideal < self.width / 4.0 || ideal > self.width * 4.0 {
+                let nb = (self.len * 2)
+                    .next_power_of_two()
+                    .clamp(MIN_BUCKETS, MAX_BUCKETS);
+                self.rebuild(ideal, nb);
+            }
+        }
+    }
+}
+
+impl<T> Default for CalendarQueue<T> {
+    fn default() -> Self {
+        CalendarQueue::new()
+    }
+}
+
+impl<T> EventQueue<T> for CalendarQueue<T> {
+    fn push(&mut self, t: f64, item: T) {
+        debug_assert!(
+            self.len == 0 || t >= self.last_t,
+            "calendar queue requires non-decreasing schedule times: {} < {}",
+            t,
+            self.last_t
+        );
+        let nb = self.buckets.len();
+        if self.len + 1 > nb * 2 && nb < MAX_BUCKETS {
+            let width = if self.pops > 0 {
+                self.ideal_width()
+            } else {
+                self.width
+            };
+            self.rebuild(width, nb * 2);
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        let mask = (self.buckets.len() - 1) as u64;
+        let i = (self.day(t) & mask) as usize;
+        self.buckets[i].push(Reverse(Entry { t, seq, item }));
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<(f64, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        let nb = self.buckets.len() as u64;
+        let mask = nb - 1;
+        // Scan forward one year starting from the frontier's day. Every
+        // pending event has t >= last_t, so the first bucket head that
+        // falls inside the day being scanned is the global minimum.
+        let mut day = self.day(self.last_t);
+        for _ in 0..=nb {
+            let i = (day & mask) as usize;
+            if let Some(Reverse(head)) = self.buckets[i].peek() {
+                // Compare days, not times: bucket placement used day()
+                // at push, so the same function here can never disagree
+                // with it (a time-based bound could, by one ulp of the
+                // `(day+1) * width` product at a bucket boundary). A
+                // head from a later year aliasing into this bucket
+                // fails the check and defers to the sparse fallback.
+                if self.day(head.t) == day {
+                    let Reverse(e) =
+                        self.buckets[i].pop().expect("peeked bucket");
+                    self.record_pop(e.t);
+                    return Some((e.t, e.item));
+                }
+            }
+            day = day.saturating_add(1);
+        }
+        // Sparse fallback: next event is more than a year past the
+        // frontier — direct min over all bucket heads.
+        let mut best: Option<(usize, f64, u64)> = None;
+        for (i, b) in self.buckets.iter().enumerate() {
+            if let Some(Reverse(head)) = b.peek() {
+                let better = match best {
+                    None => true,
+                    Some((_, bt, bs)) => match head.t.total_cmp(&bt) {
+                        std::cmp::Ordering::Less => true,
+                        std::cmp::Ordering::Equal => head.seq < bs,
+                        std::cmp::Ordering::Greater => false,
+                    },
+                };
+                if better {
+                    best = Some((i, head.t, head.seq));
+                }
+            }
+        }
+        let (i, _, _) = best.expect("len > 0 but no bucket head");
+        let Reverse(e) = self.buckets[i].pop().expect("chosen bucket head");
+        self.record_pop(e.t);
+        Some((e.t, e.item))
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Drive both engines through an identical randomized push/pop
+    /// schedule that respects the DES invariant (pushes never precede
+    /// the last pop) and demand identical `(t, item)` streams out.
+    fn cross_check(
+        seed: u64,
+        n_ops: usize,
+        quantize: bool,
+        cal: &mut CalendarQueue<u32>,
+    ) {
+        let mut rng = Rng::new(seed);
+        let mut heap: HeapQueue<u32> = HeapQueue::new();
+        let mut now = 0.0f64;
+        let mut next_item = 0u32;
+        for op in 0..n_ops {
+            let push = heap.is_empty() || rng.below(3) > 0;
+            if push {
+                let mut dt = rng.f64() * 0.01;
+                if quantize {
+                    // heavy ties: only 4 distinct offsets, incl. zero
+                    dt = (dt * 400.0).floor() * 1e-3;
+                }
+                heap.push(now + dt, next_item);
+                cal.push(now + dt, next_item);
+                next_item += 1;
+            } else {
+                let a = heap.pop();
+                let b = cal.pop();
+                match (a, b) {
+                    (Some((ta, ia)), Some((tb, ib))) => {
+                        assert_eq!(
+                            ta.to_bits(),
+                            tb.to_bits(),
+                            "time mismatch at op {op}"
+                        );
+                        assert_eq!(ia, ib, "order mismatch at op {op} (t={ta})");
+                        now = ta;
+                    }
+                    (a, b) => panic!("pop mismatch at op {op}: {a:?} vs {b:?}"),
+                }
+            }
+            assert_eq!(heap.len(), cal.len());
+        }
+        // drain both completely
+        while let Some((ta, ia)) = heap.pop() {
+            let (tb, ib) = cal.pop().expect("calendar drained early");
+            assert_eq!(ta.to_bits(), tb.to_bits());
+            assert_eq!(ia, ib);
+        }
+        assert!(cal.pop().is_none());
+    }
+
+    #[test]
+    fn calendar_matches_heap_random_schedules() {
+        for seed in 0..20 {
+            cross_check(seed, 800, false, &mut CalendarQueue::new());
+            cross_check(1000 + seed, 800, true, &mut CalendarQueue::new());
+        }
+    }
+
+    #[test]
+    fn calendar_matches_heap_across_retunes_and_growth() {
+        // enough pops to trigger several retunes, starting from a tiny
+        // ring so growth rebuilds fire too
+        cross_check(7, 40_000, false, &mut CalendarQueue::with_capacity(1));
+        cross_check(8, 40_000, true, &mut CalendarQueue::with_capacity(1));
+    }
+
+    #[test]
+    fn equal_time_events_pop_in_push_order() {
+        let mut cal: CalendarQueue<u32> = CalendarQueue::new();
+        for i in 0..100 {
+            cal.push(0.5, i);
+        }
+        for i in 0..100 {
+            assert_eq!(cal.pop(), Some((0.5, i)));
+        }
+    }
+
+    #[test]
+    fn sparse_fallback_finds_far_future_events() {
+        // events far beyond one year (nb * width) from the frontier
+        let mut cal: CalendarQueue<u32> = CalendarQueue::new();
+        let mut heap: HeapQueue<u32> = HeapQueue::new();
+        for (i, t) in [0.0, 1e6, 2e9, 2e9, 5e12].into_iter().enumerate() {
+            cal.push(t, i as u32);
+            heap.push(t, i as u32);
+        }
+        for _ in 0..5 {
+            let (ta, ia) = heap.pop().unwrap();
+            let (tb, ib) = cal.pop().unwrap();
+            assert_eq!(ta.to_bits(), tb.to_bits());
+            assert_eq!(ia, ib);
+        }
+    }
+}

@@ -14,22 +14,31 @@
 //! - [`stage`] — clock abstraction, bounded hand-off queues, busy
 //!   meters, and the stage traits of the wall-clock driver;
 //! - [`driver`] — the virtual-time drivers (single- and multi-stream
-//!   DES) and the wall-clock multi-stream driver (real threads, shared
-//!   FIFO link + shared cloud);
+//!   DES, plus the shard-parallel fleet path over independent link
+//!   groups) and the wall-clock multi-stream driver (real threads,
+//!   shared FIFO link + shared cloud);
+//! - [`evq`] — the pluggable DES event queues (binary-heap reference
+//!   and the calendar-queue fast path, selected by
+//!   [`driver::VirtualCfg::engine`]);
+//! - [`slab`] — contiguous struct-of-arrays per-stream runtime state of
+//!   the multi-stream DES (allocation-free hot loop);
 //! - [`stage_model`] — analytic per-task stage timings from a strategy.
 //!
 //! The supported front door is `crate::scenario::Scenario`.
 
 pub mod driver;
+pub mod evq;
 pub mod policy;
 pub mod replan;
+pub mod slab;
 pub mod stage;
 pub mod stage_model;
 
 pub use driver::{
-    run_real, run_virtual, run_virtual_streams, RealCfg, VirtualCfg,
-    VirtualStream,
+    run_real, run_virtual, run_virtual_shards, run_virtual_streams, FleetShard,
+    RealCfg, VirtualCfg, VirtualStream,
 };
+pub use evq::{CalendarQueue, EventQueue, HeapQueue, QueueEngine};
 pub use policy::{
     Coach, CoachPolicy, Decision, MeasuredTransmitCost, ModelTransmitCost,
     OnlinePolicy, StaticPolicy, TaskView, TransmitCost,

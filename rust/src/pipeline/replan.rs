@@ -15,6 +15,8 @@
 //! (coordinator::server swaps a stream's cut live over its bw→cut
 //! ladder, reusing the per-cut calibration cache).
 
+use std::sync::Arc;
+
 use crate::metrics::PlanTelemetry;
 use crate::model::{CostModel, ModelGraph};
 use crate::partition::PlanBook;
@@ -84,9 +86,14 @@ impl Hysteresis {
 /// hysteresis (switching the active rung when it fires). Telemetry
 /// (switch count, per-rung task share) is reported into
 /// `RunReport::plan`.
+///
+/// The rung ladder itself is immutable and sits behind an `Arc`, so
+/// cloning a plan per fleet stream shares one ladder (with its stage
+/// models and cut tensors) and copies only the small mutable runtime
+/// state: active rung, hysteresis streak, switch/occupancy counters.
 #[derive(Debug, Clone)]
 pub struct ActivePlan {
-    options: Vec<PlanOption>,
+    options: Arc<[PlanOption]>,
     active: usize,
     hysteresis: Option<Hysteresis>,
     switches: usize,
@@ -98,13 +105,13 @@ impl ActivePlan {
     /// pre-portfolio driver semantics).
     pub fn single(sm: StageModel) -> ActivePlan {
         ActivePlan {
-            options: vec![PlanOption {
+            options: Arc::from(vec![PlanOption {
                 sm,
                 base_bits: 8,
                 design_bw: 0.0,
                 lo_mbps: 0.0,
                 hi_mbps: f64::INFINITY,
-            }],
+            }]),
             active: 0,
             hysteresis: None,
             switches: 0,
@@ -114,10 +121,13 @@ impl ActivePlan {
 
     /// Set the (single) option's offline base precision — only read
     /// back through [`ActivePlan::base_bits`] when assembling policies.
+    /// Rebuilds the shared ladder (cold path: plan construction only).
     pub fn with_base_bits(mut self, bits: u8) -> ActivePlan {
-        for o in &mut self.options {
+        let mut options = self.options.to_vec();
+        for o in &mut options {
             o.base_bits = bits;
         }
+        self.options = options.into();
         self
     }
 
@@ -136,7 +146,7 @@ impl ActivePlan {
             active,
             hysteresis: Some(Hysteresis::new(k)),
             switches: 0,
-            options,
+            options: options.into(),
         }
     }
 

@@ -13,6 +13,8 @@
 //! portfolio all share the chain decomposition and the candidate
 //! memos instead of re-deriving them per call.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, bail, Result};
 
 use crate::baselines::Scheme;
@@ -27,8 +29,8 @@ use crate::partition::{
     log_grid, AnalyticAcc, PartitionConfig, PlanBook, SearchCtx, Strategy,
 };
 use crate::pipeline::driver::{
-    run_real, run_virtual, run_virtual_streams, RealCfg, SimCloud, SimDevice,
-    VirtualCfg, VirtualStream,
+    run_real, run_virtual, run_virtual_shards, FleetShard, RealCfg, SimCloud,
+    SimDevice, VirtualCfg, VirtualStream,
 };
 use crate::pipeline::{
     ActivePlan, OnlinePolicy, StageModel, StaticPolicy, WallClock,
@@ -146,6 +148,17 @@ struct FleetStream {
     policy: Box<dyn OnlinePolicy + Send>,
     /// admission threshold resolved against this stream's own period
     drop_after: Option<f64>,
+}
+
+/// The scale-dependent compilation shared by every stream of one device
+/// scale: cost model + runtime plan handle (whose rung ladder sits
+/// behind an `Arc`). Cloning the plan per stream copies only the small
+/// mutable hysteresis/occupancy state; the ladder — stage models, cut
+/// tensors — is shared, so a 100k-stream homogeneous fleet plans once
+/// and carries one ladder.
+struct PlanTemplate {
+    cost: CostModel,
+    plan: ActivePlan,
 }
 
 impl SimPlan {
@@ -371,19 +384,16 @@ impl Scenario {
         Ok(self.compile()?.run())
     }
 
-    /// Compile one fleet stream: plan + runtime plan handle + tasks +
-    /// policy, with the admission threshold resolved against the
-    /// STREAM's own arrival period (a slow stream's
-    /// `drop_after_periods` bound must not shrink to the base cadence).
-    fn compile_stream(
+    /// Compile the scale-dependent plan template once: partition
+    /// search, stage model and runtime plan handle for one device
+    /// scale. Every stream of that scale clones from it.
+    fn compile_template(
         &self,
         ctx: &mut SearchCtx,
         g: &ModelGraph,
-        spec: &StreamSpec,
-        index: usize,
-        base_period: f64,
-    ) -> Result<FleetStream> {
-        let cost = self.cost_model(spec.scale);
+        scale: f64,
+    ) -> Result<PlanTemplate> {
+        let cost = self.cost_model(scale);
         let plan_bw = self.plan_bandwidth();
         let cfg = self.partition_cfg(ctx, g, &cost, plan_bw)?;
         let strat =
@@ -391,6 +401,23 @@ impl Scenario {
         let sm =
             StageModel::from_strategy(g, &cost, &strat, self.stage_bandwidth());
         let plan = self.runtime_plan(ctx, g, &cost, &cfg, &strat, &sm)?;
+        Ok(PlanTemplate { cost, plan })
+    }
+
+    /// Compile one fleet stream from its scale's template: clone the
+    /// plan handle (Arc-shared ladder), generate the stream's arrivals
+    /// and build its policy, with the admission threshold resolved
+    /// against the STREAM's own arrival period (a slow stream's
+    /// `drop_after_periods` bound must not shrink to the base cadence).
+    fn compile_stream(
+        &self,
+        tmpl: &PlanTemplate,
+        g: &ModelGraph,
+        spec: &StreamSpec,
+        index: usize,
+        base_period: f64,
+    ) -> Result<FleetStream> {
+        let plan = tmpl.plan.clone();
         let period = spec.period.unwrap_or(base_period);
         let seed = spec.seed.unwrap_or_else(|| {
             self.workload.seed.wrapping_add(101 * index as u64)
@@ -402,21 +429,23 @@ impl Scenario {
             self.workload.n_classes,
             seed,
         );
-        let policy = self.make_policy(plan.base_bits(), plan.sm(), &cost, g);
+        let policy =
+            self.make_policy(plan.base_bits(), plan.sm(), &tmpl.cost, g);
         Ok(FleetStream {
             plan,
-            cost,
+            cost: tmpl.cost.clone(),
             tasks,
             policy,
             drop_after: self.admission.resolve(period),
         })
     }
 
-    /// Compile every stream of the fleet, sharing one memoized search
-    /// ctx per DISTINCT device scale (a scale changes the cost model,
-    /// which invalidates the candidate memos but not the chain
-    /// decomposition — equal-scale streams reuse one fork, so a
-    /// homogeneous slow fleet still plans once).
+    /// Compile every stream of the fleet, building ONE plan template
+    /// per DISTINCT device scale (a scale changes the cost model, which
+    /// invalidates the candidate memos but not the chain decomposition
+    /// — equal-scale streams clone from one template, so a homogeneous
+    /// fleet plans once no matter how many streams it has). Non-base
+    /// scales plan through their own fork of the memoized search ctx.
     fn compile_fleet(
         &self,
         ctx: &mut SearchCtx,
@@ -425,27 +454,29 @@ impl Scenario {
     ) -> Result<Vec<FleetStream>> {
         let specs = self.stream_specs();
         let mut built = Vec::with_capacity(specs.len());
-        let mut forks: Vec<(u64, SearchCtx)> = Vec::new();
+        let mut base_tmpl: Option<PlanTemplate> = None;
+        let mut forks: Vec<(u64, PlanTemplate)> = Vec::new();
         for (i, spec) in specs.iter().enumerate() {
-            if spec.scale == 1.0 {
-                built.push(self.compile_stream(ctx, g, spec, i, base_period)?);
+            let tmpl: &PlanTemplate = if spec.scale == 1.0 {
+                if base_tmpl.is_none() {
+                    base_tmpl = Some(self.compile_template(ctx, g, 1.0)?);
+                }
+                base_tmpl.as_ref().expect("just built")
             } else {
                 let key = spec.scale.to_bits();
-                let idx = match forks.iter().position(|(k, _)| *k == key) {
-                    Some(idx) => idx,
-                    None => {
-                        forks.push((key, ctx.fork()));
-                        forks.len() - 1
-                    }
-                };
-                built.push(self.compile_stream(
-                    &mut forks[idx].1,
-                    g,
-                    spec,
-                    i,
-                    base_period,
-                )?);
-            }
+                if !forks.iter().any(|(k, _)| *k == key) {
+                    let mut fork = ctx.fork();
+                    let tmpl =
+                        self.compile_template(&mut fork, g, spec.scale)?;
+                    forks.push((key, tmpl));
+                }
+                &forks
+                    .iter()
+                    .find(|(k, _)| *k == key)
+                    .expect("just inserted")
+                    .1
+            };
+            built.push(self.compile_stream(tmpl, g, spec, i, base_period)?);
         }
         Ok(built)
     }
@@ -457,6 +488,16 @@ impl Scenario {
     /// bounded in-flight window (backpressure stalls visible in
     /// `StageUsage::stall`); admission control sees the shared link
     /// backlog, like the single-stream DES.
+    ///
+    /// With `n_links > 1` (or explicit `StreamSpec::link_group`
+    /// overrides) the fleet splits into independent link groups — each
+    /// group has its OWN FIFO link and cloud, modelling separate cells
+    /// each with an edge server — and the groups' sequential DES runs
+    /// execute in parallel across threads. Each group's event order is
+    /// unchanged by the parallelism, so per-stream results are
+    /// bit-for-bit identical to running the groups one after another
+    /// (pinned by a driver test). One group (the default) is exactly
+    /// the classic shared-everything fleet.
     pub fn simulate_fleet(&self) -> Result<MultiReport> {
         let g = self.resolve_graph()?;
         let base_cost = self.cost_model(1.0);
@@ -464,10 +505,29 @@ impl Scenario {
         let base_period =
             self.resolve_period(&mut ctx, &g, &base_cost, self.plan_bandwidth())?;
         let mut built = self.compile_fleet(&mut ctx, &g, base_period)?;
-        let label = self.report_label();
-        let mut streams: Vec<VirtualStream<'_>> = built
-            .iter_mut()
-            .map(|b| VirtualStream {
+        let label: Arc<str> = self.report_label().into();
+        let specs = self.stream_specs();
+        let n_links = self.n_links.max(1);
+        // round-robin default; explicit link_group wins
+        let groups: Vec<usize> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| s.link_group.unwrap_or(i % n_links))
+            .collect();
+        let mut order: Vec<usize> = Vec::new();
+        for &gid in &groups {
+            if !order.contains(&gid) {
+                order.push(gid);
+            }
+        }
+        let mut shards: Vec<FleetShard<'_>> = order
+            .iter()
+            .map(|_| FleetShard { indices: Vec::new(), streams: Vec::new() })
+            .collect();
+        for ((i, b), gid) in built.iter_mut().enumerate().zip(&groups) {
+            let k = order.iter().position(|o| o == gid).expect("gid in order");
+            shards[k].indices.push(i);
+            shards[k].streams.push(VirtualStream {
                 tasks: b.tasks.as_slice(),
                 plan: &mut b.plan,
                 graph: &g,
@@ -475,16 +535,16 @@ impl Scenario {
                 policy: b.policy.as_mut(),
                 scheme: label.clone(),
                 drop_after: b.drop_after,
-            })
-            .collect();
-        Ok(run_virtual_streams(
-            &mut streams,
+            });
+        }
+        Ok(run_virtual_shards(
+            shards,
             &self.bandwidth,
             // same default window as serve_sim/serve, so one scenario
             // models the same backpressure on every multi-stream driver
             VirtualCfg {
                 queue_cap: Some(self.queue_cap.unwrap_or(8)),
-                drop_after: None,
+                ..VirtualCfg::default()
             },
         ))
     }
@@ -668,7 +728,7 @@ mod tests {
                 .simulate()
                 .unwrap();
             assert_eq!(r.tasks.len(), 60, "{}", scheme.name());
-            assert_eq!(r.scheme, scheme.name());
+            assert_eq!(&*r.scheme, scheme.name());
             assert!(r.throughput() > 0.0);
         }
     }
@@ -705,6 +765,36 @@ mod tests {
         let a = &multi.per_stream[0].tasks;
         let b = &multi.per_stream[1].tasks;
         assert!(a.iter().zip(b).any(|(x, y)| x.label != y.label));
+    }
+
+    #[test]
+    fn independent_link_groups_remove_cross_stream_contention() {
+        // same fleet, same per-stream seeds/plans; the only change is
+        // whether the 4 streams share one link or get one each. A
+        // dedicated link can never be slower than a contended one.
+        let base = Scenario::new("vgg16")
+            .policy_static(8, f64::INFINITY)
+            .tasks(60)
+            .period(5e-4)
+            .correlation(Correlation::Low)
+            .fleet(4);
+        let shared = base.clone().simulate_fleet().unwrap();
+        let split = base.n_links(4).simulate_fleet().unwrap();
+        assert_eq!(shared.per_stream.len(), 4);
+        assert_eq!(split.per_stream.len(), 4);
+        assert!(shared.events > 0 && split.events > 0);
+        for (i, (a, b)) in
+            shared.per_stream.iter().zip(&split.per_stream).enumerate()
+        {
+            assert_eq!(a.tasks.len(), b.tasks.len(), "stream {i}");
+            assert!(
+                b.avg_latency_ms() <= a.avg_latency_ms() + 1e-9,
+                "stream {i}: dedicated link slower than shared \
+                 ({:.3} vs {:.3} ms)",
+                b.avg_latency_ms(),
+                a.avg_latency_ms()
+            );
+        }
     }
 
     #[test]

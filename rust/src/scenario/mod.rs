@@ -188,6 +188,9 @@ pub struct StreamSpec {
     /// task-stream seed override (default: scenario seed + 101 * index)
     pub seed: Option<u64>,
     pub n_tasks: Option<usize>,
+    /// explicit link group (independent FIFO link + cloud per group in
+    /// the fleet DES); `None` = round-robin over `Scenario::n_links`
+    pub link_group: Option<usize>,
 }
 
 impl Default for StreamSpec {
@@ -199,6 +202,7 @@ impl Default for StreamSpec {
             correlation: None,
             seed: None,
             n_tasks: None,
+            link_group: None,
         }
     }
 }
@@ -249,6 +253,14 @@ pub struct Scenario {
     /// time. `None` = every multi-stream driver uses the serving
     /// default of 8.
     pub queue_cap: Option<usize>,
+    /// independent link groups in the fleet DES: streams are assigned
+    /// round-robin (stream i -> group i % n_links) unless a
+    /// [`StreamSpec::link_group`] overrides, each group gets its own
+    /// FIFO link + cloud (separate cells, each with an edge server),
+    /// and groups simulate in parallel across threads
+    /// ([`crate::pipeline::driver::run_virtual_shards`]). 1 = the
+    /// classic shared-everything fleet.
+    pub n_links: usize,
     /// serve-mode device emulation padding (NX ~6, TX2 ~10.5)
     pub device_scale: f64,
     /// serve-mode cut override (default: middle block)
@@ -284,6 +296,7 @@ impl Scenario {
             streams: Vec::new(),
             n_streams: 1,
             queue_cap: None,
+            n_links: 1,
             device_scale: 6.0,
             cut: None,
             audit_every: 0,
@@ -451,6 +464,14 @@ impl Scenario {
     /// window of the multi-stream DES.
     pub fn queue_cap(mut self, cap: usize) -> Self {
         self.queue_cap = Some(cap);
+        self
+    }
+
+    /// Split the fleet across `n` independent link groups (stream `i`
+    /// joins group `i % n` unless its [`StreamSpec::link_group`] says
+    /// otherwise). Groups share nothing and simulate in parallel.
+    pub fn n_links(mut self, n: usize) -> Self {
+        self.n_links = n.max(1);
         self
     }
 

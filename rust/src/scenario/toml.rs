@@ -19,10 +19,12 @@
 //! [workload]  n_tasks, period_ms, load (sustainable|saturated),
 //!             load_factor, correlation (none|low|medium|high), seed,
 //!             n_classes, drop_after_ms, drop_after_periods
-//! [serve]     n_streams, device_scale, cut, audit_every, queue_cap
+//! [serve]     n_streams, device_scale, cut, audit_every, queue_cap,
+//!             n_links
 //! [replan]    enabled, min_mbps, max_mbps, rungs, k,
 //!             serve_cuts ("mbps:cut,mbps:cut,..")
-//! [stream.N]  scale, cut, period_ms, seed, correlation, n_tasks
+//! [stream.N]  scale, cut, period_ms, seed, correlation, n_tasks,
+//!             link_group
 //! ```
 
 use std::path::Path;
@@ -66,7 +68,14 @@ const KNOWN: &[(&str, &[&str])] = &[
     ),
     (
         "serve",
-        &["n_streams", "device_scale", "cut", "audit_every", "queue_cap"],
+        &[
+            "n_streams",
+            "device_scale",
+            "cut",
+            "audit_every",
+            "queue_cap",
+            "n_links",
+        ],
     ),
     (
         "replan",
@@ -74,8 +83,15 @@ const KNOWN: &[(&str, &[&str])] = &[
     ),
 ];
 
-const STREAM_KEYS: &[&str] =
-    &["scale", "cut", "period_ms", "seed", "correlation", "n_tasks"];
+const STREAM_KEYS: &[&str] = &[
+    "scale",
+    "cut",
+    "period_ms",
+    "seed",
+    "correlation",
+    "n_tasks",
+    "link_group",
+];
 
 fn scheme_of(s: &str) -> Result<Scheme> {
     Ok(match s {
@@ -157,6 +173,9 @@ fn parse_stream(raw: &RawConfig, section: &str) -> Result<StreamSpec> {
     }
     if let Some(n) = raw.get_f64(section, "n_tasks")? {
         spec.n_tasks = Some(n as usize);
+    }
+    if let Some(g) = raw.get_f64(section, "link_group")? {
+        spec.link_group = Some(g as usize);
     }
     Ok(spec)
 }
@@ -358,6 +377,12 @@ impl Scenario {
             }
             sc.queue_cap = Some(q as usize);
         }
+        if let Some(n) = raw.get_f64("serve", "n_links")? {
+            if n < 1.0 {
+                bail!("serve.n_links must be >= 1, got {n}");
+            }
+            sc.n_links = n as usize;
+        }
 
         // ---- [replan] --------------------------------------------------
         if raw.sections.contains("replan") {
@@ -487,6 +512,19 @@ queue_cap = 4
     fn queue_cap_must_be_positive() {
         assert!(Scenario::from_toml("[serve]\nqueue_cap = 0\n").is_err());
         assert_eq!(Scenario::from_toml("").unwrap().queue_cap, None);
+    }
+
+    #[test]
+    fn n_links_and_link_group_parse() {
+        let sc = Scenario::from_toml(
+            "[serve]\nn_links = 3\n[stream.0]\nlink_group = 2\n[stream.1]\nscale = 2.0\n",
+        )
+        .unwrap();
+        assert_eq!(sc.n_links, 3);
+        assert_eq!(sc.streams[0].link_group, Some(2));
+        assert_eq!(sc.streams[1].link_group, None);
+        assert_eq!(Scenario::from_toml("").unwrap().n_links, 1);
+        assert!(Scenario::from_toml("[serve]\nn_links = 0\n").is_err());
     }
 
     #[test]

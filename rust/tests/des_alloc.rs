@@ -1,0 +1,140 @@
+//! Allocation-behaviour gate for the DES hot path: doubling the number
+//! of simulated tasks must NOT double heap allocations. After the slab
+//! refactor the per-event work is allocation-free — the only allocs in
+//! a run are fleet-size setup (slab vectors, pre-sized outcome buffers,
+//! calendar buckets), occasional amortised growth (bucket heaps, rare
+//! calendar retunes) and per-stream report assembly. All of those are
+//! O(streams + log events), so the allocation-count DELTA between a
+//! T-task and a 2T-task run stays far below the extra event count.
+//!
+//! This lives in its own integration-test binary so the counting
+//! `#[global_allocator]` sees no other test's traffic.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use coach::model::topology::vgg16;
+use coach::model::{CostModel, DeviceProfile};
+use coach::network::BandwidthModel;
+use coach::pipeline::{
+    run_virtual_streams, ActivePlan, QueueEngine, StageModel, StaticPolicy,
+    VirtualCfg, VirtualStream,
+};
+use coach::sim::{generate, Correlation, SimTask};
+
+/// Counts allocation EVENTS (alloc + realloc + alloc_zeroed), not
+/// bytes: a pre-sized buffer that merely grows in capacity with T
+/// still counts once, which is exactly the scaling we want to pin.
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const N_STREAMS: usize = 32;
+
+/// Run one calendar-engine fleet and return (alloc events inside the
+/// run, DES events fired). Task generation, plans and policies are
+/// built OUTSIDE the counted window — only `run_virtual_streams`
+/// itself is measured.
+fn measured_run(tasks_per_stream: usize) -> (u64, u64) {
+    let g = vgg16();
+    let cost =
+        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
+    let sm = StageModel {
+        t_e: 5e-4,
+        t_c: 2e-4,
+        first_send_offset: 0.0,
+        t_c_par: 0.0,
+        cut_elems: vec![512],
+        result_elems: 10,
+        exit_check: 0.0,
+    };
+    let bw = BandwidthModel::Static(200.0);
+    let tls: Vec<Vec<SimTask>> = (0..N_STREAMS)
+        .map(|i| {
+            generate(tasks_per_stream, 2e-3, Correlation::Low, 10, i as u64)
+        })
+        .collect();
+    let mut pols: Vec<StaticPolicy> =
+        (0..N_STREAMS).map(|_| StaticPolicy::no_exit(8)).collect();
+    let mut plans: Vec<ActivePlan> =
+        (0..N_STREAMS).map(|_| ActivePlan::single(sm.clone())).collect();
+    let mut streams: Vec<VirtualStream<'_>> = tls
+        .iter()
+        .zip(pols.iter_mut())
+        .zip(plans.iter_mut())
+        .map(|((tasks, pol), plan)| VirtualStream {
+            tasks,
+            plan,
+            graph: &g,
+            cost: &cost,
+            policy: pol,
+            scheme: "alloc".into(),
+            drop_after: None,
+        })
+        .collect();
+    let cfg = VirtualCfg {
+        queue_cap: Some(4),
+        drop_after: None,
+        engine: QueueEngine::Calendar,
+    };
+
+    let before = ALLOC_EVENTS.load(Ordering::Relaxed);
+    let multi = run_virtual_streams(&mut streams, &bw, cfg);
+    let allocs = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        multi.per_stream.iter().map(|r| r.tasks.len()).sum::<usize>(),
+        N_STREAMS * tasks_per_stream,
+        "task conservation"
+    );
+    (allocs, multi.events)
+}
+
+#[test]
+fn doubling_tasks_adds_almost_no_allocations() {
+    // warm-up run so lazy one-time allocations (thread locals, etc.)
+    // don't land in either measured window
+    let _ = measured_run(50);
+    let (a1, e1) = measured_run(300);
+    let (a2, e2) = measured_run(600);
+    assert!(e2 > e1, "sanity: more tasks => more events ({e1} -> {e2})");
+    let extra_events = e2 - e1;
+    let delta = a2.saturating_sub(a1);
+    // per-event allocation would put `delta` near `extra_events`
+    // (~29k here); setup/assembly noise and amortised queue growth stay
+    // orders of magnitude below it
+    assert!(
+        delta <= 256 + extra_events / 20,
+        "DES hot path allocates per event: {delta} extra alloc events \
+         for {extra_events} extra DES events (run1: {a1} allocs / {e1} \
+         events, run2: {a2} allocs / {e2} events)"
+    );
+}

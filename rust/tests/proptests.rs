@@ -10,7 +10,9 @@ use coach::network::{BandwidthModel, Trace};
 use coach::partition::{
     chain_of, evaluate, optimize, AnalyticAcc, PartitionConfig,
 };
-use coach::pipeline::{Decision, OnlinePolicy, StageModel, TaskView};
+use coach::pipeline::{
+    Decision, OnlinePolicy, QueueEngine, StageModel, TaskView,
+};
 use coach::quant::{clamp_bits, uaq};
 use coach::scenario::Scenario;
 use coach::sim::Correlation;
@@ -413,59 +415,225 @@ fn prop_event_driven_single_stream_matches_run_virtual_bit_for_bit() {
             drop_after,
         );
 
-        let mut p2 = StaticPolicy { bits, exit_threshold: exit };
-        let mut plan2 = ActivePlan::single(sm.clone());
-        let multi = run_virtual_streams(
-            &mut [VirtualStream {
-                tasks: &tasks,
-                plan: &mut plan2,
-                graph: &g,
-                cost: &cost,
-                policy: &mut p2,
-                scheme: "p".into(),
-                drop_after,
-            }],
-            &bw,
-            VirtualCfg { queue_cap: None, drop_after: None },
-        );
-        let r = &multi.per_stream[0];
-        assert_eq!(r.dropped, legacy.dropped, "case {case}: dropped");
-        assert_eq!(r.tasks.len(), legacy.tasks.len(), "case {case}: count");
-        for (a, b) in r.tasks.iter().zip(&legacy.tasks) {
-            assert_eq!(a.id, b.id, "case {case}: id");
-            assert_eq!(a.bits, b.bits, "case {case}: bits");
-            assert_eq!(a.exited_early, b.exited_early, "case {case}: exit");
-            assert_eq!(a.wire_bytes, b.wire_bytes, "case {case}: wire");
+        // the golden holds for BOTH event-queue engines: the calendar
+        // queue must change nothing a heap-backed DES computed
+        for engine in [QueueEngine::Heap, QueueEngine::Calendar] {
+            let mut p2 = StaticPolicy { bits, exit_threshold: exit };
+            let mut plan2 = ActivePlan::single(sm.clone());
+            let multi = run_virtual_streams(
+                &mut [VirtualStream {
+                    tasks: &tasks,
+                    plan: &mut plan2,
+                    graph: &g,
+                    cost: &cost,
+                    policy: &mut p2,
+                    scheme: "p".into(),
+                    drop_after,
+                }],
+                &bw,
+                VirtualCfg { queue_cap: None, drop_after: None, engine },
+            );
+            let r = &multi.per_stream[0];
+            assert_eq!(r.dropped, legacy.dropped, "case {case} {engine:?}: dropped");
             assert_eq!(
-                a.finish.to_bits(),
-                b.finish.to_bits(),
-                "case {case}: task {} finish {} vs {}",
-                a.id,
-                a.finish,
-                b.finish
+                r.tasks.len(),
+                legacy.tasks.len(),
+                "case {case} {engine:?}: count"
+            );
+            for (a, b) in r.tasks.iter().zip(&legacy.tasks) {
+                assert_eq!(a.id, b.id, "case {case} {engine:?}: id");
+                assert_eq!(a.bits, b.bits, "case {case} {engine:?}: bits");
+                assert_eq!(
+                    a.exited_early, b.exited_early,
+                    "case {case} {engine:?}: exit"
+                );
+                assert_eq!(
+                    a.wire_bytes, b.wire_bytes,
+                    "case {case} {engine:?}: wire"
+                );
+                assert_eq!(
+                    a.finish.to_bits(),
+                    b.finish.to_bits(),
+                    "case {case} {engine:?}: task {} finish {} vs {}",
+                    a.id,
+                    a.finish,
+                    b.finish
+                );
+                assert_eq!(
+                    a.latency.to_bits(),
+                    b.latency.to_bits(),
+                    "case {case} {engine:?}: latency"
+                );
+            }
+            assert_eq!(
+                r.device.busy.to_bits(),
+                legacy.device.busy.to_bits(),
+                "case {case} {engine:?}: device busy"
             );
             assert_eq!(
-                a.latency.to_bits(),
-                b.latency.to_bits(),
-                "case {case}: latency"
+                r.link.busy.to_bits(),
+                legacy.link.busy.to_bits(),
+                "case {case} {engine:?}: link busy"
             );
+            assert_eq!(
+                r.cloud.busy.to_bits(),
+                legacy.cloud.busy.to_bits(),
+                "case {case} {engine:?}: cloud busy"
+            );
+            assert_eq!(r.device.stall, 0.0, "case {case} {engine:?}: no-cap stall");
         }
-        assert_eq!(
-            r.device.busy.to_bits(),
-            legacy.device.busy.to_bits(),
-            "case {case}: device busy"
-        );
-        assert_eq!(
-            r.link.busy.to_bits(),
-            legacy.link.busy.to_bits(),
-            "case {case}: link busy"
-        );
-        assert_eq!(
-            r.cloud.busy.to_bits(),
-            legacy.cloud.busy.to_bits(),
-            "case {case}: cloud busy"
-        );
-        assert_eq!(r.device.stall, 0.0, "case {case}: no-cap stall");
+    }
+}
+
+/// The calendar event queue must be indistinguishable from the binary
+/// heap at the OUTPUT level on whole multi-stream fleets: across random
+/// fleet sizes, stage models, bandwidth models, receive-window caps and
+/// admission budgets, every per-task field and every stage counter is
+/// bit-for-bit identical between the two engines (the queues agree on
+/// every pop, including `(t, seq)` ties).
+#[test]
+fn prop_calendar_engine_matches_heap_engine_bit_for_bit() {
+    use coach::model::topology;
+    use coach::pipeline::{
+        run_virtual_streams, ActivePlan, StaticPolicy, VirtualCfg,
+        VirtualStream,
+    };
+    use coach::sim::generate;
+
+    let g = topology::vgg16();
+    let cost =
+        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
+    let mut rng = Rng::new(0xCA1E17DA);
+    for case in 0..40 {
+        let n_streams = 1 + rng.below(5);
+        let sm = StageModel {
+            t_e: 1e-4 + rng.f64() * 0.01,
+            t_c: 1e-4 + rng.f64() * 0.005,
+            first_send_offset: rng.f64() * 0.005,
+            t_c_par: rng.f64() * 0.005,
+            cut_elems: (0..1 + rng.below(3))
+                .map(|_| 100 + rng.below(20_000))
+                .collect(),
+            result_elems: 10 + rng.below(500),
+            exit_check: rng.f64() * 1e-4,
+        };
+        let bw = match rng.below(3) {
+            0 => BandwidthModel::Static(1.0 + rng.f64() * 99.0),
+            1 => BandwidthModel::Stepped(Trace {
+                steps: vec![
+                    (0.0, 5.0 + rng.f64() * 45.0),
+                    (0.05 + rng.f64() * 0.3, 1.0 + rng.f64() * 20.0),
+                ],
+            }),
+            _ => BandwidthModel::Jittered {
+                trace: Trace::constant(5.0 + rng.f64() * 45.0),
+                amplitude: rng.f64() * 0.4,
+                seed: rng.next_u64(),
+            },
+        };
+        let period = 1e-4 + rng.f64() * 0.005;
+        let tls: Vec<Vec<coach::sim::SimTask>> = (0..n_streams)
+            .map(|i| {
+                generate(
+                    20 + rng.below(60),
+                    period * (0.8 + 0.1 * i as f64),
+                    Correlation::Low,
+                    5 + rng.below(30),
+                    rng.next_u64(),
+                )
+            })
+            .collect();
+        let queue_cap = match rng.below(3) {
+            0 => None,
+            1 => Some(1),
+            _ => Some(1 + rng.below(6)),
+        };
+        let drop_after = if rng.below(2) == 0 {
+            None
+        } else {
+            Some(period * rng.f64() * 8.0)
+        };
+        let bits = (2 + rng.below(7)) as u8;
+
+        let run_with = |engine: QueueEngine| {
+            let mut pols: Vec<StaticPolicy> = (0..n_streams)
+                .map(|_| StaticPolicy { bits, exit_threshold: 0.7 })
+                .collect();
+            let mut plans: Vec<ActivePlan> = (0..n_streams)
+                .map(|_| ActivePlan::single(sm.clone()))
+                .collect();
+            let mut streams: Vec<VirtualStream<'_>> = tls
+                .iter()
+                .zip(pols.iter_mut())
+                .zip(plans.iter_mut())
+                .map(|((tasks, pol), plan)| VirtualStream {
+                    tasks,
+                    plan,
+                    graph: &g,
+                    cost: &cost,
+                    policy: pol,
+                    scheme: "p".into(),
+                    drop_after,
+                })
+                .collect();
+            run_virtual_streams(
+                &mut streams,
+                &bw,
+                VirtualCfg { queue_cap, drop_after: None, engine },
+            )
+        };
+        let heap = run_with(QueueEngine::Heap);
+        let cal = run_with(QueueEngine::Calendar);
+
+        assert_eq!(heap.events, cal.events, "case {case}: event count");
+        assert_eq!(heap.per_stream.len(), cal.per_stream.len());
+        for (si, (a, b)) in
+            heap.per_stream.iter().zip(&cal.per_stream).enumerate()
+        {
+            assert_eq!(a.dropped, b.dropped, "case {case} stream {si}: dropped");
+            assert_eq!(
+                a.tasks.len(),
+                b.tasks.len(),
+                "case {case} stream {si}: count"
+            );
+            for (x, y) in a.tasks.iter().zip(&b.tasks) {
+                assert_eq!(x.id, y.id, "case {case} stream {si}");
+                assert_eq!(x.bits, y.bits, "case {case} stream {si}");
+                assert_eq!(x.exited_early, y.exited_early, "case {case}");
+                assert_eq!(x.wire_bytes, y.wire_bytes, "case {case}");
+                assert_eq!(
+                    x.finish.to_bits(),
+                    y.finish.to_bits(),
+                    "case {case} stream {si}: task {} finish {} vs {}",
+                    x.id,
+                    x.finish,
+                    y.finish
+                );
+                assert_eq!(
+                    x.latency.to_bits(),
+                    y.latency.to_bits(),
+                    "case {case} stream {si}: latency"
+                );
+            }
+            for (ua, ub) in [(&a.device, &b.device), (&a.link, &b.link), (&a.cloud, &b.cloud)]
+            {
+                assert_eq!(
+                    ua.busy.to_bits(),
+                    ub.busy.to_bits(),
+                    "case {case} stream {si}: busy"
+                );
+                assert_eq!(
+                    ua.span.to_bits(),
+                    ub.span.to_bits(),
+                    "case {case} stream {si}: span"
+                );
+                assert_eq!(
+                    ua.stall.to_bits(),
+                    ub.stall.to_bits(),
+                    "case {case} stream {si}: stall"
+                );
+            }
+        }
     }
 }
 

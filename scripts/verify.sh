@@ -38,4 +38,14 @@ test -s "$BENCH_DIR/BENCH_fig5_replan.json" \
     || { echo "BENCH_fig5_replan.json missing"; exit 1; }
 rm -rf "$BENCH_DIR"
 
+echo "== DES scale smoke: tiny-n coach bench-des-scale emits BENCH_des_scale.json =="
+BENCH_DIR="$(mktemp -d)"
+COACH_BENCH_DIR="$BENCH_DIR" ./target/release/coach bench-des-scale \
+    --streams 64 --tasks 5 --shards 2
+test -s "$BENCH_DIR/BENCH_des_scale.json" \
+    || { echo "BENCH_des_scale.json missing"; exit 1; }
+grep -q events_per_sec "$BENCH_DIR/BENCH_des_scale.json" \
+    || { echo "BENCH_des_scale.json lacks events_per_sec"; exit 1; }
+rm -rf "$BENCH_DIR"
+
 echo "verify OK"
