@@ -193,6 +193,7 @@ mod tests {
     /// with the `events_per_sec` field the CI smoke greps for.
     #[test]
     fn tiny_grid_runs_and_emits_json() {
+        let _env = crate::bench::BENCH_DIR_TEST_LOCK.lock().unwrap();
         let dir = std::env::temp_dir().join("coach_bench_des_scale_test");
         std::fs::create_dir_all(&dir).unwrap();
         // route the JSON into the temp dir for this process

@@ -13,8 +13,15 @@ pub mod emit;
 pub mod fig1;
 pub mod fig5;
 pub mod fig67;
+pub mod serve_scale;
 pub mod table1;
 pub mod table2;
+
+/// Serializes tests that redirect `$COACH_BENCH_DIR`: the variable is
+/// process-wide, so concurrent set/restore pairs would cross-write.
+#[cfg(test)]
+pub(crate) static BENCH_DIR_TEST_LOCK: std::sync::Mutex<()> =
+    std::sync::Mutex::new(());
 
 // The DES-scale thresholds and per-scheme planning rules moved to the
 // scenario layer (the single front door); re-exported here for old

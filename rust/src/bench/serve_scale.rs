@@ -1,0 +1,239 @@
+//! Serving-runtime scaling bench: aggregate wall-clock throughput of
+//! the sim-backed serving path across fleet sizes, threaded vs pooled
+//! engine (`crate::serve`). This is the perf gate for the pluggable
+//! scheduler work: the pooled engine must hold aggregate throughput
+//! near-linear in fleet size until the shared link saturates, at fleet
+//! sizes where thread-per-stream cannot even spawn.
+//!
+//! The workload mirrors `bench::des_scale`: a fixed stage model per
+//! stream (no partition search in the timed region), static
+//! precision-8 no-exit policies so EVERY task crosses the shared link,
+//! staggered arrivals, and a link slow enough (200 Mbps) that it — not
+//! the cloud stage — is the saturating resource at the top of the grid.
+//! Everything timed is the serving runtime itself.
+//!
+//! Writes `BENCH_serve_scale.json` with one row per (streams, engine)
+//! cell: `streams`, `tasks`, `secs`, `throughput` (aggregate it/s), and
+//! `speedup_vs_threaded`. The threaded engine is only run up to
+//! [`THREADED_CAP`] streams — beyond that, one OS thread per stream is
+//! the failure mode this subsystem exists to remove, so those cells are
+//! pooled-only (noted in the table rather than silently skipped).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::bench::emit::BenchJson;
+use crate::metrics::{MultiReport, Table};
+use crate::model::{CostModel, DeviceProfile};
+use crate::network::BandwidthModel;
+use crate::pipeline::driver::{run_real, RealCfg, SimCloud, SimDevice};
+use crate::pipeline::{ActivePlan, StageModel, StaticPolicy, WallClock};
+use crate::serve::Runtime;
+use crate::sim::{generate, Correlation, SimTask};
+use crate::util::Json;
+
+/// Inter-arrival period per stream (seconds).
+const PERIOD: f64 = 2e-3;
+
+/// Shared link rate (Mbps): sized so ~520 wire bytes per task cost
+/// ~20 µs, making the link the binding resource near the top of the
+/// default grid while the 10 µs cloud stage stays out of the way.
+const LINK_MBPS: f64 = 200.0;
+
+/// Largest fleet the thread-per-stream engine is asked to serve; above
+/// this, spawning one OS thread per stream is the failure mode under
+/// test, so only the pooled engine runs.
+pub const THREADED_CAP: usize = 2048;
+
+/// One stream's fixed execution profile: half-millisecond device
+/// compute, a small feature tensor, and a cloud stage an order of
+/// magnitude under the link time.
+fn stage_model() -> StageModel {
+    StageModel {
+        t_e: 5e-4,
+        t_c: 1e-5,
+        first_send_offset: 0.0,
+        t_c_par: 0.0,
+        cut_elems: vec![512],
+        result_elems: 10,
+        exit_check: 0.0,
+    }
+}
+
+/// Per-stream task lists with arrivals staggered by `i/n` of a period,
+/// so no two streams tie on arrival time and the link round-robins.
+fn fleet_tasks(n_streams: usize, tasks_per_stream: usize) -> Vec<Vec<SimTask>> {
+    (0..n_streams)
+        .map(|i| {
+            let mut tasks = generate(
+                tasks_per_stream,
+                PERIOD,
+                Correlation::Low,
+                10,
+                i as u64,
+            );
+            let offset = PERIOD * i as f64 / n_streams as f64;
+            for t in tasks.iter_mut() {
+                t.arrive += offset;
+            }
+            tasks
+        })
+        .collect()
+}
+
+/// Serve one fleet on `runtime` and return (report, wall seconds).
+fn run_fleet(
+    tls: &[Vec<SimTask>],
+    bw: &BandwidthModel,
+    runtime: Runtime,
+) -> Result<(MultiReport, f64)> {
+    let clock = WallClock::new();
+    let sm = stage_model();
+    let streams: Vec<(Vec<SimTask>, _)> = tls
+        .iter()
+        .map(|tasks| {
+            let sm = sm.clone();
+            let bw = bw.clone();
+            let factory = move || -> Result<SimDevice<StaticPolicy>> {
+                Ok(SimDevice {
+                    policy: StaticPolicy::no_exit(8),
+                    plan: ActivePlan::single(sm),
+                    bw,
+                    clock,
+                    source_elems: 512,
+                    cost: CostModel::new(
+                        DeviceProfile::jetson_nx(),
+                        DeviceProfile::cloud_a6000(),
+                    ),
+                })
+            };
+            (tasks.clone(), factory)
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let multi = run_real::<SimDevice<StaticPolicy>, SimCloud, _, _>(
+        streams,
+        || Ok(SimCloud),
+        bw.clone(),
+        clock,
+        RealCfg {
+            runtime,
+            scheme: "bench".into(),
+            model: "sim".into(),
+            ..Default::default()
+        },
+    )?;
+    Ok((multi, t0.elapsed().as_secs_f64()))
+}
+
+/// Run the scaling grid: every fleet size on the pooled engine, and on
+/// the threaded engine up to [`THREADED_CAP`] streams. Prints nothing —
+/// the CLI renders the returned table. Also writes
+/// `BENCH_serve_scale.json`.
+pub fn run(stream_grid: &[usize], tasks_per_stream: usize) -> Result<Table> {
+    let bw = BandwidthModel::Static(LINK_MBPS);
+    let mut t = Table::new(&[
+        "streams",
+        "tasks",
+        "engine",
+        "secs",
+        "done",
+        "agg it/s",
+        "vs threaded",
+    ]);
+    let mut json = BenchJson::new("serve_scale");
+
+    for &n_streams in stream_grid {
+        let tls = fleet_tasks(n_streams, tasks_per_stream);
+        let mut threaded_tput = 0.0f64;
+        for runtime in [Runtime::Threaded, Runtime::Pooled] {
+            if runtime == Runtime::Threaded && n_streams > THREADED_CAP {
+                t.row(vec![
+                    n_streams.to_string(),
+                    (n_streams * tasks_per_stream).to_string(),
+                    runtime.name().to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("(skipped: > {THREADED_CAP} threads)"),
+                ]);
+                continue;
+            }
+            let (multi, secs) = run_fleet(&tls, &bw, runtime)?;
+            let agg = multi.aggregate();
+            let done: usize =
+                multi.per_stream.iter().map(|r| r.tasks.len()).sum();
+            let tput = agg.throughput();
+            if runtime == Runtime::Threaded {
+                threaded_tput = tput;
+            }
+            let speedup = if threaded_tput > 0.0 {
+                tput / threaded_tput
+            } else {
+                1.0
+            };
+            t.row(vec![
+                n_streams.to_string(),
+                (n_streams * tasks_per_stream).to_string(),
+                runtime.name().to_string(),
+                format!("{secs:.3}"),
+                done.to_string(),
+                format!("{tput:.0}"),
+                format!("{speedup:.2}x"),
+            ]);
+            json.add_row(
+                &format!("{n_streams}x{tasks_per_stream}/{}", runtime.name()),
+                &[
+                    ("streams", Json::Num(n_streams as f64)),
+                    ("tasks_per_stream", Json::Num(tasks_per_stream as f64)),
+                    ("engine", Json::Str(runtime.name().to_string())),
+                    ("tasks_done", Json::Num(done as f64)),
+                    ("secs", Json::Num(secs)),
+                    ("throughput", Json::Num(tput)),
+                    ("speedup_vs_threaded", Json::Num(speedup)),
+                ],
+            );
+        }
+    }
+    json.write()?;
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny grid end-to-end on both engines: rows present, every task
+    /// served, JSON written with the `streams`/`throughput` fields the
+    /// CI smoke greps for.
+    #[test]
+    fn tiny_grid_runs_both_engines_and_emits_json() {
+        let _env = crate::bench::BENCH_DIR_TEST_LOCK.lock().unwrap();
+        let dir = std::env::temp_dir().join("coach_bench_serve_scale_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let prev = std::env::var_os("COACH_BENCH_DIR");
+        std::env::set_var("COACH_BENCH_DIR", &dir);
+        let t = run(&[2, 4], 3);
+        match prev {
+            Some(v) => std::env::set_var("COACH_BENCH_DIR", v),
+            None => std::env::remove_var("COACH_BENCH_DIR"),
+        }
+        let t = t.unwrap();
+        assert_eq!(t.rows.len(), 4, "2 engine rows per fleet size");
+        let j = Json::from_file(&dir.join("BENCH_serve_scale.json")).unwrap();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 4);
+        for row in rows {
+            let n = row.get("streams").unwrap().as_f64().unwrap() as usize;
+            assert!(n == 2 || n == 4);
+            assert!(row.get("throughput").unwrap().as_f64().unwrap() > 0.0);
+            assert_eq!(
+                row.get("tasks_done").unwrap().as_f64().unwrap() as usize,
+                n * 3,
+                "every task must be served"
+            );
+        }
+    }
+}

@@ -112,6 +112,8 @@ pub struct Config {
     pub n_streams: usize,
     /// device slowdown vs the CPU-as-cloud ([serve], NX ~6, TX2 ~10.5)
     pub device_scale: f64,
+    /// serving engine of the wall-clock paths ([serve], threaded|pooled)
+    pub runtime: crate::serve::Runtime,
 }
 
 impl Default for Config {
@@ -130,6 +132,7 @@ impl Default for Config {
             seed: 42,
             n_streams: 1,
             device_scale: 6.0,
+            runtime: crate::serve::Runtime::Threaded,
         }
     }
 }
@@ -149,7 +152,7 @@ impl Config {
         ("network", &["mbps", "trace", "jitter"]),
         ("scheduler", &["eps", "t_max_ms"]),
         ("workload", &["period_ms", "n_tasks", "correlation", "seed"]),
-        ("serve", &["n_streams", "device_scale"]),
+        ("serve", &["n_streams", "device_scale", "runtime"]),
     ];
 
     pub fn from_str_toml(text: &str) -> Result<Config> {
@@ -226,6 +229,10 @@ impl Config {
         }
         if let Some(ds) = raw.get_f64("serve", "device_scale")? {
             cfg.device_scale = ds;
+        }
+        if let Some(r) = raw.get("serve", "runtime") {
+            cfg.runtime =
+                crate::serve::Runtime::parse(r).context("serve.runtime")?;
         }
         Ok(cfg)
     }

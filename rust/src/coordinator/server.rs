@@ -95,6 +95,12 @@ pub struct ServeCfg {
     /// bounded in-flight items per hand-off queue (stage backpressure;
     /// the scenario layer's `queue_cap` knob)
     pub queue_cap: usize,
+    /// serving engine ([`crate::serve::Runtime`]): thread-per-stream
+    /// reference or the pooled worker scheduler. PJRT stages only
+    /// implement the blocking calls, so under the pooled engine real
+    /// compute occupies its worker inline — the win is that waits
+    /// (arrival pacing, link, cloud queue) no longer each pin a thread.
+    pub runtime: crate::serve::Runtime,
     /// live cut re-planning over an explicit bw→cut ladder (None =
     /// every stream keeps its configured cut for the whole run)
     pub replan: Option<ServeReplan>,
@@ -684,6 +690,7 @@ pub fn serve_streams(
             // both legs plus the label/logits return payload
             rtt_half: cost.rtt_half,
             result_wire_bytes: cost.wire_bytes(manifest.n_classes, 32),
+            runtime: cfg.runtime,
             scheme: "real".into(),
             model: cfg.model.clone(),
         },

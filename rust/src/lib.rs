@@ -37,5 +37,6 @@ pub mod pipeline;
 pub mod quant;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod sim;
 pub mod util;

@@ -3,16 +3,24 @@
 //! Subcommands (hand-rolled parsing; the offline build has no clap):
 //!
 //! ```text
-//! coach run <scenario.toml> [--real] [--wall] [--n N]
+//! coach run <scenario.toml> [--real] [--wall] [--n N] [--runtime threaded|pooled]
 //!                                    # one description, any driver:
 //!                                    # DES (default; fleet-aware),
 //!                                    # --wall = wall-clock sim-compute,
-//!                                    # --real = PJRT server
+//!                                    # --real = PJRT server; --runtime
+//!                                    # picks the serving engine of both
+//!                                    # wall-clock paths
 //! coach partition  [--model M] [--device nx|tx2] [--bw MBPS] [--eps E]
 //! coach serve      [--model vgg_mini|resnet_mini] [--cut K] [--n N]
 //!                  [--bw MBPS] [--corr low|medium|high] [--scheme coach|noadjust]
 //!                  [--device-scale S] [--streams N] [--queue-cap Q]
-//!                  [--config deploy.toml]
+//!                  [--runtime threaded|pooled] [--config deploy.toml]
+//! coach serve-sim  [--streams N] [--n TASKS] [--model M] [--bw MBPS]
+//!                  [--period-ms P] [--queue-cap Q] [--drop-after-periods D]
+//!                  [--runtime threaded|pooled]
+//!                                    # wall-clock serving with simulated
+//!                                    # compute (no artifacts); the pooled
+//!                                    # engine handles 10k+ streams
 //! coach profile    [--reps R]       # per-block times -> profile.json
 //! coach bench-table1 [--n N]
 //! coach bench-table2 [--n N]
@@ -25,6 +33,10 @@
 //!                                    # DES events/sec: heap vs calendar
 //!                                    # vs shard-parallel (default grid
 //!                                    # 1k,10k,100k streams x 10 tasks)
+//! coach bench-serve-scale [--streams A,B,..] [--tasks T]
+//!                                    # wall-clock serving throughput,
+//!                                    # threaded vs pooled engine
+//!                                    # (default grid 4,64,1024,10000)
 //! coach trace                        # Fig. 2 scheme walkthrough
 //! ```
 
@@ -117,6 +129,7 @@ fn run() -> Result<()> {
         "run" => cmd_run(&args),
         "partition" => cmd_partition(&args),
         "serve" => cmd_serve(&args),
+        "serve-sim" => cmd_serve_sim(&args),
         "profile" => cmd_profile(&args),
         "bench-table1" => {
             let n = args.usize_or("n", 400)?;
@@ -211,6 +224,26 @@ fn run() -> Result<()> {
             );
             Ok(())
         }
+        "bench-serve-scale" => {
+            let tasks = args.usize_or("tasks", 10)?;
+            let grid: Vec<usize> = match args.get("streams") {
+                None => vec![4, 64, 1024, 10_000],
+                Some(spec) => spec
+                    .split(',')
+                    .map(|s| {
+                        s.trim().parse::<usize>().with_context(|| {
+                            format!("--streams entry '{s}' is not a number")
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+            };
+            println!(
+                "serving-runtime scaling: aggregate wall-clock throughput, \
+                 threaded vs pooled ({tasks} tasks/stream)"
+            );
+            println!("{}", bench::serve_scale::run(&grid, tasks)?.render());
+            Ok(())
+        }
         "trace" => cmd_trace(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -264,6 +297,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut sc = Scenario::from_file(std::path::Path::new(&path))?;
     if let Some(n) = args.get("n") {
         sc.workload.n_tasks = n.parse().context("--n")?;
+    }
+    if let Some(r) = args.get("runtime") {
+        // wall-clock engine override (--wall / --real paths)
+        sc.runtime = coach::serve::Runtime::parse(r)?;
     }
     let fleet = sc.is_fleet();
     println!(
@@ -414,11 +451,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         n_streams,
         drop_after: None,
         queue_cap: args.usize_or("queue-cap", 8)?.max(1),
+        runtime: match args.get("runtime") {
+            Some(r) => coach::serve::Runtime::parse(r)?,
+            None => base.runtime,
+        },
         replan: None,
     };
     println!(
-        "serving {n} tasks x {n_streams} stream(s) of {model} (cut {cut}, {:?}, {corr:?})...",
-        cfg.bw
+        "serving {n} tasks x {n_streams} stream(s) of {model} (cut {cut}, \
+         {:?}, {corr:?}, {} runtime)...",
+        cfg.bw,
+        cfg.runtime.name()
     );
     let res = serve(&manifest, &cfg)?;
     if n_streams > 1 {
@@ -447,6 +490,57 @@ fn cmd_serve(args: &Args) -> Result<()> {
         r.link.utilization() * 100.0,
         r.cloud.utilization() * 100.0,
         r.total_bubbles()
+    );
+    Ok(())
+}
+
+/// `coach serve-sim` — the wall-clock serving path with simulated
+/// compute (no PJRT artifacts needed): a fleet of identical streams on
+/// the selected serving engine. The quick way to exercise the pooled
+/// scheduler at fleet sizes thread-per-stream cannot reach, e.g.
+/// `coach serve-sim --streams 10000 --runtime pooled`.
+fn cmd_serve_sim(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("resnet101");
+    let n_streams = args.usize_or("streams", 4)?.max(1);
+    let n_tasks = args.usize_or("n", 20)?;
+    let mut sc = Scenario::new(model)
+        .named("serve-sim")
+        .fleet(n_streams)
+        .tasks(n_tasks);
+    if let Some(b) = args.get("bw") {
+        sc = sc.bandwidth_mbps(b.parse::<f64>().context("--bw")?);
+    }
+    if let Some(p) = args.get("period-ms") {
+        sc = sc.period(p.parse::<f64>().context("--period-ms")? / 1e3);
+    }
+    if let Some(q) = args.get("queue-cap") {
+        sc = sc.queue_cap(q.parse::<usize>().context("--queue-cap")?.max(1));
+    }
+    if let Some(d) = args.get("drop-after-periods") {
+        sc = sc
+            .drop_after_periods(d.parse::<f64>().context("--drop-after-periods")?);
+    }
+    if let Some(r) = args.get("runtime") {
+        sc = sc.runtime(coach::serve::Runtime::parse(r)?);
+    }
+    println!(
+        "wall-clock sim fleet: {n_streams} stream(s) x {n_tasks} task(s) of \
+         {model} on the {} engine ({:?})",
+        sc.runtime.name(),
+        sc.bandwidth
+    );
+    let multi = sc.serve_sim()?;
+    // at fleet scale a per-stream line each would swamp the terminal
+    if multi.per_stream.len() <= 16 {
+        for (i, r) in multi.per_stream.iter().enumerate() {
+            println!("stream {i}: {}", report_summary(r));
+        }
+    }
+    println!(
+        "aggregate [{} runtime, {} streams]: {}",
+        sc.runtime.name(),
+        multi.per_stream.len(),
+        report_summary(&multi.aggregate())
     );
     Ok(())
 }
@@ -505,11 +599,14 @@ fn cmd_trace() -> Result<()> {
 fn print_help() {
     println!(
         "COACH - near bubble-free end-cloud collaborative inference\n\
-         commands: run | partition | serve | profile | bench-table1 | bench-table2 |\n\
-         \x20         bench-fig1 | bench-fig5 | bench-fig6 | bench-fig7 | bench-fleet |\n\
-         \x20         bench-des-scale | trace | help\n\
+         commands: run | partition | serve | serve-sim | profile | bench-table1 |\n\
+         \x20         bench-table2 | bench-fig1 | bench-fig5 | bench-fig6 | bench-fig7 |\n\
+         \x20         bench-fleet | bench-des-scale | bench-serve-scale | trace | help\n\
          `coach run scenarios/<name>.toml [--real|--wall]` runs one scenario\n\
          description on the DES / wall-clock / PJRT driver; see scenarios/\n\
-         for presets and rust/src/main.rs docs for flags"
+         for presets and rust/src/main.rs docs for flags\n\
+         wall-clock paths take --runtime threaded|pooled (pooled = fixed\n\
+         worker pool, serves 10k+ streams; try `coach serve-sim --streams\n\
+         10000 --runtime pooled`)"
     );
 }

@@ -11,10 +11,12 @@
 //!   The multi-stream form interleaves all N streams on a global event
 //!   heap, with per-stream bounded in-flight windows mirroring the
 //!   wall-clock driver's queue backpressure ([`VirtualCfg`]).
-//! - **wall time** ([`run_real`]) — the serving driver: one thread per
-//!   device stream, a FIFO link thread, and ONE cloud thread shared by
-//!   every stream (in the PJRT server the cloud thread owns the single
-//!   shared `Engine`). Stage occupancies are measured; the clock sleeps.
+//! - **wall time** ([`run_real`]) — the serving front door: the fleet
+//!   runs on the pluggable serving runtime (`crate::serve`), on the
+//!   engine named by [`RealCfg::runtime`] — thread-per-stream, or a
+//!   fixed worker pool multiplexing every stream (in the PJRT server
+//!   the single shared `Engine` stays on one thread either way). Stage
+//!   occupancies are measured; the clock sleeps.
 //!
 //! Resources: END DEVICE (sequential, one per stream), LINK (FIFO,
 //! shared), CLOUD (sequential, shared). A task occupies its device for
@@ -27,9 +29,9 @@
 
 use std::sync::Arc;
 use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 
 use crate::metrics::{
     MultiReport, PlanTelemetry, RunReport, StageUsage, TaskOutcome,
@@ -43,8 +45,8 @@ use super::policy::{Decision, OnlinePolicy, TaskView};
 use super::replan::ActivePlan;
 use super::slab::StreamSlab;
 use super::stage::{
-    bounded, BusyMeter, Clock, CloudStage, DeviceStage, DeviceVerdict,
-    VirtualClock, WallClock,
+    Clock, CloudPoll, CloudStage, DeviceStage, DeviceVerdict, VirtualClock,
+    WallClock,
 };
 #[cfg(test)]
 use super::stage_model::StageModel;
@@ -740,6 +742,9 @@ pub struct RealCfg {
     /// wire bytes of the result-return payload priced after the cloud
     /// stage (0 = no return leg)
     pub result_wire_bytes: usize,
+    /// which serving engine runs the fleet (thread-per-stream reference
+    /// vs fixed worker pool — see [`crate::serve`])
+    pub runtime: crate::serve::Runtime,
     pub scheme: String,
     pub model: String,
 }
@@ -751,33 +756,27 @@ impl Default for RealCfg {
             drop_after: None,
             rtt_half: 0.0,
             result_wire_bytes: 0,
+            runtime: crate::serve::Runtime::default(),
             scheme: "real".into(),
             model: String::new(),
         }
     }
 }
 
-/// Metadata travelling with a wire payload through link and cloud.
-struct LinkItem<W> {
-    stream: usize,
-    id: usize,
-    arrive: f64,
-    bits: u8,
-    wire_bytes: usize,
-    label_hint: usize,
-    payload: W,
-}
-
 /// Drive N device streams through the real-time three-stage pipeline:
-/// one thread per device stream (stage built in-thread by its factory,
-/// so non-`Send` state like a PJRT engine is fine), one FIFO link thread
-/// sleeping `wire_bytes / bw(t) + rtt_half` per item, and ONE cloud
-/// thread shared by all streams; the result-return leg is priced after
-/// the cloud stage (`RealCfg::result_wire_bytes`), so the wall-clock
-/// wire costs what the DES charges. `clock` must be the epoch the stage
+/// device stage per stream (built in place by its factory, so non-`Send`
+/// state like a PJRT engine is fine), one FIFO link pricing
+/// `wire_bytes / bw(t) + rtt_half` per item, and ONE cloud stage shared
+/// by all streams; the result-return leg is priced after the cloud
+/// stage (`RealCfg::result_wire_bytes`), so the wall-clock wire costs
+/// what the DES charges. `clock` must be the epoch the stage
 /// implementations read (bandwidth traces and arrival pacing share it).
-/// Returns one report per stream; aggregate via
-/// [`MultiReport::aggregate`].
+///
+/// This is now a thin front door over the pluggable serving runtime:
+/// `cfg.runtime` selects the engine ([`crate::serve::Runtime`] —
+/// thread-per-stream reference or the pooled scheduler that serves 10k+
+/// streams on ≤ cores workers). Returns one report per stream;
+/// aggregate via [`MultiReport::aggregate`].
 pub fn run_real<D, C, DF, CF>(
     streams: Vec<(Vec<SimTask>, DF)>,
     cloud_factory: CF,
@@ -791,224 +790,13 @@ where
     DF: FnOnce() -> Result<D> + Send + 'static,
     CF: FnOnce() -> Result<C> + Send + 'static,
 {
-    let n = streams.len();
-
-    let (link_tx, link_rx) = bounded::<LinkItem<D::Wire>>(cfg.queue_cap);
-    let (cloud_tx, cloud_rx) = bounded::<LinkItem<D::Wire>>(cfg.queue_cap);
-    let (out_tx, out_rx) = std::sync::mpsc::channel::<(usize, TaskOutcome)>();
-
-    let dev_busy: Vec<BusyMeter> = (0..n).map(|_| BusyMeter::new()).collect();
-    let link_busy: Vec<BusyMeter> = (0..n).map(|_| BusyMeter::new()).collect();
-    let cloud_busy: Vec<BusyMeter> = (0..n).map(|_| BusyMeter::new()).collect();
-
-    // ---- device threads (one per stream) ------------------------------
-    let mut feedback_txs = Vec::with_capacity(n);
-    let mut device_handles = Vec::with_capacity(n);
-    for (si, (tasks, factory)) in streams.into_iter().enumerate() {
-        let (fb_tx, fb_rx) = std::sync::mpsc::channel::<D::Feedback>();
-        feedback_txs.push(fb_tx);
-        let link_tx = link_tx.clone();
-        let out_tx = out_tx.clone();
-        let meter = dev_busy[si].clone();
-        let drop_after = cfg.drop_after;
-        device_handles.push(thread::spawn(
-            move || -> (usize, PlanTelemetry, Result<()>) {
-                let mut dropped = 0usize;
-                let mut telemetry = PlanTelemetry::default();
-                let run = (|| -> Result<()> {
-                    let mut dev = factory()?;
-                    for task in &tasks {
-                        while let Ok(fb) = fb_rx.try_recv() {
-                            dev.absorb(fb);
-                        }
-                        let now = clock.wait_until(task.arrive);
-                        if let Some(cap) = drop_after {
-                            if now - task.arrive > cap {
-                                dropped += 1;
-                                continue;
-                            }
-                        }
-                        let (verdict, busy) = dev.process(task)?;
-                        meter.add_secs(busy);
-                        match verdict {
-                            DeviceVerdict::Exit { label, correct } => {
-                                let finish = clock.now();
-                                let _ = out_tx.send((
-                                    si,
-                                    TaskOutcome {
-                                        id: task.id,
-                                        arrive: now,
-                                        finish,
-                                        latency: finish - now,
-                                        exited_early: true,
-                                        bits: 0,
-                                        wire_bytes: 0,
-                                        label,
-                                        correct,
-                                    },
-                                ));
-                            }
-                            DeviceVerdict::Transmit {
-                                wire,
-                                bits,
-                                wire_bytes,
-                            } => {
-                                let item = LinkItem {
-                                    stream: si,
-                                    id: task.id,
-                                    arrive: now,
-                                    bits,
-                                    wire_bytes,
-                                    label_hint: task.label,
-                                    payload: wire,
-                                };
-                                if link_tx.send(item).is_err() {
-                                    bail!(
-                                        "stream {si}: link stage terminated \
-                                         early"
-                                    );
-                                }
-                            }
-                        }
-                    }
-                    telemetry = dev.plan_telemetry();
-                    Ok(())
-                })();
-                // the shed count survives an error — the caller reports
-                // it instead of a phantom 0 for the errored stream
-                // (plan telemetry is only read on clean completion)
-                (dropped, telemetry, run)
-            },
-        ));
-    }
-    drop(link_tx);
-    let cloud_out_tx = out_tx.clone();
-    drop(out_tx);
-
-    // ---- link thread (shared FIFO, simulated WiFi) ---------------------
-    let link_meters = link_busy.clone();
-    let link_rtt = cfg.rtt_half;
-    let bw_link = bw.clone();
-    let link_handle = thread::spawn(move || {
-        while let Some(item) = link_rx.recv() {
-            let now = clock.now();
-            // price the wire like the DES: payload over the live rate
-            // plus the one-way network latency
-            let secs = bw_link.transmit_time(item.wire_bytes, now) + link_rtt;
-            thread::sleep(Duration::from_secs_f64(secs));
-            link_meters[item.stream].add_secs(secs);
-            if cloud_tx.send(item).is_err() {
-                break;
-            }
-        }
-    });
-
-    // ---- cloud thread (shared engine) ----------------------------------
-    let cloud_meters = cloud_busy.clone();
-    let ret_rtt = cfg.rtt_half;
-    let ret_bytes = cfg.result_wire_bytes;
-    let cloud_handle = thread::spawn(move || -> Result<()> {
-        let mut cloud = cloud_factory()?;
-        while let Some(item) = cloud_rx.recv() {
-            let s = Instant::now();
-            let (label, fb) = cloud.process(item.payload)?;
-            cloud_meters[item.stream].add_secs(s.elapsed().as_secs_f64());
-            let now = clock.now();
-            // result-return leg priced like the DES (rtt + payload at
-            // the instantaneous rate); the return rides the network, not
-            // the cloud engine, so it extends the task's finish without
-            // blocking the next item
-            let ret =
-                ret_rtt + ret_bytes as f64 * 8.0 / (bw.true_mbps(now) * 1e6);
-            let finish = now + ret;
-            let _ = cloud_out_tx.send((
-                item.stream,
-                TaskOutcome {
-                    id: item.id,
-                    arrive: item.arrive,
-                    finish,
-                    latency: finish - item.arrive,
-                    exited_early: false,
-                    bits: item.bits,
-                    wire_bytes: item.wire_bytes,
-                    label,
-                    correct: label == item.label_hint,
-                },
-            ));
-            let _ = feedback_txs[item.stream].send(fb);
-        }
-        Ok(())
-    });
-
-    // ---- collect --------------------------------------------------------
-    let mut per: Vec<Vec<TaskOutcome>> = vec![Vec::new(); n];
-    for (si, o) in out_rx {
-        per[si].push(o);
-    }
-
-    let mut dropped = Vec::with_capacity(n);
-    let mut plans: Vec<PlanTelemetry> = Vec::with_capacity(n);
-    let mut first_err: Option<anyhow::Error> = None;
-    for h in device_handles {
-        match h.join() {
-            Ok((d, t, Ok(()))) => {
-                dropped.push(d);
-                plans.push(t);
-            }
-            Ok((d, t, Err(e))) => {
-                // the stream still reports its real shed count
-                dropped.push(d);
-                plans.push(t);
-                first_err.get_or_insert(e);
-            }
-            Err(_) => {
-                dropped.push(0);
-                plans.push(PlanTelemetry::default());
-                first_err.get_or_insert(anyhow::anyhow!("device thread panicked"));
-            }
-        }
-    }
-    link_handle
-        .join()
-        .map_err(|_| anyhow::anyhow!("link thread panicked"))?;
-    match cloud_handle.join() {
-        Ok(Ok(())) => {}
-        // a cloud failure tears down link + devices, so it is the root
-        // cause — report it over the downstream "link terminated" errors
-        Ok(Err(e)) => first_err = Some(e),
-        Err(_) => first_err = Some(anyhow::anyhow!("cloud thread panicked")),
-    }
-    if let Some(e) = first_err {
-        // the admission counts would otherwise vanish with the report
-        return Err(e).context(format!(
-            "run_real failed; per-stream dropped so far: {dropped:?}"
-        ));
-    }
-
-    let mut per_stream = Vec::with_capacity(n);
-    // intern once; the per-stream clones below are refcount bumps
-    let scheme: Arc<str> = cfg.scheme.as_str().into();
-    let model: Arc<str> = cfg.model.as_str().into();
-    for (si, mut tasks) in per.into_iter().enumerate() {
-        tasks.sort_by_key(|o| o.id);
-        let first = tasks
-            .iter()
-            .map(|o| o.arrive)
-            .fold(f64::INFINITY, f64::min);
-        let last = tasks.iter().map(|o| o.finish).fold(0.0f64, f64::max);
-        let span = if tasks.is_empty() { 0.0 } else { (last - first).max(0.0) };
-        per_stream.push(RunReport {
-            scheme: scheme.clone(),
-            model: model.clone(),
-            tasks,
-            dropped: dropped[si],
-            device: StageUsage { busy: dev_busy[si].secs(), span, stall: 0.0 },
-            link: StageUsage { busy: link_busy[si].secs(), span, stall: 0.0 },
-            cloud: StageUsage { busy: cloud_busy[si].secs(), span, stall: 0.0 },
-            plan: plans[si].clone(),
-        });
-    }
-    Ok(MultiReport { per_stream, events: 0 })
+    crate::serve::run_streams::<D, C, DF, CF>(
+        streams,
+        cloud_factory,
+        bw,
+        clock,
+        cfg,
+    )
 }
 
 // ---------------------------------------------------------------------
@@ -1041,25 +829,28 @@ pub struct SimDevice<P: OnlinePolicy> {
     pub cost: CostModel,
 }
 
-impl<P: OnlinePolicy> DeviceStage for SimDevice<P> {
-    type Wire = SimWire;
-    type Feedback = ();
+impl<P: OnlinePolicy> SimDevice<P> {
+    /// Admit one task against the active plan and read its stage
+    /// occupancies: `(t_e, t_c, cut_elems)` of the rung in force.
+    fn occupancy(&mut self) -> (f64, f64, usize) {
+        self.plan.note_task();
+        let sm = self.plan.sm();
+        let elems = if sm.cut_elems.is_empty() {
+            self.source_elems
+        } else {
+            sm.cut_elems.iter().sum()
+        };
+        (sm.t_e + sm.exit_check, sm.t_c, elems)
+    }
 
-    fn process(
+    /// Run the Eq. 10/11 decision for one task at the current bandwidth
+    /// estimate and fold the hand-off into the live re-planner.
+    fn decide(
         &mut self,
         task: &SimTask,
-    ) -> Result<(DeviceVerdict<SimWire>, f64)> {
-        self.plan.note_task();
-        let (t_e, t_c, elems) = {
-            let sm = self.plan.sm();
-            let elems = if sm.cut_elems.is_empty() {
-                self.source_elems
-            } else {
-                sm.cut_elems.iter().sum()
-            };
-            (sm.t_e + sm.exit_check, sm.t_c, elems)
-        };
-        thread::sleep(Duration::from_secs_f64(t_e));
+        t_c: f64,
+        elems: usize,
+    ) -> DeviceVerdict<SimWire> {
         let bw_est = self.bw.estimate_mbps(self.clock.now());
         let view = TaskView {
             separability: task.separability,
@@ -1073,7 +864,7 @@ impl<P: OnlinePolicy> DeviceStage for SimDevice<P> {
         if self.plan.note_handoff(bw_est) {
             self.policy.replan(self.plan.sm(), self.plan.base_bits());
         }
-        let verdict = match decision {
+        match decision {
             Decision::Exit => DeviceVerdict::Exit {
                 label: task.label,
                 correct: task.exit_correct,
@@ -1083,8 +874,34 @@ impl<P: OnlinePolicy> DeviceStage for SimDevice<P> {
                 bits,
                 wire_bytes: self.cost.wire_bytes(elems, bits),
             },
-        };
-        Ok((verdict, t_e))
+        }
+    }
+}
+
+impl<P: OnlinePolicy> DeviceStage for SimDevice<P> {
+    type Wire = SimWire;
+    type Feedback = ();
+
+    fn process(
+        &mut self,
+        task: &SimTask,
+    ) -> Result<(DeviceVerdict<SimWire>, f64)> {
+        let (t_e, t_c, elems) = self.occupancy();
+        thread::sleep(Duration::from_secs_f64(t_e));
+        Ok((self.decide(task, t_c, elems), t_e))
+    }
+
+    /// Pooled-runtime hook: same admission + decision, but the compute
+    /// occupancy is returned for the scheduler's timer wheel instead of
+    /// slept off here. (The bandwidth estimate is sampled at poll time
+    /// rather than after the sleep — identical under a static trace,
+    /// which is what the engine-equivalence tests pin.)
+    fn poll_process(
+        &mut self,
+        task: &SimTask,
+    ) -> Option<Result<(DeviceVerdict<SimWire>, f64)>> {
+        let (t_e, t_c, elems) = self.occupancy();
+        Some(Ok((self.decide(task, t_c, elems), t_e)))
     }
 
     fn plan_telemetry(&self) -> PlanTelemetry {
@@ -1105,11 +922,21 @@ impl CloudStage for SimCloud {
         thread::sleep(Duration::from_secs_f64(wire.t_c.max(0.0)));
         Ok((wire.label, ()))
     }
+
+    /// Pooled-runtime hook: the service time is modeled, not slept.
+    fn poll_process(&mut self, wire: SimWire) -> CloudPoll<SimWire, ()> {
+        CloudPoll::Ready {
+            label: wire.label,
+            feedback: (),
+            busy: wire.t_c.max(0.0),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use anyhow::bail;
     use crate::cache::Thresholds;
     use crate::model::topology::vgg16;
     use crate::model::DeviceProfile;

@@ -15,8 +15,10 @@
 //!   meters, and the stage traits of the wall-clock driver;
 //! - [`driver`] — the virtual-time drivers (single- and multi-stream
 //!   DES, plus the shard-parallel fleet path over independent link
-//!   groups) and the wall-clock multi-stream driver (real threads,
-//!   shared FIFO link + shared cloud);
+//!   groups) and the wall-clock front door [`driver::run_real`], which
+//!   dispatches into the pluggable serving runtime (`crate::serve`:
+//!   thread-per-stream reference engine or the pooled worker scheduler,
+//!   shared FIFO link + shared cloud either way);
 //! - [`evq`] — the pluggable DES event queues (binary-heap reference
 //!   and the calendar-queue fast path, selected by
 //!   [`driver::VirtualCfg::engine`]);
@@ -45,7 +47,7 @@ pub use policy::{
 };
 pub use replan::{ActivePlan, Hysteresis, PlanOption};
 pub use stage::{
-    Clock, CloudStage, DeviceStage, DeviceVerdict, VirtualClock, VirtualQueue,
-    WallClock,
+    Clock, CloudPoll, CloudStage, DeviceStage, DeviceVerdict, VirtualClock,
+    VirtualQueue, WallClock,
 };
 pub use stage_model::StageModel;

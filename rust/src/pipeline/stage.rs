@@ -325,6 +325,20 @@ pub trait DeviceStage {
         task: &SimTask,
     ) -> Result<(DeviceVerdict<Self::Wire>, f64)>;
 
+    /// Non-blocking variant for the pooled serving runtime: decide the
+    /// verdict and report the busy time WITHOUT sleeping it off — the
+    /// scheduler models the wait on its timer wheel, so thousands of
+    /// simulated streams can share a handful of workers. The default
+    /// `None` means "this stage only has the blocking call" (real
+    /// hardware legitimately occupies a worker core); the scheduler
+    /// then falls back to [`DeviceStage::process`] inline.
+    fn poll_process(
+        &mut self,
+        _task: &SimTask,
+    ) -> Option<Result<(DeviceVerdict<Self::Wire>, f64)>> {
+        None
+    }
+
     /// Fold a completed task's result back into stream state.
     fn absorb(&mut self, _feedback: Self::Feedback) {}
 
@@ -336,6 +350,17 @@ pub trait DeviceStage {
     }
 }
 
+/// Outcome of polling a cloud stage without blocking (pooled runtime).
+pub enum CloudPoll<W, F> {
+    /// Service is modeled: here is the result plus the busy time the
+    /// scheduler should charge and model on its timer wheel.
+    Ready { label: usize, feedback: F, busy: f64 },
+    /// This stage only has the blocking call — the wire payload is
+    /// handed back so the scheduler can run [`CloudStage::process`]
+    /// inline (real compute occupies a worker, as it should).
+    Sync(W),
+}
+
 /// Cloud-side completion shared by every stream (one instance, one
 /// thread, one engine). Returns the predicted label plus the feedback
 /// payload for the originating stream.
@@ -344,6 +369,15 @@ pub trait CloudStage {
     type Feedback: Send + 'static;
 
     fn process(&mut self, wire: Self::Wire) -> Result<(usize, Self::Feedback)>;
+
+    /// Non-blocking variant for the pooled serving runtime; see
+    /// [`DeviceStage::poll_process`]. Default: blocking-only.
+    fn poll_process(
+        &mut self,
+        wire: Self::Wire,
+    ) -> CloudPoll<Self::Wire, Self::Feedback> {
+        CloudPoll::Sync(wire)
+    }
 }
 
 #[cfg(test)]

@@ -606,6 +606,7 @@ impl Scenario {
                 rtt_half: base_cost.rtt_half,
                 result_wire_bytes: base_cost
                     .wire_bytes(g.layers[g.sink()].out_elems, 32),
+                runtime: self.runtime,
                 scheme: self.report_label(),
                 model: self.model.clone(),
             },
@@ -691,6 +692,7 @@ impl Scenario {
             n_streams: specs.len(),
             drop_after: self.admission.resolve(period),
             queue_cap: self.queue_cap.unwrap_or(8),
+            runtime: self.runtime,
             replan,
         };
         let streams: Vec<StreamCfg> = specs

@@ -267,6 +267,11 @@ pub struct Scenario {
     pub cut: Option<usize>,
     /// serve-mode: audit every k-th early exit against fp32 (0 = off)
     pub audit_every: usize,
+    /// serving engine of the wall-clock paths (`serve_sim` and the real
+    /// PJRT server): thread-per-stream reference or the pooled worker
+    /// scheduler ([`crate::serve::Runtime`]). Ignored by the virtual
+    /// (DES) drivers.
+    pub runtime: crate::serve::Runtime,
     /// report scheme label override (default: the scheme's name)
     pub label: Option<String>,
 }
@@ -300,6 +305,7 @@ impl Scenario {
             device_scale: 6.0,
             cut: None,
             audit_every: 0,
+            runtime: crate::serve::Runtime::default(),
             label: None,
         }
     }
@@ -490,6 +496,13 @@ impl Scenario {
     /// Serve-mode: audit every k-th early exit against fp32.
     pub fn audit_every(mut self, k: usize) -> Self {
         self.audit_every = k;
+        self
+    }
+
+    /// Select the serving engine of the wall-clock paths
+    /// (threaded reference vs pooled worker scheduler).
+    pub fn runtime(mut self, rt: crate::serve::Runtime) -> Self {
+        self.runtime = rt;
         self
     }
 

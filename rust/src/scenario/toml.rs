@@ -20,7 +20,7 @@
 //!             load_factor, correlation (none|low|medium|high), seed,
 //!             n_classes, drop_after_ms, drop_after_periods
 //! [serve]     n_streams, device_scale, cut, audit_every, queue_cap,
-//!             n_links
+//!             n_links, runtime (threaded|pooled)
 //! [replan]    enabled, min_mbps, max_mbps, rungs, k,
 //!             serve_cuts ("mbps:cut,mbps:cut,..")
 //! [stream.N]  scale, cut, period_ms, seed, correlation, n_tasks,
@@ -75,6 +75,7 @@ const KNOWN: &[(&str, &[&str])] = &[
             "audit_every",
             "queue_cap",
             "n_links",
+            "runtime",
         ],
     ),
     (
@@ -383,6 +384,10 @@ impl Scenario {
             }
             sc.n_links = n as usize;
         }
+        if let Some(r) = raw.get("serve", "runtime") {
+            sc.runtime = crate::serve::Runtime::parse(r)
+                .context("serve.runtime")?;
+        }
 
         // ---- [replan] --------------------------------------------------
         if raw.sections.contains("replan") {
@@ -512,6 +517,23 @@ queue_cap = 4
     fn queue_cap_must_be_positive() {
         assert!(Scenario::from_toml("[serve]\nqueue_cap = 0\n").is_err());
         assert_eq!(Scenario::from_toml("").unwrap().queue_cap, None);
+    }
+
+    #[test]
+    fn serve_runtime_parses() {
+        use crate::serve::Runtime;
+        let sc =
+            Scenario::from_toml("[serve]\nruntime = \"pooled\"\n").unwrap();
+        assert_eq!(sc.runtime, Runtime::Pooled);
+        let sc =
+            Scenario::from_toml("[serve]\nruntime = \"threaded\"\n").unwrap();
+        assert_eq!(sc.runtime, Runtime::Threaded);
+        // default engine is the threaded reference
+        assert_eq!(Scenario::from_toml("").unwrap().runtime, Runtime::Threaded);
+        let err = Scenario::from_toml("[serve]\nruntime = \"fibers\"\n")
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown runtime 'fibers'"), "got: {msg}");
     }
 
     #[test]

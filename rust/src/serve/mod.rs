@@ -1,0 +1,82 @@
+//! Pluggable serving runtime for the wall-clock (real-time) path.
+//!
+//! `pipeline::driver::run_real` used to BE the runtime: one OS thread
+//! per device stream plus link and cloud threads, hard-wired. This
+//! module turns that into a [`Scheduler`] trait (shape per GlareDB's
+//! `rayexec_rt_native` runtime) with two engines:
+//!
+//! * [`ThreadedScheduler`] — the original thread-per-stream behavior,
+//!   kept verbatim as the reference implementation;
+//! * [`PooledScheduler`] — a fixed worker pool (≤ cores) driving every
+//!   stream as a poll-able state machine that yields at device-compute,
+//!   link-transmit, and cloud waits, with all pending deadlines on one
+//!   shared [`TimerWheel`]. This is the engine that serves 10k+ streams
+//!   with bounded threads and memory.
+//!
+//! Engine selection is a runtime variable ([`Runtime`]) plumbed through
+//! `RealCfg`, `ServeCfg`, `Scenario`, `[serve] runtime = "..."` TOML,
+//! and `coach serve --runtime`. Both the sim-backed path
+//! (`Scenario::serve_sim`) and the real PJRT path
+//! (`coordinator::server::serve_streams`) dispatch through
+//! [`run_streams`], so they share one scheduler and one report merge.
+
+pub mod pool;
+pub mod sched;
+pub mod threaded;
+pub mod timer;
+
+pub use pool::PooledScheduler;
+pub use sched::{run_streams, Scheduler, StreamsHandle};
+pub use threaded::ThreadedScheduler;
+pub use timer::TimerWheel;
+
+use anyhow::{bail, Result};
+
+/// Which engine the serving runtime uses. A config value, not a type
+/// parameter — scenarios, TOML presets, and the CLI all select it at
+/// run time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Runtime {
+    /// One OS thread per stream (reference engine; faithful but dead at
+    /// 10k streams).
+    #[default]
+    Threaded,
+    /// Fixed worker pool + timer wheel (bounded threads at any fleet
+    /// size).
+    Pooled,
+}
+
+impl Runtime {
+    /// Parse the TOML / CLI spelling.
+    pub fn parse(s: &str) -> Result<Runtime> {
+        match s.trim() {
+            "threaded" => Ok(Runtime::Threaded),
+            "pooled" => Ok(Runtime::Pooled),
+            other => bail!("unknown runtime '{other}' (threaded|pooled)"),
+        }
+    }
+
+    /// Canonical spelling, round-trips through [`Runtime::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            Runtime::Threaded => "threaded",
+            Runtime::Pooled => "pooled",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Runtime;
+
+    #[test]
+    fn runtime_parse_round_trips() {
+        for rt in [Runtime::Threaded, Runtime::Pooled] {
+            assert_eq!(Runtime::parse(rt.name()).unwrap(), rt);
+        }
+        assert_eq!(Runtime::parse(" pooled ").unwrap(), Runtime::Pooled);
+        assert_eq!(Runtime::default(), Runtime::Threaded);
+        let err = Runtime::parse("fibers").unwrap_err().to_string();
+        assert!(err.contains("unknown runtime"), "{err}");
+    }
+}

@@ -1,0 +1,813 @@
+//! Pooled engine: the whole fleet multiplexed onto a fixed worker pool.
+//!
+//! Where the threaded engine spends one OS thread per device stream
+//! (plus link + cloud threads), this engine turns every stream into a
+//! poll-able state machine that YIELDS at its waits — task arrival,
+//! device compute, a full link queue, cloud service — instead of
+//! blocking a thread in `sleep`/`send`. All pending waits live on one
+//! shared [`TimerWheel`]; `min(cores, streams)` workers sleep on one
+//! condvar until the next deadline and otherwise drive whatever is
+//! runnable. 10 000 streams cost 10 000 small state machines, not
+//! 10 000 stacks.
+//!
+//! Pinning: `DeviceStage` implementations need not be `Send` (they are
+//! built in place from a `Send` factory), so each stream is pinned to
+//! the worker `si % workers`, which builds the stage on first poll and
+//! keeps it for the stream's lifetime. The shared `CloudStage` is
+//! likewise pinned to worker 0. Link bookkeeping is pure arithmetic and
+//! runs under the pool lock on whichever worker gets there first.
+//!
+//! Stages that implement the non-blocking hooks
+//! ([`DeviceStage::poll_process`], [`CloudStage::poll_process`]) report
+//! their busy time for the pool to model on the wheel — the whole
+//! simulated fleet runs on a handful of threads. Stages that only have
+//! the blocking calls (real PJRT engines) run inline and legitimately
+//! occupy their worker for the duration, exactly as real compute
+//! occupies a core.
+//!
+//! Equivalence with the threaded engine (same outcomes, same admission
+//! sheds, same backpressure stalls, same merged report) is pinned by
+//! `tests/serve_sched_e2e.rs`.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::metrics::{MultiReport, PlanTelemetry, TaskOutcome};
+use crate::network::BandwidthModel;
+use crate::pipeline::driver::RealCfg;
+use crate::pipeline::stage::{
+    BusyMeter, Clock, CloudPoll, CloudStage, DeviceStage, DeviceVerdict,
+    WallClock,
+};
+use crate::sim::SimTask;
+
+use super::sched::{assemble_report, LinkItem, Scheduler, StreamsHandle};
+use super::timer::TimerWheel;
+
+/// Fixed-worker-pool scheduler (bounded threads at any fleet size).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PooledScheduler;
+
+impl Scheduler for PooledScheduler {
+    type Handle = StreamsHandle;
+
+    fn try_new() -> Result<Self> {
+        Ok(PooledScheduler)
+    }
+
+    fn spawn_streams<D, C, DF, CF>(
+        &self,
+        streams: Vec<(Vec<SimTask>, DF)>,
+        cloud_factory: CF,
+        bw: BandwidthModel,
+        clock: WallClock,
+        cfg: RealCfg,
+    ) -> StreamsHandle
+    where
+        D: DeviceStage,
+        C: CloudStage<Wire = D::Wire, Feedback = D::Feedback>,
+        DF: FnOnce() -> Result<D> + Send + 'static,
+        CF: FnOnce() -> Result<C> + Send + 'static,
+    {
+        StreamsHandle::spawn(move || {
+            run_pooled::<D, C, DF, CF>(streams, cloud_factory, bw, clock, cfg)
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared pool state
+// ---------------------------------------------------------------------
+
+/// Everything a fired timer can mean.
+enum Wake<W, F> {
+    /// stream `si` is runnable again (arrival due / modeled compute done)
+    Stream(usize),
+    /// the in-flight link transmission completed
+    LinkDone { item: LinkItem<W>, secs: f64 },
+    /// modeled cloud service completed
+    CloudDone(CloudFinish<F>),
+}
+
+/// A finished cloud service waiting to be priced and reported.
+struct CloudFinish<F> {
+    stream: usize,
+    id: usize,
+    arrive: f64,
+    bits: u8,
+    wire_bytes: usize,
+    label_hint: usize,
+    label: usize,
+    feedback: F,
+    busy: f64,
+}
+
+/// Mutable pool state, guarded by one mutex. Workers hold the lock only
+/// for bookkeeping — stage code always runs outside it.
+struct Core<W, F> {
+    timers: TimerWheel<Wake<W, F>>,
+    /// per-worker queues of runnable pinned streams
+    ready: Vec<VecDeque<usize>>,
+    /// stream -> owning worker
+    owner: Vec<usize>,
+    /// bounded FIFO feeding the shared link (cap = `RealCfg::queue_cap`)
+    link_queue: VecDeque<LinkItem<W>>,
+    /// a transmission is in flight (or finished but stalled on the
+    /// cloud queue — the link cannot start the next item either way)
+    link_busy: bool,
+    /// completed transmission waiting for a cloud-queue slot; mirrors
+    /// the threaded link thread blocking on its `cloud_tx.send`
+    link_blocked: Option<LinkItem<W>>,
+    /// streams stalled on a full link queue, FIFO
+    send_waiters: VecDeque<usize>,
+    /// bounded FIFO feeding the shared cloud stage
+    cloud_queue: VecDeque<LinkItem<W>>,
+    cloud_busy: bool,
+    /// per-stream feedback mailboxes (drained at the next task poll,
+    /// like the threaded device loop's `try_recv` drain)
+    feedback: Vec<Vec<F>>,
+    outcomes: Vec<Vec<TaskOutcome>>,
+    dropped: Vec<usize>,
+    plans: Vec<PlanTelemetry>,
+    live_streams: usize,
+    first_err: Option<anyhow::Error>,
+    cloud_err: Option<anyhow::Error>,
+    abort: bool,
+}
+
+impl<W, F> Core<W, F> {
+    /// Nothing left anywhere: every stream finished, link and cloud
+    /// drained and idle, no pending timers.
+    fn done(&self) -> bool {
+        self.live_streams == 0
+            && self.link_queue.is_empty()
+            && !self.link_busy
+            && self.link_blocked.is_none()
+            && self.cloud_queue.is_empty()
+            && !self.cloud_busy
+            && self.timers.is_empty()
+    }
+}
+
+/// Immutable pool context shared by every worker.
+struct Pool<W, F> {
+    core: Mutex<Core<W, F>>,
+    wakeup: Condvar,
+    cap: usize,
+    clock: WallClock,
+    bw: BandwidthModel,
+    rtt_half: f64,
+    ret_bytes: usize,
+    drop_after: Option<f64>,
+    link_meters: Vec<BusyMeter>,
+    cloud_meters: Vec<BusyMeter>,
+}
+
+impl<W, F> Pool<W, F> {
+    /// Apply one expired timer (caller holds the lock).
+    fn fire(&self, core: &mut Core<W, F>, wake: Wake<W, F>) {
+        match wake {
+            Wake::Stream(si) => {
+                let w = core.owner[si];
+                core.ready[w].push_back(si);
+            }
+            Wake::LinkDone { item, secs } => self.link_done(core, item, secs),
+            Wake::CloudDone(fin) => self.cloud_done(core, fin),
+        }
+    }
+
+    /// Start the next transmission if the link is free. Returns whether
+    /// a new `LinkDone` timer was scheduled (callers then re-notify so
+    /// sleepers with stale deadlines recompute).
+    fn link_start(&self, core: &mut Core<W, F>) -> bool {
+        if core.link_busy || core.abort {
+            return false;
+        }
+        let Some(item) = core.link_queue.pop_front() else {
+            return false;
+        };
+        // a link-queue slot opened: resume one stalled sender
+        if let Some(si) = core.send_waiters.pop_front() {
+            let w = core.owner[si];
+            core.ready[w].push_back(si);
+        }
+        let now = self.clock.now();
+        // price the wire like the DES: payload over the live rate plus
+        // the one-way network latency
+        let secs = self.bw.transmit_time(item.wire_bytes, now) + self.rtt_half;
+        core.link_busy = true;
+        core.timers.insert(now + secs, Wake::LinkDone { item, secs });
+        true
+    }
+
+    /// A transmission completed: hand it to the cloud queue, or stall
+    /// the link on the full queue like the threaded link thread does.
+    fn link_done(&self, core: &mut Core<W, F>, item: LinkItem<W>, secs: f64) {
+        self.link_meters[item.stream].add_secs(secs);
+        if core.cloud_queue.len() < self.cap {
+            core.cloud_queue.push_back(item);
+            core.link_busy = false;
+            self.link_start(core);
+        } else {
+            core.link_blocked = Some(item);
+        }
+    }
+
+    /// Price the result-return leg and report the finished task.
+    fn cloud_done(&self, core: &mut Core<W, F>, fin: CloudFinish<F>) {
+        self.cloud_meters[fin.stream].add_secs(fin.busy);
+        let now = self.clock.now();
+        // result-return leg priced like the DES (rtt + payload at the
+        // instantaneous rate); the return rides the network, not the
+        // cloud engine, so it extends the task's finish without
+        // blocking the next item
+        let ret = self.rtt_half
+            + self.ret_bytes as f64 * 8.0 / (self.bw.true_mbps(now) * 1e6);
+        let finish = now + ret;
+        core.outcomes[fin.stream].push(TaskOutcome {
+            id: fin.id,
+            arrive: fin.arrive,
+            finish,
+            latency: finish - fin.arrive,
+            exited_early: false,
+            bits: fin.bits,
+            wire_bytes: fin.wire_bytes,
+            label: fin.label,
+            correct: fin.label == fin.label_hint,
+        });
+        core.feedback[fin.stream].push(fin.feedback);
+        core.cloud_busy = false;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stream state machines (worker-local; hold the non-Send device stage)
+// ---------------------------------------------------------------------
+
+enum SmState<W> {
+    /// ready to consider the next task
+    Next,
+    /// modeled device compute in flight (a `Wake::Stream` timer is
+    /// pending); `started` is the admission instant
+    Computing { verdict: DeviceVerdict<W>, started: f64 },
+    /// hand-off stalled on a full link queue (parked in `send_waiters`)
+    SendBlocked { item: LinkItem<W> },
+    Done,
+}
+
+/// What a drive step asks of the scheduler.
+enum Step<W> {
+    /// park until `t` (task arrival / modeled compute end)
+    Wait(f64),
+    /// enqueue `item` on the shared link (retried if the queue is full)
+    Send(LinkItem<W>),
+    /// all tasks handled; telemetry attached
+    Finished(PlanTelemetry),
+    Failed(anyhow::Error),
+    /// woken with nothing to do (already parked elsewhere)
+    Parked,
+}
+
+/// The `Send` half of a stream, shipped to its owning worker; the
+/// worker turns it into a [`StreamSm`] locally, so the non-`Send`
+/// device stage never crosses a thread boundary.
+struct StreamSeed<DF> {
+    tasks: Vec<SimTask>,
+    factory: DF,
+    meter: BusyMeter,
+}
+
+struct StreamSm<D: DeviceStage, DF> {
+    si: usize,
+    tasks: Vec<SimTask>,
+    next: usize,
+    factory: Option<DF>,
+    dev: Option<D>,
+    meter: BusyMeter,
+    state: SmState<D::Wire>,
+}
+
+impl<D, DF> StreamSm<D, DF>
+where
+    D: DeviceStage,
+    DF: FnOnce() -> Result<D>,
+{
+    /// Advance until the stream must wait or touch shared state. Runs
+    /// OUTSIDE the pool lock; early-exit outcomes and admission sheds
+    /// accumulate in `outcomes`/`shed` for the caller to publish.
+    fn step(
+        &mut self,
+        clock: WallClock,
+        drop_after: Option<f64>,
+        feedback: &mut Vec<D::Feedback>,
+        outcomes: &mut Vec<TaskOutcome>,
+        shed: &mut usize,
+    ) -> Step<D::Wire> {
+        match std::mem::replace(&mut self.state, SmState::Next) {
+            SmState::Computing { verdict, started } => {
+                if let Some(step) =
+                    self.after_compute(clock, verdict, started, outcomes)
+                {
+                    return step;
+                }
+                // early exit recorded: fall through to the next task
+            }
+            SmState::SendBlocked { item } => return Step::Send(item),
+            SmState::Done => {
+                self.state = SmState::Done;
+                return Step::Parked;
+            }
+            SmState::Next => {}
+        }
+        loop {
+            // build the device stage lazily ON its owning worker — the
+            // factory is Send, the stage need not be
+            if self.dev.is_none() {
+                match (self.factory.take().expect("device factory reused"))() {
+                    Ok(d) => self.dev = Some(d),
+                    Err(e) => return Step::Failed(e),
+                }
+            }
+            let dev = self.dev.as_mut().unwrap();
+            for fb in feedback.drain(..) {
+                dev.absorb(fb);
+            }
+            if self.next >= self.tasks.len() {
+                self.state = SmState::Done;
+                return Step::Finished(dev.plan_telemetry());
+            }
+            let task = &self.tasks[self.next];
+            let now = clock.now();
+            if now < task.arrive {
+                return Step::Wait(task.arrive);
+            }
+            if let Some(cap) = drop_after {
+                if now - task.arrive > cap {
+                    *shed += 1;
+                    self.next += 1;
+                    continue;
+                }
+            }
+            match dev.poll_process(task) {
+                Some(Ok((verdict, busy))) => {
+                    self.meter.add_secs(busy);
+                    self.state = SmState::Computing { verdict, started: now };
+                    return Step::Wait(now + busy);
+                }
+                Some(Err(e)) => return Step::Failed(e),
+                None => {
+                    // blocking-only stage (real hardware): the compute
+                    // occupies this worker, as it occupies a real core
+                    match dev.process(task) {
+                        Ok((verdict, busy)) => {
+                            self.meter.add_secs(busy);
+                            match self
+                                .after_compute(clock, verdict, now, outcomes)
+                            {
+                                Some(step) => return step,
+                                None => continue,
+                            }
+                        }
+                        Err(e) => return Step::Failed(e),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Turn a finished device compute into an outcome (early exit) or a
+    /// link hand-off. `None` means the task completed on-device and the
+    /// stream can move on immediately.
+    fn after_compute(
+        &mut self,
+        clock: WallClock,
+        verdict: DeviceVerdict<D::Wire>,
+        started: f64,
+        outcomes: &mut Vec<TaskOutcome>,
+    ) -> Option<Step<D::Wire>> {
+        let task = &self.tasks[self.next];
+        let (id, label_hint) = (task.id, task.label);
+        self.next += 1;
+        match verdict {
+            DeviceVerdict::Exit { label, correct } => {
+                let finish = clock.now();
+                outcomes.push(TaskOutcome {
+                    id,
+                    arrive: started,
+                    finish,
+                    latency: finish - started,
+                    exited_early: true,
+                    bits: 0,
+                    wire_bytes: 0,
+                    label,
+                    correct,
+                });
+                None
+            }
+            DeviceVerdict::Transmit { wire, bits, wire_bytes } => {
+                Some(Step::Send(LinkItem {
+                    stream: self.si,
+                    id,
+                    arrive: started,
+                    bits,
+                    wire_bytes,
+                    label_hint,
+                    payload: wire,
+                }))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker loop
+// ---------------------------------------------------------------------
+
+/// How a drive of one stream ended (applied under the lock afterwards).
+enum DriveEnd {
+    Timer(f64),
+    Finished(PlanTelemetry),
+    Failed(anyhow::Error),
+    Parked,
+}
+
+/// Flags the pool down if this worker unwinds, so the siblings stop
+/// waiting for events the dead worker would have produced.
+struct PanicGuard<'a, W, F> {
+    pool: &'a Pool<W, F>,
+}
+
+impl<W, F> Drop for PanicGuard<'_, W, F> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            if let Ok(mut g) = self.pool.core.lock() {
+                if g.first_err.is_none() {
+                    g.first_err =
+                        Some(anyhow::anyhow!("worker thread panicked"));
+                }
+                g.abort = true;
+            }
+            self.pool.wakeup.notify_all();
+        }
+    }
+}
+
+fn worker_loop<D, C, DF, CF>(
+    pool: &Pool<D::Wire, D::Feedback>,
+    wid: usize,
+    seeds: HashMap<usize, StreamSeed<DF>>,
+    cloud_factory: Option<CF>,
+) where
+    D: DeviceStage,
+    C: CloudStage<Wire = D::Wire, Feedback = D::Feedback>,
+    DF: FnOnce() -> Result<D>,
+    CF: FnOnce() -> Result<C>,
+{
+    let _panic_guard = PanicGuard { pool };
+    // hydrate the pinned streams HERE: only the seed (tasks + Send
+    // factory + meter) crossed the thread boundary
+    let mut sms: HashMap<usize, StreamSm<D, DF>> = seeds
+        .into_iter()
+        .map(|(si, seed)| {
+            (
+                si,
+                StreamSm {
+                    si,
+                    tasks: seed.tasks,
+                    next: 0,
+                    factory: Some(seed.factory),
+                    dev: None,
+                    meter: seed.meter,
+                    state: SmState::Next,
+                },
+            )
+        })
+        .collect();
+    // the shared cloud stage lives on worker 0 (built here because it
+    // need not be Send), mirroring the threaded engine's eager build
+    let mut cloud: Option<C> = None;
+    if let Some(cf) = cloud_factory {
+        match cf() {
+            Ok(c) => cloud = Some(c),
+            Err(e) => {
+                let mut g = pool.core.lock().unwrap();
+                g.cloud_err = Some(e);
+                g.abort = true;
+                drop(g);
+                pool.wakeup.notify_all();
+                return;
+            }
+        }
+    }
+
+    let mut guard = pool.core.lock().unwrap();
+    'main: loop {
+        if guard.abort {
+            break;
+        }
+        // 1) expire due timers — any worker runs the shared bookkeeping
+        let due = guard.timers.pop_due(pool.clock.now());
+        let fired = !due.is_empty();
+        for (_t, wake) in due {
+            pool.fire(&mut guard, wake);
+        }
+        if fired {
+            pool.wakeup.notify_all();
+        }
+        // 2) keep the shared link fed (safety net; hand-off sites also
+        // start it)
+        if pool.link_start(&mut guard) {
+            pool.wakeup.notify_all();
+        }
+        // 3) worker 0 services the shared cloud stage
+        if let Some(cloud_stage) = cloud.as_mut() {
+            if !guard.cloud_busy {
+                if let Some(item) = guard.cloud_queue.pop_front() {
+                    guard.cloud_busy = true;
+                    // a cloud slot opened: release a stalled link
+                    // hand-off (the threaded link thread's blocked
+                    // `send` completing)
+                    if let Some(blocked) = guard.link_blocked.take() {
+                        guard.cloud_queue.push_back(blocked);
+                        guard.link_busy = false;
+                        pool.link_start(&mut guard);
+                    }
+                    pool.wakeup.notify_all();
+                    let LinkItem {
+                        stream,
+                        id,
+                        arrive,
+                        bits,
+                        wire_bytes,
+                        label_hint,
+                        payload,
+                    } = item;
+                    drop(guard);
+                    match cloud_stage.poll_process(payload) {
+                        CloudPoll::Ready { label, feedback, busy } => {
+                            // modeled service: park it on the wheel
+                            let mut g = pool.core.lock().unwrap();
+                            g.timers.insert(
+                                pool.clock.now() + busy,
+                                Wake::CloudDone(CloudFinish {
+                                    stream,
+                                    id,
+                                    arrive,
+                                    bits,
+                                    wire_bytes,
+                                    label_hint,
+                                    label,
+                                    feedback,
+                                    busy,
+                                }),
+                            );
+                            drop(g);
+                            pool.wakeup.notify_all();
+                        }
+                        CloudPoll::Sync(wire) => {
+                            // blocking-only stage: real compute occupies
+                            // this worker, measured like the threaded
+                            // cloud thread
+                            let s = Instant::now();
+                            match cloud_stage.process(wire) {
+                                Ok((label, feedback)) => {
+                                    let busy = s.elapsed().as_secs_f64();
+                                    let mut g = pool.core.lock().unwrap();
+                                    pool.cloud_done(
+                                        &mut g,
+                                        CloudFinish {
+                                            stream,
+                                            id,
+                                            arrive,
+                                            bits,
+                                            wire_bytes,
+                                            label_hint,
+                                            label,
+                                            feedback,
+                                            busy,
+                                        },
+                                    );
+                                    drop(g);
+                                    pool.wakeup.notify_all();
+                                }
+                                Err(e) => {
+                                    let mut g = pool.core.lock().unwrap();
+                                    g.cloud_err = Some(e);
+                                    g.abort = true;
+                                    drop(g);
+                                    pool.wakeup.notify_all();
+                                }
+                            }
+                        }
+                    }
+                    guard = pool.core.lock().unwrap();
+                    continue 'main;
+                }
+            }
+        }
+        // 4) drive one of this worker's runnable streams
+        if let Some(si) = guard.ready[wid].pop_front() {
+            let mut feedback = std::mem::take(&mut guard.feedback[si]);
+            drop(guard);
+            let sm = sms.get_mut(&si).expect("stream pinned to wrong worker");
+            let mut outcomes = Vec::new();
+            let mut shed = 0usize;
+            let end = loop {
+                match sm.step(
+                    pool.clock,
+                    pool.drop_after,
+                    &mut feedback,
+                    &mut outcomes,
+                    &mut shed,
+                ) {
+                    Step::Wait(t) => break DriveEnd::Timer(t),
+                    Step::Parked => break DriveEnd::Parked,
+                    Step::Finished(plan) => break DriveEnd::Finished(plan),
+                    Step::Failed(e) => break DriveEnd::Failed(e),
+                    Step::Send(item) => {
+                        let mut g = pool.core.lock().unwrap();
+                        if g.abort {
+                            break DriveEnd::Parked;
+                        }
+                        if g.link_queue.len() < pool.cap {
+                            g.link_queue.push_back(item);
+                            pool.link_start(&mut g);
+                            drop(g);
+                            pool.wakeup.notify_all();
+                            continue; // keep driving this stream
+                        }
+                        // full queue: the threaded device thread would
+                        // block in `send` here — park instead
+                        sm.state = SmState::SendBlocked { item };
+                        g.send_waiters.push_back(si);
+                        break DriveEnd::Parked;
+                    }
+                }
+            };
+            let mut g = pool.core.lock().unwrap();
+            g.outcomes[si].append(&mut outcomes);
+            g.dropped[si] += shed;
+            match end {
+                DriveEnd::Timer(t) => g.timers.insert(t, Wake::Stream(si)),
+                DriveEnd::Finished(plan) => {
+                    g.plans[si] = plan;
+                    g.live_streams -= 1;
+                }
+                DriveEnd::Failed(e) => {
+                    if g.first_err.is_none() {
+                        g.first_err = Some(e);
+                    }
+                    g.abort = true;
+                }
+                DriveEnd::Parked => {}
+            }
+            guard = g;
+            pool.wakeup.notify_all();
+            continue 'main;
+        }
+        // 5) nothing runnable: finish, or sleep until the next deadline
+        if guard.done() {
+            pool.wakeup.notify_all();
+            break;
+        }
+        let now = pool.clock.now();
+        match guard.timers.next_deadline() {
+            Some(t) if t <= now => continue,
+            Some(t) => {
+                let dur = Duration::from_secs_f64((t - now).max(1e-5));
+                let (g, _) = pool.wakeup.wait_timeout(guard, dur).unwrap();
+                guard = g;
+            }
+            None => {
+                guard = pool.wakeup.wait(guard).unwrap();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Top level
+// ---------------------------------------------------------------------
+
+fn run_pooled<D, C, DF, CF>(
+    streams: Vec<(Vec<SimTask>, DF)>,
+    cloud_factory: CF,
+    bw: BandwidthModel,
+    clock: WallClock,
+    cfg: RealCfg,
+) -> Result<MultiReport>
+where
+    D: DeviceStage,
+    C: CloudStage<Wire = D::Wire, Feedback = D::Feedback>,
+    DF: FnOnce() -> Result<D> + Send + 'static,
+    CF: FnOnce() -> Result<C> + Send + 'static,
+{
+    let n = streams.len();
+    let workers = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(4)
+        .min(n.max(1));
+
+    let dev_busy: Vec<BusyMeter> = (0..n).map(|_| BusyMeter::new()).collect();
+    let link_busy: Vec<BusyMeter> = (0..n).map(|_| BusyMeter::new()).collect();
+    let cloud_busy: Vec<BusyMeter> =
+        (0..n).map(|_| BusyMeter::new()).collect();
+
+    let mut core = Core {
+        timers: TimerWheel::new(),
+        ready: (0..workers).map(|_| VecDeque::new()).collect(),
+        owner: (0..n).map(|si| si % workers).collect(),
+        link_queue: VecDeque::with_capacity(cfg.queue_cap.max(1)),
+        link_busy: false,
+        link_blocked: None,
+        send_waiters: VecDeque::new(),
+        cloud_queue: VecDeque::with_capacity(cfg.queue_cap.max(1)),
+        cloud_busy: false,
+        feedback: (0..n).map(|_| Vec::new()).collect(),
+        outcomes: (0..n).map(|_| Vec::new()).collect(),
+        dropped: vec![0; n],
+        plans: vec![PlanTelemetry::default(); n],
+        live_streams: n,
+        first_err: None,
+        cloud_err: None,
+        abort: false,
+    };
+    // every stream starts runnable on its owner (it parks itself on the
+    // wheel until its first arrival)
+    for si in 0..n {
+        core.ready[si % workers].push_back(si);
+    }
+
+    let pool = Pool {
+        core: Mutex::new(core),
+        wakeup: Condvar::new(),
+        cap: cfg.queue_cap.max(1),
+        clock,
+        bw,
+        rtt_half: cfg.rtt_half,
+        ret_bytes: cfg.result_wire_bytes,
+        drop_after: cfg.drop_after,
+        link_meters: link_busy.clone(),
+        cloud_meters: cloud_busy.clone(),
+    };
+
+    // partition the stream seeds by owning worker (the worker hydrates
+    // them into state machines — see `worker_loop`)
+    let mut per_worker: Vec<HashMap<usize, StreamSeed<DF>>> =
+        (0..workers).map(|_| HashMap::new()).collect();
+    for (si, (tasks, factory)) in streams.into_iter().enumerate() {
+        per_worker[si % workers].insert(
+            si,
+            StreamSeed { tasks, factory, meter: dev_busy[si].clone() },
+        );
+    }
+
+    let mut cloud_factory = Some(cloud_factory);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for (wid, seeds) in per_worker.into_iter().enumerate() {
+            let cf = if wid == 0 { cloud_factory.take() } else { None };
+            let pool = &pool;
+            handles.push(s.spawn(move || {
+                worker_loop::<D, C, DF, CF>(pool, wid, seeds, cf)
+            }));
+        }
+        for h in handles {
+            // a panicking worker already flagged the pool down via its
+            // PanicGuard; consuming the join result stops the unwind
+            // from propagating past the scope
+            let _ = h.join();
+        }
+    });
+
+    let core = match pool.core.into_inner() {
+        Ok(c) => c,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    let mut first_err = core.first_err;
+    if let Some(e) = core.cloud_err {
+        // a cloud failure tears down the whole pipeline, so it is the
+        // root cause — report it over downstream stream errors
+        first_err = Some(e);
+    }
+    if let Some(e) = first_err {
+        // the admission counts would otherwise vanish with the report
+        return Err(e).context(format!(
+            "run_real failed; per-stream dropped so far: {:?}",
+            core.dropped
+        ));
+    }
+
+    Ok(assemble_report(
+        core.outcomes,
+        &core.dropped,
+        &core.plans,
+        &dev_busy,
+        &link_busy,
+        &cloud_busy,
+        &cfg,
+    ))
+}

@@ -1,0 +1,156 @@
+//! The `Scheduler` trait and the plumbing both engines share: the
+//! wire-item metadata, the spawn handle, the dispatcher, and the one
+//! report-assembly routine (so the engines cannot drift apart in how
+//! they merge per-stream results).
+//!
+//! Shape per GlareDB's `rayexec_rt_native` runtime: a `Scheduler` is
+//! the inner behavior of the serving runtime — it owns the stream
+//! tasks it is handed and returns a handle the caller joins for the
+//! merged report. `ThreadedScheduler` is the thread-per-stream
+//! reference; `PooledScheduler` multiplexes every stream onto a fixed
+//! worker pool (see [`crate::serve::pool`]).
+
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::Result;
+
+use crate::metrics::{
+    MultiReport, PlanTelemetry, RunReport, StageUsage, TaskOutcome,
+};
+use crate::network::BandwidthModel;
+use crate::pipeline::driver::RealCfg;
+use crate::pipeline::stage::{BusyMeter, CloudStage, DeviceStage, WallClock};
+use crate::sim::SimTask;
+
+use super::{PooledScheduler, Runtime, ThreadedScheduler};
+
+/// Metadata travelling with a wire payload through link and cloud.
+pub(crate) struct LinkItem<W> {
+    pub stream: usize,
+    pub id: usize,
+    pub arrive: f64,
+    pub bits: u8,
+    pub wire_bytes: usize,
+    pub label_hint: usize,
+    pub payload: W,
+}
+
+/// Inner behavior of the serving runtime: an engine accepts a fleet of
+/// device streams (tasks + stage factory each), one shared cloud
+/// factory, and the run configuration, and returns a handle on the
+/// in-flight run. Engines must produce observably equivalent reports —
+/// same per-stream task outcomes, same merge — differing only in how
+/// they spend OS threads (pinned by `tests/serve_sched_e2e.rs`).
+pub trait Scheduler: Send + Sync + std::fmt::Debug + Sized {
+    type Handle;
+
+    fn try_new() -> Result<Self>;
+
+    fn spawn_streams<D, C, DF, CF>(
+        &self,
+        streams: Vec<(Vec<SimTask>, DF)>,
+        cloud_factory: CF,
+        bw: BandwidthModel,
+        clock: WallClock,
+        cfg: RealCfg,
+    ) -> Self::Handle
+    where
+        D: DeviceStage,
+        C: CloudStage<Wire = D::Wire, Feedback = D::Feedback>,
+        DF: FnOnce() -> Result<D> + Send + 'static,
+        CF: FnOnce() -> Result<C> + Send + 'static;
+}
+
+/// Handle on a spawned run; [`StreamsHandle::join`] blocks until every
+/// stream completes and yields the merged report.
+#[derive(Debug)]
+pub struct StreamsHandle {
+    supervisor: thread::JoinHandle<Result<MultiReport>>,
+}
+
+impl StreamsHandle {
+    pub(crate) fn spawn(
+        run: impl FnOnce() -> Result<MultiReport> + Send + 'static,
+    ) -> StreamsHandle {
+        StreamsHandle { supervisor: thread::spawn(run) }
+    }
+
+    pub fn join(self) -> Result<MultiReport> {
+        self.supervisor
+            .join()
+            .map_err(|_| anyhow::anyhow!("serve supervisor thread panicked"))?
+    }
+}
+
+/// Run a fleet to completion on the engine named by `cfg.runtime`.
+/// This is what [`crate::pipeline::driver::run_real`] dispatches into;
+/// both the sim-backed (`Scenario::serve_sim`) and the real PJRT
+/// (`coordinator::server::serve_streams`) paths land here.
+pub fn run_streams<D, C, DF, CF>(
+    streams: Vec<(Vec<SimTask>, DF)>,
+    cloud_factory: CF,
+    bw: BandwidthModel,
+    clock: WallClock,
+    cfg: RealCfg,
+) -> Result<MultiReport>
+where
+    D: DeviceStage,
+    C: CloudStage<Wire = D::Wire, Feedback = D::Feedback>,
+    DF: FnOnce() -> Result<D> + Send + 'static,
+    CF: FnOnce() -> Result<C> + Send + 'static,
+{
+    match cfg.runtime {
+        Runtime::Threaded => ThreadedScheduler::try_new()?
+            .spawn_streams(streams, cloud_factory, bw, clock, cfg)
+            .join(),
+        Runtime::Pooled => PooledScheduler::try_new()?
+            .spawn_streams(streams, cloud_factory, bw, clock, cfg)
+            .join(),
+    }
+}
+
+/// Merge per-stream outcomes into the final report — identical across
+/// engines by construction: outcomes sorted by task id, span = first
+/// arrival to last finish (clamped at 0, empty streams report 0),
+/// interned scheme/model labels, per-worker/per-thread meters read once
+/// here.
+pub(crate) fn assemble_report(
+    per: Vec<Vec<TaskOutcome>>,
+    dropped: &[usize],
+    plans: &[PlanTelemetry],
+    dev_busy: &[BusyMeter],
+    link_busy: &[BusyMeter],
+    cloud_busy: &[BusyMeter],
+    cfg: &RealCfg,
+) -> MultiReport {
+    let n = per.len();
+    let mut per_stream = Vec::with_capacity(n);
+    // intern once; the per-stream clones below are refcount bumps
+    let scheme: Arc<str> = cfg.scheme.as_str().into();
+    let model: Arc<str> = cfg.model.as_str().into();
+    for (si, mut tasks) in per.into_iter().enumerate() {
+        tasks.sort_by_key(|o| o.id);
+        let first = tasks
+            .iter()
+            .map(|o| o.arrive)
+            .fold(f64::INFINITY, f64::min);
+        let last = tasks.iter().map(|o| o.finish).fold(0.0f64, f64::max);
+        let span = if tasks.is_empty() { 0.0 } else { (last - first).max(0.0) };
+        per_stream.push(RunReport {
+            scheme: scheme.clone(),
+            model: model.clone(),
+            tasks,
+            dropped: dropped[si],
+            device: StageUsage { busy: dev_busy[si].secs(), span, stall: 0.0 },
+            link: StageUsage { busy: link_busy[si].secs(), span, stall: 0.0 },
+            cloud: StageUsage {
+                busy: cloud_busy[si].secs(),
+                span,
+                stall: 0.0,
+            },
+            plan: plans[si].clone(),
+        });
+    }
+    MultiReport { per_stream, events: 0 }
+}

@@ -1,0 +1,275 @@
+//! Thread-per-stream engine — the original wall-clock driver, kept as
+//! the reference implementation the pooled engine is equivalence-tested
+//! against: one OS thread per device stream (stage built in-thread by
+//! its factory, so non-`Send` state like a PJRT engine works), one FIFO
+//! link thread sleeping `wire_bytes / bw(t) + rtt_half` per item, and
+//! ONE cloud thread shared by every stream. Faithful at N=4; at N=10k
+//! the per-thread stacks alone sink it — that regime is what
+//! [`crate::serve::pool`] exists for.
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::{MultiReport, PlanTelemetry, TaskOutcome};
+use crate::network::BandwidthModel;
+use crate::pipeline::driver::RealCfg;
+use crate::pipeline::stage::{
+    bounded, BusyMeter, Clock, CloudStage, DeviceStage, DeviceVerdict,
+    WallClock,
+};
+use crate::sim::SimTask;
+
+use super::sched::{assemble_report, LinkItem, Scheduler, StreamsHandle};
+
+/// Thread-per-stream scheduler (the reference engine).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ThreadedScheduler;
+
+impl Scheduler for ThreadedScheduler {
+    type Handle = StreamsHandle;
+
+    fn try_new() -> Result<Self> {
+        Ok(ThreadedScheduler)
+    }
+
+    fn spawn_streams<D, C, DF, CF>(
+        &self,
+        streams: Vec<(Vec<SimTask>, DF)>,
+        cloud_factory: CF,
+        bw: BandwidthModel,
+        clock: WallClock,
+        cfg: RealCfg,
+    ) -> StreamsHandle
+    where
+        D: DeviceStage,
+        C: CloudStage<Wire = D::Wire, Feedback = D::Feedback>,
+        DF: FnOnce() -> Result<D> + Send + 'static,
+        CF: FnOnce() -> Result<C> + Send + 'static,
+    {
+        StreamsHandle::spawn(move || {
+            run_threaded(streams, cloud_factory, bw, clock, cfg)
+        })
+    }
+}
+
+/// The thread-per-stream run loop (previously the body of `run_real`).
+fn run_threaded<D, C, DF, CF>(
+    streams: Vec<(Vec<SimTask>, DF)>,
+    cloud_factory: CF,
+    bw: BandwidthModel,
+    clock: WallClock,
+    cfg: RealCfg,
+) -> Result<MultiReport>
+where
+    D: DeviceStage,
+    C: CloudStage<Wire = D::Wire, Feedback = D::Feedback>,
+    DF: FnOnce() -> Result<D> + Send + 'static,
+    CF: FnOnce() -> Result<C> + Send + 'static,
+{
+    let n = streams.len();
+
+    let (link_tx, link_rx) = bounded::<LinkItem<D::Wire>>(cfg.queue_cap);
+    let (cloud_tx, cloud_rx) = bounded::<LinkItem<D::Wire>>(cfg.queue_cap);
+    let (out_tx, out_rx) = std::sync::mpsc::channel::<(usize, TaskOutcome)>();
+
+    let dev_busy: Vec<BusyMeter> = (0..n).map(|_| BusyMeter::new()).collect();
+    let link_busy: Vec<BusyMeter> = (0..n).map(|_| BusyMeter::new()).collect();
+    let cloud_busy: Vec<BusyMeter> = (0..n).map(|_| BusyMeter::new()).collect();
+
+    // ---- device threads (one per stream) ------------------------------
+    let mut feedback_txs = Vec::with_capacity(n);
+    let mut device_handles = Vec::with_capacity(n);
+    for (si, (tasks, factory)) in streams.into_iter().enumerate() {
+        let (fb_tx, fb_rx) = std::sync::mpsc::channel::<D::Feedback>();
+        feedback_txs.push(fb_tx);
+        let link_tx = link_tx.clone();
+        let out_tx = out_tx.clone();
+        let meter = dev_busy[si].clone();
+        let drop_after = cfg.drop_after;
+        device_handles.push(thread::spawn(
+            move || -> (usize, PlanTelemetry, Result<()>) {
+                let mut dropped = 0usize;
+                let mut telemetry = PlanTelemetry::default();
+                let run = (|| -> Result<()> {
+                    let mut dev = factory()?;
+                    for task in &tasks {
+                        while let Ok(fb) = fb_rx.try_recv() {
+                            dev.absorb(fb);
+                        }
+                        let now = clock.wait_until(task.arrive);
+                        if let Some(cap) = drop_after {
+                            if now - task.arrive > cap {
+                                dropped += 1;
+                                continue;
+                            }
+                        }
+                        let (verdict, busy) = dev.process(task)?;
+                        meter.add_secs(busy);
+                        match verdict {
+                            DeviceVerdict::Exit { label, correct } => {
+                                let finish = clock.now();
+                                let _ = out_tx.send((
+                                    si,
+                                    TaskOutcome {
+                                        id: task.id,
+                                        arrive: now,
+                                        finish,
+                                        latency: finish - now,
+                                        exited_early: true,
+                                        bits: 0,
+                                        wire_bytes: 0,
+                                        label,
+                                        correct,
+                                    },
+                                ));
+                            }
+                            DeviceVerdict::Transmit {
+                                wire,
+                                bits,
+                                wire_bytes,
+                            } => {
+                                let item = LinkItem {
+                                    stream: si,
+                                    id: task.id,
+                                    arrive: now,
+                                    bits,
+                                    wire_bytes,
+                                    label_hint: task.label,
+                                    payload: wire,
+                                };
+                                if link_tx.send(item).is_err() {
+                                    bail!(
+                                        "stream {si}: link stage terminated \
+                                         early"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    telemetry = dev.plan_telemetry();
+                    Ok(())
+                })();
+                // the shed count survives an error — the caller reports
+                // it instead of a phantom 0 for the errored stream
+                // (plan telemetry is only read on clean completion)
+                (dropped, telemetry, run)
+            },
+        ));
+    }
+    drop(link_tx);
+    let cloud_out_tx = out_tx.clone();
+    drop(out_tx);
+
+    // ---- link thread (shared FIFO, simulated WiFi) ---------------------
+    let link_meters = link_busy.clone();
+    let link_rtt = cfg.rtt_half;
+    let bw_link = bw.clone();
+    let link_handle = thread::spawn(move || {
+        while let Some(item) = link_rx.recv() {
+            let now = clock.now();
+            // price the wire like the DES: payload over the live rate
+            // plus the one-way network latency
+            let secs = bw_link.transmit_time(item.wire_bytes, now) + link_rtt;
+            thread::sleep(Duration::from_secs_f64(secs));
+            link_meters[item.stream].add_secs(secs);
+            if cloud_tx.send(item).is_err() {
+                break;
+            }
+        }
+    });
+
+    // ---- cloud thread (shared engine) ----------------------------------
+    let cloud_meters = cloud_busy.clone();
+    let ret_rtt = cfg.rtt_half;
+    let ret_bytes = cfg.result_wire_bytes;
+    let cloud_handle = thread::spawn(move || -> Result<()> {
+        let mut cloud = cloud_factory()?;
+        while let Some(item) = cloud_rx.recv() {
+            let s = Instant::now();
+            let (label, fb) = cloud.process(item.payload)?;
+            cloud_meters[item.stream].add_secs(s.elapsed().as_secs_f64());
+            let now = clock.now();
+            // result-return leg priced like the DES (rtt + payload at
+            // the instantaneous rate); the return rides the network, not
+            // the cloud engine, so it extends the task's finish without
+            // blocking the next item
+            let ret =
+                ret_rtt + ret_bytes as f64 * 8.0 / (bw.true_mbps(now) * 1e6);
+            let finish = now + ret;
+            let _ = cloud_out_tx.send((
+                item.stream,
+                TaskOutcome {
+                    id: item.id,
+                    arrive: item.arrive,
+                    finish,
+                    latency: finish - item.arrive,
+                    exited_early: false,
+                    bits: item.bits,
+                    wire_bytes: item.wire_bytes,
+                    label,
+                    correct: label == item.label_hint,
+                },
+            ));
+            let _ = feedback_txs[item.stream].send(fb);
+        }
+        Ok(())
+    });
+
+    // ---- collect --------------------------------------------------------
+    let mut per: Vec<Vec<TaskOutcome>> = vec![Vec::new(); n];
+    for (si, o) in out_rx {
+        per[si].push(o);
+    }
+
+    let mut dropped = Vec::with_capacity(n);
+    let mut plans: Vec<PlanTelemetry> = Vec::with_capacity(n);
+    let mut first_err: Option<anyhow::Error> = None;
+    for h in device_handles {
+        match h.join() {
+            Ok((d, t, Ok(()))) => {
+                dropped.push(d);
+                plans.push(t);
+            }
+            Ok((d, t, Err(e))) => {
+                // the stream still reports its real shed count
+                dropped.push(d);
+                plans.push(t);
+                first_err.get_or_insert(e);
+            }
+            Err(_) => {
+                dropped.push(0);
+                plans.push(PlanTelemetry::default());
+                first_err
+                    .get_or_insert(anyhow::anyhow!("device thread panicked"));
+            }
+        }
+    }
+    link_handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("link thread panicked"))?;
+    match cloud_handle.join() {
+        Ok(Ok(())) => {}
+        // a cloud failure tears down link + devices, so it is the root
+        // cause — report it over the downstream "link terminated" errors
+        Ok(Err(e)) => first_err = Some(e),
+        Err(_) => first_err = Some(anyhow::anyhow!("cloud thread panicked")),
+    }
+    if let Some(e) = first_err {
+        // the admission counts would otherwise vanish with the report
+        return Err(e).context(format!(
+            "run_real failed; per-stream dropped so far: {dropped:?}"
+        ));
+    }
+
+    Ok(assemble_report(
+        per,
+        &dropped,
+        &plans,
+        &dev_busy,
+        &link_busy,
+        &cloud_busy,
+        &cfg,
+    ))
+}

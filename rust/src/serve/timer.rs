@@ -1,0 +1,345 @@
+//! Hashed timer wheel shared by one pooled scheduler.
+//!
+//! The pooled serving runtime replaces thousands of sleeping OS threads
+//! with ONE deadline structure per pool: every wait in the pipeline —
+//! task arrivals, modeled device compute, link transmissions, modeled
+//! cloud service — becomes an entry here, and workers sleep on the
+//! pool's condvar until the next deadline instead of each blocking its
+//! own thread.
+//!
+//! Layout: a power-of-two ring of time slots of fixed granularity (the
+//! classic hashed wheel), plus an overflow min-heap for deadlines beyond
+//! the ring's horizon that migrates entries inward as the cursor
+//! advances. Expired entries are returned in `(deadline, seq)` order —
+//! `seq` is a per-wheel insertion counter, so equal-deadline wakes fire
+//! in insertion order and a pop batch is deterministic regardless of
+//! which slot each entry sat in.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<T> {
+    t: f64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t.to_bits() == other.t.to_bits() && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.t
+            .total_cmp(&other.t)
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+/// A hashed timer wheel: O(1) insert, batched expiry. See the module
+/// docs for the role it plays in the pooled scheduler.
+pub struct TimerWheel<T> {
+    /// slot width in seconds
+    gran: f64,
+    /// ring of per-tick entry lists (`slots.len()` is a power of two)
+    slots: Vec<Vec<Entry<T>>>,
+    /// `slots.len() as u64`, the ring's reach in ticks
+    horizon: u64,
+    /// absolute tick of the slot the cursor is parked on; every stored
+    /// in-ring entry has tick in `[cursor_tick, cursor_tick + horizon)`
+    cursor_tick: u64,
+    /// entries currently stored in the ring (not the overflow)
+    in_ring: usize,
+    /// min-heap of entries beyond the ring horizon
+    overflow: BinaryHeap<std::cmp::Reverse<Entry<T>>>,
+    seq: u64,
+    len: usize,
+}
+
+impl<T> Default for TimerWheel<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> TimerWheel<T> {
+    /// Default geometry: 500 µs slots × 4096 ≈ a 2 s horizon — finer
+    /// than the sleep precision of the wall clock it serves, wide
+    /// enough that steady-state serving traffic stays in the ring.
+    pub fn new() -> TimerWheel<T> {
+        Self::with_geometry(500e-6, 4096)
+    }
+
+    /// `slots` must be a power of two; `gran` is the slot width in
+    /// seconds.
+    pub fn with_geometry(gran: f64, slots: usize) -> TimerWheel<T> {
+        assert!(gran > 0.0, "timer wheel granularity must be positive");
+        assert!(
+            slots.is_power_of_two(),
+            "timer wheel slot count must be a power of two"
+        );
+        TimerWheel {
+            gran,
+            slots: (0..slots).map(|_| Vec::new()).collect(),
+            horizon: slots as u64,
+            cursor_tick: 0,
+            in_ring: 0,
+            overflow: BinaryHeap::new(),
+            seq: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn tick_of(&self, t: f64) -> u64 {
+        (t.max(0.0) / self.gran) as u64
+    }
+
+    /// Schedule `item` to expire at clock time `t` (seconds). Deadlines
+    /// at or before the cursor are clamped due — they come out of the
+    /// very next [`TimerWheel::pop_due`] call, still ordered by their
+    /// original `t`.
+    pub fn insert(&mut self, t: f64, item: T) {
+        debug_assert!(t.is_finite(), "timer deadline must be finite");
+        let entry = Entry { t, seq: self.seq, item };
+        self.seq += 1;
+        self.len += 1;
+        let tick = self.tick_of(t).max(self.cursor_tick);
+        if tick >= self.cursor_tick + self.horizon {
+            self.overflow.push(std::cmp::Reverse(entry));
+        } else {
+            self.slots[(tick % self.horizon) as usize].push(entry);
+            self.in_ring += 1;
+        }
+    }
+
+    /// Pull overflow entries that now fit inside the ring horizon.
+    fn migrate_overflow(&mut self) {
+        while let Some(std::cmp::Reverse(head)) = self.overflow.peek() {
+            let tick = self.tick_of(head.t).max(self.cursor_tick);
+            if tick >= self.cursor_tick + self.horizon {
+                return;
+            }
+            let std::cmp::Reverse(entry) = self.overflow.pop().unwrap();
+            self.slots[(tick % self.horizon) as usize].push(entry);
+            self.in_ring += 1;
+        }
+    }
+
+    /// Expire every entry with deadline `<= now`, returned sorted by
+    /// `(deadline, seq)`.
+    pub fn pop_due(&mut self, now: f64) -> Vec<(f64, T)> {
+        let mut due: Vec<Entry<T>> = Vec::new();
+        let now_tick = self.tick_of(now);
+        // an empty ring lets the cursor jump an idle gap in one step
+        // instead of scanning every slot it slept through
+        if self.in_ring == 0 && self.cursor_tick < now_tick {
+            self.cursor_tick = now_tick;
+            self.migrate_overflow();
+        }
+        while self.cursor_tick < now_tick {
+            let slot =
+                &mut self.slots[(self.cursor_tick % self.horizon) as usize];
+            self.in_ring -= slot.len();
+            due.append(slot);
+            self.cursor_tick += 1;
+            // advancing opened one new tick at the far edge
+            self.migrate_overflow();
+            if self.in_ring == 0 && self.cursor_tick < now_tick {
+                self.cursor_tick = now_tick;
+                self.migrate_overflow();
+            }
+        }
+        // the cursor's own slot may straddle `now`: expire only entries
+        // at or before it, keep the rest for a later pop
+        let slot = &mut self.slots[(self.cursor_tick % self.horizon) as usize];
+        let mut i = 0;
+        while i < slot.len() {
+            if slot[i].t <= now {
+                due.push(slot.swap_remove(i));
+                self.in_ring -= 1;
+            } else {
+                i += 1;
+            }
+        }
+        // deep-sleep wakeups: overflow entries already due after a jump
+        while self
+            .overflow
+            .peek()
+            .is_some_and(|std::cmp::Reverse(e)| e.t <= now)
+        {
+            due.push(self.overflow.pop().unwrap().0);
+        }
+        self.len -= due.len();
+        due.sort_unstable();
+        due.into_iter().map(|e| (e.t, e.item)).collect()
+    }
+
+    /// Earliest pending deadline, if any — what a worker with nothing
+    /// runnable should sleep until.
+    pub fn next_deadline(&self) -> Option<f64> {
+        if self.len == 0 {
+            return None;
+        }
+        let mut best = self.overflow.peek().map(|std::cmp::Reverse(e)| e.t);
+        if self.in_ring > 0 {
+            for k in 0..self.horizon {
+                let slot = &self.slots
+                    [((self.cursor_tick + k) % self.horizon) as usize];
+                if !slot.is_empty() {
+                    let m = slot
+                        .iter()
+                        .map(|e| e.t)
+                        .fold(f64::INFINITY, f64::min);
+                    best = Some(best.map_or(m, |b| b.min(m)));
+                    break;
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn fires_in_deadline_then_insertion_order() {
+        let mut w: TimerWheel<u32> = TimerWheel::new();
+        w.insert(0.003, 0);
+        w.insert(0.001, 1);
+        w.insert(0.001, 2);
+        w.insert(0.002, 3);
+        assert_eq!(w.len(), 4);
+        let due = w.pop_due(0.01);
+        let items: Vec<u32> = due.iter().map(|&(_, x)| x).collect();
+        assert_eq!(items, vec![1, 2, 3, 0]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn partial_expiry_keeps_future_entries() {
+        let mut w: TimerWheel<&str> = TimerWheel::new();
+        w.insert(0.010, "early");
+        w.insert(5.0, "late");
+        let due = w.pop_due(0.5);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].1, "early");
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.next_deadline(), Some(5.0));
+        let due = w.pop_due(5.0);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].1, "late");
+    }
+
+    #[test]
+    fn past_deadlines_are_clamped_due() {
+        let mut w: TimerWheel<u8> = TimerWheel::new();
+        // advance the cursor first
+        w.insert(1.0, 9);
+        assert_eq!(w.pop_due(1.5).len(), 1);
+        // scheduling before the cursor must still fire immediately
+        w.insert(0.2, 7);
+        let due = w.pop_due(1.5);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].1, 7);
+    }
+
+    #[test]
+    fn overflow_beyond_horizon_and_idle_gaps() {
+        // 1 ms x 8 slots = an 8 ms horizon: everything below overflows
+        let mut w: TimerWheel<usize> = TimerWheel::with_geometry(1e-3, 8);
+        for i in 0..20 {
+            w.insert(0.05 * (20 - i) as f64, i);
+        }
+        assert_eq!(w.next_deadline(), Some(0.05));
+        // jump far past several horizons in one pop
+        let due = w.pop_due(0.475);
+        let items: Vec<usize> = due.iter().map(|&(_, x)| x).collect();
+        assert_eq!(items, (11..20).rev().collect::<Vec<_>>());
+        assert_eq!(w.len(), 11);
+        // and drain the rest in one deep-sleep wake
+        let due = w.pop_due(10.0);
+        assert_eq!(due.len(), 11);
+        assert!(w.is_empty());
+        assert_eq!(w.next_deadline(), None);
+    }
+
+    /// Random schedules must expire exactly like a sorted reference
+    /// list, in the same order, across geometry edge cases.
+    #[test]
+    fn matches_sorted_reference_under_random_load() {
+        for seed in 0..12 {
+            let mut rng = Rng::new(seed);
+            let geometries = [(500e-6, 4096), (1e-3, 16), (2e-4, 64)];
+            let (gran, slots) = geometries[rng.below(3)];
+            let mut w: TimerWheel<u64> = TimerWheel::with_geometry(gran, slots);
+            // reference: (t, seq, id), expired by retain + sort
+            let mut reference: Vec<(f64, u64, u64)> = Vec::new();
+            let mut seq = 0u64;
+            let mut now = 0.0f64;
+            let mut id = 0u64;
+            for _ in 0..300 {
+                for _ in 0..rng.below(5) {
+                    // mix of near, in-granule, and far-beyond-horizon
+                    let dt = match rng.below(4) {
+                        0 => rng.f64() * gran,
+                        1 => rng.f64() * gran * slots as f64,
+                        _ => rng.f64() * gran * slots as f64 * 4.0,
+                    };
+                    w.insert(now + dt, id);
+                    reference.push((now + dt, seq, id));
+                    seq += 1;
+                    id += 1;
+                }
+                now += rng.f64() * gran * slots as f64 * 0.5;
+                let got = w.pop_due(now);
+                let mut want: Vec<(f64, u64, u64)> = reference
+                    .iter()
+                    .filter(|&&(t, _, _)| t <= now)
+                    .copied()
+                    .collect();
+                want.sort_by(|a, b| {
+                    a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1))
+                });
+                reference.retain(|&(t, _, _)| t > now);
+                assert_eq!(got.len(), want.len(), "seed {seed} at now={now}");
+                for (g, w_) in got.iter().zip(&want) {
+                    assert_eq!(g.0.to_bits(), w_.0.to_bits(), "seed {seed}");
+                    assert_eq!(g.1, w_.2, "seed {seed}");
+                }
+                // next_deadline agrees with the reference minimum
+                let want_next = reference
+                    .iter()
+                    .map(|&(t, _, _)| t)
+                    .fold(f64::INFINITY, f64::min);
+                match w.next_deadline() {
+                    None => assert!(reference.is_empty(), "seed {seed}"),
+                    Some(d) => {
+                        assert_eq!(d.to_bits(), want_next.to_bits(), "seed {seed}")
+                    }
+                }
+                assert_eq!(w.len(), reference.len(), "seed {seed}");
+            }
+        }
+    }
+}

@@ -119,6 +119,7 @@ fn pjrt_server_serves_four_streams_on_one_cloud_engine() {
         n_streams,
         drop_after: None,
         queue_cap: 8,
+        runtime: coach::serve::Runtime::Threaded,
         replan: None,
     };
     let single = serve(&m, &cfg(1)).unwrap();

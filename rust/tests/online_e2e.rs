@@ -35,6 +35,7 @@ fn base_cfg(model: &str, m: &Manifest) -> ServeCfg {
         n_streams: 1,
         drop_after: None,
         queue_cap: 8,
+        runtime: coach::serve::Runtime::Threaded,
         replan: None,
     }
 }

@@ -1,0 +1,227 @@
+//! Scheduler-equivalence suite for the pluggable serving runtime
+//! (`coach::serve`): the thread-per-stream reference engine and the
+//! pooled worker engine must be behaviourally interchangeable. Both
+//! drive the same sim-backed fleets through `run_real`; every DISCRETE
+//! outcome field (ids, exit decisions, precisions, wire bytes, labels,
+//! correctness, drop counts) must match exactly. Wall-clock fields
+//! (arrive/finish/latency, stage busy seconds) are jitter-bearing by
+//! construction and are deliberately NOT compared.
+
+use coach::metrics::MultiReport;
+use coach::model::{CostModel, DeviceProfile};
+use coach::network::BandwidthModel;
+use coach::pipeline::driver::{run_real, RealCfg, SimCloud, SimDevice};
+use coach::pipeline::{ActivePlan, StageModel, StaticPolicy, WallClock};
+use coach::serve::Runtime;
+use coach::sim::{generate, Correlation, SimTask};
+
+/// Inter-arrival period per stream (seconds).
+const PERIOD: f64 = 1e-3;
+
+/// Workload shape of one fleet run: everything that must be identical
+/// between the engines under comparison.
+struct Fleet {
+    n_streams: usize,
+    n_tasks: usize,
+    /// early-exit threshold on separability (INFINITY = never exit)
+    exit_threshold: f64,
+    /// feature elements crossing the link per transmitted task
+    cut_elems: usize,
+    link_mbps: f64,
+    queue_cap: usize,
+}
+
+impl Fleet {
+    fn stage_model(&self) -> StageModel {
+        StageModel {
+            t_e: 5e-4,
+            t_c: 1e-4,
+            first_send_offset: 0.0,
+            t_c_par: 0.0,
+            cut_elems: vec![self.cut_elems],
+            result_elems: 10,
+            exit_check: 0.0,
+        }
+    }
+
+    /// Same seeds, same arrivals, same stage model — the only variable
+    /// across calls is the serving engine.
+    fn run(&self, runtime: Runtime) -> MultiReport {
+        let clock = WallClock::new();
+        let bw = BandwidthModel::Static(self.link_mbps);
+        let sm = self.stage_model();
+        let streams: Vec<(Vec<SimTask>, _)> = (0..self.n_streams)
+            .map(|i| {
+                let tasks = generate(
+                    self.n_tasks,
+                    PERIOD,
+                    Correlation::Medium,
+                    10,
+                    77 + i as u64,
+                );
+                let sm = sm.clone();
+                let bw = bw.clone();
+                let threshold = self.exit_threshold;
+                let elems = self.cut_elems;
+                let factory =
+                    move || -> anyhow::Result<SimDevice<StaticPolicy>> {
+                        Ok(SimDevice {
+                            policy: StaticPolicy {
+                                bits: 8,
+                                exit_threshold: threshold,
+                            },
+                            plan: ActivePlan::single(sm),
+                            bw,
+                            clock,
+                            source_elems: elems,
+                            cost: CostModel::new(
+                                DeviceProfile::jetson_nx(),
+                                DeviceProfile::cloud_a6000(),
+                            ),
+                        })
+                    };
+                (tasks, factory)
+            })
+            .collect();
+        run_real::<SimDevice<StaticPolicy>, SimCloud, _, _>(
+            streams,
+            || Ok(SimCloud),
+            bw.clone(),
+            clock,
+            RealCfg {
+                runtime,
+                queue_cap: self.queue_cap,
+                scheme: "equiv".into(),
+                model: "sim".into(),
+                ..Default::default()
+            },
+        )
+        .expect("fleet must serve")
+    }
+}
+
+/// The discrete (jitter-free) projection of one task outcome.
+type Discrete = (usize, bool, u8, usize, usize, bool);
+
+fn discrete(multi: &MultiReport) -> Vec<(Vec<Discrete>, usize)> {
+    multi
+        .per_stream
+        .iter()
+        .map(|r| {
+            let mut tasks: Vec<Discrete> = r
+                .tasks
+                .iter()
+                .map(|t| {
+                    (
+                        t.id,
+                        t.exited_early,
+                        t.bits,
+                        t.wire_bytes,
+                        t.label,
+                        t.correct,
+                    )
+                })
+                .collect();
+            tasks.sort_unstable();
+            (tasks, r.dropped)
+        })
+        .collect()
+}
+
+/// Every discrete per-stream outcome must be identical across engines.
+fn assert_equivalent(fleet: &Fleet) -> (MultiReport, MultiReport) {
+    let threaded = fleet.run(Runtime::Threaded);
+    let pooled = fleet.run(Runtime::Pooled);
+    assert_eq!(threaded.per_stream.len(), fleet.n_streams);
+    assert_eq!(pooled.per_stream.len(), fleet.n_streams);
+    let a = discrete(&threaded);
+    let b = discrete(&pooled);
+    for (si, (ta, tb)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(
+            ta, tb,
+            "stream {si}: threaded and pooled outcomes diverge"
+        );
+    }
+    (threaded, pooled)
+}
+
+#[test]
+fn threaded_and_pooled_produce_identical_outcomes() {
+    let fleet = Fleet {
+        n_streams: 4,
+        n_tasks: 24,
+        // mid threshold: the seeded workload crosses it both ways, so
+        // the comparison covers the Exit AND the Transmit paths
+        exit_threshold: 0.5,
+        cut_elems: 1024,
+        link_mbps: 50.0,
+        queue_cap: 8,
+    };
+    let (threaded, _pooled) = assert_equivalent(&fleet);
+
+    // the workload itself must exercise both verdicts, or the
+    // equivalence above is vacuous on one of the two paths
+    let agg = threaded.aggregate();
+    let exits = agg.tasks.iter().filter(|t| t.exited_early).count();
+    assert!(exits > 0, "no early exits — raise exit_threshold coverage");
+    assert!(
+        exits < agg.tasks.len(),
+        "every task exited — nothing crossed the link"
+    );
+    assert_eq!(agg.tasks.len(), 4 * 24, "no task lost by either engine");
+}
+
+#[test]
+fn queue_cap_backpressure_surfaces_identically() {
+    // cap the link hand-off at ONE in-flight item and slow the link so
+    // it saturates: devices must block on admission in both engines,
+    // and neither may lose or reorder a task while stalled
+    let fleet = Fleet {
+        n_streams: 4,
+        n_tasks: 12,
+        exit_threshold: f64::INFINITY,
+        cut_elems: 2048,
+        link_mbps: 5.0,
+        queue_cap: 1,
+    };
+    let (threaded, pooled) = assert_equivalent(&fleet);
+    for multi in [&threaded, &pooled] {
+        let agg = multi.aggregate();
+        assert_eq!(agg.tasks.len(), 4 * 12, "conservation under cap=1");
+        assert_eq!(agg.dropped, 0, "no admission control configured");
+        // the link really was the bottleneck: its busy time exceeds any
+        // single stream's device time by a wide margin
+        assert!(
+            agg.link.busy > 3.0 * 12.0 * 5e-4,
+            "link not saturated (busy {}s) — backpressure untested",
+            agg.link.busy
+        );
+    }
+}
+
+#[test]
+fn pooled_engine_serves_wide_fleets_with_bounded_workers() {
+    // 256 streams is ~an order of magnitude past sensible
+    // thread-per-stream territory for a unit test; the pooled engine
+    // must serve it with worker count <= available cores and lose
+    // nothing. (The 10k-stream case is `coach serve-sim --streams
+    // 10000 --runtime pooled` / `coach bench-serve-scale`.)
+    let fleet = Fleet {
+        n_streams: 256,
+        n_tasks: 2,
+        exit_threshold: f64::INFINITY,
+        cut_elems: 256,
+        link_mbps: 200.0,
+        queue_cap: 8,
+    };
+    let multi = fleet.run(Runtime::Pooled);
+    assert_eq!(multi.per_stream.len(), 256);
+    let agg = multi.aggregate();
+    assert_eq!(agg.tasks.len(), 256 * 2, "every task served");
+    assert_eq!(agg.dropped, 0);
+    for (si, r) in multi.per_stream.iter().enumerate() {
+        assert_eq!(r.tasks.len(), 2, "stream {si} incomplete");
+        let ids: Vec<usize> = r.tasks.iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![0, 1], "stream {si} ids out of order");
+    }
+}

@@ -48,4 +48,19 @@ grep -q events_per_sec "$BENCH_DIR/BENCH_des_scale.json" \
     || { echo "BENCH_des_scale.json lacks events_per_sec"; exit 1; }
 rm -rf "$BENCH_DIR"
 
+echo "== serve scale smoke: tiny-n coach bench-serve-scale emits BENCH_serve_scale.json =="
+BENCH_DIR="$(mktemp -d)"
+COACH_BENCH_DIR="$BENCH_DIR" ./target/release/coach bench-serve-scale \
+    --streams 4,8 --tasks 3
+test -s "$BENCH_DIR/BENCH_serve_scale.json" \
+    || { echo "BENCH_serve_scale.json missing"; exit 1; }
+grep -q streams "$BENCH_DIR/BENCH_serve_scale.json" \
+    || { echo "BENCH_serve_scale.json lacks streams"; exit 1; }
+grep -q throughput "$BENCH_DIR/BENCH_serve_scale.json" \
+    || { echo "BENCH_serve_scale.json lacks throughput"; exit 1; }
+rm -rf "$BENCH_DIR"
+
+echo "== pooled serve-sim smoke: wide fleet on the worker-pool engine =="
+./target/release/coach serve-sim --streams 1024 --n 5 --runtime pooled
+
 echo "verify OK"
