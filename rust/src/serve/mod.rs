@@ -28,7 +28,7 @@ pub mod timer;
 pub use pool::PooledScheduler;
 pub use sched::{run_streams, Scheduler, StreamsHandle};
 pub use threaded::ThreadedScheduler;
-pub use timer::TimerWheel;
+pub use timer::{TimerId, TimerWheel};
 
 use anyhow::{bail, Result};
 

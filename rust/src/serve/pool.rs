@@ -29,8 +29,7 @@
 //! sheds, same backpressure stalls, same merged report) is pinned by
 //! `tests/serve_sched_e2e.rs`.
 
-use std::collections::{HashMap, VecDeque};
-use std::sync::{Condvar, Mutex};
+use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -43,6 +42,9 @@ use crate::pipeline::stage::{
     WallClock,
 };
 use crate::sim::SimTask;
+// Single import point for sync primitives: std normally, the in-tree
+// model checker under `--cfg loom` (see util::sync and tests/loom_pool.rs).
+use crate::util::sync::{Condvar, Mutex, MutexGuard};
 
 use super::sched::{assemble_report, LinkItem, Scheduler, StreamsHandle};
 use super::timer::TimerWheel;
@@ -167,6 +169,17 @@ struct Pool<W, F> {
 }
 
 impl<W, F> Pool<W, F> {
+    /// Poison-recovering lock. Worker bodies must be panic-free (the
+    /// `unwrap-free` xtask lint enforces it): a sibling that panicked
+    /// while holding the lock has already flagged the pool down via its
+    /// `PanicGuard`, and the state is still consistent enough for this
+    /// worker to observe `abort` and unwind cleanly.
+    fn lock_core(&self) -> MutexGuard<'_, Core<W, F>> {
+        self.core
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
     /// Apply one expired timer (caller holds the lock).
     fn fire(&self, core: &mut Core<W, F>, wake: Wake<W, F>) {
         match wake {
@@ -326,12 +339,23 @@ where
             // build the device stage lazily ON its owning worker — the
             // factory is Send, the stage need not be
             if self.dev.is_none() {
-                match (self.factory.take().expect("device factory reused"))() {
+                let Some(factory) = self.factory.take() else {
+                    return Step::Failed(anyhow::anyhow!(
+                        "stream {}: device factory consumed without a stage",
+                        self.si
+                    ));
+                };
+                match factory() {
                     Ok(d) => self.dev = Some(d),
                     Err(e) => return Step::Failed(e),
                 }
             }
-            let dev = self.dev.as_mut().unwrap();
+            let Some(dev) = self.dev.as_mut() else {
+                return Step::Failed(anyhow::anyhow!(
+                    "stream {}: device stage missing after build",
+                    self.si
+                ));
+            };
             for fb in feedback.drain(..) {
                 dev.absorb(fb);
             }
@@ -443,7 +467,8 @@ struct PanicGuard<'a, W, F> {
 impl<W, F> Drop for PanicGuard<'_, W, F> {
     fn drop(&mut self) {
         if std::thread::panicking() {
-            if let Ok(mut g) = self.pool.core.lock() {
+            {
+                let mut g = self.pool.lock_core();
                 if g.first_err.is_none() {
                     g.first_err =
                         Some(anyhow::anyhow!("worker thread panicked"));
@@ -458,7 +483,7 @@ impl<W, F> Drop for PanicGuard<'_, W, F> {
 fn worker_loop<D, C, DF, CF>(
     pool: &Pool<D::Wire, D::Feedback>,
     wid: usize,
-    seeds: HashMap<usize, StreamSeed<DF>>,
+    seeds: BTreeMap<usize, StreamSeed<DF>>,
     cloud_factory: Option<CF>,
 ) where
     D: DeviceStage,
@@ -468,8 +493,10 @@ fn worker_loop<D, C, DF, CF>(
 {
     let _panic_guard = PanicGuard { pool };
     // hydrate the pinned streams HERE: only the seed (tasks + Send
-    // factory + meter) crossed the thread boundary
-    let mut sms: HashMap<usize, StreamSm<D, DF>> = seeds
+    // factory + meter) crossed the thread boundary. BTreeMap, not
+    // HashMap: stream state must never sit behind randomized iteration
+    // order (`map-order` xtask lint).
+    let mut sms: BTreeMap<usize, StreamSm<D, DF>> = seeds
         .into_iter()
         .map(|(si, seed)| {
             (
@@ -493,7 +520,7 @@ fn worker_loop<D, C, DF, CF>(
         match cf() {
             Ok(c) => cloud = Some(c),
             Err(e) => {
-                let mut g = pool.core.lock().unwrap();
+                let mut g = pool.lock_core();
                 g.cloud_err = Some(e);
                 g.abort = true;
                 drop(g);
@@ -503,7 +530,7 @@ fn worker_loop<D, C, DF, CF>(
         }
     }
 
-    let mut guard = pool.core.lock().unwrap();
+    let mut guard = pool.lock_core();
     'main: loop {
         if guard.abort {
             break;
@@ -549,7 +576,7 @@ fn worker_loop<D, C, DF, CF>(
                     match cloud_stage.poll_process(payload) {
                         CloudPoll::Ready { label, feedback, busy } => {
                             // modeled service: park it on the wheel
-                            let mut g = pool.core.lock().unwrap();
+                            let mut g = pool.lock_core();
                             g.timers.insert(
                                 pool.clock.now() + busy,
                                 Wake::CloudDone(CloudFinish {
@@ -575,7 +602,7 @@ fn worker_loop<D, C, DF, CF>(
                             match cloud_stage.process(wire) {
                                 Ok((label, feedback)) => {
                                     let busy = s.elapsed().as_secs_f64();
-                                    let mut g = pool.core.lock().unwrap();
+                                    let mut g = pool.lock_core();
                                     pool.cloud_done(
                                         &mut g,
                                         CloudFinish {
@@ -594,7 +621,7 @@ fn worker_loop<D, C, DF, CF>(
                                     pool.wakeup.notify_all();
                                 }
                                 Err(e) => {
-                                    let mut g = pool.core.lock().unwrap();
+                                    let mut g = pool.lock_core();
                                     g.cloud_err = Some(e);
                                     g.abort = true;
                                     drop(g);
@@ -603,7 +630,7 @@ fn worker_loop<D, C, DF, CF>(
                             }
                         }
                     }
-                    guard = pool.core.lock().unwrap();
+                    guard = pool.lock_core();
                     continue 'main;
                 }
             }
@@ -611,8 +638,21 @@ fn worker_loop<D, C, DF, CF>(
         // 4) drive one of this worker's runnable streams
         if let Some(si) = guard.ready[wid].pop_front() {
             let mut feedback = std::mem::take(&mut guard.feedback[si]);
+            let Some(sm) = sms.get_mut(&si) else {
+                // a stream on the wrong worker's ready queue is a
+                // scheduler bug; fail the run instead of unwinding
+                if guard.first_err.is_none() {
+                    guard.first_err = Some(anyhow::anyhow!(
+                        "stream {si} woke on worker {wid} but is not \
+                         pinned there"
+                    ));
+                }
+                guard.abort = true;
+                drop(guard);
+                pool.wakeup.notify_all();
+                break;
+            };
             drop(guard);
-            let sm = sms.get_mut(&si).expect("stream pinned to wrong worker");
             let mut outcomes = Vec::new();
             let mut shed = 0usize;
             let end = loop {
@@ -628,7 +668,7 @@ fn worker_loop<D, C, DF, CF>(
                     Step::Finished(plan) => break DriveEnd::Finished(plan),
                     Step::Failed(e) => break DriveEnd::Failed(e),
                     Step::Send(item) => {
-                        let mut g = pool.core.lock().unwrap();
+                        let mut g = pool.lock_core();
                         if g.abort {
                             break DriveEnd::Parked;
                         }
@@ -647,7 +687,7 @@ fn worker_loop<D, C, DF, CF>(
                     }
                 }
             };
-            let mut g = pool.core.lock().unwrap();
+            let mut g = pool.lock_core();
             g.outcomes[si].append(&mut outcomes);
             g.dropped[si] += shed;
             match end {
@@ -678,11 +718,17 @@ fn worker_loop<D, C, DF, CF>(
             Some(t) if t <= now => continue,
             Some(t) => {
                 let dur = Duration::from_secs_f64((t - now).max(1e-5));
-                let (g, _) = pool.wakeup.wait_timeout(guard, dur).unwrap();
+                let (g, _) = pool
+                    .wakeup
+                    .wait_timeout(guard, dur)
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
                 guard = g;
             }
             None => {
-                guard = pool.wakeup.wait(guard).unwrap();
+                guard = pool
+                    .wakeup
+                    .wait(guard)
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
             }
         }
     }
@@ -756,8 +802,8 @@ where
 
     // partition the stream seeds by owning worker (the worker hydrates
     // them into state machines — see `worker_loop`)
-    let mut per_worker: Vec<HashMap<usize, StreamSeed<DF>>> =
-        (0..workers).map(|_| HashMap::new()).collect();
+    let mut per_worker: Vec<BTreeMap<usize, StreamSeed<DF>>> =
+        (0..workers).map(|_| BTreeMap::new()).collect();
     for (si, (tasks, factory)) in streams.into_iter().enumerate() {
         per_worker[si % workers].insert(
             si,

@@ -10,7 +10,6 @@
 //! reference; `PooledScheduler` multiplexes every stream onto a fixed
 //! worker pool (see [`crate::serve::pool`]).
 
-use std::sync::Arc;
 use std::thread;
 
 use anyhow::Result;
@@ -22,6 +21,8 @@ use crate::network::BandwidthModel;
 use crate::pipeline::driver::RealCfg;
 use crate::pipeline::stage::{BusyMeter, CloudStage, DeviceStage, WallClock};
 use crate::sim::SimTask;
+// std normally, the in-tree model checker under `--cfg loom`
+use crate::util::sync::Arc;
 
 use super::{PooledScheduler, Runtime, ThreadedScheduler};
 

@@ -16,7 +16,12 @@
 //! which slot each entry sat in.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeSet, BinaryHeap};
+
+/// Handle on a scheduled timer, for [`TimerWheel::cancel`]. Wraps the
+/// wheel's insertion sequence number, which is unique per wheel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TimerId(u64);
 
 struct Entry<T> {
     t: f64,
@@ -62,6 +67,11 @@ pub struct TimerWheel<T> {
     in_ring: usize,
     /// min-heap of entries beyond the ring horizon
     overflow: BinaryHeap<std::cmp::Reverse<Entry<T>>>,
+    /// seqs of pending (not fired, not cancelled) entries. Cancellation
+    /// is lazy: a cancelled entry stays in its slot/heap as a corpse
+    /// until expiry or a deadline scan walks past it. `len == live.len()`
+    /// always; `in_ring` counts corpses too (they still occupy slots).
+    live: BTreeSet<u64>,
     seq: u64,
     len: usize,
 }
@@ -95,6 +105,7 @@ impl<T> TimerWheel<T> {
             cursor_tick: 0,
             in_ring: 0,
             overflow: BinaryHeap::new(),
+            live: BTreeSet::new(),
             seq: 0,
             len: 0,
         }
@@ -115,10 +126,13 @@ impl<T> TimerWheel<T> {
     /// Schedule `item` to expire at clock time `t` (seconds). Deadlines
     /// at or before the cursor are clamped due — they come out of the
     /// very next [`TimerWheel::pop_due`] call, still ordered by their
-    /// original `t`.
-    pub fn insert(&mut self, t: f64, item: T) {
+    /// original `t`. The returned id cancels the timer while it is
+    /// still pending.
+    pub fn insert(&mut self, t: f64, item: T) -> TimerId {
         debug_assert!(t.is_finite(), "timer deadline must be finite");
         let entry = Entry { t, seq: self.seq, item };
+        let id = TimerId(self.seq);
+        self.live.insert(self.seq);
         self.seq += 1;
         self.len += 1;
         let tick = self.tick_of(t).max(self.cursor_tick);
@@ -127,6 +141,20 @@ impl<T> TimerWheel<T> {
         } else {
             self.slots[(tick % self.horizon) as usize].push(entry);
             self.in_ring += 1;
+        }
+        id
+    }
+
+    /// Cancel a pending timer. Returns `true` if it was still pending
+    /// (it will never be delivered), `false` if it already fired or was
+    /// already cancelled. O(log n): the entry itself is dropped lazily
+    /// when a pop or deadline scan reaches it.
+    pub fn cancel(&mut self, id: TimerId) -> bool {
+        if self.live.remove(&id.0) {
+            self.len -= 1;
+            true
+        } else {
+            false
         }
     }
 
@@ -187,28 +215,47 @@ impl<T> TimerWheel<T> {
         {
             due.push(self.overflow.pop().unwrap().0);
         }
+        // cancelled corpses expire silently; everything else leaves the
+        // live set as it fires
+        due.retain(|e| self.live.remove(&e.seq));
         self.len -= due.len();
         due.sort_unstable();
         due.into_iter().map(|e| (e.t, e.item)).collect()
     }
 
     /// Earliest pending deadline, if any — what a worker with nothing
-    /// runnable should sleep until.
-    pub fn next_deadline(&self) -> Option<f64> {
+    /// runnable should sleep until. Takes `&mut self` because the scan
+    /// sweeps out cancelled corpses it walks past (otherwise a worker
+    /// would sleep until a deadline nobody wants anymore).
+    pub fn next_deadline(&mut self) -> Option<f64> {
         if self.len == 0 {
             return None;
+        }
+        // purge cancelled overflow heads so the heap peek is live
+        while let Some(std::cmp::Reverse(e)) = self.overflow.peek() {
+            if self.live.contains(&e.seq) {
+                break;
+            }
+            self.overflow.pop();
         }
         let mut best = self.overflow.peek().map(|std::cmp::Reverse(e)| e.t);
         if self.in_ring > 0 {
             for k in 0..self.horizon {
-                let slot = &self.slots
-                    [((self.cursor_tick + k) % self.horizon) as usize];
+                let idx = ((self.cursor_tick + k) % self.horizon) as usize;
+                let live = &self.live;
+                let before = self.slots[idx].len();
+                self.slots[idx].retain(|e| live.contains(&e.seq));
+                self.in_ring -= before - self.slots[idx].len();
+                let slot = &self.slots[idx];
                 if !slot.is_empty() {
                     let m = slot
                         .iter()
                         .map(|e| e.t)
                         .fold(f64::INFINITY, f64::min);
                     best = Some(best.map_or(m, |b| b.min(m)));
+                    break;
+                }
+                if self.in_ring == 0 {
                     break;
                 }
             }
@@ -282,6 +329,83 @@ mod tests {
         assert_eq!(due.len(), 11);
         assert!(w.is_empty());
         assert_eq!(w.next_deadline(), None);
+    }
+
+    /// An overflow entry must promote into the ring when the cursor has
+    /// wrapped the slot array, landing in a slot index it already
+    /// visited this lap — the modulo mapping, not the raw tick, decides
+    /// where it goes.
+    #[test]
+    fn overflow_promotes_across_wheel_wraparound() {
+        // 1 ms x 8 slots = an 8 ms horizon
+        let mut w: TimerWheel<&str> = TimerWheel::with_geometry(1e-3, 8);
+        // tick 18 -> slot 18 % 8 = 2, a slot the cursor crosses on its
+        // FIRST lap (tick 2); the entry must not fire there
+        w.insert(0.0185, "wrapped");
+        // keep the ring non-empty so pop_due advances slot by slot
+        // instead of jumping the idle gap
+        w.insert(0.0005, "near");
+        assert_eq!(w.pop_due(0.001).len(), 1); // "near" fires
+        // crossing slot 2 on the first lap must NOT deliver "wrapped"
+        w.insert(0.0045, "pace");
+        assert!(w
+            .pop_due(0.005)
+            .iter()
+            .all(|&(_, item)| item == "pace"));
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.next_deadline(), Some(0.0185));
+        // second lap: now tick 18 is inside the horizon and fires
+        w.insert(0.0125, "pace2");
+        assert_eq!(w.pop_due(0.013).len(), 1);
+        let due = w.pop_due(0.019);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].1, "wrapped");
+        assert!(w.is_empty());
+    }
+
+    /// Entries with the SAME deadline fire in insertion (seq) order,
+    /// even when they arrive interleaved with other deadlines and sit
+    /// in different structures (ring vs overflow).
+    #[test]
+    fn duplicate_deadlines_fire_in_insertion_order() {
+        let mut w: TimerWheel<usize> = TimerWheel::with_geometry(1e-3, 8);
+        w.insert(0.02, 0); // overflow (beyond 8 ms horizon)
+        w.insert(0.002, 1); // ring
+        w.insert(0.02, 2); // overflow, same deadline as 0
+        w.insert(0.002, 3); // ring, same deadline as 1
+        w.insert(0.02, 4);
+        let due = w.pop_due(0.5);
+        let items: Vec<usize> = due.iter().map(|&(_, x)| x).collect();
+        // (t, seq) order: both 0.002s first in seq order, then the
+        // three 0.02s in seq order
+        assert_eq!(items, vec![1, 3, 0, 2, 4]);
+    }
+
+    #[test]
+    fn cancel_pending_and_already_fired() {
+        let mut w: TimerWheel<&str> = TimerWheel::new();
+        let a = w.insert(0.001, "a");
+        let b = w.insert(0.002, "b");
+        let c = w.insert(5.0, "c"); // overflow
+        assert_eq!(w.len(), 3);
+
+        // cancel a pending ring entry: never delivered
+        assert!(w.cancel(b));
+        assert_eq!(w.len(), 2);
+        // double-cancel is a no-op
+        assert!(!w.cancel(b));
+
+        let due = w.pop_due(0.01);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].1, "a");
+        // cancelling an already-fired timer reports false
+        assert!(!w.cancel(a));
+
+        // a cancelled overflow corpse must not drive the sleep deadline
+        assert!(w.cancel(c));
+        assert_eq!(w.next_deadline(), None);
+        assert!(w.is_empty());
+        assert_eq!(w.pop_due(10.0).len(), 0);
     }
 
     /// Random schedules must expire exactly like a sorted reference

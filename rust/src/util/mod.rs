@@ -3,6 +3,7 @@
 
 pub mod json;
 pub mod rng;
+pub mod sync;
 
 pub use json::Json;
 pub use rng::Rng;

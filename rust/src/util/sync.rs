@@ -1,0 +1,30 @@
+//! Synchronization shim: the single import point for every primitive
+//! used by the pooled serving runtime.
+//!
+//! Normally re-exports `std::sync`; under `--cfg loom` it re-exports
+//! the in-tree model checker's types instead (`rust/vendor/loom`), so
+//! the exact code paths of `serve::pool` / `serve::timer` /
+//! `serve::sched` run under exhaustive schedule exploration:
+//!
+//! ```sh
+//! RUSTFLAGS="--cfg loom" cargo test --release loom_
+//! ```
+//!
+//! Modules on the shim must not import `std::sync` directly — enforced
+//! by `cargo xtask lint` (the `loom-shim` lint).
+//!
+//! `Instant`-based timeouts stay real under std; under loom,
+//! `wait_timeout` durations are ignored and the timeout fires only at
+//! quiescence (see the vendored crate's docs).
+
+#[cfg(loom)]
+pub use loom::sync::{
+    atomic, Arc, Condvar, LockResult, Mutex, MutexGuard, PoisonError,
+    WaitTimeoutResult,
+};
+
+#[cfg(not(loom))]
+pub use std::sync::{
+    atomic, Arc, Condvar, LockResult, Mutex, MutexGuard, PoisonError,
+    WaitTimeoutResult,
+};

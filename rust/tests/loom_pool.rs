@@ -1,0 +1,291 @@
+//! Model-checked miniatures of the pooled serving scheduler's
+//! concurrency protocols (`serve::pool`), run under the vendored loom
+//! checker (`rust/vendor/loom`):
+//!
+//! ```sh
+//! RUSTFLAGS="--cfg loom" cargo test --release loom_
+//! ```
+//!
+//! Under `--cfg loom`, `coach::util::sync` re-exports the checker's
+//! `Mutex`/`Condvar`/`Arc` — the same types `serve::pool` itself is
+//! compiled against — so these models exercise the exact primitive
+//! semantics of the production scheduler. Each model is a 2-worker /
+//! 2-stream miniature of one protocol: small enough for exhaustive
+//! exploration, faithful enough that the bug it guards against (lost
+//! wakeup, forgotten waiter hand-off, missed abort notification) would
+//! deadlock the model exactly as it would hang the pool.
+
+#![cfg(loom)]
+
+use coach::util::sync::{Arc, Condvar, Mutex};
+
+/// The pool's wake discipline: every event producer mutates shared
+/// state under the lock, RELEASES the lock, then calls `notify_all` —
+/// `serve::pool::worker_loop` does `drop(g); pool.wakeup.notify_all()`
+/// at every hand-off site. A sleeping worker must never miss the event,
+/// because it re-checks the state under the same critical section its
+/// `wait` releases. This model fails (deadlocks) if either side of
+/// that discipline is broken.
+#[test]
+fn loom_timer_fire_vs_worker_idle_no_lost_wakeup() {
+    loom::model(|| {
+        // (pending timer fires, condvar) — the miniature of
+        // (Core.ready + TimerWheel, Pool.wakeup)
+        let shared = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let s2 = shared.clone();
+        let timer = loom::thread::spawn(move || {
+            let (m, cv) = &*s2;
+            {
+                let mut g = m.lock().unwrap();
+                *g += 1;
+            } // lock released BEFORE the notify, as in pool.rs
+            cv.notify_all();
+        });
+        let (m, cv) = &*shared;
+        let mut g = m.lock().unwrap();
+        while *g == 0 {
+            g = cv.wait(g).unwrap();
+        }
+        *g -= 1;
+        drop(g);
+        timer.join().unwrap();
+    });
+}
+
+/// The buggy variant the test above guards against: checking the flag
+/// in ONE critical section and registering the wait in ANOTHER. The
+/// fire can land in the gap, its notification finds no waiter, and the
+/// worker sleeps forever. The checker must find that interleaving.
+#[test]
+#[should_panic(expected = "deadlock")]
+fn loom_detects_lost_wakeup_in_buggy_sleep() {
+    loom::model(|| {
+        let shared = Arc::new((Mutex::new(false), Condvar::new()));
+        let s2 = shared.clone();
+        let timer = loom::thread::spawn(move || {
+            let (m, cv) = &*s2;
+            {
+                *m.lock().unwrap() = true;
+            }
+            cv.notify_all();
+        });
+        let (m, cv) = &*shared;
+        let fired = *m.lock().unwrap(); // check...
+        if !fired {
+            let g = m.lock().unwrap(); // ...then re-lock: unsound gap
+            let _g = cv.wait(g).unwrap();
+        }
+        timer.join().unwrap();
+    });
+}
+
+/// Miniature of the link-FIFO backpressure protocol: 2 streams pinned
+/// to 2 workers push sends through a capacity-1 link queue; a stream
+/// hitting the full queue parks in `send_waiters` (it does NOT block
+/// its worker), and `link_start` — run by whichever thread opens a
+/// slot — must hand the freed slot to exactly one parked stream and
+/// re-ready it. Forgetting that hand-off, or the notify after it,
+/// strands the parked stream and deadlocks the model.
+#[test]
+fn loom_link_backpressure_send_waiters_no_deadlock() {
+    const CAP: usize = 1;
+    const SENDS: usize = 2; // per stream
+
+    struct Core {
+        /// per-worker ready queues of pinned stream ids
+        ready: [Vec<usize>; 2],
+        /// streams parked on the full link queue
+        send_waiters: Vec<usize>,
+        /// items queued behind the in-flight transmission
+        link_len: usize,
+        /// a transmission is in flight
+        link_busy: bool,
+        remaining: [usize; 2],
+        live: usize,
+    }
+
+    // mirror of `Pool::link_start`: move one queued item into service
+    // and resume one parked sender for the freed slot
+    fn link_start(c: &mut Core) {
+        if c.link_busy || c.link_len == 0 {
+            return;
+        }
+        c.link_len -= 1;
+        c.link_busy = true;
+        if let Some(si) = c.send_waiters.pop() {
+            c.ready[si % 2].push(si);
+        }
+    }
+
+    fn worker(shared: &(Mutex<Core>, Condvar), wid: usize) {
+        let (m, cv) = shared;
+        let mut g = m.lock().unwrap();
+        loop {
+            if g.live == 0 {
+                cv.notify_all();
+                return;
+            }
+            if let Some(si) = g.ready[wid].pop() {
+                // drive the stream: it wants to send one item
+                if g.link_len < CAP {
+                    g.link_len += 1;
+                    link_start(&mut *g);
+                    g.remaining[si] -= 1;
+                    if g.remaining[si] == 0 {
+                        g.live -= 1;
+                    } else {
+                        g.ready[wid].push(si);
+                    }
+                    cv.notify_all();
+                } else {
+                    // full: park the STREAM, keep the worker free
+                    g.send_waiters.push(si);
+                }
+                continue;
+            }
+            g = cv.wait(g).unwrap();
+        }
+    }
+
+    loom::model(|| {
+        let shared = Arc::new((
+            Mutex::new(Core {
+                ready: [vec![0], vec![1]],
+                send_waiters: Vec::new(),
+                link_len: 0,
+                link_busy: false,
+                remaining: [SENDS; 2],
+                live: 2,
+            }),
+            Condvar::new(),
+        ));
+        // the "timer": completes in-flight transmissions until the
+        // whole fleet is served and the link is drained
+        let s2 = shared.clone();
+        let link = loom::thread::spawn(move || {
+            let (m, cv) = &*s2;
+            let mut g = m.lock().unwrap();
+            loop {
+                if g.link_busy {
+                    g.link_busy = false;
+                    link_start(&mut *g);
+                    cv.notify_all();
+                    continue;
+                }
+                if g.live == 0 && g.link_len == 0 {
+                    cv.notify_all();
+                    return;
+                }
+                g = cv.wait(g).unwrap();
+            }
+        });
+        let s3 = shared.clone();
+        let w1 = loom::thread::spawn(move || worker(&s3, 1));
+        worker(&shared, 0);
+        w1.join().unwrap();
+        link.join().unwrap();
+        let g = shared.0.lock().unwrap();
+        assert_eq!(g.remaining, [0, 0], "a parked stream was stranded");
+        assert!(g.send_waiters.is_empty());
+    });
+}
+
+/// The PanicGuard tear-down protocol: a dying worker records
+/// `first_err`, raises `abort`, and notifies — all sleeping siblings
+/// must wake, observe the flag, and exit, even with NO timeout safety
+/// net (the model uses plain `wait`, stricter than pool.rs's
+/// `wait_timeout` sleeps). A missed notify here deadlocks the model.
+#[test]
+fn loom_abort_wakes_all_sleepers() {
+    struct Core {
+        abort: bool,
+        first_err: Option<&'static str>,
+    }
+
+    loom::model(|| {
+        let shared = Arc::new((
+            Mutex::new(Core { abort: false, first_err: None }),
+            Condvar::new(),
+        ));
+        // two idle workers asleep on the pool condvar
+        let sleepers: Vec<_> = (0..2)
+            .map(|_| {
+                let s = shared.clone();
+                loom::thread::spawn(move || {
+                    let (m, cv) = &*s;
+                    let mut g = m.lock().unwrap();
+                    while !g.abort {
+                        g = cv.wait(g).unwrap();
+                    }
+                    g.first_err
+                })
+            })
+            .collect();
+        // the dying worker's PanicGuard::drop
+        {
+            let (m, _cv) = &*shared;
+            let mut g = m.lock().unwrap();
+            if g.first_err.is_none() {
+                g.first_err = Some("worker thread panicked");
+            }
+            g.abort = true;
+        }
+        shared.1.notify_all();
+        for s in sleepers {
+            let seen = s.join().unwrap();
+            assert_eq!(seen, Some("worker thread panicked"));
+        }
+    });
+}
+
+/// Completion protocol: workers exit only at `Core::done()` — every
+/// stream finished AND every ready queue drained. The LAST unit of
+/// work can sit on either worker's queue while the other worker goes
+/// idle; the finisher's notify must wake it to re-check. If a worker
+/// could exit with work still queued (or sleep through the final
+/// notify), the model deadlocks or the final assert fires.
+#[test]
+fn loom_completion_drains_ready_queues() {
+    struct Core {
+        ready: [Vec<usize>; 2],
+        processed: usize,
+        live: usize,
+    }
+
+    fn worker(shared: &(Mutex<Core>, Condvar), wid: usize) {
+        let (m, cv) = shared;
+        let mut g = m.lock().unwrap();
+        loop {
+            if let Some(_si) = g.ready[wid].pop() {
+                g.processed += 1;
+                g.live -= 1;
+                cv.notify_all();
+                continue;
+            }
+            // miniature of Core::done(): nothing live anywhere
+            if g.live == 0 {
+                cv.notify_all();
+                return;
+            }
+            g = cv.wait(g).unwrap();
+        }
+    }
+
+    loom::model(|| {
+        let shared = Arc::new((
+            Mutex::new(Core {
+                ready: [vec![0], vec![1]],
+                processed: 0,
+                live: 2,
+            }),
+            Condvar::new(),
+        ));
+        let s2 = shared.clone();
+        let w1 = loom::thread::spawn(move || worker(&s2, 1));
+        worker(&shared, 0);
+        w1.join().unwrap();
+        let g = shared.0.lock().unwrap();
+        assert_eq!(g.processed, 2, "work left behind at shutdown");
+        assert!(g.ready[0].is_empty() && g.ready[1].is_empty());
+    });
+}

@@ -11,6 +11,7 @@ use coach::metrics::MultiReport;
 use coach::model::{CostModel, DeviceProfile};
 use coach::network::BandwidthModel;
 use coach::pipeline::driver::{run_real, RealCfg, SimCloud, SimDevice};
+use coach::pipeline::stage::{CloudStage, DeviceStage, DeviceVerdict};
 use coach::pipeline::{ActivePlan, StageModel, StaticPolicy, WallClock};
 use coach::serve::Runtime;
 use coach::sim::{generate, Correlation, SimTask};
@@ -197,6 +198,67 @@ fn queue_cap_backpressure_surfaces_identically() {
             agg.link.busy
         );
     }
+}
+
+/// A worker that panics mid-drive must not hang or poison the run: its
+/// `PanicGuard` flags the pool down, the sibling workers unwind
+/// cleanly, and `run_real` surfaces the fault as an error instead of a
+/// deadlocked join. (The pool's lock discipline under this scenario is
+/// model-checked in `tests/loom_pool.rs`.)
+#[test]
+fn pooled_worker_panic_is_contained() {
+    struct PanicDevice;
+    impl DeviceStage for PanicDevice {
+        type Wire = ();
+        type Feedback = ();
+        fn process(
+            &mut self,
+            _task: &SimTask,
+        ) -> anyhow::Result<(DeviceVerdict<()>, f64)> {
+            panic!("injected device fault");
+        }
+        fn poll_process(
+            &mut self,
+            _task: &SimTask,
+        ) -> Option<anyhow::Result<(DeviceVerdict<()>, f64)>> {
+            panic!("injected device fault");
+        }
+    }
+    struct NullCloud;
+    impl CloudStage for NullCloud {
+        type Wire = ();
+        type Feedback = ();
+        fn process(&mut self, _wire: ()) -> anyhow::Result<(usize, ())> {
+            Ok((0, ()))
+        }
+    }
+    let clock = WallClock::new();
+    let streams: Vec<(Vec<SimTask>, _)> = (0..2u64)
+        .map(|i| {
+            let tasks = generate(2, PERIOD, Correlation::Medium, 10, 7 + i);
+            (tasks, move || -> anyhow::Result<PanicDevice> {
+                Ok(PanicDevice)
+            })
+        })
+        .collect();
+    let err = run_real::<PanicDevice, NullCloud, _, _>(
+        streams,
+        || Ok(NullCloud),
+        BandwidthModel::Static(50.0),
+        clock,
+        RealCfg {
+            runtime: Runtime::Pooled,
+            queue_cap: 4,
+            scheme: "panic".into(),
+            model: "sim".into(),
+            ..Default::default()
+        },
+    )
+    .expect_err("a panicking worker must fail the run, not hang it");
+    assert!(
+        format!("{err:#}").contains("worker thread panicked"),
+        "unexpected error: {err:#}"
+    );
 }
 
 #[test]

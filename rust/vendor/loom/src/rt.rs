@@ -1,0 +1,431 @@
+//! The execution engine behind [`crate::model`]: a CHESS-style
+//! stateless model checker (Musuvathi & Qadeer, PLDI'07).
+//!
+//! One *execution* runs the model closure on real OS threads, but only
+//! ONE thread is ever runnable at a time: every synchronization
+//! operation is a *schedule point* where the active thread hands a
+//! baton to the thread chosen by the explorer. The explorer replays a
+//! recorded decision path and extends it depth-first, so repeated
+//! executions enumerate every schedule reachable with at most
+//! `LOOM_MAX_PREEMPTIONS` pre-emptive context switches (switches away
+//! from a thread that could have continued; forced switches at blocking
+//! operations are free). Small models are explored exhaustively within
+//! that bound.
+//!
+//! Failure = any thread panics (assertion in the model body) or no
+//! thread can proceed while some thread is unfinished (deadlock — which
+//! is also how a lost wakeup manifests). The driver re-raises the
+//! failure with the decision path that produced it.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, panic_any, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex};
+use std::thread::JoinHandle as StdJoinHandle;
+
+/// Sentinel panic payload used to unwind sibling threads once the model
+/// has already failed; never reported as the failure itself.
+pub(crate) struct AbortToken;
+
+/// One recorded scheduling decision: which of `options` was taken.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Decision {
+    pub chosen: usize,
+    pub options: usize,
+}
+
+/// What a model thread is doing, from the scheduler's point of view.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) enum Status {
+    Runnable,
+    /// wants `lock(mid)`; proceedable when the mutex is free
+    BlockedMutex(usize),
+    /// in `Condvar::wait`; proceedable once notified
+    Waiting { cv: usize, notified: bool },
+    /// in `Condvar::wait_timeout`; proceedable once notified, or by
+    /// timeout when NO other thread can proceed (quiescent timeout)
+    TimedWaiting { cv: usize, notified: bool },
+    /// joining thread `tid`; proceedable once it has finished
+    BlockedJoin(usize),
+    Finished,
+}
+
+#[derive(Default)]
+pub(crate) struct MutexState {
+    pub holder: Option<usize>,
+}
+
+#[derive(Default)]
+pub(crate) struct CondvarState {
+    /// waiting tids in FIFO registration order
+    pub waiters: VecDeque<usize>,
+}
+
+pub(crate) struct ExecInner {
+    pub threads: Vec<Status>,
+    pub active: usize,
+    pub mutexes: Vec<MutexState>,
+    pub condvars: Vec<CondvarState>,
+    /// decision path: replayed prefix + extensions made this execution
+    pub path: Vec<Decision>,
+    /// how far into `path` this execution has replayed/extended
+    pub cursor: usize,
+    /// total schedule points this execution, INCLUDING forced switches
+    /// and budget-exhausted continues that record no decision — bounds
+    /// executions that spin without branching
+    pub steps: usize,
+    pub preemptions: usize,
+    pub max_preemptions: usize,
+    pub max_steps: usize,
+    pub failure: Option<String>,
+    pub done: bool,
+    /// OS handles of threads spawned inside the model, joined by the
+    /// driver after the execution completes
+    pub os_handles: Vec<StdJoinHandle<()>>,
+}
+
+pub(crate) struct Execution {
+    pub inner: StdMutex<ExecInner>,
+    pub baton: StdCondvar,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<(Arc<Execution>, usize)>> =
+        const { RefCell::new(None) };
+}
+
+/// Suppress the default panic printout inside model threads: expected
+/// counterexamples (assertion failures, deadlock aborts) are captured
+/// and re-raised by the driver with the schedule attached; the raw
+/// per-thread panic output would only spam `should_panic` tests.
+/// Installed once per process, delegating to the previous hook for
+/// non-model threads.
+pub(crate) fn install_quiet_hook() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let in_model =
+                CURRENT.with(|c| c.borrow().is_some());
+            if !in_model {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// A bare schedule point wrapping a side effect that must be both
+/// serialized and ordered across threads: the closure runs while the
+/// execution lock is held (atomics use this).
+pub(crate) fn sync_op<R>(f: impl FnOnce() -> R) -> R {
+    with_current(|exec, me| {
+        let g = exec
+            .inner
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        let g = schedule(exec, g, me);
+        let r = f();
+        drop(g);
+        r
+    })
+}
+
+/// Run `f` with the calling thread's execution context; panics if the
+/// caller is not a model thread.
+pub(crate) fn with_current<R>(f: impl FnOnce(&Arc<Execution>, usize) -> R) -> R {
+    CURRENT.with(|c| {
+        let borrow = c.borrow();
+        let (exec, tid) = borrow
+            .as_ref()
+            .expect("loom primitive used outside loom::model");
+        f(exec, *tid)
+    })
+}
+
+pub(crate) fn set_current(exec: Arc<Execution>, tid: usize) {
+    CURRENT.with(|c| *c.borrow_mut() = Some((exec, tid)));
+}
+
+pub(crate) fn clear_current() {
+    CURRENT.with(|c| *c.borrow_mut() = None);
+}
+
+impl Execution {
+    pub fn new(
+        replay: Vec<Decision>,
+        max_preemptions: usize,
+        max_steps: usize,
+    ) -> Execution {
+        Execution {
+            inner: StdMutex::new(ExecInner {
+                threads: vec![Status::Runnable], // tid 0 = root
+                active: 0,
+                mutexes: Vec::new(),
+                condvars: Vec::new(),
+                path: replay,
+                cursor: 0,
+                steps: 0,
+                preemptions: 0,
+                max_preemptions,
+                max_steps,
+                failure: None,
+                done: false,
+                os_handles: Vec::new(),
+            }),
+            baton: StdCondvar::new(),
+        }
+    }
+}
+
+impl ExecInner {
+    /// Can `tid` make progress right now (ignoring the quiescent-timeout
+    /// fallback)?
+    fn proceedable(&self, tid: usize) -> bool {
+        match self.threads[tid] {
+            Status::Runnable => true,
+            Status::BlockedMutex(m) => self.mutexes[m].holder.is_none(),
+            Status::Waiting { notified, .. } => notified,
+            Status::TimedWaiting { notified, .. } => notified,
+            Status::BlockedJoin(t) => self.threads[t] == Status::Finished,
+            Status::Finished => false,
+        }
+    }
+
+    fn all_finished(&self) -> bool {
+        self.threads.iter().all(|s| *s == Status::Finished)
+    }
+
+    /// Consume the next decision (replaying the recorded prefix, then
+    /// extending depth-first with choice 0). `options` must be >= 1 and
+    /// derivable purely from replayed state, or replay diverges.
+    pub fn next_choice(&mut self, options: usize) -> usize {
+        debug_assert!(options >= 1);
+        if self.cursor < self.path.len() {
+            let d = self.path[self.cursor];
+            debug_assert_eq!(
+                d.options, options,
+                "loom replay divergence: model is nondeterministic \
+                 beyond its loom-controlled synchronization"
+            );
+            self.cursor += 1;
+            // release builds clamp on divergence instead of indexing OOB
+            d.chosen.min(options - 1)
+        } else {
+            self.path.push(Decision { chosen: 0, options });
+            self.cursor += 1;
+            0
+        }
+    }
+
+    /// Record a failure (first one wins) and mark the model down.
+    pub fn fail(&mut self, msg: String) {
+        if self.failure.is_none() {
+            self.failure = Some(msg);
+        }
+    }
+
+    /// Pick the next active thread at a schedule point reached by
+    /// `me`. Returns the chosen tid, or None if the model just failed
+    /// (deadlock / step bound) — the caller must then abort.
+    pub fn decide(&mut self, me: usize) -> Option<usize> {
+        if self.failure.is_some() {
+            return None;
+        }
+        self.steps += 1;
+        if self.steps >= self.max_steps {
+            self.fail(format!(
+                "execution exceeded {} schedule points — unbounded loop \
+                 in the model (a spin that never blocks?), or a model too \
+                 large for exhaustive exploration",
+                self.max_steps
+            ));
+            return None;
+        }
+        let me_ok = self.proceedable(me);
+        let mut opts: Vec<usize> = Vec::new();
+        // the running thread continues by default (choice 0): staying is
+        // free, leaving while runnable costs a preemption
+        if me_ok {
+            opts.push(me);
+        }
+        for tid in 0..self.threads.len() {
+            if tid != me && self.proceedable(tid) {
+                opts.push(tid);
+            }
+        }
+        if opts.is_empty() {
+            // quiescence: timed waiters' timeouts fire
+            for tid in 0..self.threads.len() {
+                if matches!(self.threads[tid], Status::TimedWaiting { .. }) {
+                    opts.push(tid);
+                }
+            }
+        }
+        if opts.is_empty() {
+            if self.all_finished() {
+                self.done = true;
+                return None;
+            }
+            let stuck: Vec<String> = self
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| **s != Status::Finished)
+                .map(|(t, s)| format!("thread {t}: {s:?}"))
+                .collect();
+            self.fail(format!(
+                "deadlock (lost wakeup?): no thread can proceed; {}",
+                stuck.join("; ")
+            ));
+            return None;
+        }
+        // preemption bounding: out of budget, a runnable thread just
+        // keeps running (no decision recorded — replay stays aligned
+        // because the budget state is itself replay-deterministic)
+        if me_ok && self.preemptions >= self.max_preemptions {
+            return Some(me);
+        }
+        if opts.len() == 1 {
+            let only = opts[0];
+            if me_ok && only != me {
+                self.preemptions += 1;
+            }
+            return Some(only);
+        }
+        let idx = self.next_choice(opts.len());
+        let chosen = opts[idx];
+        if me_ok && chosen != me {
+            self.preemptions += 1;
+        }
+        Some(chosen)
+    }
+}
+
+/// Block until it is `me`'s turn again. Call with the exec lock held;
+/// returns with it held. Panics (abort sentinel) if the model failed.
+pub(crate) fn wait_for_turn<'a>(
+    exec: &'a Execution,
+    mut g: std::sync::MutexGuard<'a, ExecInner>,
+    me: usize,
+) -> std::sync::MutexGuard<'a, ExecInner> {
+    loop {
+        if g.failure.is_some() {
+            drop(g);
+            panic_any(AbortToken);
+        }
+        if g.active == me {
+            return g;
+        }
+        g = exec
+            .baton
+            .wait(g)
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+    }
+}
+
+/// One schedule point: let the explorer pick who runs next; hand the
+/// baton over if that is not `me`, and block until it is `me`'s turn
+/// (which requires `me`'s blocking condition, if any, to have been
+/// satisfiable when `me` was picked). On return, `me` is active and the
+/// exec lock is held.
+pub(crate) fn schedule<'a>(
+    exec: &'a Execution,
+    mut g: std::sync::MutexGuard<'a, ExecInner>,
+    me: usize,
+) -> std::sync::MutexGuard<'a, ExecInner> {
+    match g.decide(me) {
+        None => {
+            // failed (deadlock/step bound) or done-with-me-finished;
+            // wake everyone so siblings observe it, then abort self if
+            // the model failed
+            exec.baton.notify_all();
+            if g.failure.is_some() {
+                drop(g);
+                panic_any(AbortToken);
+            }
+            g
+        }
+        Some(next) => {
+            g.active = next;
+            if next != me {
+                exec.baton.notify_all();
+                g = wait_for_turn(exec, g, me);
+            }
+            g
+        }
+    }
+}
+
+/// Mark `me` finished and hand the baton on (or flag completion).
+pub(crate) fn finish_thread(exec: &Execution, me: usize) {
+    let mut g = exec
+        .inner
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    g.threads[me] = Status::Finished;
+    match g.decide(me) {
+        None => {
+            // done (all finished) or failed — either way wake the world
+            // (the driver waits on the same condvar)
+            exec.baton.notify_all();
+        }
+        Some(next) => {
+            g.active = next;
+            exec.baton.notify_all();
+        }
+    }
+}
+
+/// Body wrapper for every model thread (root and spawned): installs the
+/// thread-local context, waits for its first turn, runs the closure
+/// under `catch_unwind`, records panics, and hands the baton on.
+pub(crate) fn run_thread(exec: Arc<Execution>, me: usize, body: impl FnOnce()) {
+    set_current(exec.clone(), me);
+    {
+        let g = exec
+            .inner
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        // a freshly spawned thread only runs once the explorer picks it
+        let res = catch_unwind(AssertUnwindSafe(|| wait_for_turn(&exec, g, me)));
+        match res {
+            Ok(guard) => drop(guard),
+            Err(payload) => {
+                // model already failed while we waited for our first turn
+                record_panic(&exec, me, payload);
+                finish_thread(&exec, me);
+                clear_current();
+                return;
+            }
+        }
+    }
+    let res = catch_unwind(AssertUnwindSafe(body));
+    if let Err(payload) = res {
+        record_panic(&exec, me, payload);
+    }
+    finish_thread(&exec, me);
+    clear_current();
+}
+
+fn record_panic(
+    exec: &Execution,
+    me: usize,
+    payload: Box<dyn std::any::Any + Send>,
+) {
+    if payload.downcast_ref::<AbortToken>().is_some() {
+        return; // sentinel unwind of an already-failed model
+    }
+    let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "model thread panicked (non-string payload)".to_string()
+    };
+    let mut g = exec
+        .inner
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    g.fail(format!("thread {me} panicked: {msg}"));
+    exec.baton.notify_all();
+}

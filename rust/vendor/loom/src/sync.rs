@@ -1,0 +1,323 @@
+//! Model-checked drop-ins for `std::sync` (the subset this repo uses):
+//! [`Mutex`]/[`MutexGuard`], [`Condvar`]/[`WaitTimeoutResult`], the
+//! [`atomic`] types, and `Arc` (re-exported from std — reference
+//! counting itself is not model-relevant here).
+//!
+//! Every operation is a schedule point of the surrounding
+//! [`crate::model`] execution; the types panic if used outside one.
+//! Lock poisoning never occurs under the checker (a panicking thread
+//! fails the whole model first), so `lock()` always returns `Ok` — the
+//! `LockResult`/`PoisonError` surface exists for API parity with std.
+
+use std::cell::UnsafeCell;
+use std::marker::PhantomData;
+use std::time::Duration;
+
+use crate::rt::{self, Status};
+
+pub use std::sync::Arc;
+
+pub mod atomic;
+
+/// API-parity twin of `std::sync::PoisonError`; never constructed by
+/// this checker (panics fail the model before they can poison a lock).
+pub struct PoisonError<T> {
+    guard: T,
+}
+
+impl<T> PoisonError<T> {
+    pub fn new(guard: T) -> PoisonError<T> {
+        PoisonError { guard }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.guard
+    }
+}
+
+impl<T> std::fmt::Debug for PoisonError<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("PoisonError { .. }")
+    }
+}
+
+pub type LockResult<T> = Result<T, PoisonError<T>>;
+
+// ---------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------
+
+/// Model-checked mutex. Mutual exclusion is enforced by the scheduler
+/// (only the active thread runs, and it only becomes active holding the
+/// lock once the model-level holder slot is free), so the payload needs
+/// no OS lock of its own.
+pub struct Mutex<T> {
+    id: usize,
+    data: UnsafeCell<T>,
+}
+
+// Safety: the model scheduler serializes all access — at most one
+// thread is active at any instant, and baton hand-offs synchronize
+// through the execution's own std mutex, establishing happens-before
+// edges between consecutive active threads.
+unsafe impl<T: Send> Send for Mutex<T> {}
+unsafe impl<T: Send> Sync for Mutex<T> {}
+
+pub struct MutexGuard<'a, T> {
+    m: &'a Mutex<T>,
+    /// guards must stay on their owning thread (as with std)
+    _not_send: PhantomData<*const ()>,
+}
+
+impl<T> Mutex<T> {
+    /// Must be called from inside a [`crate::model`] execution.
+    pub fn new(t: T) -> Mutex<T> {
+        let id = rt::with_current(|exec, _me| {
+            let mut g = exec
+                .inner
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            g.mutexes.push(rt::MutexState::default());
+            g.mutexes.len() - 1
+        });
+        Mutex { id, data: UnsafeCell::new(t) }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        rt::with_current(|exec, me| {
+            let mut g = exec
+                .inner
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            g.threads[me] = Status::BlockedMutex(self.id);
+            let mut g = rt::schedule(exec, g, me);
+            // our turn ⇒ the holder slot was free when we were picked
+            debug_assert!(g.mutexes[self.id].holder.is_none());
+            g.mutexes[self.id].holder = Some(me);
+            g.threads[me] = Status::Runnable;
+        });
+        Ok(MutexGuard { m: self, _not_send: PhantomData })
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        Ok(self.data.into_inner())
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "loom::Mutex(id={})", self.id)
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        // Safety: we hold the model-level lock; only the active thread
+        // runs, and hand-offs synchronize via the execution mutex.
+        unsafe { &*self.m.data.get() }
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // Safety: as in `deref`.
+        unsafe { &mut *self.m.data.get() }
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Release WITHOUT a schedule point and without any panic path:
+        // guards also drop during sentinel unwinds of failed models,
+        // where a second panic would abort the process. Interleaving
+        // coverage is unaffected — who runs after a release is decided
+        // at the next acquisition attempt, which is a schedule point.
+        rt::with_current(|exec, me| {
+            let mut g = exec
+                .inner
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            debug_assert_eq!(g.mutexes[self.m.id].holder, Some(me));
+            g.mutexes[self.m.id].holder = None;
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Condvar
+// ---------------------------------------------------------------------
+
+/// Whether a [`Condvar::wait_timeout`] returned by timeout rather than
+/// notification.
+#[derive(Debug, Clone, Copy)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+/// Model-checked condition variable.
+///
+/// Semantics explored by the checker:
+/// * `wait` atomically releases the mutex and registers the waiter; it
+///   returns only after a notification (no spurious wakeups are
+///   modeled).
+/// * `wait_timeout`'s timeout fires only at *quiescence* — when no
+///   other thread can proceed — modeling "the timeout eventually
+///   fires" without unbounded spurious-wakeup interleavings. A protocol
+///   that is only live because of its timeouts therefore still passes,
+///   while a protocol whose plain `wait` can miss its only wakeup
+///   deadlocks and is reported.
+/// * `notify_one` branches over every registered un-notified waiter.
+pub struct Condvar {
+    id: usize,
+}
+
+impl Condvar {
+    /// Must be called from inside a [`crate::model`] execution.
+    pub fn new() -> Condvar {
+        let id = rt::with_current(|exec, _me| {
+            let mut g = exec
+                .inner
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            g.condvars.push(rt::CondvarState::default());
+            g.condvars.len() - 1
+        });
+        Condvar { id }
+    }
+
+    fn wait_impl(&self, mid: usize, timed: bool) -> bool {
+        rt::with_current(|exec, me| {
+            let mut g = exec
+                .inner
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            debug_assert_eq!(g.mutexes[mid].holder, Some(me));
+            // atomically (w.r.t. the model): release + register
+            g.mutexes[mid].holder = None;
+            g.condvars[self.id].waiters.push_back(me);
+            g.threads[me] = if timed {
+                Status::TimedWaiting { cv: self.id, notified: false }
+            } else {
+                Status::Waiting { cv: self.id, notified: false }
+            };
+            let mut g = rt::schedule(exec, g, me);
+            // picked ⇒ notified (or, for timed waits, quiescent timeout)
+            let timed_out = match g.threads[me] {
+                Status::Waiting { notified, .. }
+                | Status::TimedWaiting { notified, .. } => !notified,
+                _ => false,
+            };
+            if let Some(pos) =
+                g.condvars[self.id].waiters.iter().position(|&t| t == me)
+            {
+                g.condvars[self.id].waiters.remove(pos);
+            }
+            // reacquire the mutex before returning, as std does
+            g.threads[me] = Status::BlockedMutex(mid);
+            let mut g = rt::schedule(exec, g, me);
+            debug_assert!(g.mutexes[mid].holder.is_none());
+            g.mutexes[mid].holder = Some(me);
+            g.threads[me] = Status::Runnable;
+            timed_out
+        })
+    }
+
+    pub fn wait<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+    ) -> LockResult<MutexGuard<'a, T>> {
+        let m = guard.m;
+        std::mem::forget(guard); // released inside wait_impl instead
+        let timed_out = self.wait_impl(m.id, false);
+        debug_assert!(!timed_out);
+        Ok(MutexGuard { m, _not_send: PhantomData })
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        _dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        let m = guard.m;
+        std::mem::forget(guard); // released inside wait_impl instead
+        let timed_out = self.wait_impl(m.id, true);
+        Ok((
+            MutexGuard { m, _not_send: PhantomData },
+            WaitTimeoutResult(timed_out),
+        ))
+    }
+
+    pub fn notify_one(&self) {
+        rt::with_current(|exec, _me| {
+            let mut g = exec
+                .inner
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            let candidates: Vec<usize> = g.condvars[self.id]
+                .waiters
+                .iter()
+                .copied()
+                .filter(|&t| {
+                    matches!(
+                        g.threads[t],
+                        Status::Waiting { notified: false, .. }
+                            | Status::TimedWaiting { notified: false, .. }
+                    )
+                })
+                .collect();
+            if candidates.is_empty() {
+                return; // notification with no waiter: lost, as in std
+            }
+            let pick = if candidates.len() == 1 {
+                0
+            } else {
+                // which waiter wakes is scheduler nondeterminism: branch
+                g.next_choice(candidates.len())
+            };
+            let t = candidates[pick];
+            match &mut g.threads[t] {
+                Status::Waiting { notified, .. }
+                | Status::TimedWaiting { notified, .. } => *notified = true,
+                _ => {}
+            }
+        });
+    }
+
+    pub fn notify_all(&self) {
+        rt::with_current(|exec, _me| {
+            let mut g = exec
+                .inner
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            let waiters: Vec<usize> =
+                g.condvars[self.id].waiters.iter().copied().collect();
+            for t in waiters {
+                match &mut g.threads[t] {
+                    Status::Waiting { notified, .. }
+                    | Status::TimedWaiting { notified, .. } => {
+                        *notified = true
+                    }
+                    _ => {}
+                }
+            }
+        });
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Condvar::new()
+    }
+}
+
+impl std::fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "loom::Condvar(id={})", self.id)
+    }
+}

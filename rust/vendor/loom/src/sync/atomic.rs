@@ -1,0 +1,155 @@
+//! Model-checked atomics. Every operation is a schedule point, so the
+//! checker explores all interleavings of atomic accesses; memory
+//! orderings are accepted for API parity but the exploration itself is
+//! sequentially consistent (weak-memory reorderings are NOT modeled —
+//! the same caveat as a `SeqCst`-only loom run).
+
+use std::cell::UnsafeCell;
+
+use crate::rt;
+
+pub use std::sync::atomic::Ordering;
+
+macro_rules! atomic_int {
+    ($name:ident, $ty:ty) => {
+        pub struct $name {
+            v: UnsafeCell<$ty>,
+        }
+
+        // Safety: all access happens under the execution's scheduler
+        // lock (see `rt::sync_op`), which serializes and orders it.
+        unsafe impl Send for $name {}
+        unsafe impl Sync for $name {}
+
+        impl $name {
+            /// Unlike the lock types, construction is not a schedule
+            /// point, so statics-in-model initialization works.
+            pub const fn new(v: $ty) -> $name {
+                $name { v: UnsafeCell::new(v) }
+            }
+
+            pub fn load(&self, _o: Ordering) -> $ty {
+                // Safety: serialized + ordered by rt::sync_op.
+                rt::sync_op(|| unsafe { *self.v.get() })
+            }
+
+            pub fn store(&self, val: $ty, _o: Ordering) {
+                // Safety: as in `load`.
+                rt::sync_op(|| unsafe { *self.v.get() = val })
+            }
+
+            pub fn swap(&self, val: $ty, _o: Ordering) -> $ty {
+                // Safety: as in `load`.
+                rt::sync_op(|| unsafe {
+                    let old = *self.v.get();
+                    *self.v.get() = val;
+                    old
+                })
+            }
+
+            pub fn fetch_add(&self, val: $ty, _o: Ordering) -> $ty {
+                // Safety: as in `load`.
+                rt::sync_op(|| unsafe {
+                    let old = *self.v.get();
+                    *self.v.get() = old.wrapping_add(val);
+                    old
+                })
+            }
+
+            pub fn fetch_sub(&self, val: $ty, _o: Ordering) -> $ty {
+                // Safety: as in `load`.
+                rt::sync_op(|| unsafe {
+                    let old = *self.v.get();
+                    *self.v.get() = old.wrapping_sub(val);
+                    old
+                })
+            }
+
+            pub fn compare_exchange(
+                &self,
+                current: $ty,
+                new: $ty,
+                _success: Ordering,
+                _failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                // Safety: as in `load`.
+                rt::sync_op(|| unsafe {
+                    let old = *self.v.get();
+                    if old == current {
+                        *self.v.get() = new;
+                        Ok(old)
+                    } else {
+                        Err(old)
+                    }
+                })
+            }
+
+            pub fn compare_exchange_weak(
+                &self,
+                current: $ty,
+                new: $ty,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                // no spurious failures modeled
+                self.compare_exchange(current, new, success, failure)
+            }
+        }
+    };
+}
+
+atomic_int!(AtomicUsize, usize);
+atomic_int!(AtomicU64, u64);
+atomic_int!(AtomicU32, u32);
+
+pub struct AtomicBool {
+    v: UnsafeCell<bool>,
+}
+
+// Safety: see the integer atomics above.
+unsafe impl Send for AtomicBool {}
+unsafe impl Sync for AtomicBool {}
+
+impl AtomicBool {
+    pub const fn new(v: bool) -> AtomicBool {
+        AtomicBool { v: UnsafeCell::new(v) }
+    }
+
+    pub fn load(&self, _o: Ordering) -> bool {
+        // Safety: serialized + ordered by rt::sync_op.
+        rt::sync_op(|| unsafe { *self.v.get() })
+    }
+
+    pub fn store(&self, val: bool, _o: Ordering) {
+        // Safety: as in `load`.
+        rt::sync_op(|| unsafe { *self.v.get() = val })
+    }
+
+    pub fn swap(&self, val: bool, _o: Ordering) -> bool {
+        // Safety: as in `load`.
+        rt::sync_op(|| unsafe {
+            let old = *self.v.get();
+            *self.v.get() = val;
+            old
+        })
+    }
+
+    pub fn compare_exchange(
+        &self,
+        current: bool,
+        new: bool,
+        _success: Ordering,
+        _failure: Ordering,
+    ) -> Result<bool, bool> {
+        // Safety: as in `load`.
+        rt::sync_op(|| unsafe {
+            let old = *self.v.get();
+            if old == current {
+                *self.v.get() = new;
+                Ok(old)
+            } else {
+                Err(old)
+            }
+        })
+    }
+}

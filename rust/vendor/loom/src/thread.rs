@@ -1,0 +1,69 @@
+//! Model-checked threads: spawn registers the new thread with the
+//! execution's scheduler; it runs only when the explorer picks it.
+
+use std::sync::{Arc, Mutex as StdMutex};
+
+use crate::rt::{self, Status};
+
+pub struct JoinHandle<T> {
+    tid: usize,
+    slot: Arc<StdMutex<Option<T>>>,
+}
+
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    rt::with_current(|exec, _me| {
+        let mut g = exec
+            .inner
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        let tid = g.threads.len();
+        g.threads.push(Status::Runnable);
+        let slot: Arc<StdMutex<Option<T>>> = Arc::new(StdMutex::new(None));
+        let slot2 = slot.clone();
+        let exec2 = exec.clone();
+        let os = std::thread::spawn(move || {
+            rt::run_thread(exec2, tid, move || {
+                let v = f();
+                *slot2
+                    .lock()
+                    .unwrap_or_else(|poisoned| poisoned.into_inner()) =
+                    Some(v);
+            });
+        });
+        g.os_handles.push(os);
+        JoinHandle { tid, slot }
+    })
+}
+
+impl<T> JoinHandle<T> {
+    /// Blocks (model-level) until the target thread finishes. A target
+    /// that panicked fails the whole model, so on return the value is
+    /// always present.
+    pub fn join(self) -> std::thread::Result<T> {
+        rt::with_current(|exec, me| {
+            let mut g = exec
+                .inner
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            g.threads[me] = Status::BlockedJoin(self.tid);
+            let mut g = rt::schedule(exec, g, me);
+            g.threads[me] = Status::Runnable;
+            drop(g);
+        });
+        let v = self
+            .slot
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .take();
+        Ok(v.expect("loom: joined thread finished without a value"))
+    }
+}
+
+/// A schedule point with no side effect: lets the explorer switch here.
+pub fn yield_now() {
+    rt::sync_op(|| ())
+}

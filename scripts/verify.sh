@@ -1,8 +1,21 @@
 #!/usr/bin/env bash
 # CI / local verification: formatting, lints, tests, docs, scenario smoke.
-# Usage: scripts/verify.sh
+# Usage: scripts/verify.sh [--deep]
+#   --deep  additionally run the concurrency-correctness lanes: loom
+#           model checking, Miri (pure modules), and ThreadSanitizer.
+#           Miri/TSan need a nightly toolchain (miri + rust-src
+#           components) and are skipped with a notice if unavailable;
+#           loom runs on stable and is never skipped.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+DEEP=0
+for arg in "$@"; do
+    case "$arg" in
+        --deep) DEEP=1 ;;
+        *) echo "usage: scripts/verify.sh [--deep]" >&2; exit 2 ;;
+    esac
+done
 
 echo "== cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
@@ -17,6 +30,9 @@ if cargo clippy --version >/dev/null 2>&1; then
 else
     echo "(clippy unavailable; skipping)"
 fi
+
+echo "== cargo xtask lint (invariant linter) =="
+cargo xtask lint
 
 echo "== cargo test =="
 cargo test -q
@@ -62,5 +78,30 @@ rm -rf "$BENCH_DIR"
 
 echo "== pooled serve-sim smoke: wide fleet on the worker-pool engine =="
 ./target/release/coach serve-sim --streams 1024 --n 5 --runtime pooled
+
+if [ "$DEEP" = 1 ]; then
+    echo "== [deep] loom: checker self-tests + scheduler models =="
+    cargo test --release -p loom
+    RUSTFLAGS="--cfg loom" cargo test --release -p coach --test loom_pool
+
+    echo "== [deep] miri: UB check over the pure modules =="
+    if rustup run nightly cargo miri --version >/dev/null 2>&1; then
+        rustup run nightly cargo miri test -p coach --lib -- \
+            evq:: slab:: timer:: quant:: --skip prop_
+    else
+        echo "(nightly miri unavailable; skipping — CI 'miri' job covers this)"
+    fi
+
+    echo "== [deep] tsan: race check over the concurrent suites =="
+    if rustup run nightly rustc --version >/dev/null 2>&1 \
+        && [ -d "$(rustup run nightly rustc --print sysroot)/lib/rustlib/src/rust/library" ]; then
+        RUSTFLAGS="-Zsanitizer=thread" \
+        rustup run nightly cargo test -Zbuild-std \
+            --target x86_64-unknown-linux-gnu \
+            -p coach --test serve_sched_e2e --test determinism
+    else
+        echo "(nightly rust-src unavailable; skipping — CI 'tsan' job covers this)"
+    fi
+fi
 
 echo "verify OK"

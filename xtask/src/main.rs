@@ -1,0 +1,433 @@
+//! Repo-local task runner (`cargo xtask <task>`), following the
+//! cargo-xtask pattern: a plain workspace binary, no external deps, so
+//! it builds anywhere the crate does.
+//!
+//! The one task so far is `lint` — a line-based invariant linter for
+//! the correctness contracts that rustc cannot express (see
+//! ARCHITECTURE.md §Correctness & static analysis):
+//!
+//! * `wall-clock` — `std::time::{Instant, SystemTime}` may only appear
+//!   under `serve/`, `coordinator/`, `bench/`, or `runtime/`. Everything
+//!   else (DES, planner, metrics, quant) must stay virtual-time pure so
+//!   results are reproducible and Miri-runnable. The sanctioned wrapper
+//!   (`pipeline::stage::WallClock`) carries `// xtask: allow(wall-clock)`
+//!   markers.
+//! * `map-order` — no `HashMap` under `serve/` or `metrics/`: stream
+//!   state and report assembly feed BENCH json, and randomized
+//!   iteration order there breaks run-to-run byte-identity
+//!   (`rust/tests/determinism.rs` is the runtime half of this lint).
+//! * `unwrap-free` — no `.unwrap()` / `.expect(` in `serve/pool.rs`:
+//!   a panicking worker must reach `PanicGuard::drop`, and the guard
+//!   itself must never double-panic on a poisoned lock. Fallible access
+//!   goes through `Pool::lock_core` / `let … else` instead.
+//! * `loom-shim` — the model-checked modules (`serve/pool.rs`,
+//!   `serve/sched.rs`, `serve/timer.rs`) must not import `std::sync`
+//!   directly; they go through `crate::util::sync` so `--cfg loom`
+//!   swaps in the checker's primitives.
+//!
+//! Lines inside `mod tests` blocks are exempt, as are comment lines and
+//! lines carrying an `// xtask: allow(<lint>)` marker. The linter is
+//! deliberately textual — it lints INTENT at the import/call-site
+//! level, not semantics — which keeps it dependency-free and fast
+//! enough to run in the main CI job before the build.
+
+use std::env;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// One lint hit: file (repo-relative), 1-based line, lint name, detail.
+#[derive(Debug, PartialEq)]
+struct Violation {
+    file: String,
+    line: usize,
+    lint: &'static str,
+    msg: String,
+}
+
+impl Violation {
+    fn render(&self) -> String {
+        format!(
+            "rust/src/{}:{}: [{}] {}",
+            self.file, self.line, self.lint, self.msg
+        )
+    }
+}
+
+/// `word` appears in `line` as a standalone token (not as a substring
+/// of a longer identifier — `Instantaneous` must not trip `Instant`).
+fn has_word(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(word) {
+        let i = start + pos;
+        let j = i + word.len();
+        let before_ok = i == 0 || {
+            let c = bytes[i - 1];
+            !c.is_ascii_alphanumeric() && c != b'_'
+        };
+        let after_ok = j == bytes.len() || {
+            let c = bytes[j];
+            !c.is_ascii_alphanumeric() && c != b'_'
+        };
+        if before_ok && after_ok {
+            return true;
+        }
+        start = j;
+    }
+    false
+}
+
+fn allowed(line: &str, lint: &str) -> bool {
+    line.contains(&format!("xtask: allow({lint})"))
+}
+
+/// Net `{` minus `}` on one line. Naive about braces inside string
+/// literals — acceptable for tracking `mod tests` extents, which in
+/// this tree close at column zero.
+fn net_braces(line: &str) -> isize {
+    line.bytes().fold(0, |acc, b| match b {
+        b'{' => acc + 1,
+        b'}' => acc - 1,
+        _ => acc,
+    })
+}
+
+/// Directories (relative to `rust/src`) where wall-clock time is part
+/// of the module's job.
+const WALL_CLOCK_ALLOWED_DIRS: &[&str] =
+    &["serve/", "coordinator/", "bench/", "runtime/"];
+
+/// Files compiled against `crate::util::sync` (the loom shim).
+const LOOM_SHIMMED: &[&str] =
+    &["serve/pool.rs", "serve/sched.rs", "serve/timer.rs"];
+
+/// Lint one source file. `rel` is the path relative to `rust/src`,
+/// `/`-separated. Pure function of its inputs so the unit tests can
+/// feed seeded violations without touching the filesystem.
+fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
+    let wall_clock_scoped =
+        !WALL_CLOCK_ALLOWED_DIRS.iter().any(|d| rel.starts_with(d));
+    let map_order_scoped =
+        rel.starts_with("serve/") || rel.starts_with("metrics/");
+    let unwrap_scoped = rel == "serve/pool.rs";
+    let loom_scoped = LOOM_SHIMMED.contains(&rel);
+
+    let mut out = Vec::new();
+    let mut in_tests = false;
+    let mut tests_depth: isize = 0;
+    for (idx, line) in src.lines().enumerate() {
+        let n = idx + 1;
+        let trimmed = line.trim_start();
+
+        // `mod tests` blocks are exempt from every lint: tests may
+        // unwrap, measure wall time, and use std primitives freely.
+        if in_tests {
+            tests_depth += net_braces(line);
+            if tests_depth <= 0 {
+                in_tests = false;
+            }
+            continue;
+        }
+        if (trimmed.starts_with("mod tests") || trimmed.starts_with("pub mod tests"))
+            && !trimmed.ends_with(';')
+        {
+            in_tests = true;
+            tests_depth = net_braces(line);
+            if tests_depth <= 0 {
+                in_tests = false; // one-line `mod tests {}` (unlikely)
+            }
+            continue;
+        }
+
+        // comments document, they don't execute
+        if trimmed.starts_with("//") {
+            continue;
+        }
+
+        if wall_clock_scoped
+            && (has_word(line, "Instant") || has_word(line, "SystemTime"))
+            && !allowed(line, "wall-clock")
+        {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: n,
+                lint: "wall-clock",
+                msg: "std::time::{Instant, SystemTime} outside serve/, \
+                      coordinator/, bench/, runtime/ — use the virtual \
+                      clock, or mark the sanctioned wrapper with \
+                      `// xtask: allow(wall-clock)`"
+                    .into(),
+            });
+        }
+
+        if map_order_scoped
+            && has_word(line, "HashMap")
+            && !allowed(line, "map-order")
+        {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: n,
+                lint: "map-order",
+                msg: "HashMap in a report-assembly path — randomized \
+                      iteration order breaks BENCH json determinism; \
+                      use BTreeMap (see rust/tests/determinism.rs)"
+                    .into(),
+            });
+        }
+
+        if unwrap_scoped
+            && (line.contains(".unwrap()") || line.contains(".expect("))
+            && !allowed(line, "unwrap-free")
+        {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: n,
+                lint: "unwrap-free",
+                msg: "unwrap()/expect() in the pooled worker path — a \
+                      double panic skips PanicGuard; use \
+                      Pool::lock_core or `let … else`"
+                    .into(),
+            });
+        }
+
+        if loom_scoped
+            && line.contains("std::sync")
+            && !allowed(line, "loom-shim")
+        {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: n,
+                lint: "loom-shim",
+                msg: "direct std::sync import in a loom-shimmed module \
+                      — import from crate::util::sync so `--cfg loom` \
+                      model checking covers this code"
+                    .into(),
+            });
+        }
+    }
+    out
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for stable
+/// output order.
+fn rust_sources(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> =
+        fs::read_dir(dir)?.collect::<Result<Vec<_>, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            rust_sources(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every file under `rust/src`. Returns (files scanned, hits).
+fn lint_tree(src_root: &Path) -> std::io::Result<(usize, Vec<Violation>)> {
+    let mut files = Vec::new();
+    rust_sources(src_root, &mut files)?;
+    let mut all = Vec::new();
+    for p in &files {
+        let rel = p
+            .strip_prefix(src_root)
+            .expect("collected under src_root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(p)?;
+        all.extend(lint_file(&rel, &src));
+    }
+    Ok((files.len(), all))
+}
+
+fn repo_root() -> PathBuf {
+    // xtask/ sits directly under the workspace root
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask has a parent dir")
+        .to_path_buf()
+}
+
+fn run_lint() -> ExitCode {
+    let src_root = repo_root().join("rust").join("src");
+    match lint_tree(&src_root) {
+        Ok((n_files, hits)) if hits.is_empty() => {
+            println!("xtask lint: OK ({n_files} files, 4 lints)");
+            ExitCode::SUCCESS
+        }
+        Ok((_, hits)) => {
+            for v in &hits {
+                eprintln!("{}", v.render());
+            }
+            eprintln!("xtask lint: {} violation(s)", hits.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("xtask lint: io error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => run_lint(),
+        Some(other) => {
+            eprintln!("xtask: unknown task '{other}' (tasks: lint)");
+            ExitCode::from(2)
+        }
+        None => {
+            eprintln!("usage: cargo xtask <task>\n\ntasks:\n  lint  run the invariant linter over rust/src");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lints(v: &[Violation]) -> Vec<(&'static str, usize)> {
+        v.iter().map(|x| (x.lint, x.line)).collect()
+    }
+
+    // -- seeded violations: each invariant must be caught -------------
+
+    #[test]
+    fn wall_clock_violation_is_caught() {
+        let src = "use std::time::Instant;\nfn f() -> f64 {\n    let t0 = Instant::now();\n    t0.elapsed().as_secs_f64()\n}\n";
+        let v = lint_file("pipeline/evq.rs", src);
+        assert_eq!(lints(&v), [("wall-clock", 1), ("wall-clock", 3)]);
+    }
+
+    #[test]
+    fn system_time_is_caught_too() {
+        let v = lint_file(
+            "metrics/mod.rs",
+            "let now = std::time::SystemTime::now();\n",
+        );
+        assert_eq!(lints(&v), [("wall-clock", 1)]);
+    }
+
+    #[test]
+    fn map_order_violation_is_caught() {
+        let src = "use std::collections::HashMap;\nfn report() {\n    let m: HashMap<usize, f64> = HashMap::new();\n    let _ = m;\n}\n";
+        let v = lint_file("serve/pool.rs", src);
+        assert_eq!(lints(&v), [("map-order", 1), ("map-order", 3)]);
+    }
+
+    #[test]
+    fn unwrap_violation_is_caught() {
+        let src = "fn worker(core: &Mutex<u8>) {\n    let g = core.lock().unwrap();\n    let v = compute().expect(\"must\");\n    let _ = (g, v);\n}\n";
+        let v = lint_file("serve/pool.rs", src);
+        assert_eq!(lints(&v), [("unwrap-free", 2), ("unwrap-free", 3)]);
+    }
+
+    #[test]
+    fn loom_shim_violation_is_caught() {
+        for f in super::LOOM_SHIMMED {
+            let v = lint_file(f, "use std::sync::{Arc, Mutex};\n");
+            assert_eq!(lints(&v), [("loom-shim", 1)], "{f}");
+        }
+    }
+
+    // -- exemptions ----------------------------------------------------
+
+    #[test]
+    fn wall_clock_allowed_dirs_are_exempt() {
+        for rel in [
+            "serve/threaded.rs",
+            "coordinator/server.rs",
+            "bench/serve_scale.rs",
+            "runtime/executor.rs",
+        ] {
+            let v = lint_file(rel, "let t0 = Instant::now();\n");
+            assert!(v.is_empty(), "{rel}: {v:?}");
+        }
+    }
+
+    #[test]
+    fn allow_marker_suppresses_each_lint() {
+        let cases = [
+            (
+                "pipeline/stage.rs",
+                "    t0: Instant, // xtask: allow(wall-clock)\n",
+            ),
+            (
+                "serve/pool.rs",
+                "use std::collections::HashMap; // xtask: allow(map-order)\n",
+            ),
+            (
+                "serve/pool.rs",
+                "let g = m.lock().unwrap(); // xtask: allow(unwrap-free)\n",
+            ),
+            (
+                "serve/timer.rs",
+                "use std::sync::Arc; // xtask: allow(loom-shim)\n",
+            ),
+        ];
+        for (rel, src) in cases {
+            assert!(lint_file(rel, src).is_empty(), "{rel}: {src}");
+        }
+    }
+
+    #[test]
+    fn comments_and_longer_identifiers_do_not_trip() {
+        // doc comment mentioning Instant; identifier containing it
+        let src = "/// `Instant`-based timing is banned here.\nstruct InstantaneousRate(f64);\n// std::sync is shimmed\n";
+        assert!(lint_file("network/bandwidth.rs", src).is_empty());
+        assert!(lint_file("serve/timer.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_else_is_not_unwrap() {
+        let src = "let g = m.lock().unwrap_or_else(|p| p.into_inner());\nlet v = o.unwrap_or_default();\n";
+        assert!(lint_file("serve/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn mod_tests_blocks_are_exempt() {
+        let src = "fn prod() {}\n\nmod tests {\n    fn t() {\n        let g = m.lock().unwrap();\n        let t0 = Instant::now();\n        let m: HashMap<u8, u8> = HashMap::new();\n        use std::sync::Arc;\n    }\n}\n";
+        assert!(lint_file("serve/pool.rs", src).is_empty());
+        // ...but code AFTER the tests block is linted again
+        let src2 = format!("{src}\nfn late() {{ let g = m.lock().unwrap(); }}\n");
+        let v = lint_file("serve/pool.rs", &src2);
+        assert_eq!(lints(&v), [("unwrap-free", 12)]);
+    }
+
+    #[test]
+    fn mod_tests_declaration_without_body_does_not_swallow_file() {
+        let src = "mod tests;\nlet g = m.lock().unwrap();\n";
+        let v = lint_file("serve/pool.rs", src);
+        assert_eq!(lints(&v), [("unwrap-free", 2)]);
+    }
+
+    #[test]
+    fn out_of_scope_files_are_untouched() {
+        // unwrap-free and loom-shim only bind the pooled scheduler
+        let src = "use std::sync::Arc;\nlet g = m.lock().unwrap();\n";
+        assert!(lint_file("pipeline/driver.rs", src).is_empty());
+        assert!(lint_file("serve/threaded.rs", src).is_empty());
+    }
+
+    // -- the shipped tree must be clean --------------------------------
+
+    #[test]
+    fn real_tree_passes_all_lints() {
+        let src_root = repo_root().join("rust").join("src");
+        let (n, hits) = lint_tree(&src_root).expect("walk rust/src");
+        assert!(n > 20, "suspiciously few files scanned: {n}");
+        assert!(
+            hits.is_empty(),
+            "tree has lint violations:\n{}",
+            hits.iter()
+                .map(|v| v.render())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}
