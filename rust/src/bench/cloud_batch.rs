@@ -1,0 +1,250 @@
+//! Cloud-scheduler bench: throughput and tail latency of the three
+//! cloud-side policies (`fifo`, `batch`, `slo`) on a deliberately
+//! cloud-bound fleet, across fleet sizes. This is the perf gate for
+//! the dynamic-batching work: at 256 streams the `batch` policy should
+//! clear >= 1.5x the FIFO throughput with p99 latency no worse.
+//!
+//! The workload inverts the DES-scale bench's regime: the cloud stage
+//! (5 ms) dominates the device stage (1 ms), so with FIFO the shared
+//! cloud is the bottleneck and queues grow with fleet size, while the
+//! batcher amortizes launches via the calibrated sub-linear
+//! `batch::service_secs` curve. Identical shapes across streams keep
+//! every queued pair batch-compatible — the best case the scheduler is
+//! allowed to exploit.
+//!
+//! Writes `BENCH_cloud_batch.json` with one row per (n_streams,
+//! policy) cell: `throughput`, `p50_ms` / `p99_ms`, `speedup_vs_fifo`,
+//! `cloud_wait_s`, and the `batch_occupancy` histogram (index i =
+//! launches that carried i+1 items).
+
+use anyhow::Result;
+
+use crate::bench::emit::BenchJson;
+use crate::metrics::{MultiReport, Table};
+use crate::model::topology::vgg16;
+use crate::model::{CostModel, DeviceProfile, ModelGraph};
+use crate::network::BandwidthModel;
+use crate::pipeline::{
+    run_virtual_streams, ActivePlan, BatchCfg, CloudPolicy, QueueEngine,
+    StageModel, StaticPolicy, VirtualCfg, VirtualStream,
+};
+use crate::sim::{generate, Correlation, SimTask};
+use crate::util::Json;
+
+/// Inter-arrival period per stream (seconds). Longer than the device
+/// stage but far shorter than n_streams * t_c, so the shared cloud is
+/// the contended resource at every fleet size.
+const PERIOD: f64 = 8e-3;
+
+/// Cloud-bound execution profile: the 5 ms cloud stage dwarfs the 1 ms
+/// device stage, the regime where cloud batching pays.
+fn stage_model() -> StageModel {
+    StageModel {
+        t_e: 1e-3,
+        t_c: 5e-3,
+        first_send_offset: 0.0,
+        t_c_par: 0.0,
+        cut_elems: vec![512],
+        result_elems: 10,
+        exit_check: 0.0,
+    }
+}
+
+/// Per-stream task lists with arrivals staggered by `i/n` of a period
+/// so streams interleave at the link instead of arriving in lockstep.
+fn fleet_tasks(n_streams: usize, tasks_per_stream: usize) -> Vec<Vec<SimTask>> {
+    (0..n_streams)
+        .map(|i| {
+            let mut tasks =
+                generate(tasks_per_stream, PERIOD, Correlation::Low, 10, i as u64);
+            let offset = PERIOD * i as f64 / n_streams as f64;
+            for t in tasks.iter_mut() {
+                t.arrive += offset;
+            }
+            tasks
+        })
+        .collect()
+}
+
+/// Cloud-scheduler config for one policy cell. `slo` gets a finite
+/// 50 ms deadline so EDF ordering and the urgency admit actually
+/// engage; the other two ignore the field.
+fn batch_cfg(policy: CloudPolicy) -> BatchCfg {
+    BatchCfg {
+        policy,
+        max_batch: 16,
+        max_wait: 500e-6,
+        slo: if policy == CloudPolicy::SloAware { 0.05 } else { f64::INFINITY },
+    }
+}
+
+/// Run one (fleet size, policy) cell on the calendar engine.
+fn run_fleet(
+    tls: &[Vec<SimTask>],
+    g: &ModelGraph,
+    cost: &CostModel,
+    bw: &BandwidthModel,
+    policy: CloudPolicy,
+) -> MultiReport {
+    let sm = stage_model();
+    let n = tls.len();
+    let mut pols: Vec<StaticPolicy> =
+        (0..n).map(|_| StaticPolicy::no_exit(8)).collect();
+    let mut plans: Vec<ActivePlan> =
+        (0..n).map(|_| ActivePlan::single(sm.clone())).collect();
+    let cfg = VirtualCfg {
+        queue_cap: Some(4),
+        engine: QueueEngine::Calendar,
+        cloud: batch_cfg(policy),
+        ..VirtualCfg::default()
+    };
+
+    let mut streams: Vec<VirtualStream<'_>> = tls
+        .iter()
+        .zip(pols.iter_mut())
+        .zip(plans.iter_mut())
+        .map(|((tasks, pol), plan)| VirtualStream {
+            tasks,
+            plan,
+            graph: g,
+            cost,
+            policy: pol,
+            scheme: "bench".into(),
+            drop_after: None,
+        })
+        .collect();
+
+    run_virtual_streams(&mut streams, bw, cfg)
+}
+
+/// Mean items per cloud launch from the occupancy histogram
+/// (index i = launches carrying i+1 items); 0.0 when no launches
+/// were recorded (the FIFO fast path does record bucket 1).
+fn mean_occupancy(hist: &[u64]) -> f64 {
+    let launches: u64 = hist.iter().sum();
+    if launches == 0 {
+        return 0.0;
+    }
+    let items: u64 = hist
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| (i as u64 + 1) * c)
+        .sum();
+    items as f64 / launches as f64
+}
+
+/// Run the policy x fleet-size grid. Prints nothing — the CLI renders
+/// the returned table. Also writes `BENCH_cloud_batch.json`.
+pub fn run(stream_grid: &[usize], tasks_per_stream: usize) -> Result<Table> {
+    let g = vgg16();
+    let cost =
+        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
+    let bw = BandwidthModel::Static(1000.0);
+
+    let mut t = Table::new(&[
+        "streams",
+        "policy",
+        "throughput",
+        "p50 ms",
+        "p99 ms",
+        "vs fifo",
+        "mean batch",
+    ]);
+    let mut json = BenchJson::new("cloud_batch");
+
+    for &n_streams in stream_grid {
+        let tls = fleet_tasks(n_streams, tasks_per_stream);
+        let mut fifo_tput = 0.0f64;
+        for policy in
+            [CloudPolicy::Fifo, CloudPolicy::DynBatch, CloudPolicy::SloAware]
+        {
+            let multi = run_fleet(&tls, &g, &cost, &bw, policy);
+            let agg = multi.aggregate();
+            let tput = multi.aggregate_throughput();
+            if policy == CloudPolicy::Fifo {
+                fifo_tput = tput;
+            }
+            let speedup = if fifo_tput > 0.0 { tput / fifo_tput } else { 1.0 };
+            let occ = mean_occupancy(&multi.batch_occupancy);
+            t.row(vec![
+                n_streams.to_string(),
+                policy.name().to_string(),
+                format!("{tput:.0}"),
+                format!("{:.2}", agg.p50_latency_ms()),
+                format!("{:.2}", agg.p99_latency_ms()),
+                format!("{speedup:.2}x"),
+                format!("{occ:.2}"),
+            ]);
+            json.add_row(
+                &format!("{n_streams}/{}", policy.name()),
+                &[
+                    ("n_streams", Json::Num(n_streams as f64)),
+                    ("tasks_per_stream", Json::Num(tasks_per_stream as f64)),
+                    ("policy", Json::Str(policy.name().to_string())),
+                    ("throughput", Json::Num(tput)),
+                    ("p50_ms", Json::Num(agg.p50_latency_ms())),
+                    ("p99_ms", Json::Num(agg.p99_latency_ms())),
+                    ("speedup_vs_fifo", Json::Num(speedup)),
+                    ("cloud_wait_s", Json::Num(agg.cloud_queue_wait_s)),
+                    ("mean_batch_occupancy", Json::Num(occ)),
+                    (
+                        "batch_occupancy",
+                        Json::Arr(
+                            multi
+                                .batch_occupancy
+                                .iter()
+                                .map(|&c| Json::Num(c as f64))
+                                .collect(),
+                        ),
+                    ),
+                ],
+            );
+        }
+    }
+    json.write()?;
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny grid end-to-end: rows present, JSON written with the
+    /// `throughput` and `batch_occupancy` fields the CI smoke greps
+    /// for, and the batcher actually forms multi-item launches.
+    #[test]
+    fn tiny_grid_runs_and_emits_json() {
+        let _env = crate::bench::BENCH_DIR_TEST_LOCK.lock().unwrap();
+        let dir = std::env::temp_dir().join("coach_bench_cloud_batch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let prev = std::env::var_os("COACH_BENCH_DIR");
+        std::env::set_var("COACH_BENCH_DIR", &dir);
+        let t = run(&[4, 8], 4).unwrap();
+        match prev {
+            Some(v) => std::env::set_var("COACH_BENCH_DIR", v),
+            None => std::env::remove_var("COACH_BENCH_DIR"),
+        }
+        assert_eq!(t.rows.len(), 6, "3 policy rows per fleet size");
+        let j = Json::from_file(&dir.join("BENCH_cloud_batch.json")).unwrap();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 6);
+        for row in rows {
+            assert!(row.get("throughput").unwrap().as_f64().unwrap() > 0.0);
+            assert!(row.get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
+            assert!(row.get("batch_occupancy").unwrap().as_arr().is_ok());
+        }
+        // the batch policy must form at least one multi-item launch on
+        // the 8-stream cloud-bound fleet
+        let batch8 = rows
+            .iter()
+            .find(|r| {
+                r.get("policy").unwrap().as_str().unwrap() == "batch"
+                    && r.get("n_streams").unwrap().as_f64().unwrap() == 8.0
+            })
+            .unwrap();
+        assert!(
+            batch8.get("mean_batch_occupancy").unwrap().as_f64().unwrap() > 1.0,
+            "batch policy never coalesced on a cloud-bound fleet"
+        );
+    }
+}

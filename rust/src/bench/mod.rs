@@ -8,6 +8,7 @@
 //! `BENCH_<name>.json` via [`emit::BenchJson`] for cross-PR perf
 //! tracking.
 
+pub mod cloud_batch;
 pub mod des_scale;
 pub mod emit;
 pub mod fig1;

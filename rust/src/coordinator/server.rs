@@ -104,6 +104,10 @@ pub struct ServeCfg {
     /// live cut re-planning over an explicit bw→cut ladder (None =
     /// every stream keeps its configured cut for the whole run)
     pub replan: Option<ServeReplan>,
+    /// cloud-queue scheduler (fifo reference, dynamic batching, or
+    /// SLO-aware EDF) — forwarded to the serving engine and priced into
+    /// each stream's Eq. 11 stage target
+    pub cloud: crate::pipeline::BatchCfg,
 }
 
 /// Serve-mode re-planning: the bw→cut ladder (`(min_mbps, cut)`,
@@ -198,6 +202,7 @@ fn stream_policy(
     base_bits: u8,
     elems: usize,
     cost: CostModel,
+    congestion: crate::pipeline::CloudCongestion,
 ) -> StreamPolicy {
     match scheme.bits {
         // raw f32 transmission (optionally with threshold early-exit)
@@ -213,8 +218,15 @@ fn stream_policy(
         Some(_) => StreamPolicy::Coach {
             policy: CoachPolicy::new(gated, base_bits),
             // stage estimates refreshed from the engine's running
-            // average before each decision
-            cost: MeasuredTransmitCost { elems, cost, t_e: 2e-3, t_c: 2e-3 },
+            // average before each decision; the congestion estimate
+            // (neutral under fifo) prices the shared batching cloud
+            cost: MeasuredTransmitCost {
+                elems,
+                cost,
+                t_e: 2e-3,
+                t_c: 2e-3,
+                congestion,
+            },
         },
     }
 }
@@ -586,6 +598,10 @@ pub fn serve_streams(
             base_bits_for(st.cut),
             model.cut_elems(st.cut),
             cost.clone(),
+            crate::pipeline::CloudCongestion::estimate(
+                &cfg.cloud,
+                cfg.n_streams.max(streams.len()),
+            ),
         );
         // per-cut caches: the starting cut, plus every ladder cut the
         // stream can switch to (each starts from the calibrated clone
@@ -691,6 +707,7 @@ pub fn serve_streams(
             rtt_half: cost.rtt_half,
             result_wire_bytes: cost.wire_bytes(manifest.n_classes, 32),
             runtime: cfg.runtime,
+            cloud: cfg.cloud,
             scheme: "real".into(),
             model: cfg.model.clone(),
         },

@@ -15,6 +15,8 @@
 //!                  [--bw MBPS] [--corr low|medium|high] [--scheme coach|noadjust]
 //!                  [--device-scale S] [--streams N] [--queue-cap Q]
 //!                  [--runtime threaded|pooled] [--config deploy.toml]
+//!                  [--cloud-sched fifo|batch|slo] [--max-batch B]
+//!                  [--max-wait-us U]
 //! coach serve-sim  [--streams N] [--n TASKS] [--model M] [--bw MBPS]
 //!                  [--period-ms P] [--queue-cap Q] [--drop-after-periods D]
 //!                  [--runtime threaded|pooled]
@@ -33,6 +35,10 @@
 //!                                    # DES events/sec: heap vs calendar
 //!                                    # vs shard-parallel (default grid
 //!                                    # 1k,10k,100k streams x 10 tasks)
+//! coach bench-cloud-batch [--streams A,B,..] [--tasks T]
+//!                                    # cloud scheduling: fifo vs batch vs
+//!                                    # slo throughput + tail latency on a
+//!                                    # cloud-bound fleet (grid 16,64,256)
 //! coach bench-serve-scale [--streams A,B,..] [--tasks T]
 //!                                    # wall-clock serving throughput,
 //!                                    # threaded vs pooled engine
@@ -222,6 +228,26 @@ fn run() -> Result<()> {
                 "{}",
                 bench::des_scale::run(&grid, tasks, shards)?.render()
             );
+            Ok(())
+        }
+        "bench-cloud-batch" => {
+            let tasks = args.usize_or("tasks", 40)?;
+            let grid: Vec<usize> = match args.get("streams") {
+                None => vec![16, 64, 256],
+                Some(spec) => spec
+                    .split(',')
+                    .map(|s| {
+                        s.trim().parse::<usize>().with_context(|| {
+                            format!("--streams entry '{s}' is not a number")
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+            };
+            println!(
+                "cloud scheduling: fifo vs batch vs slo on a cloud-bound \
+                 fleet ({tasks} tasks/stream)"
+            );
+            println!("{}", bench::cloud_batch::run(&grid, tasks)?.render());
             Ok(())
         }
         "bench-serve-scale" => {
@@ -456,6 +482,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => base.runtime,
         },
         replan: None,
+        cloud: {
+            let mut c = coach::pipeline::BatchCfg::default();
+            if let Some(p) = args.get("cloud-sched") {
+                c.policy = coach::pipeline::CloudPolicy::parse(p)?;
+            }
+            c.max_batch = args.usize_or("max-batch", c.max_batch)?.max(1);
+            c.max_wait =
+                args.f64_or("max-wait-us", c.max_wait * 1e6)?.max(0.0) * 1e-6;
+            c
+        },
     };
     println!(
         "serving {n} tasks x {n_streams} stream(s) of {model} (cut {cut}, \
@@ -601,7 +637,8 @@ fn print_help() {
         "COACH - near bubble-free end-cloud collaborative inference\n\
          commands: run | partition | serve | serve-sim | profile | bench-table1 |\n\
          \x20         bench-table2 | bench-fig1 | bench-fig5 | bench-fig6 | bench-fig7 |\n\
-         \x20         bench-fleet | bench-des-scale | bench-serve-scale | trace | help\n\
+         \x20         bench-fleet | bench-des-scale | bench-cloud-batch |\n\
+         \x20         bench-serve-scale | trace | help\n\
          `coach run scenarios/<name>.toml [--real|--wall]` runs one scenario\n\
          description on the DES / wall-clock / PJRT driver; see scenarios/\n\
          for presets and rust/src/main.rs docs for flags\n\

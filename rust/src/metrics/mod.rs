@@ -123,6 +123,10 @@ pub struct RunReport {
     pub device: StageUsage,
     pub link: StageUsage,
     pub cloud: StageUsage,
+    /// seconds this stream's tasks spent queued at the shared cloud
+    /// between link completion and cloud service start (previously
+    /// folded invisibly into bubble time)
+    pub cloud_queue_wait_s: f64,
     /// live re-planning telemetry (zero switches when `[replan]` is off)
     pub plan: PlanTelemetry,
 }
@@ -139,6 +143,7 @@ impl Default for RunReport {
             device: StageUsage::default(),
             link: StageUsage::default(),
             cloud: StageUsage::default(),
+            cloud_queue_wait_s: 0.0,
             plan: PlanTelemetry::default(),
         }
     }
@@ -260,6 +265,7 @@ impl RunReport {
         put("device_util", Json::Num(self.device.utilization()));
         put("link_util", Json::Num(self.link.utilization()));
         put("cloud_util", Json::Num(self.cloud.utilization()));
+        put("cloud_queue_wait_s", Json::Num(self.cloud_queue_wait_s));
         Json::Obj(o)
     }
 }
@@ -277,6 +283,11 @@ pub struct MultiReport {
     /// DES events fired to produce this report (0 for wall-clock runs) —
     /// the numerator of `coach bench-des-scale`'s events/sec metric
     pub events: u64,
+    /// fleet-wide cloud batch-size histogram: `batch_occupancy[b - 1]`
+    /// counts launches that carried exactly `b` tasks (all size-1 under
+    /// `cloud_sched = "fifo"`; empty when the run never reached the
+    /// cloud)
+    pub batch_occupancy: Vec<u64>,
 }
 
 impl MultiReport {
@@ -289,6 +300,7 @@ impl MultiReport {
     pub fn aggregate(&self) -> RunReport {
         let mut tasks = Vec::new();
         let mut dropped = 0;
+        let mut cloud_queue_wait_s = 0.0;
         let plan =
             PlanTelemetry::aggregate(self.per_stream.iter().map(|r| &r.plan));
         let (mut dev, mut link, mut cloud) =
@@ -296,6 +308,7 @@ impl MultiReport {
         for r in &self.per_stream {
             tasks.extend(r.tasks.iter().cloned());
             dropped += r.dropped;
+            cloud_queue_wait_s += r.cloud_queue_wait_s;
             dev.busy += r.device.busy;
             dev.stall += r.device.stall;
             link.busy += r.link.busy;
@@ -326,6 +339,7 @@ impl MultiReport {
             device: dev,
             link,
             cloud,
+            cloud_queue_wait_s,
             plan,
         }
     }
@@ -436,7 +450,11 @@ mod tests {
             dropped: 2,
             ..Default::default()
         };
-        let multi = MultiReport { per_stream: vec![a, b], events: 0 };
+        let multi = MultiReport {
+            per_stream: vec![a, b],
+            events: 0,
+            batch_occupancy: Vec::new(),
+        };
         let agg = multi.aggregate();
         assert_eq!(agg.tasks.len(), 2);
         assert_eq!(agg.dropped, 2);

@@ -1,0 +1,486 @@
+//! Cloud-side batching and scheduling policies shared by the DES and
+//! the wall-clock serving runtime.
+//!
+//! The shared cloud engine historically serviced streams strictly FIFO,
+//! one intermediate tensor at a time. At fleet scale the dominant cost
+//! is cloud queueing, not the wire, so the cloud stage may coalesce
+//! COMPATIBLE queued items — same cut, hence same tensor shape — into
+//! one batched launch whose per-item service amortizes (CoEdge-style
+//! shared-resource allocation; see ROADMAP). Three policies:
+//!
+//! * [`CloudPolicy::Fifo`] — today's behaviour, kept as the bit-for-bit
+//!   reference. The DES fifo path does not route through this module's
+//!   arithmetic at all, so existing goldens are pinned by construction.
+//! * [`CloudPolicy::DynBatch`] — coalesce the shape-compatible FIFO
+//!   prefix up to `max_batch`, holding the head at most `max_wait`
+//!   seconds for the batch to fill.
+//! * [`CloudPolicy::SloAware`] — earliest-deadline-first admission
+//!   (deadline = arrival + SLO) with a per-stream fair-share cap so one
+//!   chatty stream cannot starve the fleet out of a batch.
+//!
+//! The batch service curve is the calibrated amortization model behind
+//! `StageModel::batch_speedup`: a batch of `b` compatible items costs
+//! `per_item * (ALPHA + (1 - ALPHA) * b)` seconds, i.e. a fixed
+//! launch/readback fraction `ALPHA` plus a linear per-item tail. At
+//! `b = 1` the curve is the exact identity (`0.75 + 0.25 == 1.0` in
+//! f64), which is what makes `max_batch = 1` bit-for-bit comparable to
+//! fifo.
+//!
+//! Determinism: this module sits on the report path, so ordered
+//! containers only (the `map-order` xtask lint covers it) and no
+//! wall-clock reads — `now` is always a caller-supplied clock value.
+
+use anyhow::{bail, Result};
+
+/// Fixed (non-amortizable) fraction of a solo cloud service: kernel
+/// launch, readback, scheduling overhead. The remaining `1 - ALPHA`
+/// scales linearly with batch size.
+pub const ALPHA: f64 = 0.75;
+
+/// Cloud service time for a batch of `b` compatible items whose
+/// slowest member costs `per_item` seconds solo. Exact identity at
+/// `b = 1`: `ALPHA + (1 - ALPHA)` is exactly `1.0`, and `x * 1.0 == x`
+/// bit-for-bit for every finite `x >= 0`.
+pub fn service_secs(per_item: f64, b: usize) -> f64 {
+    let b = b.max(1);
+    per_item * (ALPHA + (1.0 - ALPHA) * b as f64)
+}
+
+/// Aggregate-throughput speedup of a size-`b` batch over `b` solo
+/// services: `b / (ALPHA + (1 - ALPHA) * b)`, asymptote `1 / ALPHA`
+/// per item — 4x aggregate with the default curve.
+pub fn speedup(b: usize) -> f64 {
+    let b = b.max(1) as f64;
+    b / (ALPHA + (1.0 - ALPHA) * b)
+}
+
+/// Compatibility key for batching: items may share a batch only when
+/// they carry the same tensor shape. Wire bytes divided by the
+/// quantization width recovers the element count, so two items cut at
+/// the same layer batch together even at different precisions.
+pub fn shape_key(wire_bytes: usize, bits: u8) -> u64 {
+    (wire_bytes as u64).saturating_mul(8) / u64::from(bits.max(1))
+}
+
+/// Record one formed batch of size `b` in a size histogram
+/// (`hist[b - 1]` counts size-`b` batches), growing the vec on demand.
+pub fn record_occupancy(hist: &mut Vec<u64>, b: usize) {
+    let b = b.max(1);
+    if hist.len() < b {
+        hist.resize(b, 0);
+    }
+    hist[b - 1] += 1;
+}
+
+/// Which scheduler drains the shared cloud queue.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CloudPolicy {
+    /// One item at a time, strict arrival order (the legacy path).
+    #[default]
+    Fifo,
+    /// Coalesce the shape-compatible FIFO prefix up to `max_batch`,
+    /// waiting at most `max_wait` for the batch to fill.
+    DynBatch,
+    /// Earliest-deadline-first admission with a per-stream fair-share
+    /// cap; urgent heads launch without waiting for a full batch.
+    SloAware,
+}
+
+impl CloudPolicy {
+    /// Parse the `[serve] cloud_sched` selector.
+    pub fn parse(s: &str) -> Result<CloudPolicy> {
+        match s.trim() {
+            "fifo" => Ok(CloudPolicy::Fifo),
+            "batch" => Ok(CloudPolicy::DynBatch),
+            "slo" => Ok(CloudPolicy::SloAware),
+            other => {
+                bail!("unknown cloud_sched '{other}' (expected fifo|batch|slo)")
+            }
+        }
+    }
+
+    /// Canonical selector name (round-trips through [`parse`]).
+    ///
+    /// [`parse`]: CloudPolicy::parse
+    pub fn name(self) -> &'static str {
+        match self {
+            CloudPolicy::Fifo => "fifo",
+            CloudPolicy::DynBatch => "batch",
+            CloudPolicy::SloAware => "slo",
+        }
+    }
+}
+
+/// Cloud-scheduler configuration, carried by `VirtualCfg` / `RealCfg` /
+/// `ServeCfg` and resolved from the `[serve]` scenario section.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchCfg {
+    pub policy: CloudPolicy,
+    /// Largest batch a single launch may carry (>= 1).
+    pub max_batch: usize,
+    /// Longest a queue head may wait, in seconds, before the scheduler
+    /// launches a partial batch.
+    pub max_wait: f64,
+    /// Per-task latency SLO in seconds (deadline = arrival + slo);
+    /// `INFINITY` means no deadline, degrading `SloAware` to FIFO
+    /// head selection.
+    pub slo: f64,
+}
+
+impl Default for BatchCfg {
+    fn default() -> Self {
+        BatchCfg {
+            policy: CloudPolicy::Fifo,
+            max_batch: 8,
+            max_wait: 200e-6,
+            slo: f64::INFINITY,
+        }
+    }
+}
+
+impl BatchCfg {
+    /// True when the batching machinery is engaged; the fifo reference
+    /// path never consults [`pick`].
+    pub fn batched(&self) -> bool {
+        self.policy != CloudPolicy::Fifo
+    }
+}
+
+/// Scheduler's view of one queued cloud job.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchItem {
+    pub stream: usize,
+    /// Instant the item entered the cloud queue (link completion).
+    pub enq: f64,
+    /// Absolute completion deadline (`arrival + slo`).
+    pub deadline: f64,
+    /// Shape-compatibility key ([`shape_key`]).
+    pub shape: u64,
+}
+
+/// Outcome of a batch-formation attempt over the current queue.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Pick {
+    /// Launch now with these queue indices (ascending order).
+    Admit(Vec<usize>),
+    /// Nothing launches yet; re-attempt at this (strictly future)
+    /// instant unless a new arrival or a service completion kicks the
+    /// queue first.
+    Defer(f64),
+    /// Queue empty — wait for an arrival.
+    Wait,
+}
+
+/// Decide what the cloud should launch at `now` given the queued
+/// `items` (in arrival order). Pure function of its arguments —
+/// both execution paths (DES and wall-clock) share it verbatim.
+pub fn pick(cfg: &BatchCfg, items: &[BatchItem], now: f64) -> Pick {
+    if items.is_empty() {
+        return Pick::Wait;
+    }
+    let bmax = cfg.max_batch.max(1);
+    match cfg.policy {
+        CloudPolicy::Fifo => Pick::Admit(vec![0]),
+        CloudPolicy::DynBatch => {
+            let head = items[0];
+            let mut sel = Vec::new();
+            for (i, it) in items.iter().enumerate() {
+                if it.shape == head.shape {
+                    sel.push(i);
+                    if sel.len() == bmax {
+                        break;
+                    }
+                }
+            }
+            let ripe = now >= head.enq + cfg.max_wait;
+            if sel.len() == bmax || ripe {
+                Pick::Admit(sel)
+            } else {
+                Pick::Defer(head.enq + cfg.max_wait)
+            }
+        }
+        CloudPolicy::SloAware => {
+            // EDF head: earliest deadline, FIFO (queue-order) tiebreak.
+            let mut hi = 0;
+            for (i, it) in items.iter().enumerate().skip(1) {
+                if it.deadline < items[hi].deadline {
+                    hi = i;
+                }
+            }
+            let head = items[hi];
+            // Fair share: with S distinct streams queued, one stream
+            // may occupy at most max(1, max_batch / S) slots, so a
+            // backlogged stream cannot monopolize a launch.
+            let mut streams: Vec<usize> =
+                items.iter().map(|it| it.stream).collect();
+            streams.sort_unstable();
+            streams.dedup();
+            let cap = (bmax / streams.len().max(1)).max(1);
+            // EDF-ordered admission among shape-compatible items.
+            let mut order: Vec<usize> = (0..items.len())
+                .filter(|&i| items[i].shape == head.shape)
+                .collect();
+            order.sort_by(|&a, &b| {
+                items[a]
+                    .deadline
+                    .partial_cmp(&items[b].deadline)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            let mut used: Vec<(usize, usize)> = Vec::new();
+            let mut sel = Vec::new();
+            for i in order {
+                let s = items[i].stream;
+                let n = match used.iter_mut().find(|(st, _)| *st == s) {
+                    Some(entry) => &mut entry.1,
+                    None => {
+                        used.push((s, 0));
+                        let last = used.len() - 1;
+                        &mut used[last].1
+                    }
+                };
+                if *n < cap {
+                    *n += 1;
+                    sel.push(i);
+                }
+                if sel.len() == bmax {
+                    break;
+                }
+            }
+            sel.sort_unstable();
+            let urgent = head.deadline <= now + cfg.max_wait;
+            let ripe = now >= head.enq + cfg.max_wait;
+            if sel.len() == bmax || urgent || ripe {
+                Pick::Admit(sel)
+            } else {
+                Pick::Defer(head.enq + cfg.max_wait)
+            }
+        }
+    }
+}
+
+/// What the online policy (Eq. 11) should assume about the shared
+/// cloud when pricing a transmission: expected queueing/batch-formation
+/// delay plus the amortized per-item service scale. The neutral
+/// default prices exactly the solo `t_c` the paper uses —
+/// `t_c * 1.0 + 0.0` is bit-identical to `t_c` — so installing the
+/// default changes nothing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CloudCongestion {
+    /// Expected wait between link completion and batch launch.
+    pub queue_wait: f64,
+    /// Expected per-item service multiplier under batching (< 1).
+    pub service_scale: f64,
+}
+
+impl Default for CloudCongestion {
+    fn default() -> Self {
+        CloudCongestion { queue_wait: 0.0, service_scale: 1.0 }
+    }
+}
+
+impl CloudCongestion {
+    /// Closed-form estimate from the fleet shape: with `n` streams
+    /// feeding the cloud, the steady-state batch is `min(max_batch, n)`
+    /// wide, so the per-item service scales by `(ALPHA + (1-ALPHA)*b)/b`
+    /// and the head waits half the formation window on average. Fifo
+    /// fleets (and trivial `max_batch = 1`) stay neutral.
+    pub fn estimate(cfg: &BatchCfg, n_streams: usize) -> CloudCongestion {
+        if !cfg.batched() || cfg.max_batch <= 1 {
+            return CloudCongestion::default();
+        }
+        let b = cfg.max_batch.min(n_streams.max(1)).max(1);
+        CloudCongestion {
+            queue_wait: 0.5 * cfg.max_wait,
+            service_scale: (ALPHA + (1.0 - ALPHA) * b as f64) / b as f64,
+        }
+    }
+
+    /// Price one cloud service under this congestion estimate.
+    pub fn cloud_secs(&self, t_c: f64) -> f64 {
+        t_c * self.service_scale + self.queue_wait
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(stream: usize, enq: f64, deadline: f64, shape: u64) -> BatchItem {
+        BatchItem { stream, enq, deadline, shape }
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in
+            [CloudPolicy::Fifo, CloudPolicy::DynBatch, CloudPolicy::SloAware]
+        {
+            assert_eq!(CloudPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(CloudPolicy::parse("edf").is_err());
+    }
+
+    #[test]
+    fn service_curve_is_exact_identity_at_one() {
+        for x in [0.0, 1e-9, 2e-3, 0.74, 1.0, 123.456] {
+            assert_eq!(service_secs(x, 1).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn speedup_is_monotone_and_bounded() {
+        assert!((speedup(1) - 1.0).abs() < 1e-12);
+        let mut prev = 0.0;
+        for b in 1..=64 {
+            let s = speedup(b);
+            assert!(s > prev, "speedup must grow with batch size");
+            assert!(s < 1.0 / ALPHA + 1e-12, "speedup asymptote is 1/ALPHA");
+            prev = s;
+        }
+        // service time is consistent with the speedup view
+        let b = 8;
+        let agg = b as f64 * 1e-3 / service_secs(1e-3, b);
+        assert!((agg - speedup(b)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shape_key_ignores_precision_but_not_cut() {
+        // 1000 elems at 8 bits = 1000 bytes; at 4 bits = 500 bytes
+        assert_eq!(shape_key(1000, 8), shape_key(500, 4));
+        assert_ne!(shape_key(1000, 8), shape_key(2000, 8));
+    }
+
+    #[test]
+    fn fifo_always_admits_the_head_alone() {
+        let cfg = BatchCfg::default();
+        let q = [item(0, 0.0, 1.0, 7), item(1, 0.0, 1.0, 7)];
+        assert_eq!(pick(&cfg, &q, 0.0), Pick::Admit(vec![0]));
+        assert_eq!(pick(&cfg, &[], 0.0), Pick::Wait);
+    }
+
+    #[test]
+    fn dynbatch_takes_the_compatible_prefix_when_full() {
+        let cfg = BatchCfg {
+            policy: CloudPolicy::DynBatch,
+            max_batch: 3,
+            max_wait: 1.0,
+            slo: f64::INFINITY,
+        };
+        // 4 compatible items: admit 3 immediately (full batch)
+        let q: Vec<BatchItem> =
+            (0..4).map(|i| item(i, 0.0, f64::INFINITY, 7)).collect();
+        assert_eq!(pick(&cfg, &q, 0.0), Pick::Admit(vec![0, 1, 2]));
+        // incompatible middle item is skipped, not admitted
+        let q = [
+            item(0, 0.0, f64::INFINITY, 7),
+            item(1, 0.0, f64::INFINITY, 9),
+            item(2, 0.0, f64::INFINITY, 7),
+            item(3, 0.0, f64::INFINITY, 7),
+        ];
+        assert_eq!(pick(&cfg, &q, 0.0), Pick::Admit(vec![0, 2, 3]));
+    }
+
+    #[test]
+    fn dynbatch_defers_until_the_head_ripens() {
+        let cfg = BatchCfg {
+            policy: CloudPolicy::DynBatch,
+            max_batch: 8,
+            max_wait: 0.5,
+            slo: f64::INFINITY,
+        };
+        let q = [item(0, 1.0, f64::INFINITY, 7)];
+        assert_eq!(pick(&cfg, &q, 1.2), Pick::Defer(1.5));
+        assert_eq!(pick(&cfg, &q, 1.5), Pick::Admit(vec![0]));
+    }
+
+    #[test]
+    fn dynbatch_max_batch_one_is_fifo_shaped() {
+        let cfg = BatchCfg {
+            policy: CloudPolicy::DynBatch,
+            max_batch: 1,
+            max_wait: 0.0,
+            slo: f64::INFINITY,
+        };
+        let q = [
+            item(0, 0.0, f64::INFINITY, 7),
+            item(1, 0.0, f64::INFINITY, 7),
+        ];
+        assert_eq!(pick(&cfg, &q, 0.0), Pick::Admit(vec![0]));
+    }
+
+    #[test]
+    fn slo_admits_by_deadline_not_arrival() {
+        let cfg = BatchCfg {
+            policy: CloudPolicy::SloAware,
+            max_batch: 2,
+            max_wait: 10.0,
+            slo: 1.0,
+        };
+        // the later arrival has the tighter deadline and becomes head;
+        // urgency (deadline within max_wait) launches without filling
+        let q = [item(0, 0.0, 50.0, 7), item(1, 0.1, 2.0, 7)];
+        match pick(&cfg, &q, 0.2) {
+            Pick::Admit(sel) => assert_eq!(sel, vec![0, 1]),
+            other => panic!("expected Admit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn slo_fair_share_caps_a_backlogged_stream() {
+        let cfg = BatchCfg {
+            policy: CloudPolicy::SloAware,
+            max_batch: 4,
+            max_wait: 0.0,
+            slo: f64::INFINITY,
+        };
+        // stream 0 has 4 queued items, streams 1-2 one each: the cap is
+        // max(1, 4/3) = 1 slot per stream, so the launch mixes streams
+        let q = [
+            item(0, 0.0, 10.0, 7),
+            item(0, 0.0, 10.0, 7),
+            item(0, 0.0, 10.0, 7),
+            item(0, 0.0, 10.0, 7),
+            item(1, 0.0, 10.0, 7),
+            item(2, 0.0, 10.0, 7),
+        ];
+        match pick(&cfg, &q, 0.0) {
+            Pick::Admit(sel) => {
+                let mut streams: Vec<usize> =
+                    sel.iter().map(|&i| q[i].stream).collect();
+                streams.sort_unstable();
+                assert_eq!(streams, vec![0, 1, 2]);
+            }
+            other => panic!("expected Admit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn congestion_is_neutral_for_fifo_and_prices_batching() {
+        let fifo = CloudCongestion::estimate(&BatchCfg::default(), 256);
+        assert_eq!(fifo, CloudCongestion::default());
+        for t_c in [0.0, 1e-3, 0.7] {
+            assert_eq!(fifo.cloud_secs(t_c).to_bits(), t_c.to_bits());
+        }
+        let cfg = BatchCfg {
+            policy: CloudPolicy::DynBatch,
+            max_batch: 8,
+            max_wait: 200e-6,
+            slo: f64::INFINITY,
+        };
+        let c = CloudCongestion::estimate(&cfg, 256);
+        assert!(c.service_scale < 1.0 && c.service_scale > ALPHA / 8.0);
+        assert!((c.queue_wait - 100e-6).abs() < 1e-12);
+        // fleets smaller than max_batch see smaller steady batches
+        let small = CloudCongestion::estimate(&cfg, 2);
+        assert!(small.service_scale > c.service_scale);
+    }
+
+    #[test]
+    fn occupancy_histogram_grows_on_demand() {
+        let mut h = Vec::new();
+        record_occupancy(&mut h, 1);
+        record_occupancy(&mut h, 3);
+        record_occupancy(&mut h, 3);
+        assert_eq!(h, vec![1, 0, 2]);
+    }
+}

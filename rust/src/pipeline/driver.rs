@@ -27,6 +27,7 @@
 //! transmission time, whether to early-exit or at what precision to
 //! transmit (paper Alg. 1 online component, Eq. 10-11).
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
@@ -40,6 +41,7 @@ use crate::model::{CostModel, ModelGraph};
 use crate::network::BandwidthModel;
 use crate::sim::SimTask;
 
+use super::batch::{self, BatchCfg, BatchItem, CloudPolicy, Pick};
 use super::evq::{CalendarQueue, EventQueue, HeapQueue, QueueEngine};
 use super::policy::{Decision, OnlinePolicy, TaskView};
 use super::replan::ActivePlan;
@@ -77,6 +79,9 @@ struct LinkService {
     tx: f64,
     /// task finish (cloud end + result-return leg)
     finish: f64,
+    /// seconds the landed input waited for the shared cloud to free up
+    /// (`cloud_queue_wait_s` telemetry)
+    queue_wait: f64,
 }
 
 impl SharedStages {
@@ -111,7 +116,12 @@ impl SharedStages {
 
         // result return (tiny payload)
         let ret = cost.t_transmit(result_elems, 32, bw.true_mbps(c_end));
-        LinkService { start: t_start, tx, finish: c_end + ret }
+        LinkService {
+            start: t_start,
+            tx,
+            finish: c_end + ret,
+            queue_wait: (c_start - t_end).max(0.0),
+        }
     }
 }
 
@@ -256,6 +266,7 @@ pub fn run_virtual(
     let mut dev_busy = 0.0f64;
     let mut link_busy = 0.0f64;
     let mut cloud_busy = 0.0f64;
+    let mut cloud_wait = 0.0f64;
 
     let mut outcomes = Vec::with_capacity(tasks.len());
     // the simulation frontier: jumps to each completion, never backwards
@@ -306,6 +317,7 @@ pub fn run_virtual(
                 );
                 link_busy += svc.tx;
                 cloud_busy += t_c;
+                cloud_wait += svc.queue_wait;
                 TaskOutcome {
                     id: task.id,
                     arrive: task.arrive,
@@ -338,6 +350,7 @@ pub fn run_virtual(
         device: StageUsage { busy: dev_busy, span, stall: 0.0 },
         link: StageUsage { busy: link_busy, span, stall: 0.0 },
         cloud: StageUsage { busy: cloud_busy, span, stall: 0.0 },
+        cloud_queue_wait_s: cloud_wait,
         plan: plan.telemetry(),
     }
 }
@@ -385,6 +398,11 @@ pub struct VirtualCfg {
     /// event-queue engine; both orderings are bit-for-bit identical,
     /// [`QueueEngine::Calendar`] is simply faster at fleet scale
     pub engine: QueueEngine,
+    /// cloud-side scheduler (`pipeline::batch`). The default
+    /// [`CloudPolicy::Fifo`] keeps the legacy one-item-at-a-time cloud
+    /// timeline — that path never touches the batching machinery, so
+    /// existing goldens are pinned bit-for-bit.
+    pub cloud: BatchCfg,
 }
 
 /// A transmission decided at device completion, awaiting its link
@@ -408,6 +426,116 @@ struct PendingTx {
     result_elems: usize,
 }
 
+/// A transmission parked in the batched cloud queue (`cloud_sched !=
+/// fifo`): the link has finished carrying it at `enq` and the batch
+/// scheduler decides when it joins a launch. `Copy` like [`PendingTx`].
+#[derive(Clone, Copy)]
+struct CloudJob {
+    si: usize,
+    id: usize,
+    arrive: f64,
+    /// cloud-queue entry instant (link completion `t_end`)
+    enq: f64,
+    bits: u8,
+    wire_bytes: usize,
+    label: usize,
+    t_c: f64,
+    t_c_par: f64,
+    result_elems: usize,
+}
+
+/// A formed batch in cloud service. Batches complete in formation order
+/// (the cloud is sequential), so `Ev::CloudDone` pops these FIFO.
+struct ServedBatch {
+    c_start: f64,
+    c_end: f64,
+    /// per-member service share charged to each stream's cloud meter
+    /// (`service / b` — sums to the batch service across members)
+    share: f64,
+    jobs: Vec<CloudJob>,
+}
+
+/// Mutable state of the batched cloud path, grouped so the formation
+/// logic is one function instead of a parameter storm. All fields stay
+/// empty on the fifo path.
+struct BatchState {
+    /// landed transmissions awaiting a batch, in link-completion order
+    cloudq: VecDeque<CloudJob>,
+    /// formed batches in service, completion (= formation) order
+    served: VecDeque<ServedBatch>,
+    /// end of the in-service batch — the cloud is busy until then
+    svc_end: f64,
+    /// batch-size histogram (`occupancy[b - 1]` counts size-`b` launches)
+    occupancy: Vec<u64>,
+    /// scratch scheduler view, reused across kicks to keep the hot loop
+    /// allocation-light
+    items: Vec<BatchItem>,
+}
+
+/// Attempt to form and launch cloud batches at `now` (called at every
+/// `Ev::CloudKick` and after each batch completion). Loops because a
+/// zero-service cloud can drain several batches at one instant; each
+/// admission removes at least one queued job, so it terminates.
+fn cloud_form<Q: EventQueue<Ev>>(
+    bcfg: &BatchCfg,
+    now: f64,
+    bst: &mut BatchState,
+    shared: &mut SharedStages,
+    events: &mut Q,
+) {
+    loop {
+        if now < bst.svc_end || bst.cloudq.is_empty() {
+            return;
+        }
+        bst.items.clear();
+        bst.items.extend(bst.cloudq.iter().map(|j| BatchItem {
+            stream: j.si,
+            enq: j.enq,
+            deadline: j.arrive + bcfg.slo,
+            shape: batch::shape_key(j.wire_bytes, j.bits),
+        }));
+        match batch::pick(bcfg, &bst.items, now) {
+            Pick::Wait => return,
+            Pick::Defer(t) => {
+                events.push(t, Ev::CloudKick);
+                return;
+            }
+            Pick::Admit(sel) => {
+                // indices ascend; remove back-to-front so they stay valid
+                let mut jobs = Vec::with_capacity(sel.len());
+                for &i in sel.iter().rev() {
+                    jobs.extend(bst.cloudq.remove(i));
+                }
+                jobs.reverse();
+                let b = jobs.len();
+                let t_land =
+                    jobs.iter().map(|j| j.enq).fold(f64::NEG_INFINITY, f64::max);
+                let overlap = jobs
+                    .iter()
+                    .map(|j| j.t_c_par.min(j.t_c))
+                    .fold(f64::INFINITY, f64::min);
+                let t_c = jobs.iter().map(|j| j.t_c).fold(0.0f64, f64::max);
+                let service = batch::service_secs(t_c, b);
+                // same cloud timeline rule as `SharedStages::transmit`,
+                // with the batch landing when its LAST member lands; at
+                // b = 1 this is bit-for-bit the fifo arithmetic
+                let c_start = shared.cloud_free.max(t_land - overlap);
+                let c_end = (c_start + service).max(t_land);
+                shared.cloud_free = c_end;
+                bst.svc_end = c_end;
+                bst.occupancy[(b - 1).min(bst.occupancy.len() - 1)] += 1;
+                bst.served.push_back(ServedBatch {
+                    c_start,
+                    c_end,
+                    share: service / b as f64,
+                    jobs,
+                });
+                events.push(c_end, Ev::CloudDone);
+            }
+        }
+    }
+}
+
 /// What happens when an event of the global queue fires. The `(t, seq)`
 /// ordering key lives inside the [`EventQueue`] engines.
 #[derive(Debug, Clone, Copy)]
@@ -416,6 +544,14 @@ enum Ev {
     Advance(usize),
     /// the stream's decided transmission attempts its link hand-off
     HandOff(usize),
+    /// (batched cloud only) attempt to form a batch from the cloud
+    /// queue — fired at each link completion and at scheduler-chosen
+    /// deferral instants; payload-free so `Ev` stays `Copy`
+    CloudKick,
+    /// (batched cloud only) the oldest in-service batch completes; the
+    /// member jobs live in the FIFO `served` queue, so the event needs
+    /// no payload
+    CloudDone,
 }
 
 /// Simulate N device streams feeding one FIFO link and one shared cloud
@@ -448,8 +584,9 @@ pub fn run_virtual_streams(
     bw: &BandwidthModel,
     cfg: VirtualCfg,
 ) -> MultiReport {
-    let (per_stream, events) = run_streams_engine(streams, bw, &cfg);
-    MultiReport { per_stream, events }
+    let (per_stream, events, batch_occupancy) =
+        run_streams_engine(streams, bw, &cfg);
+    MultiReport { per_stream, events, batch_occupancy }
 }
 
 /// Monomorphize the DES core on the configured queue engine. Either
@@ -459,7 +596,7 @@ fn run_streams_engine(
     streams: &mut [VirtualStream<'_>],
     bw: &BandwidthModel,
     cfg: &VirtualCfg,
-) -> (Vec<RunReport>, u64) {
+) -> (Vec<RunReport>, u64, Vec<u64>) {
     let hint = streams.len() * 2 + 4;
     match cfg.engine {
         QueueEngine::Heap => des_core(streams, bw, cfg, HeapQueue::with_capacity(hint)),
@@ -476,7 +613,7 @@ fn des_core<Q: EventQueue<Ev>>(
     bw: &BandwidthModel,
     cfg: &VirtualCfg,
     mut events: Q,
-) -> (Vec<RunReport>, u64) {
+) -> (Vec<RunReport>, u64, Vec<u64>) {
     let n = streams.len();
     let mut outcomes: Vec<Vec<TaskOutcome>> = streams
         .iter()
@@ -484,9 +621,20 @@ fn des_core<Q: EventQueue<Ev>>(
         .collect();
     let mut link_busy = vec![0.0f64; n];
     let mut cloud_busy = vec![0.0f64; n];
+    let mut cloud_wait = vec![0.0f64; n];
     let mut shared = SharedStages::default();
     let mut rt: StreamSlab<PendingTx> = StreamSlab::new(n, cfg.queue_cap);
     let mut fired = 0u64;
+
+    // ---- batched-cloud state (empty and untouched on the fifo path) ----
+    let batched = cfg.cloud.batched();
+    let mut bst = BatchState {
+        cloudq: VecDeque::new(),
+        served: VecDeque::new(),
+        svc_end: f64::NEG_INFINITY,
+        occupancy: vec![0u64; if batched { cfg.cloud.max_batch.max(1) } else { 1 }],
+        items: Vec::new(),
+    };
 
     for (si, st) in streams.iter().enumerate() {
         if let Some(first) = st.tasks.first() {
@@ -575,38 +723,107 @@ fn des_core<Q: EventQueue<Ev>>(
                     .take()
                     .expect("hand-off without a decided transmission");
                 let st = &streams[si];
-                let svc = shared.transmit(
-                    bw,
-                    st.cost,
-                    job.avail,
-                    job.d_end,
-                    job.wire_bytes,
-                    job.t_c,
-                    job.t_c_par,
-                    job.result_elems,
-                );
-                rt.windows.push(si, svc.start);
-                // backpressure extends the device timeline: the stall
-                // is idle (never busy) time, visible in the bubbles
-                rt.stall[si] += now - job.d_end;
-                rt.dev_free[si] = rt.dev_free[si].max(now);
-                link_busy[si] += svc.tx;
-                cloud_busy[si] += job.t_c;
-                outcomes[si].push(TaskOutcome {
-                    id: job.id,
-                    arrive: job.arrive,
-                    finish: svc.finish,
-                    latency: svc.finish - job.arrive,
-                    exited_early: false,
-                    bits: job.bits,
-                    wire_bytes: job.wire_bytes,
-                    label: job.label,
-                    correct: true,
-                });
-                events.push(now, Ev::Advance(si));
+                if !batched {
+                    let svc = shared.transmit(
+                        bw,
+                        st.cost,
+                        job.avail,
+                        job.d_end,
+                        job.wire_bytes,
+                        job.t_c,
+                        job.t_c_par,
+                        job.result_elems,
+                    );
+                    rt.windows.push(si, svc.start);
+                    // backpressure extends the device timeline: the stall
+                    // is idle (never busy) time, visible in the bubbles
+                    rt.stall[si] += now - job.d_end;
+                    rt.dev_free[si] = rt.dev_free[si].max(now);
+                    link_busy[si] += svc.tx;
+                    cloud_busy[si] += job.t_c;
+                    cloud_wait[si] += svc.queue_wait;
+                    bst.occupancy[0] += 1;
+                    outcomes[si].push(TaskOutcome {
+                        id: job.id,
+                        arrive: job.arrive,
+                        finish: svc.finish,
+                        latency: svc.finish - job.arrive,
+                        exited_early: false,
+                        bits: job.bits,
+                        wire_bytes: job.wire_bytes,
+                        label: job.label,
+                        correct: true,
+                    });
+                    events.push(now, Ev::Advance(si));
+                } else {
+                    // split link pass: identical link arithmetic to
+                    // `SharedStages::transmit`, but the cloud leg is
+                    // deferred to the batch scheduler
+                    let t_start = shared.link_free.max(job.avail);
+                    let tx = bw.transmit_time(job.wire_bytes, t_start)
+                        + st.cost.rtt_half;
+                    let t_end = (t_start + tx).max(job.d_end);
+                    shared.link_free = t_end;
+                    rt.windows.push(si, t_start);
+                    rt.stall[si] += now - job.d_end;
+                    rt.dev_free[si] = rt.dev_free[si].max(now);
+                    link_busy[si] += tx;
+                    bst.cloudq.push_back(CloudJob {
+                        si,
+                        id: job.id,
+                        arrive: job.arrive,
+                        enq: t_end,
+                        bits: job.bits,
+                        wire_bytes: job.wire_bytes,
+                        label: job.label,
+                        t_c: job.t_c,
+                        t_c_par: job.t_c_par,
+                        result_elems: job.result_elems,
+                    });
+                    events.push(t_end, Ev::CloudKick);
+                    events.push(now, Ev::Advance(si));
+                }
+            }
+            Ev::CloudKick => {
+                cloud_form(&cfg.cloud, now, &mut bst, &mut shared, &mut events);
+            }
+            Ev::CloudDone => {
+                let done = bst
+                    .served
+                    .pop_front()
+                    .expect("CloudDone without an in-service batch");
+                for job in &done.jobs {
+                    let st = &streams[job.si];
+                    let ret = st.cost.t_transmit(
+                        job.result_elems,
+                        32,
+                        bw.true_mbps(done.c_end),
+                    );
+                    let finish = done.c_end + ret;
+                    cloud_busy[job.si] += done.share;
+                    cloud_wait[job.si] += (done.c_start - job.enq).max(0.0);
+                    outcomes[job.si].push(TaskOutcome {
+                        id: job.id,
+                        arrive: job.arrive,
+                        finish,
+                        latency: finish - job.arrive,
+                        exited_early: false,
+                        bits: job.bits,
+                        wire_bytes: job.wire_bytes,
+                        label: job.label,
+                        correct: true,
+                    });
+                }
+                // the cloud just freed up: anything still queued forms
+                // its next batch immediately
+                cloud_form(&cfg.cloud, now, &mut bst, &mut shared, &mut events);
             }
         }
     }
+    debug_assert!(
+        bst.cloudq.is_empty() && bst.served.is_empty(),
+        "batched cloud queue drained"
+    );
 
     // ---- assemble per-stream reports -----------------------------------
     // model names are interned per distinct graph (fleets share one or
@@ -640,10 +857,11 @@ fn des_core<Q: EventQueue<Ev>>(
             },
             link: StageUsage { busy: link_busy[si], span, stall: 0.0 },
             cloud: StageUsage { busy: cloud_busy[si], span, stall: 0.0 },
+            cloud_queue_wait_s: cloud_wait[si],
             plan: st.plan.telemetry(),
         });
     }
-    (per_stream, fired)
+    (per_stream, fired, bst.occupancy)
 }
 
 // ---------------------------------------------------------------------
@@ -679,12 +897,14 @@ pub fn run_virtual_shards(
     let total: usize = shards.iter().map(|s| s.streams.len()).sum();
     let mut slots: Vec<Option<RunReport>> = (0..total).map(|_| None).collect();
     let mut events = 0u64;
-    let merged: Vec<(Vec<usize>, Vec<RunReport>, u64)> = if shards.len() <= 1 {
+    type ShardOut = (Vec<usize>, Vec<RunReport>, u64, Vec<u64>);
+    let merged: Vec<ShardOut> = if shards.len() <= 1 {
         shards
             .iter_mut()
             .map(|shard| {
-                let (reports, ev) = run_streams_engine(&mut shard.streams, bw, &cfg);
-                (std::mem::take(&mut shard.indices), reports, ev)
+                let (reports, ev, occ) =
+                    run_streams_engine(&mut shard.streams, bw, &cfg);
+                (std::mem::take(&mut shard.indices), reports, ev, occ)
             })
             .collect()
     } else {
@@ -693,9 +913,9 @@ pub fn run_virtual_shards(
                 .into_iter()
                 .map(|mut shard| {
                     scope.spawn(move || {
-                        let (reports, ev) =
+                        let (reports, ev, occ) =
                             run_streams_engine(&mut shard.streams, bw, &cfg);
-                        (shard.indices, reports, ev)
+                        (shard.indices, reports, ev, occ)
                     })
                 })
                 .collect();
@@ -705,8 +925,17 @@ pub fn run_virtual_shards(
                 .collect()
         })
     };
-    for (indices, reports, ev) in merged {
+    // element-wise sum of the shard batch-size histograms: every shard
+    // runs the same `cfg.cloud`, so the buckets line up
+    let mut batch_occupancy: Vec<u64> = Vec::new();
+    for (indices, reports, ev, occ) in merged {
         events += ev;
+        if batch_occupancy.len() < occ.len() {
+            batch_occupancy.resize(occ.len(), 0);
+        }
+        for (a, b) in batch_occupancy.iter_mut().zip(&occ) {
+            *a += *b;
+        }
         debug_assert_eq!(indices.len(), reports.len());
         for (idx, r) in indices.into_iter().zip(reports) {
             debug_assert!(slots[idx].is_none(), "duplicate stream index {idx}");
@@ -719,6 +948,7 @@ pub fn run_virtual_shards(
             .map(|o| o.expect("shard indices must cover 0..total"))
             .collect(),
         events,
+        batch_occupancy,
     }
 }
 
@@ -745,6 +975,9 @@ pub struct RealCfg {
     /// which serving engine runs the fleet (thread-per-stream reference
     /// vs fixed worker pool — see [`crate::serve`])
     pub runtime: crate::serve::Runtime,
+    /// cloud-side scheduler (`pipeline::batch`); the default fifo keeps
+    /// the legacy one-item-at-a-time shared cloud
+    pub cloud: BatchCfg,
     pub scheme: String,
     pub model: String,
 }
@@ -757,6 +990,7 @@ impl Default for RealCfg {
             rtt_half: 0.0,
             result_wire_bytes: 0,
             runtime: crate::serve::Runtime::default(),
+            cloud: BatchCfg::default(),
             scheme: "real".into(),
             model: String::new(),
         }
@@ -931,6 +1165,14 @@ impl CloudStage for SimCloud {
             busy: wire.t_c.max(0.0),
         }
     }
+
+    /// The simulated cloud is stateless, so every pooled worker can own
+    /// a replica — cloud service (and batch launches) then dispatch on
+    /// whichever worker finds the queue ready instead of serializing
+    /// behind worker 0.
+    fn replicate() -> Option<Self> {
+        Some(SimCloud)
+    }
 }
 
 #[cfg(test)]
@@ -998,7 +1240,12 @@ mod tests {
                     drop_after: None,
                 }],
                 &bw,
-                VirtualCfg { queue_cap: None, drop_after: Some(0.05), engine },
+                VirtualCfg {
+                    queue_cap: None,
+                    drop_after: Some(0.05),
+                    engine,
+                    ..VirtualCfg::default()
+                },
             );
             let r = &multi.per_stream[0];
             assert_eq!(r.dropped, legacy.dropped, "{engine:?}");

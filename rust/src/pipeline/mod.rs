@@ -24,10 +24,15 @@
 //!   [`driver::VirtualCfg::engine`]);
 //! - [`slab`] — contiguous struct-of-arrays per-stream runtime state of
 //!   the multi-stream DES (allocation-free hot loop);
-//! - [`stage_model`] — analytic per-task stage timings from a strategy.
+//! - [`stage_model`] — analytic per-task stage timings from a strategy;
+//! - [`batch`] — cloud-side batching/scheduling policies (fifo
+//!   reference, dynamic batching, SLO-aware EDF) shared by the DES and
+//!   the wall-clock runtime, plus the congestion estimate Eq. 11
+//!   prices transmissions with.
 //!
 //! The supported front door is `crate::scenario::Scenario`.
 
+pub mod batch;
 pub mod driver;
 pub mod evq;
 pub mod policy;
@@ -36,6 +41,7 @@ pub mod slab;
 pub mod stage;
 pub mod stage_model;
 
+pub use batch::{BatchCfg, CloudCongestion, CloudPolicy};
 pub use driver::{
     run_real, run_virtual, run_virtual_shards, run_virtual_streams, FleetShard,
     RealCfg, VirtualCfg, VirtualStream,

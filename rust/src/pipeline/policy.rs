@@ -21,6 +21,7 @@ use crate::cache::Thresholds;
 use crate::model::{CostModel, ModelGraph};
 use crate::quant::clamp_bits;
 
+use super::batch::CloudCongestion;
 use super::stage_model::StageModel;
 
 /// Per-task decision of the online component.
@@ -54,6 +55,12 @@ pub trait OnlinePolicy {
     /// state (warmup, caches) persists across the switch. Fixed
     /// policies ignore it.
     fn replan(&mut self, _sm: &StageModel, _base_bits: u8) {}
+    /// called once at fleet assembly when the shared cloud runs a
+    /// batching scheduler: adopt the congestion estimate so Eq. 11
+    /// prices expected queueing plus the amortized service instead of
+    /// the solo `t_c`. The neutral default estimate is bit-identical to
+    /// not calling this at all; fixed policies ignore it.
+    fn set_cloud_congestion(&mut self, _c: CloudCongestion) {}
 }
 
 /// Boxed policies pass through the hook unchanged — the scenario layer
@@ -69,6 +76,10 @@ impl OnlinePolicy for Box<dyn OnlinePolicy + Send> {
 
     fn replan(&mut self, sm: &StageModel, base_bits: u8) {
         (**self).replan(sm, base_bits);
+    }
+
+    fn set_cloud_congestion(&mut self, c: CloudCongestion) {
+        (**self).set_cloud_congestion(c);
     }
 }
 
@@ -107,6 +118,15 @@ pub trait TransmitCost {
     /// models re-price; measured costs refresh themselves per decision
     /// and ignore it)
     fn set_stage_model(&mut self, _sm: &StageModel) {}
+    /// adopt a shared-cloud congestion estimate
+    /// (`pipeline::batch::CloudCongestion`): under a batching cloud
+    /// scheduler the effective cloud stage time is the amortized
+    /// `t_c * scale + expected queueing`, not the solo `t_c` the paper
+    /// assumes, and Eq. 11's stage target must see it or the precision
+    /// search balances against the wrong pipeline. The default no-op
+    /// keeps fifo deployments (and cost models that never learn the
+    /// fleet shape) priced exactly as before.
+    fn set_cloud_congestion(&mut self, _c: CloudCongestion) {}
 }
 
 /// Eq. 11's Q_c selection: the highest precision in
@@ -198,11 +218,20 @@ pub struct ModelTransmitCost {
     pub cost: CostModel,
     pub graph: ModelGraph,
     all_cloud: bool,
+    /// shared-cloud pricing (neutral by default: `t_c * 1.0 + 0.0` is
+    /// bit-identical to the paper's solo `t_c`)
+    congestion: CloudCongestion,
 }
 
 impl ModelTransmitCost {
     pub fn new(sm: StageModel, cost: CostModel, graph: ModelGraph) -> Self {
-        ModelTransmitCost { all_cloud: sm.cut_elems.is_empty(), sm, cost, graph }
+        ModelTransmitCost {
+            all_cloud: sm.cut_elems.is_empty(),
+            sm,
+            cost,
+            graph,
+            congestion: CloudCongestion::default(),
+        }
     }
 }
 
@@ -213,12 +242,16 @@ impl TransmitCost for ModelTransmitCost {
     }
 
     fn stage_target(&self) -> f64 {
-        self.sm.t_e.max(self.sm.t_c)
+        self.sm.t_e.max(self.congestion.cloud_secs(self.sm.t_c))
     }
 
     fn set_stage_model(&mut self, sm: &StageModel) {
         self.all_cloud = sm.cut_elems.is_empty();
         self.sm = sm.clone();
+    }
+
+    fn set_cloud_congestion(&mut self, c: CloudCongestion) {
+        self.congestion = c;
     }
 }
 
@@ -235,6 +268,8 @@ pub struct MeasuredTransmitCost {
     pub t_e: f64,
     /// measured cloud stage time
     pub t_c: f64,
+    /// shared-cloud pricing (neutral = solo `t_c`, the legacy target)
+    pub congestion: CloudCongestion,
 }
 
 impl TransmitCost for MeasuredTransmitCost {
@@ -243,7 +278,11 @@ impl TransmitCost for MeasuredTransmitCost {
     }
 
     fn stage_target(&self) -> f64 {
-        self.t_e.max(self.t_c)
+        self.t_e.max(self.congestion.cloud_secs(self.t_c))
+    }
+
+    fn set_cloud_congestion(&mut self, c: CloudCongestion) {
+        self.congestion = c;
     }
 }
 
@@ -266,6 +305,10 @@ impl<C: TransmitCost> OnlinePolicy for Coach<C> {
     fn replan(&mut self, sm: &StageModel, base_bits: u8) {
         self.cost.set_stage_model(sm);
         self.policy.base_bits = base_bits;
+    }
+
+    fn set_cloud_congestion(&mut self, c: CloudCongestion) {
+        self.cost.set_cloud_congestion(c);
     }
 }
 
@@ -384,12 +427,47 @@ mod tests {
             DeviceProfile::jetson_nx(),
             DeviceProfile::cloud_a6000(),
         );
-        let mc = MeasuredTransmitCost { elems: 4096, cost, t_e: 0.004, t_c: 0.009 };
+        let mc = MeasuredTransmitCost {
+            elems: 4096,
+            cost,
+            t_e: 0.004,
+            t_c: 0.009,
+            congestion: CloudCongestion::default(),
+        };
         assert!((mc.stage_target() - 0.009).abs() < 1e-12);
         // ample bandwidth: full base precision fits under the target
         let bits = select_precision(2, 8, mc.stage_target(), |b| {
             mc.t_transmit(b, 100.0)
         });
         assert_eq!(bits, 8);
+    }
+
+    #[test]
+    fn congestion_shifts_the_stage_target() {
+        let cost = CostModel::new(
+            DeviceProfile::jetson_nx(),
+            DeviceProfile::cloud_a6000(),
+        );
+        let mut mc = MeasuredTransmitCost {
+            elems: 4096,
+            cost,
+            t_e: 0.004,
+            t_c: 0.009,
+            congestion: CloudCongestion::default(),
+        };
+        let neutral = mc.stage_target();
+        assert_eq!(neutral.to_bits(), 0.009f64.to_bits(), "neutral = solo t_c");
+        // a congested cloud with amortized service: the target follows
+        // t_c * scale + wait, floored by the device stage
+        mc.set_cloud_congestion(CloudCongestion {
+            queue_wait: 0.002,
+            service_scale: 0.5,
+        });
+        assert!((mc.stage_target() - (0.009 * 0.5 + 0.002)).abs() < 1e-12);
+        mc.set_cloud_congestion(CloudCongestion {
+            queue_wait: 0.0,
+            service_scale: 0.1,
+        });
+        assert!((mc.stage_target() - 0.004).abs() < 1e-12, "device floor");
     }
 }

@@ -183,6 +183,15 @@ impl<T> BoundedSender<T> {
     }
 }
 
+/// Outcome of a timed receive on a [`BoundedReceiver`].
+pub enum RecvTimeout<T> {
+    Item(T),
+    /// no item landed within the window (senders still alive)
+    Timeout,
+    /// every sender dropped and the queue drained
+    Closed,
+}
+
 impl<T> BoundedReceiver<T> {
     /// Blocks until an item arrives; `None` once every sender has
     /// dropped and the queue drained.
@@ -198,6 +207,31 @@ impl<T> BoundedReceiver<T> {
                 return None;
             }
             g = self.shared.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Like [`BoundedReceiver::recv`] with a bounded wait — the batch
+    /// accumulation primitive of the threaded cloud shim: returns
+    /// `Timeout` once `dur` elapses with no item.
+    pub fn recv_timeout(&self, dur: Duration) -> RecvTimeout<T> {
+        let deadline = Instant::now() + dur; // xtask: allow(wall-clock)
+        let mut g = self.shared.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.buf.pop_front() {
+                drop(g);
+                self.shared.not_full.notify_one();
+                return RecvTimeout::Item(item);
+            }
+            if g.senders == 0 {
+                return RecvTimeout::Closed;
+            }
+            let now = Instant::now(); // xtask: allow(wall-clock)
+            if now >= deadline {
+                return RecvTimeout::Timeout;
+            }
+            let (g2, _) =
+                self.shared.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
         }
     }
 }
@@ -377,6 +411,19 @@ pub trait CloudStage {
         wire: Self::Wire,
     ) -> CloudPoll<Self::Wire, Self::Feedback> {
         CloudPoll::Sync(wire)
+    }
+
+    /// Build an extra instance for another pooled worker, so cloud
+    /// service dispatches on whichever worker finds the shared queue
+    /// ready instead of serializing behind worker 0. Only poll-capable
+    /// (modeled-service) stages should replicate; the default `None`
+    /// keeps blocking-only stages — a real PJRT engine owns device
+    /// state — pinned to the single factory-built instance on worker 0.
+    fn replicate() -> Option<Self>
+    where
+        Self: Sized,
+    {
+        None
     }
 }
 

@@ -88,6 +88,14 @@ impl StageModel {
     pub fn wire_bytes(&self, cost: &CostModel, bits: u8) -> usize {
         self.cut_elems.iter().map(|&e| cost.wire_bytes(e, bits)).sum()
     }
+
+    /// Calibrated aggregate-throughput speedup of servicing `b`
+    /// shape-compatible tasks as one cloud batch instead of `b` solo
+    /// launches (see `pipeline::batch` for the amortization curve;
+    /// exactly 1.0 at `b = 1`).
+    pub fn batch_speedup(b: usize) -> f64 {
+        crate::pipeline::batch::speedup(b)
+    }
 }
 
 #[cfg(test)]

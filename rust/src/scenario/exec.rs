@@ -33,7 +33,8 @@ use crate::pipeline::driver::{
     SimDevice, VirtualCfg, VirtualStream,
 };
 use crate::pipeline::{
-    ActivePlan, OnlinePolicy, StageModel, StaticPolicy, WallClock,
+    ActivePlan, CloudCongestion, OnlinePolicy, StageModel, StaticPolicy,
+    WallClock,
 };
 use crate::runtime::Manifest;
 use crate::sim::{generate, SimTask};
@@ -277,6 +278,25 @@ impl Scenario {
     /// priced against (the active rung's) stage model and offline base
     /// precision.
     pub(crate) fn make_policy(
+        &self,
+        base_bits: u8,
+        sm: &StageModel,
+        cost: &CostModel,
+        g: &ModelGraph,
+    ) -> Box<dyn OnlinePolicy + Send> {
+        let mut policy = self.make_policy_inner(base_bits, sm, cost, g);
+        // price the shared cloud the fleet will actually experience:
+        // expected batch-formation wait + amortized service (Eq. 11's
+        // stage target). The fifo estimate is the neutral identity, so
+        // the legacy single-stream goldens are untouched.
+        policy.set_cloud_congestion(CloudCongestion::estimate(
+            &self.batch_cfg(),
+            self.stream_specs().len(),
+        ));
+        policy
+    }
+
+    fn make_policy_inner(
         &self,
         base_bits: u8,
         sm: &StageModel,
@@ -544,6 +564,7 @@ impl Scenario {
             // models the same backpressure on every multi-stream driver
             VirtualCfg {
                 queue_cap: Some(self.queue_cap.unwrap_or(8)),
+                cloud: self.batch_cfg(),
                 ..VirtualCfg::default()
             },
         ))
@@ -607,6 +628,7 @@ impl Scenario {
                 result_wire_bytes: base_cost
                     .wire_bytes(g.layers[g.sink()].out_elems, 32),
                 runtime: self.runtime,
+                cloud: self.batch_cfg(),
                 scheme: self.report_label(),
                 model: self.model.clone(),
             },
@@ -694,6 +716,7 @@ impl Scenario {
             queue_cap: self.queue_cap.unwrap_or(8),
             runtime: self.runtime,
             replan,
+            cloud: self.batch_cfg(),
         };
         let streams: Vec<StreamCfg> = specs
             .iter()

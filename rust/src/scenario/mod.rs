@@ -272,6 +272,16 @@ pub struct Scenario {
     /// scheduler ([`crate::serve::Runtime`]). Ignored by the virtual
     /// (DES) drivers.
     pub runtime: crate::serve::Runtime,
+    /// cloud-queue scheduler (TOML `[serve] cloud_sched`): strict FIFO
+    /// (the bit-for-bit reference), dynamic shape-compatible batching,
+    /// or SLO-aware EDF admission. Applies to every multi-stream driver
+    /// — DES and wall-clock alike.
+    pub cloud_sched: crate::pipeline::CloudPolicy,
+    /// largest cloud batch one launch may carry (`[serve] max_batch`)
+    pub max_batch: usize,
+    /// longest the cloud holds a queue head waiting for its batch to
+    /// fill, microseconds (`[serve] max_wait_us`)
+    pub max_wait_us: f64,
     /// report scheme label override (default: the scheme's name)
     pub label: Option<String>,
 }
@@ -306,6 +316,9 @@ impl Scenario {
             cut: None,
             audit_every: 0,
             runtime: crate::serve::Runtime::default(),
+            cloud_sched: crate::pipeline::CloudPolicy::Fifo,
+            max_batch: 8,
+            max_wait_us: 200.0,
             label: None,
         }
     }
@@ -504,6 +517,42 @@ impl Scenario {
     pub fn runtime(mut self, rt: crate::serve::Runtime) -> Self {
         self.runtime = rt;
         self
+    }
+
+    /// Select the cloud-queue scheduler (fifo | batch | slo).
+    pub fn cloud_sched(mut self, p: crate::pipeline::CloudPolicy) -> Self {
+        self.cloud_sched = p;
+        self
+    }
+
+    /// Cap the cloud batch width (>= 1; meaningful under batch/slo).
+    pub fn max_batch(mut self, b: usize) -> Self {
+        self.max_batch = b.max(1);
+        self
+    }
+
+    /// Batch-formation hold window in microseconds.
+    pub fn max_wait_us(mut self, us: f64) -> Self {
+        self.max_wait_us = us.max(0.0);
+        self
+    }
+
+    /// Resolve the `[serve]` cloud-scheduler knobs into the
+    /// [`crate::pipeline::BatchCfg`] every driver config carries.
+    /// SLO-aware deadlines come from an explicit [`Slo::Secs`]; the
+    /// paper rule and unbounded runs deadline at infinity, which
+    /// degrades EDF head selection to FIFO order (the fair-share cap
+    /// still applies).
+    pub fn batch_cfg(&self) -> crate::pipeline::BatchCfg {
+        crate::pipeline::BatchCfg {
+            policy: self.cloud_sched,
+            max_batch: self.max_batch.max(1),
+            max_wait: self.max_wait_us.max(0.0) * 1e-6,
+            slo: match self.slo {
+                Slo::Secs(t) => t,
+                Slo::Paper | Slo::Unbounded => f64::INFINITY,
+            },
+        }
     }
 
     /// Override the scheme label written into reports.

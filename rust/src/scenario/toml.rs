@@ -20,7 +20,8 @@
 //!             load_factor, correlation (none|low|medium|high), seed,
 //!             n_classes, drop_after_ms, drop_after_periods
 //! [serve]     n_streams, device_scale, cut, audit_every, queue_cap,
-//!             n_links, runtime (threaded|pooled)
+//!             n_links, runtime (threaded|pooled),
+//!             cloud_sched (fifo|batch|slo), max_batch, max_wait_us
 //! [replan]    enabled, min_mbps, max_mbps, rungs, k,
 //!             serve_cuts ("mbps:cut,mbps:cut,..")
 //! [stream.N]  scale, cut, period_ms, seed, correlation, n_tasks,
@@ -76,6 +77,9 @@ const KNOWN: &[(&str, &[&str])] = &[
             "queue_cap",
             "n_links",
             "runtime",
+            "cloud_sched",
+            "max_batch",
+            "max_wait_us",
         ],
     ),
     (
@@ -388,6 +392,22 @@ impl Scenario {
             sc.runtime = crate::serve::Runtime::parse(r)
                 .context("serve.runtime")?;
         }
+        if let Some(p) = raw.get("serve", "cloud_sched") {
+            sc.cloud_sched = crate::pipeline::CloudPolicy::parse(p)
+                .context("serve.cloud_sched")?;
+        }
+        if let Some(b) = raw.get_f64("serve", "max_batch")? {
+            if b < 1.0 {
+                bail!("serve.max_batch must be >= 1, got {b}");
+            }
+            sc.max_batch = b as usize;
+        }
+        if let Some(w) = raw.get_f64("serve", "max_wait_us")? {
+            if w < 0.0 {
+                bail!("serve.max_wait_us must be >= 0, got {w}");
+            }
+            sc.max_wait_us = w;
+        }
 
         // ---- [replan] --------------------------------------------------
         if raw.sections.contains("replan") {
@@ -534,6 +554,31 @@ queue_cap = 4
             .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("unknown runtime 'fibers'"), "got: {msg}");
+    }
+
+    #[test]
+    fn serve_cloud_sched_parses() {
+        use crate::pipeline::CloudPolicy;
+        let sc = Scenario::from_toml(
+            "[serve]\ncloud_sched = \"batch\"\nmax_batch = 16\n\
+             max_wait_us = 500\n",
+        )
+        .unwrap();
+        assert_eq!(sc.cloud_sched, CloudPolicy::DynBatch);
+        assert_eq!(sc.max_batch, 16);
+        assert!((sc.max_wait_us - 500.0).abs() < 1e-12);
+        let b = sc.batch_cfg();
+        assert_eq!(b.policy, CloudPolicy::DynBatch);
+        assert_eq!(b.max_batch, 16);
+        assert!((b.max_wait - 500e-6).abs() < 1e-15);
+        // default stays the bit-for-bit fifo reference
+        let d = Scenario::from_toml("").unwrap();
+        assert_eq!(d.cloud_sched, CloudPolicy::Fifo);
+        assert!(!d.batch_cfg().batched());
+        assert!(
+            Scenario::from_toml("[serve]\ncloud_sched = \"edf\"\n").is_err()
+        );
+        assert!(Scenario::from_toml("[serve]\nmax_batch = 0\n").is_err());
     }
 
     #[test]

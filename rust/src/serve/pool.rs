@@ -36,6 +36,7 @@ use anyhow::{Context, Result};
 
 use crate::metrics::{MultiReport, PlanTelemetry, TaskOutcome};
 use crate::network::BandwidthModel;
+use crate::pipeline::batch::{self, BatchCfg, BatchItem, Pick};
 use crate::pipeline::driver::RealCfg;
 use crate::pipeline::stage::{
     BusyMeter, Clock, CloudPoll, CloudStage, DeviceStage, DeviceVerdict,
@@ -92,6 +93,9 @@ enum Wake<W, F> {
     LinkDone { item: LinkItem<W>, secs: f64 },
     /// modeled cloud service completed
     CloudDone(CloudFinish<F>),
+    /// batch-formation deadline (a deferred queue head ripened); the
+    /// next step-3 pass re-attempts formation
+    CloudKick,
 }
 
 /// A finished cloud service waiting to be priced and reported.
@@ -128,6 +132,15 @@ struct Core<W, F> {
     /// bounded FIFO feeding the shared cloud stage
     cloud_queue: VecDeque<LinkItem<W>>,
     cloud_busy: bool,
+    /// member completions outstanding on the in-flight cloud launch
+    /// (batch mode; 0 under fifo where `cloud_busy` alone gates)
+    cloud_pending: usize,
+    /// a `Wake::CloudKick` formation timer is armed (dedupes re-arming)
+    kick_armed: bool,
+    /// per-stream seconds between cloud-queue entry and launch
+    cloud_wait: Vec<f64>,
+    /// formed-batch size histogram (`[b-1]` counts size-`b` launches)
+    batch_occ: Vec<u64>,
     /// per-stream feedback mailboxes (drained at the next task poll,
     /// like the threaded device loop's `try_recv` drain)
     feedback: Vec<Vec<F>>,
@@ -164,6 +177,7 @@ struct Pool<W, F> {
     rtt_half: f64,
     ret_bytes: usize,
     drop_after: Option<f64>,
+    batch: BatchCfg,
     link_meters: Vec<BusyMeter>,
     cloud_meters: Vec<BusyMeter>,
 }
@@ -189,6 +203,7 @@ impl<W, F> Pool<W, F> {
             }
             Wake::LinkDone { item, secs } => self.link_done(core, item, secs),
             Wake::CloudDone(fin) => self.cloud_done(core, fin),
+            Wake::CloudKick => core.kick_armed = false,
         }
     }
 
@@ -218,8 +233,17 @@ impl<W, F> Pool<W, F> {
 
     /// A transmission completed: hand it to the cloud queue, or stall
     /// the link on the full queue like the threaded link thread does.
-    fn link_done(&self, core: &mut Core<W, F>, item: LinkItem<W>, secs: f64) {
+    fn link_done(
+        &self,
+        core: &mut Core<W, F>,
+        mut item: LinkItem<W>,
+        secs: f64,
+    ) {
         self.link_meters[item.stream].add_secs(secs);
+        // cloud-queue entry instant (telemetry + the batch scheduler's
+        // wait window); a blocked item keeps this stamp, matching the
+        // threaded link thread stamping before its `send` blocks
+        item.enq = self.clock.now();
         if core.cloud_queue.len() < self.cap {
             core.cloud_queue.push_back(item);
             core.link_busy = false;
@@ -252,7 +276,75 @@ impl<W, F> Pool<W, F> {
             correct: fin.label == fin.label_hint,
         });
         core.feedback[fin.stream].push(fin.feedback);
-        core.cloud_busy = false;
+        // under batching the launch stays busy until every member
+        // reports; fifo dispatches leave `cloud_pending` at 0 so the
+        // subtraction saturates and the release is immediate
+        core.cloud_pending = core.cloud_pending.saturating_sub(1);
+        if core.cloud_pending == 0 {
+            core.cloud_busy = false;
+        }
+    }
+
+    /// Attempt batch formation over the cloud queue (caller holds the
+    /// lock; batch mode only). `Some` hands back the admitted members —
+    /// the cloud is marked busy and their queue wait is charged; the
+    /// caller services them outside the lock. `None` means nothing
+    /// launches yet (a formation timer is armed on `Pick::Defer`).
+    fn form_batch(
+        &self,
+        core: &mut Core<W, F>,
+    ) -> Option<(Vec<LinkItem<W>>, f64)> {
+        if core.cloud_busy || core.cloud_queue.is_empty() || core.abort {
+            return None;
+        }
+        let now = self.clock.now();
+        let items: Vec<BatchItem> = core
+            .cloud_queue
+            .iter()
+            .map(|it| BatchItem {
+                stream: it.stream,
+                enq: it.enq,
+                deadline: it.enq + self.batch.slo,
+                shape: batch::shape_key(it.wire_bytes, it.bits),
+            })
+            .collect();
+        match batch::pick(&self.batch, &items, now) {
+            Pick::Wait => None,
+            Pick::Defer(t) => {
+                if !core.kick_armed {
+                    core.kick_armed = true;
+                    core.timers.insert(t.max(now), Wake::CloudKick);
+                }
+                None
+            }
+            Pick::Admit(sel) => {
+                let mut members = Vec::with_capacity(sel.len());
+                // back-to-front so earlier indices stay valid
+                for &i in sel.iter().rev() {
+                    if let Some(it) = core.cloud_queue.remove(i) {
+                        members.push(it);
+                    }
+                }
+                members.reverse();
+                if members.is_empty() {
+                    return None;
+                }
+                for it in &members {
+                    core.cloud_wait[it.stream] += (now - it.enq).max(0.0);
+                }
+                core.cloud_busy = true;
+                core.cloud_pending = members.len();
+                // cloud-queue slots opened: release the stalled link
+                // hand-off (the threaded link thread's blocked `send`
+                // completing)
+                if let Some(blocked) = core.link_blocked.take() {
+                    core.cloud_queue.push_back(blocked);
+                    core.link_busy = false;
+                    self.link_start(core);
+                }
+                Some((members, now))
+            }
+        }
     }
 }
 
@@ -439,6 +531,9 @@ where
                     bits,
                     wire_bytes,
                     label_hint,
+                    // placeholder; `link_done` stamps the real
+                    // cloud-queue entry instant
+                    enq: started,
                     payload: wire,
                 }))
             }
@@ -513,8 +608,11 @@ fn worker_loop<D, C, DF, CF>(
             )
         })
         .collect();
-    // the shared cloud stage lives on worker 0 (built here because it
-    // need not be Send), mirroring the threaded engine's eager build
+    // the factory-built cloud stage lives on worker 0 (built here
+    // because it need not be Send), mirroring the threaded engine's
+    // eager build; poll-capable stages replicate onto every other
+    // worker so cloud dispatch is not serialized behind worker 0
+    // (blocking-only stages return `None` and stay pinned)
     let mut cloud: Option<C> = None;
     if let Some(cf) = cloud_factory {
         match cf() {
@@ -528,6 +626,8 @@ fn worker_loop<D, C, DF, CF>(
                 return;
             }
         }
+    } else {
+        cloud = C::replicate();
     }
 
     let mut guard = pool.lock_core();
@@ -549,20 +649,111 @@ fn worker_loop<D, C, DF, CF>(
         if pool.link_start(&mut guard) {
             pool.wakeup.notify_all();
         }
-        // 3) worker 0 services the shared cloud stage
+        // 3) service the shared cloud stage — any worker holding an
+        // instance (worker 0 always; others via `CloudStage::replicate`)
         if let Some(cloud_stage) = cloud.as_mut() {
-            if !guard.cloud_busy {
-                if let Some(item) = guard.cloud_queue.pop_front() {
-                    guard.cloud_busy = true;
-                    // a cloud slot opened: release a stalled link
-                    // hand-off (the threaded link thread's blocked
-                    // `send` completing)
-                    if let Some(blocked) = guard.link_blocked.take() {
-                        guard.cloud_queue.push_back(blocked);
-                        guard.link_busy = false;
-                        pool.link_start(&mut guard);
+            if !pool.batch.batched() {
+                // fifo reference path: one item at a time, arrival order
+                if !guard.cloud_busy {
+                    if let Some(item) = guard.cloud_queue.pop_front() {
+                        guard.cloud_busy = true;
+                        guard.cloud_wait[item.stream] +=
+                            (pool.clock.now() - item.enq).max(0.0);
+                        batch::record_occupancy(&mut guard.batch_occ, 1);
+                        // a cloud slot opened: release a stalled link
+                        // hand-off (the threaded link thread's blocked
+                        // `send` completing)
+                        if let Some(blocked) = guard.link_blocked.take() {
+                            guard.cloud_queue.push_back(blocked);
+                            guard.link_busy = false;
+                            pool.link_start(&mut guard);
+                        }
+                        pool.wakeup.notify_all();
+                        let LinkItem {
+                            stream,
+                            id,
+                            arrive,
+                            bits,
+                            wire_bytes,
+                            label_hint,
+                            enq: _,
+                            payload,
+                        } = item;
+                        drop(guard);
+                        match cloud_stage.poll_process(payload) {
+                            CloudPoll::Ready { label, feedback, busy } => {
+                                // modeled service: park it on the wheel
+                                let mut g = pool.lock_core();
+                                g.timers.insert(
+                                    pool.clock.now() + busy,
+                                    Wake::CloudDone(CloudFinish {
+                                        stream,
+                                        id,
+                                        arrive,
+                                        bits,
+                                        wire_bytes,
+                                        label_hint,
+                                        label,
+                                        feedback,
+                                        busy,
+                                    }),
+                                );
+                                drop(g);
+                                pool.wakeup.notify_all();
+                            }
+                            CloudPoll::Sync(wire) => {
+                                // blocking-only stage: real compute
+                                // occupies this worker, measured like
+                                // the threaded cloud thread
+                                let s = Instant::now();
+                                match cloud_stage.process(wire) {
+                                    Ok((label, feedback)) => {
+                                        let busy = s.elapsed().as_secs_f64();
+                                        let mut g = pool.lock_core();
+                                        pool.cloud_done(
+                                            &mut g,
+                                            CloudFinish {
+                                                stream,
+                                                id,
+                                                arrive,
+                                                bits,
+                                                wire_bytes,
+                                                label_hint,
+                                                label,
+                                                feedback,
+                                                busy,
+                                            },
+                                        );
+                                        drop(g);
+                                        pool.wakeup.notify_all();
+                                    }
+                                    Err(e) => {
+                                        let mut g = pool.lock_core();
+                                        g.cloud_err = Some(e);
+                                        g.abort = true;
+                                        drop(g);
+                                        pool.wakeup.notify_all();
+                                    }
+                                }
+                            }
+                        }
+                        guard = pool.lock_core();
+                        continue 'main;
                     }
-                    pool.wakeup.notify_all();
+                }
+            } else if let Some((members, _formed_at)) =
+                pool.form_batch(&mut guard)
+            {
+                // batch mode: the members were admitted under the lock
+                // (cloud marked busy, waits charged); service them here.
+                // Poll-capable members amortize ONE modeled launch;
+                // blocking-only members run inline one by one.
+                pool.wakeup.notify_all();
+                drop(guard);
+                let mut ready: Vec<CloudFinish<D::Feedback>> = Vec::new();
+                let mut peak = 0.0f64;
+                let mut failed: Option<anyhow::Error> = None;
+                for item in members {
                     let LinkItem {
                         stream,
                         id,
@@ -570,39 +761,34 @@ fn worker_loop<D, C, DF, CF>(
                         bits,
                         wire_bytes,
                         label_hint,
+                        enq: _,
                         payload,
                     } = item;
-                    drop(guard);
                     match cloud_stage.poll_process(payload) {
                         CloudPoll::Ready { label, feedback, busy } => {
-                            // modeled service: park it on the wheel
-                            let mut g = pool.lock_core();
-                            g.timers.insert(
-                                pool.clock.now() + busy,
-                                Wake::CloudDone(CloudFinish {
-                                    stream,
-                                    id,
-                                    arrive,
-                                    bits,
-                                    wire_bytes,
-                                    label_hint,
-                                    label,
-                                    feedback,
-                                    busy,
-                                }),
-                            );
-                            drop(g);
-                            pool.wakeup.notify_all();
+                            peak = peak.max(busy);
+                            ready.push(CloudFinish {
+                                stream,
+                                id,
+                                arrive,
+                                bits,
+                                wire_bytes,
+                                label_hint,
+                                label,
+                                feedback,
+                                busy,
+                            });
                         }
                         CloudPoll::Sync(wire) => {
-                            // blocking-only stage: real compute occupies
-                            // this worker, measured like the threaded
-                            // cloud thread
                             let s = Instant::now();
                             match cloud_stage.process(wire) {
                                 Ok((label, feedback)) => {
                                     let busy = s.elapsed().as_secs_f64();
                                     let mut g = pool.lock_core();
+                                    batch::record_occupancy(
+                                        &mut g.batch_occ,
+                                        1,
+                                    );
                                     pool.cloud_done(
                                         &mut g,
                                         CloudFinish {
@@ -621,18 +807,38 @@ fn worker_loop<D, C, DF, CF>(
                                     pool.wakeup.notify_all();
                                 }
                                 Err(e) => {
-                                    let mut g = pool.lock_core();
-                                    g.cloud_err = Some(e);
-                                    g.abort = true;
-                                    drop(g);
-                                    pool.wakeup.notify_all();
+                                    failed = Some(e);
+                                    break;
                                 }
                             }
                         }
                     }
-                    guard = pool.lock_core();
-                    continue 'main;
                 }
+                if let Some(e) = failed {
+                    let mut g = pool.lock_core();
+                    g.cloud_err = Some(e);
+                    g.abort = true;
+                    drop(g);
+                    pool.wakeup.notify_all();
+                } else if !ready.is_empty() {
+                    // one launch for the whole batch: peak member time
+                    // stretched by the calibrated amortization curve,
+                    // each member billed an equal share
+                    let b = ready.len();
+                    let batch_secs = batch::service_secs(peak, b);
+                    let share = batch_secs / b as f64;
+                    let deadline = pool.clock.now() + batch_secs;
+                    let mut g = pool.lock_core();
+                    batch::record_occupancy(&mut g.batch_occ, b);
+                    for mut fin in ready {
+                        fin.busy = share;
+                        g.timers.insert(deadline, Wake::CloudDone(fin));
+                    }
+                    drop(g);
+                    pool.wakeup.notify_all();
+                }
+                guard = pool.lock_core();
+                continue 'main;
             }
         }
         // 4) drive one of this worker's runnable streams
@@ -772,6 +978,10 @@ where
         send_waiters: VecDeque::new(),
         cloud_queue: VecDeque::with_capacity(cfg.queue_cap.max(1)),
         cloud_busy: false,
+        cloud_pending: 0,
+        kick_armed: false,
+        cloud_wait: vec![0.0; n],
+        batch_occ: Vec::new(),
         feedback: (0..n).map(|_| Vec::new()).collect(),
         outcomes: (0..n).map(|_| Vec::new()).collect(),
         dropped: vec![0; n],
@@ -796,6 +1006,7 @@ where
         rtt_half: cfg.rtt_half,
         ret_bytes: cfg.result_wire_bytes,
         drop_after: cfg.drop_after,
+        batch: cfg.cloud,
         link_meters: link_busy.clone(),
         cloud_meters: cloud_busy.clone(),
     };
@@ -854,6 +1065,8 @@ where
         &dev_busy,
         &link_busy,
         &cloud_busy,
+        &core.cloud_wait,
+        core.batch_occ,
         &cfg,
     ))
 }

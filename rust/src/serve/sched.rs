@@ -34,6 +34,10 @@ pub(crate) struct LinkItem<W> {
     pub bits: u8,
     pub wire_bytes: usize,
     pub label_hint: usize,
+    /// cloud-queue entry instant (stamped when the link finishes
+    /// carrying the item; feeds `cloud_queue_wait_s` telemetry and the
+    /// batch scheduler's wait window)
+    pub enq: f64,
     pub payload: W,
 }
 
@@ -116,6 +120,7 @@ where
 /// arrival to last finish (clamped at 0, empty streams report 0),
 /// interned scheme/model labels, per-worker/per-thread meters read once
 /// here.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn assemble_report(
     per: Vec<Vec<TaskOutcome>>,
     dropped: &[usize],
@@ -123,6 +128,8 @@ pub(crate) fn assemble_report(
     dev_busy: &[BusyMeter],
     link_busy: &[BusyMeter],
     cloud_busy: &[BusyMeter],
+    cloud_wait: &[f64],
+    batch_occupancy: Vec<u64>,
     cfg: &RealCfg,
 ) -> MultiReport {
     let n = per.len();
@@ -150,8 +157,9 @@ pub(crate) fn assemble_report(
                 span,
                 stall: 0.0,
             },
+            cloud_queue_wait_s: cloud_wait[si],
             plan: plans[si].clone(),
         });
     }
-    MultiReport { per_stream, events: 0 }
+    MultiReport { per_stream, events: 0, batch_occupancy }
 }

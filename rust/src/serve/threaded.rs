@@ -14,10 +14,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::metrics::{MultiReport, PlanTelemetry, TaskOutcome};
 use crate::network::BandwidthModel;
+use crate::pipeline::batch::{self, record_occupancy, CloudPolicy};
 use crate::pipeline::driver::RealCfg;
 use crate::pipeline::stage::{
-    bounded, BusyMeter, Clock, CloudStage, DeviceStage, DeviceVerdict,
-    WallClock,
+    bounded, BusyMeter, Clock, CloudPoll, CloudStage, DeviceStage,
+    DeviceVerdict, RecvTimeout, WallClock,
 };
 use crate::sim::SimTask;
 
@@ -137,6 +138,9 @@ where
                                     bits,
                                     wire_bytes,
                                     label_hint: task.label,
+                                    // placeholder; the link thread
+                                    // stamps the real queue entry
+                                    enq: now,
                                     payload: wire,
                                 };
                                 if link_tx.send(item).is_err() {
@@ -167,54 +171,182 @@ where
     let link_rtt = cfg.rtt_half;
     let bw_link = bw.clone();
     let link_handle = thread::spawn(move || {
-        while let Some(item) = link_rx.recv() {
+        while let Some(mut item) = link_rx.recv() {
             let now = clock.now();
             // price the wire like the DES: payload over the live rate
             // plus the one-way network latency
             let secs = bw_link.transmit_time(item.wire_bytes, now) + link_rtt;
             thread::sleep(Duration::from_secs_f64(secs));
             link_meters[item.stream].add_secs(secs);
+            item.enq = clock.now();
             if cloud_tx.send(item).is_err() {
                 break;
             }
         }
     });
 
-    // ---- cloud thread (shared engine) ----------------------------------
+    // ---- cloud thread (shared engine; optional batching shim) ----------
     let cloud_meters = cloud_busy.clone();
     let ret_rtt = cfg.rtt_half;
     let ret_bytes = cfg.result_wire_bytes;
-    let cloud_handle = thread::spawn(move || -> Result<()> {
+    let bcfg = cfg.cloud;
+    let cloud_handle = thread::spawn(move || -> Result<(Vec<f64>, Vec<u64>)> {
         let mut cloud = cloud_factory()?;
-        while let Some(item) = cloud_rx.recv() {
-            let s = Instant::now();
-            let (label, fb) = cloud.process(item.payload)?;
-            cloud_meters[item.stream].add_secs(s.elapsed().as_secs_f64());
-            let now = clock.now();
-            // result-return leg priced like the DES (rtt + payload at
-            // the instantaneous rate); the return rides the network, not
-            // the cloud engine, so it extends the task's finish without
-            // blocking the next item
-            let ret =
-                ret_rtt + ret_bytes as f64 * 8.0 / (bw.true_mbps(now) * 1e6);
-            let finish = now + ret;
-            let _ = cloud_out_tx.send((
-                item.stream,
-                TaskOutcome {
-                    id: item.id,
-                    arrive: item.arrive,
-                    finish,
-                    latency: finish - item.arrive,
-                    exited_early: false,
-                    bits: item.bits,
-                    wire_bytes: item.wire_bytes,
-                    label,
-                    correct: label == item.label_hint,
-                },
-            ));
-            let _ = feedback_txs[item.stream].send(fb);
+        let mut wait = vec![0.0f64; n];
+        let mut occ: Vec<u64> = Vec::new();
+        if bcfg.policy == CloudPolicy::Fifo {
+            while let Some(item) = cloud_rx.recv() {
+                wait[item.stream] += (clock.now() - item.enq).max(0.0);
+                record_occupancy(&mut occ, 1);
+                let s = Instant::now();
+                let (label, fb) = cloud.process(item.payload)?;
+                cloud_meters[item.stream].add_secs(s.elapsed().as_secs_f64());
+                let now = clock.now();
+                // result-return leg priced like the DES (rtt + payload
+                // at the instantaneous rate); the return rides the
+                // network, not the cloud engine, so it extends the
+                // task's finish without blocking the next item
+                let ret = ret_rtt
+                    + ret_bytes as f64 * 8.0 / (bw.true_mbps(now) * 1e6);
+                let finish = now + ret;
+                let _ = cloud_out_tx.send((
+                    item.stream,
+                    TaskOutcome {
+                        id: item.id,
+                        arrive: item.arrive,
+                        finish,
+                        latency: finish - item.arrive,
+                        exited_early: false,
+                        bits: item.bits,
+                        wire_bytes: item.wire_bytes,
+                        label,
+                        correct: label == item.label_hint,
+                    },
+                ));
+                let _ = feedback_txs[item.stream].send(fb);
+            }
+        } else {
+            // batching shim: hold the head item up to `max_wait` of wall
+            // time, coalescing shape-compatible arrivals to `max_batch`.
+            // An incompatible arrival seeds the NEXT batch (carry) so
+            // nothing is reordered across shapes.
+            let mut carry: Option<LinkItem<D::Wire>> = None;
+            loop {
+                let Some(first) = carry.take().or_else(|| cloud_rx.recv())
+                else {
+                    break;
+                };
+                let bmax = bcfg.max_batch.max(1);
+                let shape = batch::shape_key(first.wire_bytes, first.bits);
+                let mut members = vec![first];
+                let hold = Instant::now();
+                while members.len() < bmax {
+                    let left = bcfg.max_wait - hold.elapsed().as_secs_f64();
+                    if left <= 0.0 {
+                        break;
+                    }
+                    match cloud_rx.recv_timeout(Duration::from_secs_f64(left))
+                    {
+                        RecvTimeout::Item(it) => {
+                            if batch::shape_key(it.wire_bytes, it.bits)
+                                == shape
+                            {
+                                members.push(it);
+                            } else {
+                                carry = Some(it);
+                                break;
+                            }
+                        }
+                        RecvTimeout::Timeout | RecvTimeout::Closed => break,
+                    }
+                }
+                // dispatch: poll-capable members amortize ONE modeled
+                // launch; blocking-only members run inline one by one
+                let launch = clock.now();
+                let mut ready = Vec::new();
+                let mut peak = 0.0f64;
+                for item in members {
+                    wait[item.stream] += (launch - item.enq).max(0.0);
+                    match cloud.poll_process(item.payload) {
+                        CloudPoll::Ready { label, feedback, busy } => {
+                            peak = peak.max(busy);
+                            ready.push((
+                                item.stream,
+                                item.id,
+                                item.arrive,
+                                item.bits,
+                                item.wire_bytes,
+                                item.label_hint,
+                                label,
+                                feedback,
+                            ));
+                        }
+                        CloudPoll::Sync(wire) => {
+                            record_occupancy(&mut occ, 1);
+                            let s = Instant::now();
+                            let (label, fb) = cloud.process(wire)?;
+                            cloud_meters[item.stream]
+                                .add_secs(s.elapsed().as_secs_f64());
+                            let now = clock.now();
+                            let ret = ret_rtt
+                                + ret_bytes as f64 * 8.0
+                                    / (bw.true_mbps(now) * 1e6);
+                            let finish = now + ret;
+                            let _ = cloud_out_tx.send((
+                                item.stream,
+                                TaskOutcome {
+                                    id: item.id,
+                                    arrive: item.arrive,
+                                    finish,
+                                    latency: finish - item.arrive,
+                                    exited_early: false,
+                                    bits: item.bits,
+                                    wire_bytes: item.wire_bytes,
+                                    label,
+                                    correct: label == item.label_hint,
+                                },
+                            ));
+                            let _ = feedback_txs[item.stream].send(fb);
+                        }
+                    }
+                }
+                if !ready.is_empty() {
+                    let b = ready.len();
+                    record_occupancy(&mut occ, b);
+                    // one launch for the whole batch: peak member time
+                    // stretched by the calibrated amortization curve,
+                    // each member billed an equal share
+                    let batch_secs = batch::service_secs(peak, b);
+                    thread::sleep(Duration::from_secs_f64(batch_secs));
+                    let share = batch_secs / b as f64;
+                    let now = clock.now();
+                    let ret = ret_rtt
+                        + ret_bytes as f64 * 8.0 / (bw.true_mbps(now) * 1e6);
+                    let finish = now + ret;
+                    for (stream, id, arrive, bits, wire_bytes, hint, label, fb)
+                    in ready
+                    {
+                        cloud_meters[stream].add_secs(share);
+                        let _ = cloud_out_tx.send((
+                            stream,
+                            TaskOutcome {
+                                id,
+                                arrive,
+                                finish,
+                                latency: finish - arrive,
+                                exited_early: false,
+                                bits,
+                                wire_bytes,
+                                label,
+                                correct: label == hint,
+                            },
+                        ));
+                        let _ = feedback_txs[stream].send(fb);
+                    }
+                }
+            }
         }
-        Ok(())
+        Ok((wait, occ))
     });
 
     // ---- collect --------------------------------------------------------
@@ -249,8 +381,13 @@ where
     link_handle
         .join()
         .map_err(|_| anyhow::anyhow!("link thread panicked"))?;
+    let mut cloud_wait = vec![0.0f64; n];
+    let mut batch_occ: Vec<u64> = Vec::new();
     match cloud_handle.join() {
-        Ok(Ok(())) => {}
+        Ok(Ok((w, o))) => {
+            cloud_wait = w;
+            batch_occ = o;
+        }
         // a cloud failure tears down link + devices, so it is the root
         // cause — report it over the downstream "link terminated" errors
         Ok(Err(e)) => first_err = Some(e),
@@ -270,6 +407,8 @@ where
         &dev_busy,
         &link_busy,
         &cloud_busy,
+        &cloud_wait,
+        batch_occ,
         &cfg,
     ))
 }

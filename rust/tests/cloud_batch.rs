@@ -1,0 +1,222 @@
+//! Cloud-scheduler correctness gates for `pipeline::batch`.
+//!
+//! * **b=1 parity** — `DynBatch` with `max_batch = 1` must reproduce
+//!   the legacy FIFO cloud timeline BIT-FOR-BIT on both event-queue
+//!   engines: a single-item batch goes through `service_secs(x, 1)`,
+//!   which is the exact identity (`ALPHA + (1-ALPHA) = 1.0` in IEEE
+//!   754), so any divergence means the batcher reordered admissions
+//!   or touched the arithmetic.
+//! * **conservation** — under batching with a mixed drop/exit fleet,
+//!   every admitted task is reported exactly once per stream (no task
+//!   lost inside a coalesced launch, none double-finished) and every
+//!   stream reports.
+
+use coach::model::topology::vgg16;
+use coach::model::{CostModel, DeviceProfile, ModelGraph};
+use coach::network::BandwidthModel;
+use coach::pipeline::{
+    run_virtual_streams, ActivePlan, BatchCfg, CloudPolicy, QueueEngine,
+    StageModel, StaticPolicy, VirtualCfg, VirtualStream,
+};
+use coach::sim::{generate, Correlation, SimTask};
+
+const N_STREAMS: usize = 8;
+const TASKS: usize = 25;
+
+fn stage_model() -> StageModel {
+    StageModel {
+        t_e: 1e-3,
+        t_c: 5e-3,
+        first_send_offset: 0.0,
+        t_c_par: 0.0,
+        cut_elems: vec![512],
+        result_elems: 10,
+        exit_check: 0.0,
+    }
+}
+
+fn fleet_tasks(corr: Correlation) -> Vec<Vec<SimTask>> {
+    (0..N_STREAMS)
+        .map(|i| {
+            let mut tasks = generate(TASKS, 4e-3, corr, 10, i as u64);
+            let offset = 4e-3 * i as f64 / N_STREAMS as f64;
+            for t in tasks.iter_mut() {
+                t.arrive += offset;
+            }
+            tasks
+        })
+        .collect()
+}
+
+/// Run one fleet and return the per-stream (task bit patterns,
+/// dropped count) — arrive/finish/latency compared as raw u64 bits so
+/// formatting can't mask an ULP of drift.
+fn run_fleet(
+    tls: &[Vec<SimTask>],
+    g: &ModelGraph,
+    cost: &CostModel,
+    engine: QueueEngine,
+    cloud: BatchCfg,
+    exit_threshold: f64,
+    drop_after: Option<f64>,
+    mbps: f64,
+) -> Vec<(Vec<(usize, u64, u64, u64, bool)>, usize)> {
+    let sm = stage_model();
+    let bw = BandwidthModel::Static(mbps);
+    let mut pols: Vec<StaticPolicy> = (0..N_STREAMS)
+        .map(|_| StaticPolicy { bits: 8, exit_threshold })
+        .collect();
+    let mut plans: Vec<ActivePlan> =
+        (0..N_STREAMS).map(|_| ActivePlan::single(sm.clone())).collect();
+    let mut streams: Vec<VirtualStream<'_>> = tls
+        .iter()
+        .zip(pols.iter_mut())
+        .zip(plans.iter_mut())
+        .enumerate()
+        .map(|(i, ((tasks, pol), plan))| VirtualStream {
+            tasks,
+            plan,
+            graph: g,
+            cost,
+            policy: pol,
+            scheme: "cloud-batch".into(),
+            // mixed admission: half the fleet sheds aggressively
+            drop_after: if i % 2 == 0 { drop_after } else { None },
+        })
+        .collect();
+    let cfg = VirtualCfg {
+        queue_cap: Some(4),
+        engine,
+        cloud,
+        ..VirtualCfg::default()
+    };
+    let multi = run_virtual_streams(&mut streams, &bw, cfg);
+    assert_eq!(multi.per_stream.len(), N_STREAMS, "every stream reports");
+    multi
+        .per_stream
+        .iter()
+        .map(|r| {
+            (
+                r.tasks
+                    .iter()
+                    .map(|t| {
+                        (
+                            t.id,
+                            t.arrive.to_bits(),
+                            t.finish.to_bits(),
+                            t.latency.to_bits(),
+                            t.exited_early,
+                        )
+                    })
+                    .collect(),
+                r.dropped,
+            )
+        })
+        .collect()
+}
+
+/// `DynBatch` with `max_batch = 1` is the FIFO timeline, bit-for-bit,
+/// on the heap AND calendar engines (which are themselves pinned
+/// bit-identical elsewhere — so all four runs must agree).
+#[test]
+fn dynbatch_b1_matches_fifo_bit_for_bit_on_both_engines() {
+    let g = vgg16();
+    let cost =
+        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
+    let tls = fleet_tasks(Correlation::Low);
+    let fifo = BatchCfg::default();
+    let b1 = BatchCfg {
+        policy: CloudPolicy::DynBatch,
+        max_batch: 1,
+        ..BatchCfg::default()
+    };
+    let golden = run_fleet(
+        &tls,
+        &g,
+        &cost,
+        QueueEngine::Heap,
+        fifo,
+        f64::INFINITY,
+        None,
+        200.0,
+    );
+    for engine in [QueueEngine::Heap, QueueEngine::Calendar] {
+        for cloud in [fifo, b1] {
+            let got = run_fleet(
+                &tls,
+                &g,
+                &cost,
+                engine,
+                cloud,
+                f64::INFINITY,
+                None,
+                200.0,
+            );
+            assert_eq!(
+                got, golden,
+                "{engine:?}/{:?} diverged from heap/fifo",
+                cloud.policy
+            );
+        }
+    }
+}
+
+/// Conservation under real batching: a mixed fleet (early exits from
+/// high correlation, drops on half the streams) where the batcher
+/// actually coalesces. Every admitted task id must appear exactly
+/// once in its stream's report, and admitted + dropped must account
+/// for the full workload.
+#[test]
+fn batched_fleet_reports_every_admitted_task_exactly_once() {
+    let g = vgg16();
+    let cost =
+        CostModel::new(DeviceProfile::jetson_nx(), DeviceProfile::cloud_a6000());
+    let tls = fleet_tasks(Correlation::High);
+    for policy in [CloudPolicy::DynBatch, CloudPolicy::SloAware] {
+        let cloud = BatchCfg {
+            policy,
+            max_batch: 4,
+            max_wait: 500e-6,
+            slo: 0.05,
+        };
+        // 2 Mbps: ~2 ms per wire crossing, so the shared link backs
+        // up (drops engage on the shedding half of the fleet) AND the
+        // 5 ms cloud stage still queues behind it (batches form)
+        let per_stream = run_fleet(
+            &tls,
+            &g,
+            &cost,
+            QueueEngine::Calendar,
+            cloud,
+            0.6, // finite threshold: high-corr tasks exit early
+            Some(2e-3),
+            2.0,
+        );
+        let mut exited = 0usize;
+        let mut dropped_total = 0usize;
+        for (si, (tasks, dropped)) in per_stream.iter().enumerate() {
+            assert_eq!(
+                tasks.len() + dropped,
+                TASKS,
+                "stream {si}: admitted + dropped != workload ({policy:?})"
+            );
+            let mut ids: Vec<usize> = tasks.iter().map(|t| t.0).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(
+                ids.len(),
+                tasks.len(),
+                "stream {si}: duplicate task id in report ({policy:?})"
+            );
+            exited += tasks.iter().filter(|t| t.4).count();
+            dropped_total += dropped;
+        }
+        // the fleet must actually exercise the mixed regime the test
+        // claims to cover
+        assert!(exited > 0, "no early exits — workload too easy ({policy:?})");
+        assert!(
+            dropped_total > 0,
+            "no drops — admission never engaged ({policy:?})"
+        );
+    }
+}

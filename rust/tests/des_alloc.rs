@@ -105,6 +105,7 @@ fn measured_run(tasks_per_stream: usize) -> (u64, u64) {
         queue_cap: Some(4),
         drop_after: None,
         engine: QueueEngine::Calendar,
+        ..VirtualCfg::default()
     };
 
     let before = ALLOC_EVENTS.load(Ordering::Relaxed);

@@ -289,3 +289,122 @@ fn loom_completion_drains_ready_queues() {
         assert!(g.ready[0].is_empty() && g.ready[1].is_empty());
     });
 }
+
+/// The cloud batch-drain protocol added with `pipeline::batch`: step 3
+/// of `worker_loop` forms a batch only when `cloud_busy` is clear
+/// (setting `cloud_busy` + `cloud_pending = b` in the SAME critical
+/// section that removes the members from `cloud_queue`), and
+/// `cloud_done` releases the cloud only when the LAST member's
+/// completion drops `cloud_pending` to zero. Two workers race to form
+/// batches while a producer keeps enqueueing and a completion thread
+/// drains the in-service set. The model deadlocks on a lost wakeup
+/// (producer's or finisher's notify missed) and fails the final
+/// asserts on a double-dispatch (two workers admitting the same item,
+/// or the cloud freed while members are still in flight).
+#[test]
+fn loom_cloud_batch_drain_no_lost_wakeup_or_double_dispatch() {
+    const MAX_B: usize = 2;
+    const SEEDED: usize = 2; // items queued before the workers start
+    const LATE: usize = 2; // items the producer adds concurrently
+    const TOTAL: usize = SEEDED + LATE;
+
+    struct Core {
+        cloud_queue: Vec<usize>,
+        cloud_busy: bool,
+        cloud_pending: usize,
+        /// members of the current launch, awaiting completion
+        in_service: Vec<usize>,
+        /// times each item was admitted into a batch
+        dispatched: [usize; TOTAL],
+        done: usize,
+    }
+
+    fn worker(shared: &(Mutex<Core>, Condvar), _wid: usize) {
+        let (m, cv) = shared;
+        let mut g = m.lock().unwrap();
+        loop {
+            if g.done == TOTAL {
+                cv.notify_all();
+                return;
+            }
+            // miniature of `Pool::form_batch`: busy gate, then admit a
+            // prefix and mark the launch in flight atomically
+            if !g.cloud_busy && !g.cloud_queue.is_empty() {
+                let b = g.cloud_queue.len().min(MAX_B);
+                g.cloud_busy = true;
+                g.cloud_pending = b;
+                for _ in 0..b {
+                    let id = g.cloud_queue.remove(0);
+                    g.dispatched[id] += 1;
+                    g.in_service.push(id);
+                }
+                cv.notify_all();
+                continue;
+            }
+            g = cv.wait(g).unwrap();
+        }
+    }
+
+    loom::model(|| {
+        let shared = Arc::new((
+            Mutex::new(Core {
+                cloud_queue: (0..SEEDED).collect(),
+                cloud_busy: false,
+                cloud_pending: 0,
+                in_service: Vec::new(),
+                dispatched: [0; TOTAL],
+                done: 0,
+            }),
+            Condvar::new(),
+        ));
+        // the arrival side: `link_done` pushing to cloud_queue then
+        // notifying — a worker asleep on an empty queue must wake
+        let s2 = shared.clone();
+        let producer = loom::thread::spawn(move || {
+            let (m, cv) = &*s2;
+            for id in SEEDED..TOTAL {
+                {
+                    let mut g = m.lock().unwrap();
+                    g.cloud_queue.push(id);
+                }
+                cv.notify_all();
+            }
+        });
+        // the `Wake::CloudDone` side: members of the launch complete
+        // one by one; the cloud frees only at the last one
+        let s3 = shared.clone();
+        let cloud = loom::thread::spawn(move || {
+            let (m, cv) = &*s3;
+            let mut g = m.lock().unwrap();
+            loop {
+                if let Some(_id) = g.in_service.pop() {
+                    g.cloud_pending -= 1;
+                    g.done += 1;
+                    if g.cloud_pending == 0 {
+                        g.cloud_busy = false;
+                    }
+                    cv.notify_all();
+                    continue;
+                }
+                if g.done == TOTAL {
+                    cv.notify_all();
+                    return;
+                }
+                g = cv.wait(g).unwrap();
+            }
+        });
+        let s4 = shared.clone();
+        let w1 = loom::thread::spawn(move || worker(&s4, 1));
+        worker(&shared, 0);
+        w1.join().unwrap();
+        cloud.join().unwrap();
+        producer.join().unwrap();
+        let g = shared.0.lock().unwrap();
+        assert_eq!(g.done, TOTAL, "an admitted item never completed");
+        assert!(g.cloud_queue.is_empty(), "item stranded in the queue");
+        assert!(!g.cloud_busy && g.cloud_pending == 0, "cloud not released");
+        for (id, &n) in g.dispatched.iter().enumerate() {
+            assert_eq!(n, 1, "item {id} dispatched {n} times");
+        }
+    });
+}

@@ -121,6 +121,7 @@ fn pjrt_server_serves_four_streams_on_one_cloud_engine() {
         queue_cap: 8,
         runtime: coach::serve::Runtime::Threaded,
         replan: None,
+        cloud: coach::pipeline::BatchCfg::default(),
     };
     let single = serve(&m, &cfg(1)).unwrap();
     assert_eq!(single.per_stream.len(), 1);

@@ -37,6 +37,7 @@ fn base_cfg(model: &str, m: &Manifest) -> ServeCfg {
         queue_cap: 8,
         runtime: coach::serve::Runtime::Threaded,
         replan: None,
+        cloud: coach::pipeline::BatchCfg::default(),
     }
 }
 

@@ -431,7 +431,12 @@ fn prop_event_driven_single_stream_matches_run_virtual_bit_for_bit() {
                     drop_after,
                 }],
                 &bw,
-                VirtualCfg { queue_cap: None, drop_after: None, engine },
+                VirtualCfg {
+                    queue_cap: None,
+                    drop_after: None,
+                    engine,
+                    ..VirtualCfg::default()
+                },
             );
             let r = &multi.per_stream[0];
             assert_eq!(r.dropped, legacy.dropped, "case {case} {engine:?}: dropped");
@@ -579,7 +584,12 @@ fn prop_calendar_engine_matches_heap_engine_bit_for_bit() {
             run_virtual_streams(
                 &mut streams,
                 &bw,
-                VirtualCfg { queue_cap, drop_after: None, engine },
+                VirtualCfg {
+                    queue_cap,
+                    drop_after: None,
+                    engine,
+                    ..VirtualCfg::default()
+                },
             )
         };
         let heap = run_with(QueueEngine::Heap);

@@ -12,7 +12,9 @@ use coach::model::{CostModel, DeviceProfile};
 use coach::network::BandwidthModel;
 use coach::pipeline::driver::{run_real, RealCfg, SimCloud, SimDevice};
 use coach::pipeline::stage::{CloudStage, DeviceStage, DeviceVerdict};
-use coach::pipeline::{ActivePlan, StageModel, StaticPolicy, WallClock};
+use coach::pipeline::{
+    ActivePlan, BatchCfg, CloudPolicy, StageModel, StaticPolicy, WallClock,
+};
 use coach::serve::Runtime;
 use coach::sim::{generate, Correlation, SimTask};
 
@@ -30,6 +32,8 @@ struct Fleet {
     cut_elems: usize,
     link_mbps: f64,
     queue_cap: usize,
+    /// cloud-side scheduler under test (fifo = legacy timeline)
+    cloud: BatchCfg,
 }
 
 impl Fleet {
@@ -94,6 +98,7 @@ impl Fleet {
                 queue_cap: self.queue_cap,
                 scheme: "equiv".into(),
                 model: "sim".into(),
+                cloud: self.cloud,
                 ..Default::default()
             },
         )
@@ -157,6 +162,7 @@ fn threaded_and_pooled_produce_identical_outcomes() {
         cut_elems: 1024,
         link_mbps: 50.0,
         queue_cap: 8,
+        cloud: BatchCfg::default(),
     };
     let (threaded, _pooled) = assert_equivalent(&fleet);
 
@@ -184,6 +190,7 @@ fn queue_cap_backpressure_surfaces_identically() {
         cut_elems: 2048,
         link_mbps: 5.0,
         queue_cap: 1,
+        cloud: BatchCfg::default(),
     };
     let (threaded, pooled) = assert_equivalent(&fleet);
     for multi in [&threaded, &pooled] {
@@ -196,6 +203,48 @@ fn queue_cap_backpressure_surfaces_identically() {
             agg.link.busy > 3.0 * 12.0 * 5e-4,
             "link not saturated (busy {}s) — backpressure untested",
             agg.link.busy
+        );
+    }
+}
+
+/// Under `cloud_sched = "batch"` the two engines may form different
+/// batches (formation is wall-clock timing dependent), but every
+/// DISCRETE outcome must still be identical — batching may only move
+/// completion times, never change what a task computed — and the
+/// occupancy histogram must account for every transmitted task
+/// exactly once in both engines.
+#[test]
+fn batched_cloud_keeps_engines_equivalent() {
+    let fleet = Fleet {
+        n_streams: 4,
+        n_tasks: 24,
+        exit_threshold: 0.5,
+        cut_elems: 1024,
+        link_mbps: 50.0,
+        queue_cap: 8,
+        cloud: BatchCfg {
+            policy: CloudPolicy::DynBatch,
+            max_batch: 4,
+            max_wait: 200e-6,
+            slo: f64::INFINITY,
+        },
+    };
+    let (threaded, pooled) = assert_equivalent(&fleet);
+    for (name, multi) in [("threaded", &threaded), ("pooled", &pooled)] {
+        let agg = multi.aggregate();
+        assert_eq!(agg.tasks.len(), 4 * 24, "{name}: conservation");
+        let transmitted =
+            agg.tasks.iter().filter(|t| !t.exited_early).count();
+        let batched_items: usize = multi
+            .batch_occupancy
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (i + 1) * c as usize)
+            .sum();
+        assert_eq!(
+            batched_items, transmitted,
+            "{name}: occupancy histogram must account for every \
+             transmitted task exactly once"
         );
     }
 }
@@ -275,6 +324,7 @@ fn pooled_engine_serves_wide_fleets_with_bounded_workers() {
         cut_elems: 256,
         link_mbps: 200.0,
         queue_cap: 8,
+        cloud: BatchCfg::default(),
     };
     let multi = fleet.run(Runtime::Pooled);
     assert_eq!(multi.per_stream.len(), 256);

@@ -64,6 +64,18 @@ grep -q events_per_sec "$BENCH_DIR/BENCH_des_scale.json" \
     || { echo "BENCH_des_scale.json lacks events_per_sec"; exit 1; }
 rm -rf "$BENCH_DIR"
 
+echo "== cloud batch smoke: tiny-n coach bench-cloud-batch emits BENCH_cloud_batch.json =="
+BENCH_DIR="$(mktemp -d)"
+COACH_BENCH_DIR="$BENCH_DIR" ./target/release/coach bench-cloud-batch \
+    --streams 8,16 --tasks 5
+test -s "$BENCH_DIR/BENCH_cloud_batch.json" \
+    || { echo "BENCH_cloud_batch.json missing"; exit 1; }
+grep -q throughput "$BENCH_DIR/BENCH_cloud_batch.json" \
+    || { echo "BENCH_cloud_batch.json lacks throughput"; exit 1; }
+grep -q batch_occupancy "$BENCH_DIR/BENCH_cloud_batch.json" \
+    || { echo "BENCH_cloud_batch.json lacks batch_occupancy"; exit 1; }
+rm -rf "$BENCH_DIR"
+
 echo "== serve scale smoke: tiny-n coach bench-serve-scale emits BENCH_serve_scale.json =="
 BENCH_DIR="$(mktemp -d)"
 COACH_BENCH_DIR="$BENCH_DIR" ./target/release/coach bench-serve-scale \

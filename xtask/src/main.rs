@@ -12,9 +12,10 @@
 //!   results are reproducible and Miri-runnable. The sanctioned wrapper
 //!   (`pipeline::stage::WallClock`) carries `// xtask: allow(wall-clock)`
 //!   markers.
-//! * `map-order` — no `HashMap` under `serve/` or `metrics/`: stream
-//!   state and report assembly feed BENCH json, and randomized
-//!   iteration order there breaks run-to-run byte-identity
+//! * `map-order` — no `HashMap` under `serve/`, `metrics/`, or in
+//!   `pipeline/batch.rs`: stream state, report assembly, and cloud
+//!   batch admission feed BENCH json, and randomized iteration order
+//!   there breaks run-to-run byte-identity
 //!   (`rust/tests/determinism.rs` is the runtime half of this lint).
 //! * `unwrap-free` — no `.unwrap()` / `.expect(` in `serve/pool.rs`:
 //!   a panicking worker must reach `PanicGuard::drop`, and the guard
@@ -108,8 +109,9 @@ const LOOM_SHIMMED: &[&str] =
 fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
     let wall_clock_scoped =
         !WALL_CLOCK_ALLOWED_DIRS.iter().any(|d| rel.starts_with(d));
-    let map_order_scoped =
-        rel.starts_with("serve/") || rel.starts_with("metrics/");
+    let map_order_scoped = rel.starts_with("serve/")
+        || rel.starts_with("metrics/")
+        || rel == "pipeline/batch.rs";
     let unwrap_scoped = rel == "serve/pool.rs";
     let loom_scoped = LOOM_SHIMMED.contains(&rel);
 
@@ -317,6 +319,10 @@ mod tests {
     fn map_order_violation_is_caught() {
         let src = "use std::collections::HashMap;\nfn report() {\n    let m: HashMap<usize, f64> = HashMap::new();\n    let _ = m;\n}\n";
         let v = lint_file("serve/pool.rs", src);
+        assert_eq!(lints(&v), [("map-order", 1), ("map-order", 3)]);
+        // the cloud batcher picks admission sets that feed report
+        // assembly — same determinism contract
+        let v = lint_file("pipeline/batch.rs", src);
         assert_eq!(lints(&v), [("map-order", 1), ("map-order", 3)]);
     }
 
