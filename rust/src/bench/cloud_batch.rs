@@ -75,6 +75,7 @@ fn batch_cfg(policy: CloudPolicy) -> BatchCfg {
         max_batch: 16,
         max_wait: 500e-6,
         slo: if policy == CloudPolicy::SloAware { 0.05 } else { f64::INFINITY },
+        ..BatchCfg::default()
     }
 }
 

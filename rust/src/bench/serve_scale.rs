@@ -5,16 +5,27 @@
 //! near-linear in fleet size until the shared link saturates, at fleet
 //! sizes where thread-per-stream cannot even spawn.
 //!
-//! The workload mirrors `bench::des_scale`: a fixed stage model per
-//! stream (no partition search in the timed region), static
+//! The homogeneous grid mirrors `bench::des_scale`: a fixed stage model
+//! per stream (no partition search in the timed region), static
 //! precision-8 no-exit policies so EVERY task crosses the shared link,
 //! staggered arrivals, and a link slow enough (200 Mbps) that it — not
 //! the cloud stage — is the saturating resource at the top of the grid.
 //! Everything timed is the serving runtime itself.
 //!
-//! Writes `BENCH_serve_scale.json` with one row per (streams, engine)
-//! cell: `streams`, `tasks`, `secs`, `throughput` (aggregate it/s), and
-//! `speedup_vs_threaded`. The threaded engine is only run up to
+//! The SKEWED grid is the work-stealing gate: a 10:1 compute-skew fleet
+//! whose heavy streams are blocking-only (compute occupies the worker
+//! inline, like a real PJRT engine) and land on the SAME home worker
+//! under static pinning (indices ≡ 0 mod workers — the pathological
+//! fleet the stealing scheduler exists to fix). The pooled engine runs
+//! that fleet twice, `steal = false` vs `steal = true`; stealing spreads
+//! the heavy streams across workers at their first compute, pinning
+//! restores the one-worker convoy.
+//!
+//! Writes `BENCH_serve_scale.json` with one row per cell: `streams`,
+//! `tasks`, `secs`, `throughput` (aggregate it/s), and
+//! `speedup_vs_threaded`; pooled rows add the scheduler telemetry
+//! (`steals`, `worker_busy_frac`), and skewed rows add `skew` and
+//! `speedup_vs_pinned`. The threaded engine is only run up to
 //! [`THREADED_CAP`] streams — beyond that, one OS thread per stream is
 //! the failure mode this subsystem exists to remove, so those cells are
 //! pooled-only (noted in the table rather than silently skipped).
@@ -27,7 +38,10 @@ use crate::bench::emit::BenchJson;
 use crate::metrics::{MultiReport, Table};
 use crate::model::{CostModel, DeviceProfile};
 use crate::network::BandwidthModel;
-use crate::pipeline::driver::{run_real, RealCfg, SimCloud, SimDevice};
+use crate::pipeline::driver::{
+    run_real, RealCfg, SimCloud, SimDevice, SimWire,
+};
+use crate::pipeline::stage::{DeviceStage, DeviceVerdict};
 use crate::pipeline::{ActivePlan, StageModel, StaticPolicy, WallClock};
 use crate::serve::Runtime;
 use crate::sim::{generate, Correlation, SimTask};
@@ -41,17 +55,25 @@ const PERIOD: f64 = 2e-3;
 /// default grid while the 10 µs cloud stage stays out of the way.
 const LINK_MBPS: f64 = 200.0;
 
+/// Compute ratio of the skewed fleet's heavy streams (the issue's
+/// 10:1 heterogeneity).
+const SKEW: f64 = 10.0;
+
+/// Heavy streams in the skewed fleet — one per `workers` stride, so
+/// static pinning convoys all of them on home worker 0.
+const N_HEAVY: usize = 4;
+
 /// Largest fleet the thread-per-stream engine is asked to serve; above
 /// this, spawning one OS thread per stream is the failure mode under
 /// test, so only the pooled engine runs.
 pub const THREADED_CAP: usize = 2048;
 
 /// One stream's fixed execution profile: half-millisecond device
-/// compute, a small feature tensor, and a cloud stage an order of
-/// magnitude under the link time.
-fn stage_model() -> StageModel {
+/// compute (scaled up for heavy streams), a small feature tensor, and a
+/// cloud stage an order of magnitude under the link time.
+fn stage_model(scale: f64) -> StageModel {
     StageModel {
-        t_e: 5e-4,
+        t_e: 5e-4 * scale,
         t_c: 1e-5,
         first_send_offset: 0.0,
         t_c_par: 0.0,
@@ -59,6 +81,16 @@ fn stage_model() -> StageModel {
         result_elems: 10,
         exit_check: 0.0,
     }
+}
+
+/// The worker count the pooled engine will pick for an `n`-stream fleet
+/// (same formula as `serve::pool`), used to lay heavy streams on one
+/// home worker.
+fn pool_workers(n: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(4)
+        .min(n.max(1))
 }
 
 /// Per-stream task lists with arrivals staggered by `i/n` of a period,
@@ -82,30 +114,89 @@ fn fleet_tasks(n_streams: usize, tasks_per_stream: usize) -> Vec<Vec<SimTask>> {
         .collect()
 }
 
-/// Serve one fleet on `runtime` and return (report, wall seconds).
+/// Bench device: the sim stage, optionally in blocking-only mode.
+/// Blocking streams model a thread-bound engine — `poll_process`
+/// declines, compute busy-sleeps INLINE on the worker, and `dehydrate`
+/// refuses so the stream pins to the worker that first ran it. That is
+/// the skew mechanism: pinned scheduling convoys every heavy stream on
+/// its home worker, stealing spreads their first computes fleet-wide.
+struct BenchDevice {
+    inner: SimDevice<StaticPolicy>,
+    blocking: bool,
+}
+
+impl DeviceStage for BenchDevice {
+    type Wire = SimWire;
+    type Feedback = ();
+    type Portable = Self;
+
+    fn dehydrate(self) -> std::result::Result<Self, Self> {
+        if self.blocking {
+            Err(self)
+        } else {
+            Ok(self)
+        }
+    }
+
+    fn rehydrate(portable: Self) -> Self {
+        portable
+    }
+
+    fn process(
+        &mut self,
+        task: &SimTask,
+    ) -> Result<(DeviceVerdict<SimWire>, f64)> {
+        self.inner.process(task)
+    }
+
+    fn poll_process(
+        &mut self,
+        task: &SimTask,
+    ) -> Option<Result<(DeviceVerdict<SimWire>, f64)>> {
+        if self.blocking {
+            None
+        } else {
+            self.inner.poll_process(task)
+        }
+    }
+
+    fn plan_telemetry(&self) -> crate::metrics::PlanTelemetry {
+        self.inner.plan_telemetry()
+    }
+}
+
+/// Serve one fleet and return (report, wall seconds). `heavy[i]` makes
+/// stream `i` a blocking-only stream with `SKEW`-scaled device compute;
+/// an empty slice is the homogeneous poll-capable fleet.
 fn run_fleet(
     tls: &[Vec<SimTask>],
     bw: &BandwidthModel,
     runtime: Runtime,
+    steal: bool,
+    heavy: &[bool],
 ) -> Result<(MultiReport, f64)> {
     let clock = WallClock::new();
-    let sm = stage_model();
     let streams: Vec<(Vec<SimTask>, _)> = tls
         .iter()
-        .map(|tasks| {
-            let sm = sm.clone();
+        .enumerate()
+        .map(|(i, tasks)| {
+            let blocking = heavy.get(i).copied().unwrap_or(false);
+            let sm = stage_model(if blocking { SKEW } else { 1.0 });
             let bw = bw.clone();
-            let factory = move || -> Result<SimDevice<StaticPolicy>> {
-                Ok(SimDevice {
-                    policy: StaticPolicy::no_exit(8),
-                    plan: ActivePlan::single(sm),
-                    bw,
-                    clock,
-                    source_elems: 512,
-                    cost: CostModel::new(
-                        DeviceProfile::jetson_nx(),
-                        DeviceProfile::cloud_a6000(),
-                    ),
+            let factory = move || -> Result<BenchDevice> {
+                Ok(BenchDevice {
+                    inner: SimDevice {
+                        policy: StaticPolicy::no_exit(8),
+                        plan: ActivePlan::single(sm),
+                        bw,
+                        clock,
+                        source_elems: 512,
+                        cost: CostModel::new(
+                            DeviceProfile::jetson_nx(),
+                            DeviceProfile::cloud_a6000(),
+                        ),
+                    },
+                    blocking,
                 })
             };
             (tasks.clone(), factory)
@@ -113,13 +204,14 @@ fn run_fleet(
         .collect();
 
     let t0 = Instant::now();
-    let multi = run_real::<SimDevice<StaticPolicy>, SimCloud, _, _>(
+    let multi = run_real::<BenchDevice, SimCloud, _, _>(
         streams,
         || Ok(SimCloud),
         bw.clone(),
         clock,
         RealCfg {
             runtime,
+            steal,
             scheme: "bench".into(),
             model: "sim".into(),
             ..Default::default()
@@ -128,9 +220,19 @@ fn run_fleet(
     Ok((multi, t0.elapsed().as_secs_f64()))
 }
 
-/// Run the scaling grid: every fleet size on the pooled engine, and on
-/// the threaded engine up to [`THREADED_CAP`] streams. Prints nothing —
-/// the CLI renders the returned table. Also writes
+/// Mean per-worker busy fraction of a pooled run (0 when the engine
+/// reported no workers — i.e. the threaded reference).
+fn mean_busy(multi: &MultiReport) -> f64 {
+    if multi.worker_busy.is_empty() {
+        return 0.0;
+    }
+    multi.worker_busy.iter().sum::<f64>() / multi.worker_busy.len() as f64
+}
+
+/// Run the scaling grid: every fleet size on the pooled engine, on the
+/// threaded engine up to [`THREADED_CAP`] streams, then the 10:1
+/// compute-skew fleet on the pooled engine with stealing off vs on.
+/// Prints nothing — the CLI renders the returned table. Also writes
 /// `BENCH_serve_scale.json`.
 pub fn run(stream_grid: &[usize], tasks_per_stream: usize) -> Result<Table> {
     let bw = BandwidthModel::Static(LINK_MBPS);
@@ -141,7 +243,7 @@ pub fn run(stream_grid: &[usize], tasks_per_stream: usize) -> Result<Table> {
         "secs",
         "done",
         "agg it/s",
-        "vs threaded",
+        "speedup",
     ]);
     let mut json = BenchJson::new("serve_scale");
 
@@ -161,7 +263,8 @@ pub fn run(stream_grid: &[usize], tasks_per_stream: usize) -> Result<Table> {
                 ]);
                 continue;
             }
-            let (multi, secs) = run_fleet(&tls, &bw, runtime)?;
+            let (multi, secs) =
+                run_fleet(&tls, &bw, runtime, true, &[])?;
             let agg = multi.aggregate();
             let done: usize =
                 multi.per_stream.iter().map(|r| r.tasks.len()).sum();
@@ -181,21 +284,79 @@ pub fn run(stream_grid: &[usize], tasks_per_stream: usize) -> Result<Table> {
                 format!("{secs:.3}"),
                 done.to_string(),
                 format!("{tput:.0}"),
-                format!("{speedup:.2}x"),
+                format!("{speedup:.2}x vs threaded"),
             ]);
+            let mut fields = vec![
+                ("streams", Json::Num(n_streams as f64)),
+                ("tasks_per_stream", Json::Num(tasks_per_stream as f64)),
+                ("engine", Json::Str(runtime.name().to_string())),
+                ("tasks_done", Json::Num(done as f64)),
+                ("secs", Json::Num(secs)),
+                ("throughput", Json::Num(tput)),
+                ("speedup_vs_threaded", Json::Num(speedup)),
+            ];
+            if runtime == Runtime::Pooled {
+                fields.push(("steals", Json::Num(multi.steals as f64)));
+                fields.push((
+                    "worker_busy_frac",
+                    Json::Num(mean_busy(&multi)),
+                ));
+            }
             json.add_row(
                 &format!("{n_streams}x{tasks_per_stream}/{}", runtime.name()),
-                &[
-                    ("streams", Json::Num(n_streams as f64)),
-                    ("tasks_per_stream", Json::Num(tasks_per_stream as f64)),
-                    ("engine", Json::Str(runtime.name().to_string())),
-                    ("tasks_done", Json::Num(done as f64)),
-                    ("secs", Json::Num(secs)),
-                    ("throughput", Json::Num(tput)),
-                    ("speedup_vs_threaded", Json::Num(speedup)),
-                ],
+                &fields,
             );
         }
+    }
+
+    // ---- skewed fleet: the work-stealing gate -------------------------
+    // N_HEAVY blocking 10:1 streams at indices {0, W, 2W, ...}: all
+    // share home worker 0, so static pinning serializes them while the
+    // rest of the pool idles. The fleet is sized so the heavy stride
+    // covers every worker (n = N_HEAVY * workers).
+    let workers = pool_workers(usize::MAX);
+    let n_streams = N_HEAVY * workers;
+    let tls = fleet_tasks(n_streams, tasks_per_stream);
+    let heavy: Vec<bool> =
+        (0..n_streams).map(|i| i % workers == 0).collect();
+    let mut pinned_tput = 0.0f64;
+    for steal in [false, true] {
+        let (multi, secs) =
+            run_fleet(&tls, &bw, Runtime::Pooled, steal, &heavy)?;
+        let agg = multi.aggregate();
+        let done: usize =
+            multi.per_stream.iter().map(|r| r.tasks.len()).sum();
+        let tput = agg.throughput();
+        if !steal {
+            pinned_tput = tput;
+        }
+        let speedup =
+            if pinned_tput > 0.0 { tput / pinned_tput } else { 1.0 };
+        let engine = if steal { "pooled-steal" } else { "pooled-pinned" };
+        t.row(vec![
+            format!("{n_streams} (10:1 skew)"),
+            (n_streams * tasks_per_stream).to_string(),
+            engine.to_string(),
+            format!("{secs:.3}"),
+            done.to_string(),
+            format!("{tput:.0}"),
+            format!("{speedup:.2}x vs pinned"),
+        ]);
+        json.add_row(
+            &format!("skew{n_streams}x{tasks_per_stream}/{engine}"),
+            &[
+                ("streams", Json::Num(n_streams as f64)),
+                ("tasks_per_stream", Json::Num(tasks_per_stream as f64)),
+                ("engine", Json::Str(engine.to_string())),
+                ("skew", Json::Str(format!("{SKEW}:1"))),
+                ("tasks_done", Json::Num(done as f64)),
+                ("secs", Json::Num(secs)),
+                ("throughput", Json::Num(tput)),
+                ("speedup_vs_pinned", Json::Num(speedup)),
+                ("steals", Json::Num(multi.steals as f64)),
+                ("worker_busy_frac", Json::Num(mean_busy(&multi))),
+            ],
+        );
     }
     json.write()?;
     Ok(t)
@@ -205,9 +366,10 @@ pub fn run(stream_grid: &[usize], tasks_per_stream: usize) -> Result<Table> {
 mod tests {
     use super::*;
 
-    /// Tiny grid end-to-end on both engines: rows present, every task
-    /// served, JSON written with the `streams`/`throughput` fields the
-    /// CI smoke greps for.
+    /// Tiny grid end-to-end on both engines plus the skewed cells: rows
+    /// present, every task served, JSON written with the
+    /// `streams`/`throughput`/`steals`/`worker_busy_frac` fields the CI
+    /// smoke greps for.
     #[test]
     fn tiny_grid_runs_both_engines_and_emits_json() {
         let _env = crate::bench::BENCH_DIR_TEST_LOCK.lock().unwrap();
@@ -221,19 +383,49 @@ mod tests {
             None => std::env::remove_var("COACH_BENCH_DIR"),
         }
         let t = t.unwrap();
-        assert_eq!(t.rows.len(), 4, "2 engine rows per fleet size");
+        assert_eq!(
+            t.rows.len(),
+            6,
+            "2 engine rows per fleet size + 2 skew rows"
+        );
         let j = Json::from_file(&dir.join("BENCH_serve_scale.json")).unwrap();
         let rows = j.get("rows").unwrap().as_arr().unwrap();
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 6);
+        let mut skew_rows = 0;
         for row in rows {
             let n = row.get("streams").unwrap().as_f64().unwrap() as usize;
-            assert!(n == 2 || n == 4);
+            let tasks = row.get("tasks_done").unwrap().as_f64().unwrap();
             assert!(row.get("throughput").unwrap().as_f64().unwrap() > 0.0);
-            assert_eq!(
-                row.get("tasks_done").unwrap().as_f64().unwrap() as usize,
-                n * 3,
-                "every task must be served"
-            );
+            assert_eq!(tasks as usize, n * 3, "every task must be served");
+            let engine =
+                row.get("engine").unwrap().as_str().unwrap().to_string();
+            if engine != "threaded" {
+                // every pooled cell reports the scheduler telemetry
+                assert!(
+                    row.get("steals").unwrap().as_f64().unwrap() >= 0.0
+                );
+                assert!(
+                    row.get("worker_busy_frac").unwrap().as_f64().unwrap()
+                        > 0.0,
+                    "workers did real out-of-lock work"
+                );
+            }
+            if engine.starts_with("pooled-") {
+                skew_rows += 1;
+                assert_eq!(
+                    row.get("skew").unwrap().as_str().unwrap(),
+                    "10:1"
+                );
+                // static pinning must never steal; stealing on the
+                // convoyed fleet must actually migrate streams (more
+                // than one worker exists on any CI machine)
+                let steals =
+                    row.get("steals").unwrap().as_f64().unwrap() as u64;
+                if engine == "pooled-pinned" {
+                    assert_eq!(steals, 0, "steal=false must not migrate");
+                }
+            }
         }
+        assert_eq!(skew_rows, 2, "pinned + stealing skew cells");
     }
 }

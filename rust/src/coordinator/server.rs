@@ -101,6 +101,9 @@ pub struct ServeCfg {
     /// compute occupies its worker inline — the win is that waits
     /// (arrival pacing, link, cloud queue) no longer each pin a thread.
     pub runtime: crate::serve::Runtime,
+    /// pooled engine only: cross-worker work stealing (default on).
+    /// `false` restores static `stream % workers` pinning.
+    pub steal: bool,
     /// live cut re-planning over an explicit bw→cut ladder (None =
     /// every stream keeps its configured cut for the whole run)
     pub replan: Option<ServeReplan>,
@@ -327,6 +330,18 @@ impl PjrtDevice {
 impl DeviceStage for PjrtDevice {
     type Wire = WireMsg;
     type Feedback = (usize, usize, Vec<f32>);
+    /// A PJRT engine is thread-bound: it never dehydrates, so under the
+    /// pooled engine the stream pins to the worker that first ran it
+    /// (`Infallible` = no portable form exists).
+    type Portable = std::convert::Infallible;
+
+    fn dehydrate(self) -> std::result::Result<Self::Portable, Self> {
+        Err(self)
+    }
+
+    fn rehydrate(portable: Self::Portable) -> Self {
+        match portable {}
+    }
 
     fn process(
         &mut self,
@@ -708,6 +723,7 @@ pub fn serve_streams(
             result_wire_bytes: cost.wire_bytes(manifest.n_classes, 32),
             runtime: cfg.runtime,
             cloud: cfg.cloud,
+            steal: cfg.steal,
             scheme: "real".into(),
             model: cfg.model.clone(),
         },

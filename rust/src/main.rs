@@ -14,15 +14,19 @@
 //! coach serve      [--model vgg_mini|resnet_mini] [--cut K] [--n N]
 //!                  [--bw MBPS] [--corr low|medium|high] [--scheme coach|noadjust]
 //!                  [--device-scale S] [--streams N] [--queue-cap Q]
-//!                  [--runtime threaded|pooled] [--config deploy.toml]
+//!                  [--runtime threaded|pooled] [--steal true|false]
+//!                  [--config deploy.toml]
 //!                  [--cloud-sched fifo|batch|slo] [--max-batch B]
 //!                  [--max-wait-us U]
 //! coach serve-sim  [--streams N] [--n TASKS] [--model M] [--bw MBPS]
 //!                  [--period-ms P] [--queue-cap Q] [--drop-after-periods D]
-//!                  [--runtime threaded|pooled]
+//!                  [--runtime threaded|pooled] [--steal true|false]
+//!                  [--batch-alpha A]
 //!                                    # wall-clock serving with simulated
 //!                                    # compute (no artifacts); the pooled
-//!                                    # engine handles 10k+ streams
+//!                                    # engine handles 10k+ streams and
+//!                                    # work-steals across workers unless
+//!                                    # --steal false pins stream%workers
 //! coach profile    [--reps R]       # per-block times -> profile.json
 //! coach bench-table1 [--n N]
 //! coach bench-table2 [--n N]
@@ -481,6 +485,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Some(r) => coach::serve::Runtime::parse(r)?,
             None => base.runtime,
         },
+        steal: match args.get("steal") {
+            None | Some("true") | Some("1") => true,
+            Some("false") | Some("0") => false,
+            Some(other) => bail!("--steal must be true|false, got '{other}'"),
+        },
         replan: None,
         cloud: {
             let mut c = coach::pipeline::BatchCfg::default();
@@ -558,6 +567,20 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     }
     if let Some(r) = args.get("runtime") {
         sc = sc.runtime(coach::serve::Runtime::parse(r)?);
+    }
+    if let Some(s) = args.get("steal") {
+        sc = sc.steal(match s {
+            "true" | "1" => true,
+            "false" | "0" => false,
+            other => bail!("--steal must be true|false, got '{other}'"),
+        });
+    }
+    if let Some(a) = args.get("batch-alpha") {
+        let a = a.parse::<f64>().context("--batch-alpha")?;
+        if !(0.0..=1.0).contains(&a) {
+            bail!("--batch-alpha must be in [0, 1], got {a}");
+        }
+        sc = sc.batch_alpha(a);
     }
     println!(
         "wall-clock sim fleet: {n_streams} stream(s) x {n_tasks} task(s) of \

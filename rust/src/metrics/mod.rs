@@ -288,6 +288,14 @@ pub struct MultiReport {
     /// `cloud_sched = "fifo"`; empty when the run never reached the
     /// cloud)
     pub batch_occupancy: Vec<u64>,
+    /// streams migrated between pooled workers by work stealing (0 for
+    /// the threaded engine, the DES, and `steal = false` pooled runs)
+    pub steals: u64,
+    /// per-worker busy fraction of a pooled run's wall time — seconds
+    /// spent driving streams or servicing the cloud outside the pool
+    /// lock, over the run's wall-clock span; empty for non-pooled
+    /// engines and the DES
+    pub worker_busy: Vec<f64>,
 }
 
 impl MultiReport {
@@ -452,8 +460,7 @@ mod tests {
         };
         let multi = MultiReport {
             per_stream: vec![a, b],
-            events: 0,
-            batch_occupancy: Vec::new(),
+            ..Default::default()
         };
         let agg = multi.aggregate();
         assert_eq!(agg.tasks.len(), 2);

@@ -11,20 +11,27 @@
 //! * [`CloudPolicy::Fifo`] — today's behaviour, kept as the bit-for-bit
 //!   reference. The DES fifo path does not route through this module's
 //!   arithmetic at all, so existing goldens are pinned by construction.
-//! * [`CloudPolicy::DynBatch`] — coalesce the shape-compatible FIFO
-//!   prefix up to `max_batch`, holding the head at most `max_wait`
-//!   seconds for the batch to fill.
+//! * [`CloudPolicy::DynBatch`] — per-shape batch queues: queued items
+//!   are grouped by tensor shape (first-appearance order); a group that
+//!   fills to `max_batch` launches immediately even when an
+//!   incompatible unripe head sits in front of it, otherwise the global
+//!   head's group launches partial once the head has waited `max_wait`
+//!   seconds.
 //! * [`CloudPolicy::SloAware`] — earliest-deadline-first admission
 //!   (deadline = arrival + SLO) with a per-stream fair-share cap so one
 //!   chatty stream cannot starve the fleet out of a batch.
 //!
 //! The batch service curve is the calibrated amortization model behind
 //! `StageModel::batch_speedup`: a batch of `b` compatible items costs
-//! `per_item * (ALPHA + (1 - ALPHA) * b)` seconds, i.e. a fixed
-//! launch/readback fraction `ALPHA` plus a linear per-item tail. At
-//! `b = 1` the curve is the exact identity (`0.75 + 0.25 == 1.0` in
-//! f64), which is what makes `max_batch = 1` bit-for-bit comparable to
-//! fifo.
+//! `per_item * (alpha + (1 - alpha) * b)` seconds, i.e. a fixed
+//! launch/readback fraction `alpha` plus a linear per-item tail. The
+//! launch fraction defaults to [`ALPHA`] (0.75) and is configurable
+//! per-run via `BatchCfg::alpha` (`[serve] batch_alpha` in scenario
+//! TOML) so real-hardware calibration does not need a rebuild. At
+//! `b = 1` the curve returns `per_item` verbatim — an explicit guard,
+//! not an arithmetic accident, so the identity holds bit-for-bit for
+//! every `alpha` — which is what makes `max_batch = 1` bit-for-bit
+//! comparable to fifo.
 //!
 //! Determinism: this module sits on the report path, so ordered
 //! containers only (the `map-order` xtask lint covers it) and no
@@ -32,26 +39,36 @@
 
 use anyhow::{bail, Result};
 
-/// Fixed (non-amortizable) fraction of a solo cloud service: kernel
-/// launch, readback, scheduling overhead. The remaining `1 - ALPHA`
-/// scales linearly with batch size.
+/// Default fixed (non-amortizable) fraction of a solo cloud service:
+/// kernel launch, readback, scheduling overhead. The remaining
+/// `1 - ALPHA` scales linearly with batch size. Override per-run with
+/// `BatchCfg::alpha` / `[serve] batch_alpha`.
 pub const ALPHA: f64 = 0.75;
 
 /// Cloud service time for a batch of `b` compatible items whose
-/// slowest member costs `per_item` seconds solo. Exact identity at
-/// `b = 1`: `ALPHA + (1 - ALPHA)` is exactly `1.0`, and `x * 1.0 == x`
-/// bit-for-bit for every finite `x >= 0`.
-pub fn service_secs(per_item: f64, b: usize) -> f64 {
+/// slowest member costs `per_item` seconds solo, under launch fraction
+/// `alpha`. Exact identity at `b = 1` by an explicit guard — for an
+/// arbitrary calibrated `alpha`, `alpha + (1 - alpha)` is NOT
+/// guaranteed to round to exactly `1.0`, so the guard (not the
+/// arithmetic) is what keeps `max_batch = 1` bit-for-bit equal to the
+/// unbatched path.
+pub fn service_secs(alpha: f64, per_item: f64, b: usize) -> f64 {
     let b = b.max(1);
-    per_item * (ALPHA + (1.0 - ALPHA) * b as f64)
+    if b == 1 {
+        return per_item;
+    }
+    per_item * (alpha + (1.0 - alpha) * b as f64)
 }
 
 /// Aggregate-throughput speedup of a size-`b` batch over `b` solo
-/// services: `b / (ALPHA + (1 - ALPHA) * b)`, asymptote `1 / ALPHA`
+/// services: `b / (alpha + (1 - alpha) * b)`, asymptote `1 / alpha`
 /// per item — 4x aggregate with the default curve.
-pub fn speedup(b: usize) -> f64 {
-    let b = b.max(1) as f64;
-    b / (ALPHA + (1.0 - ALPHA) * b)
+pub fn speedup(alpha: f64, b: usize) -> f64 {
+    let b = b.max(1);
+    if b == 1 {
+        return 1.0;
+    }
+    b as f64 / (alpha + (1.0 - alpha) * b as f64)
 }
 
 /// Compatibility key for batching: items may share a batch only when
@@ -125,6 +142,9 @@ pub struct BatchCfg {
     /// `INFINITY` means no deadline, degrading `SloAware` to FIFO
     /// head selection.
     pub slo: f64,
+    /// Launch fraction of the batch service curve (`[serve]
+    /// batch_alpha`), in `[0, 1]`. Defaults to [`ALPHA`].
+    pub alpha: f64,
 }
 
 impl Default for BatchCfg {
@@ -134,6 +154,7 @@ impl Default for BatchCfg {
             max_batch: 8,
             max_wait: 200e-6,
             slo: f64::INFINITY,
+            alpha: ALPHA,
         }
     }
 }
@@ -143,6 +164,11 @@ impl BatchCfg {
     /// path never consults [`pick`].
     pub fn batched(&self) -> bool {
         self.policy != CloudPolicy::Fifo
+    }
+
+    /// [`service_secs`] under this config's calibrated launch fraction.
+    pub fn service_secs(&self, per_item: f64, b: usize) -> f64 {
+        service_secs(self.alpha, per_item, b)
     }
 }
 
@@ -182,19 +208,38 @@ pub fn pick(cfg: &BatchCfg, items: &[BatchItem], now: f64) -> Pick {
     match cfg.policy {
         CloudPolicy::Fifo => Pick::Admit(vec![0]),
         CloudPolicy::DynBatch => {
-            let head = items[0];
-            let mut sel = Vec::new();
+            // Per-shape batch queues: one logical queue per tensor
+            // shape, materialized as index groups in first-appearance
+            // order (items arrive enq-sorted, so a group's first index
+            // is its oldest member). A shape-incompatible unripe head
+            // therefore no longer blocks a full batch queued behind it.
+            let mut groups: Vec<(u64, Vec<usize>)> = Vec::new();
             for (i, it) in items.iter().enumerate() {
-                if it.shape == head.shape {
-                    sel.push(i);
-                    if sel.len() == bmax {
-                        break;
+                match groups.iter_mut().find(|(s, _)| *s == it.shape) {
+                    Some((_, idxs)) => {
+                        if idxs.len() < bmax {
+                            idxs.push(i);
+                        }
                     }
+                    None => groups.push((it.shape, vec![i])),
                 }
             }
-            let ripe = now >= head.enq + cfg.max_wait;
-            if sel.len() == bmax || ripe {
-                Pick::Admit(sel)
+            // A full group launches immediately; groups are in
+            // first-appearance order, so ties go to the oldest head.
+            if let Some((_, sel)) =
+                groups.iter().find(|(_, idxs)| idxs.len() == bmax)
+            {
+                return Pick::Admit(sel.clone());
+            }
+            // No full group: the global head ripens first (enq order),
+            // and its group launches partial once it has.
+            let head = items[0];
+            if now >= head.enq + cfg.max_wait {
+                let (_, sel) = groups
+                    .iter()
+                    .find(|(s, _)| *s == head.shape)
+                    .expect("head item is always grouped");
+                Pick::Admit(sel.clone())
             } else {
                 Pick::Defer(head.enq + cfg.max_wait)
             }
@@ -282,7 +327,7 @@ impl Default for CloudCongestion {
 impl CloudCongestion {
     /// Closed-form estimate from the fleet shape: with `n` streams
     /// feeding the cloud, the steady-state batch is `min(max_batch, n)`
-    /// wide, so the per-item service scales by `(ALPHA + (1-ALPHA)*b)/b`
+    /// wide, so the per-item service scales by `(alpha + (1-alpha)*b)/b`
     /// and the head waits half the formation window on average. Fifo
     /// fleets (and trivial `max_batch = 1`) stay neutral.
     pub fn estimate(cfg: &BatchCfg, n_streams: usize) -> CloudCongestion {
@@ -292,7 +337,7 @@ impl CloudCongestion {
         let b = cfg.max_batch.min(n_streams.max(1)).max(1);
         CloudCongestion {
             queue_wait: 0.5 * cfg.max_wait,
-            service_scale: (ALPHA + (1.0 - ALPHA) * b as f64) / b as f64,
+            service_scale: service_secs(cfg.alpha, 1.0, b) / b as f64,
         }
     }
 
@@ -322,25 +367,48 @@ mod tests {
 
     #[test]
     fn service_curve_is_exact_identity_at_one() {
-        for x in [0.0, 1e-9, 2e-3, 0.74, 1.0, 123.456] {
-            assert_eq!(service_secs(x, 1).to_bits(), x.to_bits());
+        // ... for EVERY alpha, including ones where alpha + (1 - alpha)
+        // does not round to exactly 1.0 — that is what the b == 1 guard
+        // buys over the pure arithmetic.
+        for alpha in [0.0, 0.3, 0.6 + 1e-17, ALPHA, 0.9999999, 1.0] {
+            for x in [0.0, 1e-9, 2e-3, 0.74, 1.0, 123.456] {
+                assert_eq!(service_secs(alpha, x, 1).to_bits(), x.to_bits());
+            }
         }
     }
 
     #[test]
     fn speedup_is_monotone_and_bounded() {
-        assert!((speedup(1) - 1.0).abs() < 1e-12);
+        assert!((speedup(ALPHA, 1) - 1.0).abs() < 1e-12);
         let mut prev = 0.0;
         for b in 1..=64 {
-            let s = speedup(b);
+            let s = speedup(ALPHA, b);
             assert!(s > prev, "speedup must grow with batch size");
-            assert!(s < 1.0 / ALPHA + 1e-12, "speedup asymptote is 1/ALPHA");
+            assert!(s < 1.0 / ALPHA + 1e-12, "speedup asymptote is 1/alpha");
             prev = s;
         }
         // service time is consistent with the speedup view
         let b = 8;
-        let agg = b as f64 * 1e-3 / service_secs(1e-3, b);
-        assert!((agg - speedup(b)).abs() < 1e-12);
+        let agg = b as f64 * 1e-3 / service_secs(ALPHA, 1e-3, b);
+        assert!((agg - speedup(ALPHA, b)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_routes_through_cfg_and_congestion() {
+        // a smaller launch fraction amortizes better at the same width
+        assert!(service_secs(0.25, 1e-3, 8) < service_secs(0.75, 1e-3, 8));
+        let cfg = BatchCfg {
+            policy: CloudPolicy::DynBatch,
+            max_batch: 8,
+            max_wait: 200e-6,
+            slo: f64::INFINITY,
+            alpha: 0.25,
+        };
+        assert_eq!(cfg.service_secs(1e-3, 8), service_secs(0.25, 1e-3, 8));
+        let sharp = CloudCongestion::estimate(&cfg, 256);
+        let dull =
+            CloudCongestion::estimate(&BatchCfg { alpha: 0.75, ..cfg }, 256);
+        assert!(sharp.service_scale < dull.service_scale);
     }
 
     #[test]
@@ -365,6 +433,7 @@ mod tests {
             max_batch: 3,
             max_wait: 1.0,
             slo: f64::INFINITY,
+            alpha: ALPHA,
         };
         // 4 compatible items: admit 3 immediately (full batch)
         let q: Vec<BatchItem> =
@@ -381,12 +450,51 @@ mod tests {
     }
 
     #[test]
+    fn dynbatch_full_group_launches_behind_incompatible_head() {
+        let cfg = BatchCfg {
+            policy: CloudPolicy::DynBatch,
+            max_batch: 3,
+            max_wait: 1.0,
+            slo: f64::INFINITY,
+            alpha: ALPHA,
+        };
+        // the unripe shape-9 head used to block the full shape-7 batch
+        // queued behind it; per-shape queues launch the full group now
+        let q = [
+            item(0, 0.0, f64::INFINITY, 9),
+            item(1, 0.1, f64::INFINITY, 7),
+            item(2, 0.2, f64::INFINITY, 7),
+            item(3, 0.3, f64::INFINITY, 7),
+        ];
+        assert_eq!(pick(&cfg, &q, 0.4), Pick::Admit(vec![1, 2, 3]));
+        // no full group: the head still governs the partial launch
+        let q = [
+            item(0, 0.0, f64::INFINITY, 9),
+            item(1, 0.1, f64::INFINITY, 7),
+            item(2, 0.2, f64::INFINITY, 7),
+        ];
+        assert_eq!(pick(&cfg, &q, 0.4), Pick::Defer(1.0));
+        assert_eq!(pick(&cfg, &q, 1.0), Pick::Admit(vec![0]));
+        // two full groups: ties go to the group with the oldest head
+        let q = [
+            item(0, 0.0, f64::INFINITY, 9),
+            item(1, 0.1, f64::INFINITY, 7),
+            item(2, 0.2, f64::INFINITY, 9),
+            item(3, 0.3, f64::INFINITY, 7),
+            item(4, 0.4, f64::INFINITY, 9),
+            item(5, 0.5, f64::INFINITY, 7),
+        ];
+        assert_eq!(pick(&cfg, &q, 0.6), Pick::Admit(vec![0, 2, 4]));
+    }
+
+    #[test]
     fn dynbatch_defers_until_the_head_ripens() {
         let cfg = BatchCfg {
             policy: CloudPolicy::DynBatch,
             max_batch: 8,
             max_wait: 0.5,
             slo: f64::INFINITY,
+            alpha: ALPHA,
         };
         let q = [item(0, 1.0, f64::INFINITY, 7)];
         assert_eq!(pick(&cfg, &q, 1.2), Pick::Defer(1.5));
@@ -400,6 +508,7 @@ mod tests {
             max_batch: 1,
             max_wait: 0.0,
             slo: f64::INFINITY,
+            alpha: ALPHA,
         };
         let q = [
             item(0, 0.0, f64::INFINITY, 7),
@@ -415,6 +524,7 @@ mod tests {
             max_batch: 2,
             max_wait: 10.0,
             slo: 1.0,
+            alpha: ALPHA,
         };
         // the later arrival has the tighter deadline and becomes head;
         // urgency (deadline within max_wait) launches without filling
@@ -432,6 +542,7 @@ mod tests {
             max_batch: 4,
             max_wait: 0.0,
             slo: f64::INFINITY,
+            alpha: ALPHA,
         };
         // stream 0 has 4 queued items, streams 1-2 one each: the cap is
         // max(1, 4/3) = 1 slot per stream, so the launch mixes streams
@@ -466,6 +577,7 @@ mod tests {
             max_batch: 8,
             max_wait: 200e-6,
             slo: f64::INFINITY,
+            alpha: ALPHA,
         };
         let c = CloudCongestion::estimate(&cfg, 256);
         assert!(c.service_scale < 1.0 && c.service_scale > ALPHA / 8.0);

@@ -515,7 +515,7 @@ fn cloud_form<Q: EventQueue<Ev>>(
                     .map(|j| j.t_c_par.min(j.t_c))
                     .fold(f64::INFINITY, f64::min);
                 let t_c = jobs.iter().map(|j| j.t_c).fold(0.0f64, f64::max);
-                let service = batch::service_secs(t_c, b);
+                let service = bcfg.service_secs(t_c, b);
                 // same cloud timeline rule as `SharedStages::transmit`,
                 // with the batch landing when its LAST member lands; at
                 // b = 1 this is bit-for-bit the fifo arithmetic
@@ -586,7 +586,7 @@ pub fn run_virtual_streams(
 ) -> MultiReport {
     let (per_stream, events, batch_occupancy) =
         run_streams_engine(streams, bw, &cfg);
-    MultiReport { per_stream, events, batch_occupancy }
+    MultiReport { per_stream, events, batch_occupancy, ..Default::default() }
 }
 
 /// Monomorphize the DES core on the configured queue engine. Either
@@ -949,6 +949,7 @@ pub fn run_virtual_shards(
             .collect(),
         events,
         batch_occupancy,
+        ..Default::default()
     }
 }
 
@@ -978,6 +979,10 @@ pub struct RealCfg {
     /// cloud-side scheduler (`pipeline::batch`); the default fifo keeps
     /// the legacy one-item-at-a-time shared cloud
     pub cloud: BatchCfg,
+    /// pooled engine only: work stealing between workers (default on);
+    /// `false` restores static `stream % workers` pinning — the
+    /// comparison baseline of `coach bench-serve-scale`
+    pub steal: bool,
     pub scheme: String,
     pub model: String,
 }
@@ -991,6 +996,7 @@ impl Default for RealCfg {
             result_wire_bytes: 0,
             runtime: crate::serve::Runtime::default(),
             cloud: BatchCfg::default(),
+            steal: true,
             scheme: "real".into(),
             model: String::new(),
         }
@@ -1112,9 +1118,21 @@ impl<P: OnlinePolicy> SimDevice<P> {
     }
 }
 
-impl<P: OnlinePolicy> DeviceStage for SimDevice<P> {
+impl<P: OnlinePolicy + Send + 'static> DeviceStage for SimDevice<P> {
     type Wire = SimWire;
     type Feedback = ();
+    /// The sim stage is plain `Send` data — it crosses pooled-worker
+    /// boundaries as itself, so the whole 10k-stream fleet stays
+    /// stealable.
+    type Portable = Self;
+
+    fn dehydrate(self) -> std::result::Result<Self, Self> {
+        Ok(self)
+    }
+
+    fn rehydrate(portable: Self) -> Self {
+        portable
+    }
 
     fn process(
         &mut self,
@@ -1725,6 +1743,15 @@ mod tests {
     impl DeviceStage for FailingDevice {
         type Wire = SimWire;
         type Feedback = ();
+        type Portable = Self;
+
+        fn dehydrate(self) -> std::result::Result<Self, Self> {
+            Ok(self)
+        }
+
+        fn rehydrate(portable: Self) -> Self {
+            portable
+        }
 
         fn process(
             &mut self,

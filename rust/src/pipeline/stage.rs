@@ -349,6 +349,13 @@ pub trait DeviceStage {
     type Wire: Send + 'static;
     /// payload routed back from the cloud for cache updates (Eq. 7)
     type Feedback: Send + 'static;
+    /// `Send` form of a hydrated stage, used by the work-stealing pooled
+    /// runtime to migrate a parked stream between workers. Poll-capable
+    /// sim stages set `Portable = Self`; stages that own thread-bound
+    /// state (a real PJRT engine) set `Portable =
+    /// std::convert::Infallible` — they can never be dehydrated, so the
+    /// stream stays pinned to the worker that hydrated it.
+    type Portable: Send + 'static;
 
     /// Process one task. The returned `f64` is the device-resource busy
     /// time to charge (seconds) — the stage reports it so that harness
@@ -372,6 +379,23 @@ pub trait DeviceStage {
     ) -> Option<Result<(DeviceVerdict<Self::Wire>, f64)>> {
         None
     }
+
+    /// Try to convert the hydrated stage back into its `Send` portable
+    /// form so the scheduler can park the stream in shared state and any
+    /// worker may pick it up next. `Err(self)` means "this stage cannot
+    /// leave the thread that built it" — the scheduler then pins the
+    /// stream to the current worker (it keeps the stage in thread-local
+    /// state and marks the slot unstealable).
+    fn dehydrate(self) -> std::result::Result<Self::Portable, Self>
+    where
+        Self: Sized;
+
+    /// Reconstitute a stage from the portable form produced by
+    /// [`DeviceStage::dehydrate`], on whichever worker checked the
+    /// stream out. For `Portable = Infallible` this is unreachable.
+    fn rehydrate(portable: Self::Portable) -> Self
+    where
+        Self: Sized;
 
     /// Fold a completed task's result back into stream state.
     fn absorb(&mut self, _feedback: Self::Feedback) {}

@@ -94,7 +94,7 @@ impl StageModel {
     /// launches (see `pipeline::batch` for the amortization curve;
     /// exactly 1.0 at `b = 1`).
     pub fn batch_speedup(b: usize) -> f64 {
-        crate::pipeline::batch::speedup(b)
+        crate::pipeline::batch::speedup(crate::pipeline::batch::ALPHA, b)
     }
 }
 

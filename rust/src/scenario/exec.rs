@@ -629,6 +629,7 @@ impl Scenario {
                     .wire_bytes(g.layers[g.sink()].out_elems, 32),
                 runtime: self.runtime,
                 cloud: self.batch_cfg(),
+                steal: self.steal,
                 scheme: self.report_label(),
                 model: self.model.clone(),
             },
@@ -715,6 +716,7 @@ impl Scenario {
             drop_after: self.admission.resolve(period),
             queue_cap: self.queue_cap.unwrap_or(8),
             runtime: self.runtime,
+            steal: self.steal,
             replan,
             cloud: self.batch_cfg(),
         };

@@ -282,6 +282,15 @@ pub struct Scenario {
     /// longest the cloud holds a queue head waiting for its batch to
     /// fill, microseconds (`[serve] max_wait_us`)
     pub max_wait_us: f64,
+    /// serial fraction of the cloud batch amortization curve (`[serve]
+    /// batch_alpha`, default [`crate::pipeline::batch::ALPHA`]) — the
+    /// real-hardware calibration knob, so re-fitting alpha does not
+    /// need a rebuild
+    pub batch_alpha: f64,
+    /// pooled-engine work stealing (`[serve] steal`, default on);
+    /// `false` restores static `stream % workers` pinning — the
+    /// baseline `coach bench-serve-scale` compares against
+    pub steal: bool,
     /// report scheme label override (default: the scheme's name)
     pub label: Option<String>,
 }
@@ -319,6 +328,8 @@ impl Scenario {
             cloud_sched: crate::pipeline::CloudPolicy::Fifo,
             max_batch: 8,
             max_wait_us: 200.0,
+            batch_alpha: crate::pipeline::batch::ALPHA,
+            steal: true,
             label: None,
         }
     }
@@ -537,6 +548,20 @@ impl Scenario {
         self
     }
 
+    /// Serial fraction of the cloud batch amortization curve
+    /// (clamped to [0, 1]; the calibrated default is
+    /// [`crate::pipeline::batch::ALPHA`]).
+    pub fn batch_alpha(mut self, alpha: f64) -> Self {
+        self.batch_alpha = alpha.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Toggle pooled-engine work stealing (on by default).
+    pub fn steal(mut self, on: bool) -> Self {
+        self.steal = on;
+        self
+    }
+
     /// Resolve the `[serve]` cloud-scheduler knobs into the
     /// [`crate::pipeline::BatchCfg`] every driver config carries.
     /// SLO-aware deadlines come from an explicit [`Slo::Secs`]; the
@@ -552,6 +577,7 @@ impl Scenario {
                 Slo::Secs(t) => t,
                 Slo::Paper | Slo::Unbounded => f64::INFINITY,
             },
+            alpha: self.batch_alpha.clamp(0.0, 1.0),
         }
     }
 

@@ -20,8 +20,9 @@
 //!             load_factor, correlation (none|low|medium|high), seed,
 //!             n_classes, drop_after_ms, drop_after_periods
 //! [serve]     n_streams, device_scale, cut, audit_every, queue_cap,
-//!             n_links, runtime (threaded|pooled),
-//!             cloud_sched (fifo|batch|slo), max_batch, max_wait_us
+//!             n_links, runtime (threaded|pooled), steal,
+//!             cloud_sched (fifo|batch|slo), max_batch, max_wait_us,
+//!             batch_alpha
 //! [replan]    enabled, min_mbps, max_mbps, rungs, k,
 //!             serve_cuts ("mbps:cut,mbps:cut,..")
 //! [stream.N]  scale, cut, period_ms, seed, correlation, n_tasks,
@@ -77,9 +78,11 @@ const KNOWN: &[(&str, &[&str])] = &[
             "queue_cap",
             "n_links",
             "runtime",
+            "steal",
             "cloud_sched",
             "max_batch",
             "max_wait_us",
+            "batch_alpha",
         ],
     ),
     (
@@ -392,6 +395,13 @@ impl Scenario {
             sc.runtime = crate::serve::Runtime::parse(r)
                 .context("serve.runtime")?;
         }
+        if let Some(s) = raw.get("serve", "steal") {
+            sc.steal = match s {
+                "true" | "1" => true,
+                "false" | "0" => false,
+                other => bail!("serve.steal must be true|false, got '{other}'"),
+            };
+        }
         if let Some(p) = raw.get("serve", "cloud_sched") {
             sc.cloud_sched = crate::pipeline::CloudPolicy::parse(p)
                 .context("serve.cloud_sched")?;
@@ -407,6 +417,12 @@ impl Scenario {
                 bail!("serve.max_wait_us must be >= 0, got {w}");
             }
             sc.max_wait_us = w;
+        }
+        if let Some(a) = raw.get_f64("serve", "batch_alpha")? {
+            if !(0.0..=1.0).contains(&a) {
+                bail!("serve.batch_alpha must be in [0, 1], got {a}");
+            }
+            sc.batch_alpha = a;
         }
 
         // ---- [replan] --------------------------------------------------
@@ -579,6 +595,39 @@ queue_cap = 4
             Scenario::from_toml("[serve]\ncloud_sched = \"edf\"\n").is_err()
         );
         assert!(Scenario::from_toml("[serve]\nmax_batch = 0\n").is_err());
+    }
+
+    #[test]
+    fn serve_steal_parses_and_defaults_on() {
+        let sc = Scenario::from_toml("[serve]\nsteal = false\n").unwrap();
+        assert!(!sc.steal);
+        let sc = Scenario::from_toml("[serve]\nsteal = true\n").unwrap();
+        assert!(sc.steal);
+        // stealing is the pooled default; "off" must be explicit
+        assert!(Scenario::from_toml("").unwrap().steal);
+        let err =
+            Scenario::from_toml("[serve]\nsteal = sometimes\n").unwrap_err();
+        assert!(format!("{err:#}").contains("serve.steal"), "{err:#}");
+    }
+
+    #[test]
+    fn serve_batch_alpha_parses_and_routes_into_batch_cfg() {
+        use crate::pipeline::batch::ALPHA;
+        let sc =
+            Scenario::from_toml("[serve]\nbatch_alpha = 0.4\n").unwrap();
+        assert!((sc.batch_alpha - 0.4).abs() < 1e-12);
+        assert!((sc.batch_cfg().alpha - 0.4).abs() < 1e-12);
+        // default stays the calibrated constant
+        let d = Scenario::from_toml("").unwrap();
+        assert!((d.batch_alpha - ALPHA).abs() < 1e-12);
+        assert!((d.batch_cfg().alpha - ALPHA).abs() < 1e-12);
+        // out-of-range values are rejected, not clamped silently
+        assert!(
+            Scenario::from_toml("[serve]\nbatch_alpha = 1.5\n").is_err()
+        );
+        assert!(
+            Scenario::from_toml("[serve]\nbatch_alpha = -0.1\n").is_err()
+        );
     }
 
     #[test]

@@ -10,12 +10,30 @@
 //! runnable. 10 000 streams cost 10 000 small state machines, not
 //! 10 000 stacks.
 //!
-//! Pinning: `DeviceStage` implementations need not be `Send` (they are
-//! built in place from a `Send` factory), so each stream is pinned to
-//! the worker `si % workers`, which builds the stage on first poll and
-//! keeps it for the stream's lifetime. The shared `CloudStage` is
-//! likewise pinned to worker 0. Link bookkeeping is pure arithmetic and
-//! runs under the pool lock on whichever worker gets there first.
+//! Scheduling: each worker owns a ready deque and (default) WORK
+//! STEALING keeps the fleet skew-proof — a worker drains its own deque
+//! newest-first (the stream it just woke is the hot one), and when dry
+//! steals half the OLDEST ready streams from the most-loaded peer
+//! before sleeping. Timer and cloud wakes place the woken stream on
+//! the least-loaded worker instead of its birth worker. `RealCfg::
+//! steal = false` restores the legacy static pinning (`stream %
+//! workers`, FIFO drain), kept as the comparison baseline for `coach
+//! bench-serve-scale`.
+//!
+//! Migration and pinning: a parked stream's state machine lives in the
+//! shared [`Slot`] table in its `Send` portable form
+//! ([`DeviceStage::Portable`]); whichever worker pops the stream
+//! rehydrates the stage, drives it, and dehydrates it back on park.
+//! Stages that cannot leave their thread (real PJRT engines —
+//! `dehydrate` returns `Err`) stay hydrated in the worker's local map
+//! and the slot is marked [`Slot::Pinned`]: every later wake routes to
+//! that worker and thieves skip the stream. Hydration is lazy (first
+//! process, not first wake), so even a blocking-only stream remains
+//! stealable until it first computes — that first touch is what
+//! balances a skewed fleet. The factory-built `CloudStage` likewise
+//! lives on worker 0 (poll-capable stages replicate). Link bookkeeping
+//! is pure arithmetic and runs under the pool lock on whichever worker
+//! gets there first.
 //!
 //! Stages that implement the non-blocking hooks
 //! ([`DeviceStage::poll_process`], [`CloudStage::poll_process`]) report
@@ -25,9 +43,16 @@
 //! occupy their worker for the duration, exactly as real compute
 //! occupies a core.
 //!
+//! Telemetry: migrated-stream count (`MultiReport::steals`) and
+//! per-worker busy fractions (`MultiReport::worker_busy`, time spent
+//! driving streams or servicing the cloud outside the pool lock over
+//! the run's wall time) land in the report and `BENCH_serve_scale.json`.
+//!
 //! Equivalence with the threaded engine (same outcomes, same admission
 //! sheds, same backpressure stalls, same merged report) is pinned by
-//! `tests/serve_sched_e2e.rs`.
+//! `tests/serve_sched_e2e.rs` — for the stealing scheduler too: per-task
+//! discrete outcomes depend on policy decisions and bandwidth, not on
+//! which worker drove the stream.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -111,14 +136,35 @@ struct CloudFinish<F> {
     busy: f64,
 }
 
+/// Where one stream's state machine lives right now. The slot table is
+/// the hand-off point of the stealing protocol: wake placement and
+/// thieves consult it under the pool lock, so a stream is always either
+/// checked out by exactly one worker or parked in exactly one place.
+enum Slot<S> {
+    /// parked in its `Send` portable form; ANY worker may check it out
+    Idle(S),
+    /// the stage refused to dehydrate and lives hydrated in worker
+    /// `wid`'s local map; only that worker drives it, thieves skip it
+    Pinned(usize),
+    /// checked out by a worker this instant (being driven)
+    Running,
+    /// stream finished (or failed); no further wakes expected
+    Done,
+}
+
 /// Mutable pool state, guarded by one mutex. Workers hold the lock only
 /// for bookkeeping — stage code always runs outside it.
-struct Core<W, F> {
+struct Core<W, F, S> {
     timers: TimerWheel<Wake<W, F>>,
-    /// per-worker queues of runnable pinned streams
+    /// per-worker deques of runnable streams
     ready: Vec<VecDeque<usize>>,
-    /// stream -> owning worker
-    owner: Vec<usize>,
+    /// stream -> birth worker (`si % workers`), the `steal = false`
+    /// placement
+    home: Vec<usize>,
+    /// per-stream parking table (see [`Slot`])
+    slots: Vec<Slot<S>>,
+    /// streams migrated across workers by stealing (telemetry)
+    steals: u64,
     /// bounded FIFO feeding the shared link (cap = `RealCfg::queue_cap`)
     link_queue: VecDeque<LinkItem<W>>,
     /// a transmission is in flight (or finished but stalled on the
@@ -153,7 +199,7 @@ struct Core<W, F> {
     abort: bool,
 }
 
-impl<W, F> Core<W, F> {
+impl<W, F, S> Core<W, F, S> {
     /// Nothing left anywhere: every stream finished, link and cloud
     /// drained and idle, no pending timers.
     fn done(&self) -> bool {
@@ -168,8 +214,8 @@ impl<W, F> Core<W, F> {
 }
 
 /// Immutable pool context shared by every worker.
-struct Pool<W, F> {
-    core: Mutex<Core<W, F>>,
+struct Pool<W, F, S> {
+    core: Mutex<Core<W, F, S>>,
     wakeup: Condvar,
     cap: usize,
     clock: WallClock,
@@ -178,39 +224,103 @@ struct Pool<W, F> {
     ret_bytes: usize,
     drop_after: Option<f64>,
     batch: BatchCfg,
+    /// work stealing on (default); off = legacy static pinning
+    steal: bool,
     link_meters: Vec<BusyMeter>,
     cloud_meters: Vec<BusyMeter>,
+    /// per-worker out-of-lock busy time (stream drives + cloud service)
+    worker_meters: Vec<BusyMeter>,
 }
 
-impl<W, F> Pool<W, F> {
+impl<W, F, S> Pool<W, F, S> {
     /// Poison-recovering lock. Worker bodies must be panic-free (the
     /// `unwrap-free` xtask lint enforces it): a sibling that panicked
     /// while holding the lock has already flagged the pool down via its
     /// `PanicGuard`, and the state is still consistent enough for this
     /// worker to observe `abort` and unwind cleanly.
-    fn lock_core(&self) -> MutexGuard<'_, Core<W, F>> {
+    fn lock_core(&self) -> MutexGuard<'_, Core<W, F, S>> {
         self.core
             .lock()
             .unwrap_or_else(|poisoned| poisoned.into_inner())
     }
 
     /// Apply one expired timer (caller holds the lock).
-    fn fire(&self, core: &mut Core<W, F>, wake: Wake<W, F>) {
+    fn fire(&self, core: &mut Core<W, F, S>, wake: Wake<W, F>) {
         match wake {
-            Wake::Stream(si) => {
-                let w = core.owner[si];
-                core.ready[w].push_back(si);
-            }
+            Wake::Stream(si) => self.place(core, si),
             Wake::LinkDone { item, secs } => self.link_done(core, item, secs),
             Wake::CloudDone(fin) => self.cloud_done(core, fin),
             Wake::CloudKick => core.kick_armed = false,
         }
     }
 
+    /// Put a woken stream on a ready deque: its pin worker when the
+    /// hydrated stage cannot move, its birth worker under `steal =
+    /// false`, otherwise the least-loaded worker right now (shortest
+    /// ready deque, lowest id on ties).
+    fn place(&self, core: &mut Core<W, F, S>, si: usize) {
+        let w = match core.slots[si] {
+            Slot::Pinned(w) => w,
+            _ if !self.steal => core.home[si],
+            _ => {
+                let mut best = 0usize;
+                for w in 1..core.ready.len() {
+                    if core.ready[w].len() < core.ready[best].len() {
+                        best = w;
+                    }
+                }
+                best
+            }
+        };
+        core.ready[w].push_back(si);
+    }
+
+    /// Steal work for worker `wid` (its deque is dry): take the CEILING
+    /// HALF of the OLDEST stealable streams from the most-loaded peer.
+    /// Pinned streams never move — by the placement invariant a pinned
+    /// entry only ever sits on its own worker's deque, so the thief
+    /// skips it in place. Returns whether anything moved.
+    fn try_steal(&self, core: &mut Core<W, F, S>, wid: usize) -> bool {
+        let mut victim = None;
+        let mut best = 0usize;
+        for w in 0..core.ready.len() {
+            if w == wid {
+                continue;
+            }
+            let stealable = core.ready[w]
+                .iter()
+                .filter(|&&si| !matches!(core.slots[si], Slot::Pinned(_)))
+                .count();
+            if stealable > best {
+                best = stealable;
+                victim = Some(w);
+            }
+        }
+        let Some(v) = victim else {
+            return false;
+        };
+        let take = best.div_ceil(2);
+        let mut moved = 0u64;
+        let mut i = 0;
+        while (moved as usize) < take && i < core.ready[v].len() {
+            let si = core.ready[v][i];
+            if matches!(core.slots[si], Slot::Pinned(_)) {
+                i += 1;
+                continue;
+            }
+            if let Some(si) = core.ready[v].remove(i) {
+                core.ready[wid].push_back(si);
+                moved += 1;
+            }
+        }
+        core.steals += moved;
+        moved > 0
+    }
+
     /// Start the next transmission if the link is free. Returns whether
     /// a new `LinkDone` timer was scheduled (callers then re-notify so
     /// sleepers with stale deadlines recompute).
-    fn link_start(&self, core: &mut Core<W, F>) -> bool {
+    fn link_start(&self, core: &mut Core<W, F, S>) -> bool {
         if core.link_busy || core.abort {
             return false;
         }
@@ -219,8 +329,7 @@ impl<W, F> Pool<W, F> {
         };
         // a link-queue slot opened: resume one stalled sender
         if let Some(si) = core.send_waiters.pop_front() {
-            let w = core.owner[si];
-            core.ready[w].push_back(si);
+            self.place(core, si);
         }
         let now = self.clock.now();
         // price the wire like the DES: payload over the live rate plus
@@ -235,7 +344,7 @@ impl<W, F> Pool<W, F> {
     /// the link on the full queue like the threaded link thread does.
     fn link_done(
         &self,
-        core: &mut Core<W, F>,
+        core: &mut Core<W, F, S>,
         mut item: LinkItem<W>,
         secs: f64,
     ) {
@@ -254,7 +363,7 @@ impl<W, F> Pool<W, F> {
     }
 
     /// Price the result-return leg and report the finished task.
-    fn cloud_done(&self, core: &mut Core<W, F>, fin: CloudFinish<F>) {
+    fn cloud_done(&self, core: &mut Core<W, F, S>, fin: CloudFinish<F>) {
         self.cloud_meters[fin.stream].add_secs(fin.busy);
         let now = self.clock.now();
         // result-return leg priced like the DES (rtt + payload at the
@@ -292,7 +401,7 @@ impl<W, F> Pool<W, F> {
     /// launches yet (a formation timer is armed on `Pick::Defer`).
     fn form_batch(
         &self,
-        core: &mut Core<W, F>,
+        core: &mut Core<W, F, S>,
     ) -> Option<(Vec<LinkItem<W>>, f64)> {
         if core.cloud_busy || core.cloud_queue.is_empty() || core.abort {
             return None;
@@ -349,7 +458,7 @@ impl<W, F> Pool<W, F> {
 }
 
 // ---------------------------------------------------------------------
-// Stream state machines (worker-local; hold the non-Send device stage)
+// Stream state machines
 // ---------------------------------------------------------------------
 
 enum SmState<W> {
@@ -376,15 +485,27 @@ enum Step<W> {
     Parked,
 }
 
-/// The `Send` half of a stream, shipped to its owning worker; the
-/// worker turns it into a [`StreamSm`] locally, so the non-`Send`
-/// device stage never crosses a thread boundary.
-struct StreamSeed<DF> {
+/// The `Send` parked form of one stream — what sits in [`Slot::Idle`]
+/// and crosses worker boundaries. The device stage rides along in its
+/// [`DeviceStage::Portable`] form (or as the unconsumed `Send` factory
+/// before first hydration).
+struct PortableSm<P, DF, W> {
     tasks: Vec<SimTask>,
-    factory: DF,
+    next: usize,
+    factory: Option<DF>,
+    dev: Option<P>,
     meter: BusyMeter,
+    state: SmState<W>,
 }
 
+/// Shorthand for the portable form matching device stage `D`.
+type Psm<D, DF> = PortableSm<
+    <D as DeviceStage>::Portable,
+    DF,
+    <D as DeviceStage>::Wire,
+>;
+
+/// The hydrated (possibly non-`Send`) working form a worker drives.
 struct StreamSm<D: DeviceStage, DF> {
     si: usize,
     tasks: Vec<SimTask>,
@@ -395,11 +516,65 @@ struct StreamSm<D: DeviceStage, DF> {
     state: SmState<D::Wire>,
 }
 
+/// Where a stream's state machine goes when its drive ends.
+enum ParkedSm<D: DeviceStage, DF> {
+    /// stage dehydrated (or never hydrated): back to the shared slot
+    Portable(Psm<D, DF>),
+    /// stage refused to migrate: stays in the worker's local map
+    Local(StreamSm<D, DF>),
+}
+
 impl<D, DF> StreamSm<D, DF>
 where
     D: DeviceStage,
     DF: FnOnce() -> Result<D>,
 {
+    /// Reconstitute the working form from a checked-out portable slot.
+    fn hydrate(si: usize, p: Psm<D, DF>) -> StreamSm<D, DF> {
+        StreamSm {
+            si,
+            tasks: p.tasks,
+            next: p.next,
+            factory: p.factory,
+            dev: p.dev.map(D::rehydrate),
+            meter: p.meter,
+            state: p.state,
+        }
+    }
+
+    /// Park: dehydrate the stage back into the `Send` form if it lets
+    /// us, otherwise keep it hydrated on this worker (the stream pins).
+    fn park(self) -> ParkedSm<D, DF> {
+        let StreamSm { si, tasks, next, factory, dev, meter, state } = self;
+        match dev.map(D::dehydrate) {
+            None => ParkedSm::Portable(PortableSm {
+                tasks,
+                next,
+                factory,
+                dev: None,
+                meter,
+                state,
+            }),
+            Some(Ok(p)) => ParkedSm::Portable(PortableSm {
+                tasks,
+                next,
+                factory,
+                dev: Some(p),
+                meter,
+                state,
+            }),
+            Some(Err(d)) => ParkedSm::Local(StreamSm {
+                si,
+                tasks,
+                next,
+                factory,
+                dev: Some(d),
+                meter,
+                state,
+            }),
+        }
+    }
+
     /// Advance until the stream must wait or touch shared state. Runs
     /// OUTSIDE the pool lock; early-exit outcomes and admission sheds
     /// accumulate in `outcomes`/`shed` for the caller to publish.
@@ -428,8 +603,33 @@ where
             SmState::Next => {}
         }
         loop {
-            // build the device stage lazily ON its owning worker — the
-            // factory is Send, the stage need not be
+            if self.next >= self.tasks.len() {
+                self.state = SmState::Done;
+                // a stream that shed every task before its first
+                // compute never built a stage; it reports the default
+                let plan = match self.dev.as_ref() {
+                    Some(dev) => dev.plan_telemetry(),
+                    None => PlanTelemetry::default(),
+                };
+                return Step::Finished(plan);
+            }
+            let task = &self.tasks[self.next];
+            let now = clock.now();
+            if now < task.arrive {
+                return Step::Wait(task.arrive);
+            }
+            if let Some(cap) = drop_after {
+                if now - task.arrive > cap {
+                    *shed += 1;
+                    self.next += 1;
+                    continue;
+                }
+            }
+            // build the device stage lazily, as LATE as possible — the
+            // factory is Send, the stage need not be, and an unhydrated
+            // stream is portable by construction: it stays stealable
+            // while it waits for its first arrival, and only its first
+            // compute commits a blocking-only stage to this worker
             if self.dev.is_none() {
                 let Some(factory) = self.factory.take() else {
                     return Step::Failed(anyhow::anyhow!(
@@ -450,22 +650,6 @@ where
             };
             for fb in feedback.drain(..) {
                 dev.absorb(fb);
-            }
-            if self.next >= self.tasks.len() {
-                self.state = SmState::Done;
-                return Step::Finished(dev.plan_telemetry());
-            }
-            let task = &self.tasks[self.next];
-            let now = clock.now();
-            if now < task.arrive {
-                return Step::Wait(task.arrive);
-            }
-            if let Some(cap) = drop_after {
-                if now - task.arrive > cap {
-                    *shed += 1;
-                    self.next += 1;
-                    continue;
-                }
             }
             match dev.poll_process(task) {
                 Some(Ok((verdict, busy))) => {
@@ -553,13 +737,21 @@ enum DriveEnd {
     Parked,
 }
 
-/// Flags the pool down if this worker unwinds, so the siblings stop
-/// waiting for events the dead worker would have produced.
-struct PanicGuard<'a, W, F> {
-    pool: &'a Pool<W, F>,
+/// What a worker checked out of the slot table for one drive.
+enum Checkout<D: DeviceStage, DF> {
+    /// from the shared slot; rehydrate outside the lock
+    Shared(Psm<D, DF>),
+    /// from this worker's local pinned map, already hydrated
+    Pinned(StreamSm<D, DF>),
 }
 
-impl<W, F> Drop for PanicGuard<'_, W, F> {
+/// Flags the pool down if this worker unwinds, so the siblings stop
+/// waiting for events the dead worker would have produced.
+struct PanicGuard<'a, W, F, S> {
+    pool: &'a Pool<W, F, S>,
+}
+
+impl<W, F, S> Drop for PanicGuard<'_, W, F, S> {
     fn drop(&mut self) {
         if std::thread::panicking() {
             {
@@ -576,9 +768,8 @@ impl<W, F> Drop for PanicGuard<'_, W, F> {
 }
 
 fn worker_loop<D, C, DF, CF>(
-    pool: &Pool<D::Wire, D::Feedback>,
+    pool: &Pool<D::Wire, D::Feedback, Psm<D, DF>>,
     wid: usize,
-    seeds: BTreeMap<usize, StreamSeed<DF>>,
     cloud_factory: Option<CF>,
 ) where
     D: DeviceStage,
@@ -587,27 +778,11 @@ fn worker_loop<D, C, DF, CF>(
     CF: FnOnce() -> Result<C>,
 {
     let _panic_guard = PanicGuard { pool };
-    // hydrate the pinned streams HERE: only the seed (tasks + Send
-    // factory + meter) crossed the thread boundary. BTreeMap, not
-    // HashMap: stream state must never sit behind randomized iteration
-    // order (`map-order` xtask lint).
-    let mut sms: BTreeMap<usize, StreamSm<D, DF>> = seeds
-        .into_iter()
-        .map(|(si, seed)| {
-            (
-                si,
-                StreamSm {
-                    si,
-                    tasks: seed.tasks,
-                    next: 0,
-                    factory: Some(seed.factory),
-                    dev: None,
-                    meter: seed.meter,
-                    state: SmState::Next,
-                },
-            )
-        })
-        .collect();
+    // streams whose hydrated stage refused to dehydrate live here for
+    // the rest of the run (their slot says `Pinned(wid)`). BTreeMap,
+    // not HashMap: stream state must never sit behind randomized
+    // iteration order (`map-order` xtask lint).
+    let mut sms: BTreeMap<usize, StreamSm<D, DF>> = BTreeMap::new();
     // the factory-built cloud stage lives on worker 0 (built here
     // because it need not be Send), mirroring the threaded engine's
     // eager build; poll-capable stages replicate onto every other
@@ -680,6 +855,7 @@ fn worker_loop<D, C, DF, CF>(
                             payload,
                         } = item;
                         drop(guard);
+                        let work_t0 = Instant::now();
                         match cloud_stage.poll_process(payload) {
                             CloudPoll::Ready { label, feedback, busy } => {
                                 // modeled service: park it on the wheel
@@ -737,6 +913,8 @@ fn worker_loop<D, C, DF, CF>(
                                 }
                             }
                         }
+                        pool.worker_meters[wid]
+                            .add_secs(work_t0.elapsed().as_secs_f64());
                         guard = pool.lock_core();
                         continue 'main;
                     }
@@ -750,6 +928,7 @@ fn worker_loop<D, C, DF, CF>(
                 // blocking-only members run inline one by one.
                 pool.wakeup.notify_all();
                 drop(guard);
+                let work_t0 = Instant::now();
                 let mut ready: Vec<CloudFinish<D::Feedback>> = Vec::new();
                 let mut peak = 0.0f64;
                 let mut failed: Option<anyhow::Error> = None;
@@ -825,7 +1004,7 @@ fn worker_loop<D, C, DF, CF>(
                     // stretched by the calibrated amortization curve,
                     // each member billed an equal share
                     let b = ready.len();
-                    let batch_secs = batch::service_secs(peak, b);
+                    let batch_secs = pool.batch.service_secs(peak, b);
                     let share = batch_secs / b as f64;
                     let deadline = pool.clock.now() + batch_secs;
                     let mut g = pool.lock_core();
@@ -837,20 +1016,53 @@ fn worker_loop<D, C, DF, CF>(
                     drop(g);
                     pool.wakeup.notify_all();
                 }
+                pool.worker_meters[wid]
+                    .add_secs(work_t0.elapsed().as_secs_f64());
                 guard = pool.lock_core();
                 continue 'main;
             }
         }
-        // 4) drive one of this worker's runnable streams
-        if let Some(si) = guard.ready[wid].pop_front() {
+        // 4) drive one runnable stream. Steal mode drains the local
+        // deque newest-first (the just-woken stream is the hot one) and
+        // stocks up from the most-loaded peer when dry; pinned mode
+        // keeps the legacy FIFO drain of the home deque.
+        if pool.steal && guard.ready[wid].is_empty() {
+            pool.try_steal(&mut guard, wid);
+        }
+        let popped = if pool.steal {
+            guard.ready[wid].pop_back()
+        } else {
+            guard.ready[wid].pop_front()
+        };
+        if let Some(si) = popped {
             let mut feedback = std::mem::take(&mut guard.feedback[si]);
-            let Some(sm) = sms.get_mut(&si) else {
-                // a stream on the wrong worker's ready queue is a
+            // check the stream out of the slot table: shared portable
+            // form, or this worker's pinned map
+            let taken =
+                match std::mem::replace(&mut guard.slots[si], Slot::Running) {
+                    Slot::Idle(psm) => Some(Checkout::Shared(psm)),
+                    Slot::Pinned(w) => {
+                        guard.slots[si] = Slot::Pinned(w);
+                        if w == wid {
+                            sms.remove(&si).map(Checkout::Pinned)
+                        } else {
+                            // a pinned stream on the wrong deque breaks
+                            // the placement invariant
+                            None
+                        }
+                    }
+                    other @ (Slot::Running | Slot::Done) => {
+                        guard.slots[si] = other;
+                        None
+                    }
+                };
+            let Some(taken) = taken else {
+                // a stream woken into an inconsistent slot is a
                 // scheduler bug; fail the run instead of unwinding
                 if guard.first_err.is_none() {
                     guard.first_err = Some(anyhow::anyhow!(
-                        "stream {si} woke on worker {wid} but is not \
-                         pinned there"
+                        "stream {si} woke on worker {wid} in an \
+                         inconsistent slot state"
                     ));
                 }
                 guard.abort = true;
@@ -859,9 +1071,19 @@ fn worker_loop<D, C, DF, CF>(
                 break;
             };
             drop(guard);
+            let work_t0 = Instant::now();
+            let mut sm = match taken {
+                Checkout::Shared(psm) => StreamSm::hydrate(si, psm),
+                Checkout::Pinned(sm) => sm,
+            };
             let mut outcomes = Vec::new();
             let mut shed = 0usize;
-            let end = loop {
+            // `held` carries the lock out of the loop when the final
+            // transition already required it: parking into
+            // `send_waiters` must be atomic with the fullness check AND
+            // with the slot store, or a racing `link_start` could wake
+            // the stream while its slot still says `Running`.
+            let (end, held) = loop {
                 match sm.step(
                     pool.clock,
                     pool.drop_after,
@@ -869,14 +1091,16 @@ fn worker_loop<D, C, DF, CF>(
                     &mut outcomes,
                     &mut shed,
                 ) {
-                    Step::Wait(t) => break DriveEnd::Timer(t),
-                    Step::Parked => break DriveEnd::Parked,
-                    Step::Finished(plan) => break DriveEnd::Finished(plan),
-                    Step::Failed(e) => break DriveEnd::Failed(e),
+                    Step::Wait(t) => break (DriveEnd::Timer(t), None),
+                    Step::Parked => break (DriveEnd::Parked, None),
+                    Step::Finished(plan) => {
+                        break (DriveEnd::Finished(plan), None)
+                    }
+                    Step::Failed(e) => break (DriveEnd::Failed(e), None),
                     Step::Send(item) => {
                         let mut g = pool.lock_core();
                         if g.abort {
-                            break DriveEnd::Parked;
+                            break (DriveEnd::Parked, Some(g));
                         }
                         if g.link_queue.len() < pool.cap {
                             g.link_queue.push_back(item);
@@ -889,26 +1113,54 @@ fn worker_loop<D, C, DF, CF>(
                         // block in `send` here — park instead
                         sm.state = SmState::SendBlocked { item };
                         g.send_waiters.push_back(si);
-                        break DriveEnd::Parked;
+                        break (DriveEnd::Parked, Some(g));
                     }
                 }
             };
-            let mut g = pool.lock_core();
+            pool.worker_meters[wid]
+                .add_secs(work_t0.elapsed().as_secs_f64());
+            // dehydrate on park; `None` (finished/failed) drops the sm
+            let parked = match &end {
+                DriveEnd::Timer(_) | DriveEnd::Parked => Some(sm.park()),
+                DriveEnd::Finished(_) | DriveEnd::Failed(_) => None,
+            };
+            let mut g = match held {
+                Some(g) => g,
+                None => pool.lock_core(),
+            };
             g.outcomes[si].append(&mut outcomes);
             g.dropped[si] += shed;
+            // hand back feedback the drive did not absorb, ahead of
+            // anything that arrived while we were driving
+            if !feedback.is_empty() {
+                feedback.append(&mut g.feedback[si]);
+                g.feedback[si] = feedback;
+            }
+            match parked {
+                Some(ParkedSm::Portable(psm)) => {
+                    g.slots[si] = Slot::Idle(psm);
+                }
+                Some(ParkedSm::Local(local)) => {
+                    g.slots[si] = Slot::Pinned(wid);
+                    sms.insert(si, local);
+                }
+                None => {}
+            }
             match end {
                 DriveEnd::Timer(t) => g.timers.insert(t, Wake::Stream(si)),
+                DriveEnd::Parked => {}
                 DriveEnd::Finished(plan) => {
+                    g.slots[si] = Slot::Done;
                     g.plans[si] = plan;
                     g.live_streams -= 1;
                 }
                 DriveEnd::Failed(e) => {
+                    g.slots[si] = Slot::Done;
                     if g.first_err.is_none() {
                         g.first_err = Some(e);
                     }
                     g.abort = true;
                 }
-                DriveEnd::Parked => {}
             }
             guard = g;
             pool.wakeup.notify_all();
@@ -967,11 +1219,29 @@ where
     let link_busy: Vec<BusyMeter> = (0..n).map(|_| BusyMeter::new()).collect();
     let cloud_busy: Vec<BusyMeter> =
         (0..n).map(|_| BusyMeter::new()).collect();
+    let worker_meters: Vec<BusyMeter> =
+        (0..workers).map(|_| BusyMeter::new()).collect();
+
+    // every stream starts parked in the shared slot table, unhydrated
+    // and therefore portable; the seed is the Send factory + tasks
+    let mut slots: Vec<Slot<Psm<D, DF>>> = Vec::with_capacity(n);
+    for (si, (tasks, factory)) in streams.into_iter().enumerate() {
+        slots.push(Slot::Idle(PortableSm {
+            tasks,
+            next: 0,
+            factory: Some(factory),
+            dev: None,
+            meter: dev_busy[si].clone(),
+            state: SmState::Next,
+        }));
+    }
 
     let mut core = Core {
         timers: TimerWheel::new(),
         ready: (0..workers).map(|_| VecDeque::new()).collect(),
-        owner: (0..n).map(|si| si % workers).collect(),
+        home: (0..n).map(|si| si % workers).collect(),
+        slots,
+        steals: 0,
         link_queue: VecDeque::with_capacity(cfg.queue_cap.max(1)),
         link_busy: false,
         link_blocked: None,
@@ -991,8 +1261,9 @@ where
         cloud_err: None,
         abort: false,
     };
-    // every stream starts runnable on its owner (it parks itself on the
-    // wheel until its first arrival)
+    // every stream starts runnable on its birth worker (it parks itself
+    // on the wheel until its first arrival); stealing redistributes
+    // from here on
     for si in 0..n {
         core.ready[si % workers].push_back(si);
     }
@@ -1007,30 +1278,22 @@ where
         ret_bytes: cfg.result_wire_bytes,
         drop_after: cfg.drop_after,
         batch: cfg.cloud,
+        steal: cfg.steal,
         link_meters: link_busy.clone(),
         cloud_meters: cloud_busy.clone(),
+        worker_meters: worker_meters.clone(),
     };
 
-    // partition the stream seeds by owning worker (the worker hydrates
-    // them into state machines — see `worker_loop`)
-    let mut per_worker: Vec<BTreeMap<usize, StreamSeed<DF>>> =
-        (0..workers).map(|_| BTreeMap::new()).collect();
-    for (si, (tasks, factory)) in streams.into_iter().enumerate() {
-        per_worker[si % workers].insert(
-            si,
-            StreamSeed { tasks, factory, meter: dev_busy[si].clone() },
-        );
-    }
-
+    let run_t0 = Instant::now();
     let mut cloud_factory = Some(cloud_factory);
     std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(workers);
-        for (wid, seeds) in per_worker.into_iter().enumerate() {
+        for wid in 0..workers {
             let cf = if wid == 0 { cloud_factory.take() } else { None };
             let pool = &pool;
-            handles.push(s.spawn(move || {
-                worker_loop::<D, C, DF, CF>(pool, wid, seeds, cf)
-            }));
+            handles.push(
+                s.spawn(move || worker_loop::<D, C, DF, CF>(pool, wid, cf)),
+            );
         }
         for h in handles {
             // a panicking worker already flagged the pool down via its
@@ -1039,6 +1302,9 @@ where
             let _ = h.join();
         }
     });
+    let wall = run_t0.elapsed().as_secs_f64().max(1e-9);
+    let worker_busy: Vec<f64> =
+        worker_meters.iter().map(|m| m.secs() / wall).collect();
 
     let core = match pool.core.into_inner() {
         Ok(c) => c,
@@ -1067,6 +1333,8 @@ where
         &cloud_busy,
         &core.cloud_wait,
         core.batch_occ,
+        core.steals,
+        worker_busy,
         &cfg,
     ))
 }

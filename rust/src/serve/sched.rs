@@ -130,6 +130,8 @@ pub(crate) fn assemble_report(
     cloud_busy: &[BusyMeter],
     cloud_wait: &[f64],
     batch_occupancy: Vec<u64>,
+    steals: u64,
+    worker_busy: Vec<f64>,
     cfg: &RealCfg,
 ) -> MultiReport {
     let n = per.len();
@@ -161,5 +163,5 @@ pub(crate) fn assemble_report(
             plan: plans[si].clone(),
         });
     }
-    MultiReport { per_stream, events: 0, batch_occupancy }
+    MultiReport { per_stream, events: 0, batch_occupancy, steals, worker_busy }
 }

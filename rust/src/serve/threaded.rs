@@ -316,7 +316,7 @@ where
                     // one launch for the whole batch: peak member time
                     // stretched by the calibrated amortization curve,
                     // each member billed an equal share
-                    let batch_secs = batch::service_secs(peak, b);
+                    let batch_secs = bcfg.service_secs(peak, b);
                     thread::sleep(Duration::from_secs_f64(batch_secs));
                     let share = batch_secs / b as f64;
                     let now = clock.now();
@@ -409,6 +409,9 @@ where
         &cloud_busy,
         &cloud_wait,
         batch_occ,
+        // no migration and no pool in this engine: a stream IS a thread
+        0,
+        Vec::new(),
         &cfg,
     ))
 }

@@ -178,6 +178,7 @@ fn batched_fleet_reports_every_admitted_task_exactly_once() {
             max_batch: 4,
             max_wait: 500e-6,
             slo: 0.05,
+            ..BatchCfg::default()
         };
         // 2 Mbps: ~2 ms per wire crossing, so the shared link backs
         // up (drops engage on the shedding half of the fleet) AND the

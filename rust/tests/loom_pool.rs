@@ -12,8 +12,9 @@
 //! semantics of the production scheduler. Each model is a 2-worker /
 //! 2-stream miniature of one protocol: small enough for exhaustive
 //! exploration, faithful enough that the bug it guards against (lost
-//! wakeup, forgotten waiter hand-off, missed abort notification) would
-//! deadlock the model exactly as it would hang the pool.
+//! wakeup, forgotten waiter hand-off, missed abort notification, a
+//! steal racing a wake or a teardown) would deadlock the model exactly
+//! as it would hang the pool.
 
 #![cfg(loom)]
 
@@ -405,6 +406,259 @@ fn loom_cloud_batch_drain_no_lost_wakeup_or_double_dispatch() {
         assert!(!g.cloud_busy && g.cloud_pending == 0, "cloud not released");
         for (id, &n) in g.dispatched.iter().enumerate() {
             assert_eq!(n, 1, "item {id} dispatched {n} times");
+        }
+    });
+}
+
+/// The work-stealing checkout protocol: per-worker ready queues, a
+/// thief that migrates the oldest non-pinned half of its peer's queue
+/// when its own runs dry, and a waker that places a newly-ready stream
+/// on the least-loaded queue — all under the one pool lock, exactly as
+/// `Pool::try_steal` / `Pool::place` do. The invariants: every stream
+/// is checked out EXACTLY once (queue membership is the checkout
+/// token), a pinned entry never leaves its home worker, and no
+/// interleaving of steal vs wake loses a stream or strands a sleeping
+/// worker.
+#[test]
+fn loom_steal_vs_wake_no_lost_or_double_checkout() {
+    #[derive(Clone, Copy)]
+    struct Entry {
+        si: usize,
+        pinned: bool,
+    }
+
+    struct Core {
+        ready: [Vec<Entry>; 2],
+        /// checkout count per stream — must end at exactly 1
+        processed: [usize; 4],
+        /// worker that drove each stream
+        by: [usize; 4],
+        live: usize,
+        steals: usize,
+    }
+
+    // mirror of `Pool::try_steal`: oldest non-pinned half of the peer's
+    // queue, pinned entries skipped in place
+    fn try_steal(c: &mut Core, wid: usize) -> bool {
+        let v = 1 - wid;
+        let movable = c.ready[v].iter().filter(|e| !e.pinned).count();
+        if movable == 0 {
+            return false;
+        }
+        let take = movable.div_ceil(2);
+        let mut moved = 0;
+        let mut i = 0;
+        while moved < take && i < c.ready[v].len() {
+            if c.ready[v][i].pinned {
+                i += 1;
+                continue;
+            }
+            let e = c.ready[v].remove(i);
+            c.ready[wid].push(e);
+            moved += 1;
+        }
+        c.steals += moved;
+        moved > 0
+    }
+
+    fn worker(shared: &(Mutex<Core>, Condvar), wid: usize) {
+        let (m, cv) = shared;
+        let mut g = m.lock().unwrap();
+        loop {
+            if g.live == 0 {
+                cv.notify_all();
+                return;
+            }
+            if g.ready[wid].is_empty() {
+                try_steal(&mut *g, wid);
+            }
+            if let Some(e) = g.ready[wid].pop() {
+                assert!(
+                    !e.pinned || wid == 1,
+                    "pinned stream migrated off its home worker"
+                );
+                g.processed[e.si] += 1;
+                g.by[e.si] = wid;
+                g.live -= 1;
+                cv.notify_all();
+                continue;
+            }
+            g = cv.wait(g).unwrap();
+        }
+    }
+
+    loom::model(|| {
+        // stream 0 is pinned to worker 1 (a hydrated blocking stage);
+        // 1 and 2 are stealable and seeded behind it — the skewed-home
+        // convoy the thief must break up
+        let shared = Arc::new((
+            Mutex::new(Core {
+                ready: [
+                    Vec::new(),
+                    vec![
+                        Entry { si: 0, pinned: true },
+                        Entry { si: 1, pinned: false },
+                        Entry { si: 2, pinned: false },
+                    ],
+                ],
+                processed: [0; 4],
+                by: [usize::MAX; 4],
+                live: 4,
+                steals: 0,
+            }),
+            Condvar::new(),
+        ));
+        // the timer side of the race: wake stream 3 onto the
+        // least-loaded queue mid-steal, as `Pool::place` does
+        let s2 = shared.clone();
+        let timer = loom::thread::spawn(move || {
+            let (m, cv) = &*s2;
+            {
+                let mut g = m.lock().unwrap();
+                let w = if g.ready[0].len() <= g.ready[1].len() {
+                    0
+                } else {
+                    1
+                };
+                g.ready[w].push(Entry { si: 3, pinned: false });
+            } // lock released BEFORE the notify, as in pool.rs
+            cv.notify_all();
+        });
+        let s3 = shared.clone();
+        let w1 = loom::thread::spawn(move || worker(&s3, 1));
+        worker(&shared, 0);
+        w1.join().unwrap();
+        timer.join().unwrap();
+        let g = shared.0.lock().unwrap();
+        for (si, &n) in g.processed.iter().enumerate() {
+            assert_eq!(n, 1, "stream {si} checked out {n} times");
+        }
+        assert_eq!(g.by[0], 1, "pinned stream must run on its home");
+        assert!(g.ready[0].is_empty() && g.ready[1].is_empty());
+    });
+}
+
+/// The buggy waker the steal model guards against: notifying BEFORE
+/// placing the woken stream. A worker can check its (still empty)
+/// queue, consume the notification, and go back to sleep in the gap —
+/// the placement then lands with nobody left to tell. `Pool::place`
+/// sites must mutate under the lock first and notify after release;
+/// the checker must find the sleeping-forever interleaving here.
+#[test]
+#[should_panic(expected = "deadlock")]
+fn loom_detects_wake_notified_before_placement() {
+    loom::model(|| {
+        let shared = Arc::new((Mutex::new(Vec::<usize>::new()), Condvar::new()));
+        let s2 = shared.clone();
+        let waker = loom::thread::spawn(move || {
+            let (m, cv) = &*s2;
+            cv.notify_all(); // BUG: notify precedes the placement
+            m.lock().unwrap().push(3);
+        });
+        let (m, cv) = &*shared;
+        let mut g = m.lock().unwrap();
+        while g.is_empty() {
+            g = cv.wait(g).unwrap();
+        }
+        g.pop();
+        drop(g);
+        waker.join().unwrap();
+    });
+}
+
+/// Steal vs teardown: a thief is migrating the dead sibling's queue
+/// while that sibling's `PanicGuard` records `first_err`, raises
+/// `abort`, and notifies. The thief checks `abort` at the top of every
+/// iteration (as `worker_loop` does), so whether the abort lands
+/// before, during, or after the steal, it must exit promptly with the
+/// recorded error — stolen-but-undriven entries are deliberately
+/// abandoned, never a reason to keep running. No interleaving may
+/// leave the thief asleep through the teardown.
+#[test]
+fn loom_steal_vs_abort_thief_exits_promptly() {
+    struct Core {
+        /// the dead worker's ready queue, mid-migration
+        victim: Vec<usize>,
+        mine: Vec<usize>,
+        abort: bool,
+        first_err: Option<&'static str>,
+    }
+
+    loom::model(|| {
+        let shared = Arc::new((
+            Mutex::new(Core {
+                victim: vec![1, 2],
+                mine: Vec::new(),
+                abort: false,
+                first_err: None,
+            }),
+            Condvar::new(),
+        ));
+        // the dying worker's PanicGuard::drop
+        let s2 = shared.clone();
+        let dying = loom::thread::spawn(move || {
+            let (m, cv) = &*s2;
+            {
+                let mut g = m.lock().unwrap();
+                if g.first_err.is_none() {
+                    g.first_err = Some("worker thread panicked");
+                }
+                g.abort = true;
+            }
+            cv.notify_all();
+        });
+        // the surviving thief: without the abort it would drain both
+        // queues and sleep forever (the victim's streams can never
+        // finish) — teardown is its ONLY exit
+        let (m, cv) = &*shared;
+        let mut g = m.lock().unwrap();
+        let err = loop {
+            if g.abort {
+                break g.first_err;
+            }
+            if g.mine.is_empty() && !g.victim.is_empty() {
+                let si = g.victim.remove(0);
+                g.mine.push(si);
+            }
+            if let Some(_si) = g.mine.pop() {
+                continue; // drive the stolen stream
+            }
+            g = cv.wait(g).unwrap();
+        };
+        drop(g);
+        dying.join().unwrap();
+        assert_eq!(err, Some("worker thread panicked"));
+    });
+}
+
+/// The buggy teardown the steal-vs-abort model guards against: abort
+/// raised correctly but announced with `notify_one` while TWO siblings
+/// sleep. One wakes and exits, the other sleeps forever. Every
+/// teardown site in pool.rs must use `notify_all`; the checker must
+/// find the stranded-sleeper interleaving here.
+#[test]
+#[should_panic(expected = "deadlock")]
+fn loom_detects_abort_notify_one_strands_a_sleeper() {
+    loom::model(|| {
+        let shared = Arc::new((Mutex::new(false), Condvar::new()));
+        let sleepers: Vec<_> = (0..2)
+            .map(|_| {
+                let s = shared.clone();
+                loom::thread::spawn(move || {
+                    let (m, cv) = &*s;
+                    let mut g = m.lock().unwrap();
+                    while !*g {
+                        g = cv.wait(g).unwrap();
+                    }
+                })
+            })
+            .collect();
+        {
+            *shared.0.lock().unwrap() = true;
+        }
+        shared.1.notify_one(); // BUG: one of two sleepers never told
+        for s in sleepers {
+            s.join().unwrap();
         }
     });
 }

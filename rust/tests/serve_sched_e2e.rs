@@ -52,9 +52,23 @@ impl Fleet {
     /// Same seeds, same arrivals, same stage model — the only variable
     /// across calls is the serving engine.
     fn run(&self, runtime: Runtime) -> MultiReport {
+        self.run_cfg(runtime, true, &[])
+    }
+
+    /// Like [`Fleet::run`], with the pooled engine's steal knob exposed
+    /// and an optional per-stream device-compute scale (`skew[i]`
+    /// multiplies stream `i`'s `t_e`; missing entries mean 1.0). Skew
+    /// moves only wall-clock timing — every DISCRETE outcome is
+    /// task-determined, which is exactly what the parity tests check.
+    fn run_cfg(
+        &self,
+        runtime: Runtime,
+        steal: bool,
+        skew: &[f64],
+    ) -> MultiReport {
         let clock = WallClock::new();
         let bw = BandwidthModel::Static(self.link_mbps);
-        let sm = self.stage_model();
+        let base = self.stage_model();
         let streams: Vec<(Vec<SimTask>, _)> = (0..self.n_streams)
             .map(|i| {
                 let tasks = generate(
@@ -64,7 +78,8 @@ impl Fleet {
                     10,
                     77 + i as u64,
                 );
-                let sm = sm.clone();
+                let mut sm = base.clone();
+                sm.t_e *= skew.get(i).copied().unwrap_or(1.0);
                 let bw = bw.clone();
                 let threshold = self.exit_threshold;
                 let elems = self.cut_elems;
@@ -95,6 +110,7 @@ impl Fleet {
             clock,
             RealCfg {
                 runtime,
+                steal,
                 queue_cap: self.queue_cap,
                 scheme: "equiv".into(),
                 model: "sim".into(),
@@ -227,6 +243,7 @@ fn batched_cloud_keeps_engines_equivalent() {
             max_batch: 4,
             max_wait: 200e-6,
             slo: f64::INFINITY,
+            ..BatchCfg::default()
         },
     };
     let (threaded, pooled) = assert_equivalent(&fleet);
@@ -260,6 +277,13 @@ fn pooled_worker_panic_is_contained() {
     impl DeviceStage for PanicDevice {
         type Wire = ();
         type Feedback = ();
+        type Portable = Self;
+        fn dehydrate(self) -> std::result::Result<Self, Self> {
+            Ok(self)
+        }
+        fn rehydrate(portable: Self) -> Self {
+            portable
+        }
         fn process(
             &mut self,
             _task: &SimTask,
@@ -308,6 +332,55 @@ fn pooled_worker_panic_is_contained() {
         format!("{err:#}").contains("worker thread panicked"),
         "unexpected error: {err:#}"
     );
+}
+
+/// The work-stealing gate's correctness half: a 10:1 compute-skew
+/// fleet must produce IDENTICAL discrete outcomes under the threaded
+/// reference, the pinned pooled scheduler (`steal = false`), and the
+/// stealing pooled scheduler. Stealing may only move WHERE and WHEN a
+/// stream's tasks run — never what they compute. (The throughput half
+/// of the gate lives in `coach bench-serve-scale`.)
+#[test]
+fn skewed_fleet_outcomes_survive_stealing_and_pinning() {
+    let fleet = Fleet {
+        n_streams: 8,
+        n_tasks: 12,
+        // mid threshold so both the Exit and the Transmit paths are
+        // exercised while streams migrate between workers
+        exit_threshold: 0.5,
+        cut_elems: 1024,
+        link_mbps: 50.0,
+        queue_cap: 8,
+        cloud: BatchCfg::default(),
+    };
+    // every 4th stream carries 10x device compute: heavy streams share
+    // a home worker under static pinning, so the pinned run convoys
+    // exactly where the stealing run load-balances
+    let skew: Vec<f64> = (0..fleet.n_streams)
+        .map(|i| if i % 4 == 0 { 10.0 } else { 1.0 })
+        .collect();
+    let threaded = fleet.run_cfg(Runtime::Threaded, true, &skew);
+    let pinned = fleet.run_cfg(Runtime::Pooled, false, &skew);
+    let stealing = fleet.run_cfg(Runtime::Pooled, true, &skew);
+    let a = discrete(&threaded);
+    assert_eq!(
+        a,
+        discrete(&pinned),
+        "pinned pooled run diverges from the threaded reference"
+    );
+    assert_eq!(
+        a,
+        discrete(&stealing),
+        "stealing pooled run diverges from the threaded reference"
+    );
+    // the comparison must not be vacuous: tasks on both verdict paths,
+    // nothing lost, and the pinned run must really not have stolen
+    let agg = threaded.aggregate();
+    assert_eq!(agg.tasks.len(), 8 * 12, "conservation under skew");
+    let exits = agg.tasks.iter().filter(|t| t.exited_early).count();
+    assert!(exits > 0 && exits < agg.tasks.len(), "one-sided workload");
+    assert_eq!(pinned.steals, 0, "steal=false must never migrate");
+    assert_eq!(threaded.steals, 0, "threaded engine has no pool");
 }
 
 #[test]

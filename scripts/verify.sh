@@ -86,10 +86,17 @@ grep -q streams "$BENCH_DIR/BENCH_serve_scale.json" \
     || { echo "BENCH_serve_scale.json lacks streams"; exit 1; }
 grep -q throughput "$BENCH_DIR/BENCH_serve_scale.json" \
     || { echo "BENCH_serve_scale.json lacks throughput"; exit 1; }
+grep -q steals "$BENCH_DIR/BENCH_serve_scale.json" \
+    || { echo "BENCH_serve_scale.json lacks steals"; exit 1; }
+grep -q worker_busy_frac "$BENCH_DIR/BENCH_serve_scale.json" \
+    || { echo "BENCH_serve_scale.json lacks worker_busy_frac"; exit 1; }
 rm -rf "$BENCH_DIR"
 
 echo "== pooled serve-sim smoke: wide fleet on the worker-pool engine =="
 ./target/release/coach serve-sim --streams 1024 --n 5 --runtime pooled
+echo "== pinned serve-sim smoke: same fleet, stealing disabled =="
+./target/release/coach serve-sim --streams 1024 --n 5 --runtime pooled \
+    --steal false
 
 if [ "$DEEP" = 1 ]; then
     echo "== [deep] loom: checker self-tests + scheduler models =="
